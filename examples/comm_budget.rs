@@ -1,0 +1,59 @@
+//! Fixed communication budget: which algorithm buys the most convergence
+//! per byte?
+//!
+//! The paper's Table-1 story, viewed from the operator's side: given a
+//! budget of synchronization rounds (equivalently bytes, since every round
+//! moves one model allreduce), pick the period k that spends exactly that
+//! budget over T iterations and compare final losses. VRL-SGD tolerates
+//! much larger k, so it converges further on a tight budget.
+//!
+//! Run: `cargo run --release --example comm_budget`
+
+use vrl_sgd::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
+use vrl_sgd::coordinator::run_training;
+
+fn main() {
+    let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 192 };
+    let steps = 1200;
+    let budgets = [600usize, 120, 60, 24, 12]; // sync rounds allowed
+
+    println!("T = {steps} iterations, 8 workers, non-identical shards");
+    println!(
+        "\n{:<8} {:<6} {:>12} {:>12} {:>12}",
+        "rounds", "k", "local-sgd", "vrl-sgd", "easgd"
+    );
+
+    for &budget in &budgets {
+        let k = steps / budget;
+        let run = |algorithm| {
+            let spec = TrainSpec {
+                algorithm,
+                workers: 8,
+                period: k,
+                lr: 0.05,
+                batch: 32,
+                steps,
+                seed: 11,
+                easgd_rho: 0.9 / 8.0,
+                ..TrainSpec::default()
+            };
+            run_training(&spec, &task, Partition::LabelSharded).expect("run")
+        };
+        let local = run(AlgorithmKind::LocalSgd);
+        let vrl = run(AlgorithmKind::VrlSgd);
+        let easgd = run(AlgorithmKind::Easgd);
+        assert_eq!(vrl.comm.rounds as usize, budget);
+        println!(
+            "{budget:<8} {k:<6} {:>12.4} {:>12.4} {:>12.4}",
+            local.final_loss(),
+            vrl.final_loss(),
+            easgd.final_loss()
+        );
+    }
+
+    println!(
+        "\nAs the budget tightens (k grows), Local SGD and EASGD degrade;\n\
+         VRL-SGD holds its S-SGD-like convergence far longer — the\n\
+         O(T^3/4 N^3/4) vs O(T^1/2 N^3/2) communication-complexity gap."
+    );
+}

@@ -1,0 +1,56 @@
+//! Federated-learning heterogeneity sweep.
+//!
+//! The paper motivates VRL-SGD with federated settings where data cannot
+//! be exchanged for privacy. This example sweeps the Dirichlet
+//! heterogeneity knob α from near-iid (α = 100) to near-pathological
+//! (α = 0.05) and shows that Local SGD's final loss degrades with
+//! heterogeneity while VRL-SGD stays flat.
+//!
+//! Run: `cargo run --release --example federated_sim`
+
+use vrl_sgd::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
+use vrl_sgd::coordinator::run_training;
+use vrl_sgd::data::partition::heterogeneity;
+use vrl_sgd::data::{generators, partition_dataset};
+use vrl_sgd::rng::Pcg32;
+
+fn main() {
+    let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 192 };
+    let alphas = [100.0, 1.0, 0.3, 0.05];
+
+    // show the heterogeneity score of each α on the actual data
+    let mut rng = Pcg32::new(42, 0xDA7A);
+    let global = generators::feature_clusters(&mut rng, 192 * 8, 32, 10, 4.0);
+    println!("heterogeneity (mean TV distance to global label mix):");
+    for &a in &alphas {
+        let shards = partition_dataset(&global, 8, Partition::Dirichlet(a), 42);
+        println!("  alpha = {a:<6} -> {:.3}", heterogeneity(&global, &shards));
+    }
+
+    println!(
+        "\n{:<8} {:>12} {:>12} {:>12}",
+        "alpha", "local-sgd", "vrl-sgd", "gap"
+    );
+    for &a in &alphas {
+        let run = |algorithm| {
+            let spec = TrainSpec {
+                algorithm,
+                workers: 8,
+                period: 20,
+                lr: 0.05,
+                batch: 32,
+                steps: 1200,
+                seed: 42,
+                ..TrainSpec::default()
+            };
+            run_training(&spec, &task, Partition::Dirichlet(a))
+                .expect("run")
+                .final_loss()
+        };
+        let local = run(AlgorithmKind::LocalSgd);
+        let vrl = run(AlgorithmKind::VrlSgd);
+        println!("{a:<8} {local:>12.4} {vrl:>12.4} {:>12.4}", local - vrl);
+    }
+
+    println!("\nLocal SGD degrades as shards grow heterogeneous; VRL-SGD does not.");
+}

@@ -1,0 +1,27 @@
+// regression check for the execute() input-buffer leak (§Perf log #4):
+// 400 transformer steps through XlaEngine must keep RSS flat.
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for l in s.lines() { if l.starts_with("VmRSS:") {
+        return l.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0; } }
+    0.0
+}
+fn main() {
+    let rt = vrl_sgd::runtime::Runtime::cpu("artifacts").unwrap();
+    let spec = vrl_sgd::config::TrainSpec { workers: 1, ..Default::default() };
+    let mut engines = vrl_sgd::runtime::build_xla_engines(&rt, "transformer", &spec,
+        vrl_sgd::config::Partition::Identical, 128).unwrap();
+    let e = &mut engines[0];
+    let mut rng = vrl_sgd::rng::Pcg32::new(1, 1);
+    let mut p = e.init_params(&mut rng);
+    let d = vec![0.0f32; p.len()];
+    let start = rss_mb();
+    println!("start rss {start:.0} MB");
+    for i in 0..400 {
+        e.sgd_step(&mut p, &d, 0.01, 0.0, &mut rng);
+        if i % 100 == 99 { println!("step {i}: rss {:.0} MB", rss_mb()); }
+    }
+    let growth = rss_mb() - start;
+    assert!(growth < 64.0, "leak regression: RSS grew {growth:.0} MB over 400 steps");
+    println!("OK: growth {growth:.0} MB");
+}

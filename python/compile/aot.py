@@ -1,0 +1,80 @@
+"""AOT lowering: JAX train steps -> HLO *text* artifacts for the rust
+runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):
+
+    python -m compile.aot --out-dir ../artifacts [--models mlp,lenet,...]
+
+Python runs ONCE here; the rust binary is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+from . import model as model_lib
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_one(name: str, out_dir: str) -> dict:
+    """Lower model ``name`` and write artifacts; returns the meta dict."""
+    step, example_args, meta = model_lib.make_step(name)
+    lowered = jax.jit(step).lower(*example_args)
+    hlo = to_hlo_text(lowered)
+
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    meta_path = os.path.join(out_dir, f"{name}.meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+
+    print(
+        f"{name}: P={meta['param_dim']} batch={meta['batch']} "
+        f"-> {hlo_path} ({len(hlo)} chars)"
+    )
+    return meta
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default=",".join(model_lib.CONFIGS),
+        help="comma-separated subset of: " + ", ".join(model_lib.CONFIGS),
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [n.strip() for n in args.models.split(",") if n.strip()]
+    for n in names:
+        if n not in model_lib.CONFIGS:
+            print(f"unknown model '{n}'", file=sys.stderr)
+            return 2
+        build_one(n, args.out_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

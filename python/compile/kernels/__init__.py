@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the HLO artifacts).
+
+Public surface used by the Layer-2 models:
+
+* :func:`matmul` — differentiable tiled matmul (MXU-shaped blocks).
+* :func:`vrl_update` — fused ``params - gamma * (grad - delta)``.
+* :func:`softmax_xent` — fused mean cross-entropy with custom VJP.
+
+``ref`` holds the pure-jnp oracles used by the pytest suite.
+"""
+
+from . import ref  # noqa: F401
+from .matmul import matmul, matmul_raw  # noqa: F401
+from .softmax_xent import softmax_xent, softmax_xent_raw  # noqa: F401
+from .vrl_update import vrl_update  # noqa: F401

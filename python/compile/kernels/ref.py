@@ -1,0 +1,42 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the ground truth against which ``python/tests/test_kernels.py``
+(hypothesis shape sweeps) checks the kernels; they contain no Pallas, no
+blocking, no padding — the most direct possible statement of the math.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, w):
+    """Plain jnp matmul: (M, K) @ (K, N)."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def vrl_update(params, grad, delta, gamma):
+    """Flat VRL-SGD update: params - gamma * (grad - delta)."""
+    return params - gamma * (grad - delta)
+
+
+def softmax_xent_per_sample(logits, labels):
+    """Per-sample softmax cross-entropy losses (B,)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    logp = logits - m - jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1, keepdims=True))
+    return -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy over the batch."""
+    return jnp.mean(softmax_xent_per_sample(logits, labels))
+
+
+def softmax_xent_dlogits(logits, labels):
+    """Gradient of the *sum* of per-sample losses w.r.t. logits:
+    softmax(logits) - onehot(labels)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    onehot = (labels[:, None] == jnp.arange(logits.shape[-1])[None, :]).astype(
+        logits.dtype
+    )
+    return p - onehot

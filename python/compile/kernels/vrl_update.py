@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernel: the fused VRL-SGD update (eqs. 5-6).
+
+``new_params = params - gamma * (grad - delta)``
+
+On hardware this is the memory-bound tail of every local step: three
+P-length streams in, one out. Fusing keeps the (params, grad, delta)
+triple resident per VMEM block instead of three HBM round-trips; the
+1-D grid walks P in BLOCK-sized tiles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 * 128 lanes * 64 sublanes worth of f32 — a comfortable VMEM tile.
+BLOCK = 65536
+
+
+def _vrl_kernel(p_ref, g_ref, d_ref, gamma_ref, o_ref):
+    gamma = gamma_ref[0]
+    o_ref[...] = p_ref[...] - gamma * (g_ref[...] - d_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def vrl_update(params, grad, delta, gamma, block=BLOCK):
+    """Fused ``params - gamma * (grad - delta)`` over flat f32 vectors."""
+    (p,) = params.shape
+    assert grad.shape == (p,) and delta.shape == (p,)
+    bp = min(block, p)
+    pp = -(-p // bp) * bp
+    pad = pp - p
+
+    def pad1(v):
+        return jnp.pad(v, (0, pad)) if pad else v
+
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1)
+    out = pl.pallas_call(
+        _vrl_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            # gamma is broadcast to every tile
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), jnp.float32),
+        interpret=True,
+    )(pad1(params), pad1(grad), pad1(delta), gamma_arr)
+    return out[:p]

@@ -1,0 +1,346 @@
+"""Layer-2 JAX models: the worker train-step graphs, built on the Layer-1
+Pallas kernels.
+
+Every model is exposed through one uniform *flat-parameter* train step —
+the artifact contract consumed by the rust runtime
+(``rust/src/runtime/mod.rs``):
+
+    step(params f32[P], delta f32[P], x, y, gamma f32[])
+        -> (new_params f32[P], loss f32[])
+    new_params = params - gamma * (grad mean_loss(params; x, y) - delta)
+
+The gradient flows through the Pallas matmul / softmax-CE kernels via
+their custom VJPs, and the final update is the fused Pallas
+``vrl_update`` kernel, so the whole VRL-SGD local step lowers into a
+single HLO module.
+
+Models (paper §6.1 + the e2e driver):
+
+* ``mlp``         — the transfer-learning head (features -> hidden -> C)
+* ``lenet``       — small conv net on 28x28 images (MNIST stand-in)
+* ``textcnn``     — 1-D conv text classifier over pre-embedded tokens
+* ``transformer`` — causal LM for the end-to-end driver
+"""
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import kernels
+
+
+# ---------------------------------------------------------------------------
+# flat parameter layout
+
+
+@dataclasses.dataclass
+class Block:
+    """One named tensor inside the flat parameter vector."""
+
+    name: str
+    shape: tuple
+    scale: float
+
+    @property
+    def size(self):
+        return int(math.prod(self.shape))
+
+
+class Layout:
+    """Ordered list of parameter blocks <-> flat vector views."""
+
+    def __init__(self, blocks):
+        self.blocks = blocks
+        self.offsets = []
+        off = 0
+        for b in blocks:
+            self.offsets.append(off)
+            off += b.size
+        self.total = off
+
+    def unflatten(self, params):
+        """Slice the flat vector into a dict of shaped arrays."""
+        out = {}
+        for b, off in zip(self.blocks, self.offsets):
+            out[b.name] = params[off : off + b.size].reshape(b.shape)
+        return out
+
+    def meta_blocks(self):
+        """init_blocks entries for the artifact metadata."""
+        return [
+            {"name": b.name, "len": b.size, "scale": b.scale} for b in self.blocks
+        ]
+
+
+def _dense(h, x, w_name, b_name):
+    """x @ W.T + b with W stored [out, in] (matches the rust MlpEngine
+    layout so cross-engine tests can compare gradients coordinate-wise)."""
+    w = h[w_name]
+    b = h[b_name]
+    return kernels.matmul(x, w.T) + b[None, :]
+
+
+# ---------------------------------------------------------------------------
+# models
+
+
+def mlp_config(features=256, hidden=128, classes=20, batch=16):
+    """The paper's transfer-learning head (scaled; paper: 2048/1024/200)."""
+    layout = Layout(
+        [
+            Block("w1", (hidden, features), math.sqrt(2.0 / features)),
+            Block("b1", (hidden,), 0.0),
+            Block("w2", (classes, hidden), math.sqrt(1.0 / hidden)),
+            Block("b2", (classes,), 0.0),
+        ]
+    )
+
+    def loss_fn(params, x, y):
+        h = layout.unflatten(params)
+        z = jax.nn.relu(_dense(h, x, "w1", "b1"))
+        logits = _dense(h, z, "w2", "b2")
+        return kernels.softmax_xent(logits, y)
+
+    meta = {
+        "name": "mlp",
+        "batch": batch,
+        "input_shape": [features],
+        "input_kind": "feature",
+        "input_is_tokens": False,
+        "classes": classes,
+        "x_dtype": jnp.float32,
+        "y_shape": (batch,),
+    }
+    return layout, loss_fn, (batch, features), meta
+
+
+def lenet_config(side=28, classes=10, batch=16):
+    """LeNet-style conv net; input arrives flat [side*side] and is
+    reshaped to NHWC inside the graph (keeps the rust data layer uniform)."""
+    c1, c2, fc = 8, 16, 64
+    # after two stride-2 pools: side/4
+    s4 = side // 4
+    layout = Layout(
+        [
+            Block("k1", (5, 5, 1, c1), math.sqrt(2.0 / 25)),
+            Block("bc1", (c1,), 0.0),
+            Block("k2", (5, 5, c1, c2), math.sqrt(2.0 / (25 * c1))),
+            Block("bc2", (c2,), 0.0),
+            Block("w1", (fc, s4 * s4 * c2), math.sqrt(2.0 / (s4 * s4 * c2))),
+            Block("b1", (fc,), 0.0),
+            Block("w2", (classes, fc), math.sqrt(1.0 / fc)),
+            Block("b2", (classes,), 0.0),
+        ]
+    )
+
+    def conv(x, k, b):
+        out = lax.conv_general_dilated(
+            x, k, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return jax.nn.relu(out + b[None, None, None, :])
+
+    def pool(x):
+        return lax.reduce_window(
+            x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+
+    def loss_fn(params, x, y):
+        h = layout.unflatten(params)
+        img = x.reshape(-1, side, side, 1)
+        z = pool(conv(img, h["k1"], h["bc1"]))
+        z = pool(conv(z, h["k2"], h["bc2"]))
+        z = z.reshape(z.shape[0], -1)
+        z = jax.nn.relu(_dense(h, z, "w1", "b1"))
+        logits = _dense(h, z, "w2", "b2")
+        return kernels.softmax_xent(logits, y)
+
+    meta = {
+        "name": "lenet",
+        "batch": batch,
+        "input_shape": [side * side],
+        "input_kind": "image",
+        "input_is_tokens": False,
+        "classes": classes,
+        "x_dtype": jnp.float32,
+        "y_shape": (batch,),
+    }
+    return layout, loss_fn, (batch, side * side), meta
+
+
+def textcnn_config(seq=32, embed=32, classes=14, batch=16):
+    """TextCNN (Kim 2014) over pre-embedded tokens: parallel width-3/4
+    convolutions, global max pool, dense head."""
+    f = 16  # filters per width
+    layout = Layout(
+        [
+            Block("k3", (3, embed, f), math.sqrt(2.0 / (3 * embed))),
+            Block("bk3", (f,), 0.0),
+            Block("k4", (4, embed, f), math.sqrt(2.0 / (4 * embed))),
+            Block("bk4", (f,), 0.0),
+            Block("w", (classes, 2 * f), math.sqrt(1.0 / (2 * f))),
+            Block("b", (classes,), 0.0),
+        ]
+    )
+
+    def conv1d(x, k, b):
+        # x: (B, L, E), k: (W, E, F)
+        out = lax.conv_general_dilated(
+            x, k, window_strides=(1,), padding="VALID",
+            dimension_numbers=("NWC", "WIO", "NWC"),
+        )
+        return jax.nn.relu(out + b[None, None, :])
+
+    def loss_fn(params, x, y):
+        h = layout.unflatten(params)
+        z3 = jnp.max(conv1d(x, h["k3"], h["bk3"]), axis=1)  # (B, F)
+        z4 = jnp.max(conv1d(x, h["k4"], h["bk4"]), axis=1)
+        z = jnp.concatenate([z3, z4], axis=-1)
+        logits = _dense(h, z, "w", "b")
+        return kernels.softmax_xent(logits, y)
+
+    meta = {
+        "name": "textcnn",
+        "batch": batch,
+        "input_shape": [seq, embed],
+        "input_kind": "text",
+        "input_is_tokens": False,
+        "classes": classes,
+        "x_dtype": jnp.float32,
+        "y_shape": (batch,),
+    }
+    return layout, loss_fn, (batch, seq, embed), meta
+
+
+def transformer_config(vocab=128, seq=32, dim=64, layers=2, heads=2, ffn=128, batch=8):
+    """Small causal transformer LM — the end-to-end driver model."""
+    blocks = [
+        Block("embed", (vocab, dim), 0.02),
+        Block("pos", (seq, dim), 0.02),
+    ]
+    for l in range(layers):
+        blocks += [
+            Block(f"l{l}.wqkv", (3 * dim, dim), math.sqrt(1.0 / dim)),
+            Block(f"l{l}.wo", (dim, dim), math.sqrt(1.0 / dim)),
+            Block(f"l{l}.ln1", (dim,), 0.0),  # additive ln scale offset
+            Block(f"l{l}.w1", (ffn, dim), math.sqrt(2.0 / dim)),
+            Block(f"l{l}.b1", (ffn,), 0.0),
+            Block(f"l{l}.w2", (dim, ffn), math.sqrt(1.0 / ffn)),
+            Block(f"l{l}.b2", (dim,), 0.0),
+            Block(f"l{l}.ln2", (dim,), 0.0),
+        ]
+    blocks.append(Block("head", (vocab, dim), math.sqrt(1.0 / dim)))
+    layout = Layout(blocks)
+    hd = dim // heads
+
+    def layernorm(x, scale_off):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + 1e-5) * (1.0 + scale_off[None, None, :])
+
+    def mm(x2d, w):
+        # project via the Pallas kernel; w stored [out, in]
+        return kernels.matmul(x2d, w.T)
+
+    def loss_fn(params, x, y):
+        h = layout.unflatten(params)
+        b, s = x.shape
+        z = h["embed"][x] + h["pos"][None, :, :]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        for l in range(layers):
+            zi = layernorm(z, h[f"l{l}.ln1"])
+            qkv = mm(zi.reshape(b * s, dim), h[f"l{l}.wqkv"]).reshape(b, s, 3 * dim)
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+
+            def split_heads(t):
+                return t.reshape(b, s, heads, hd).transpose(0, 2, 1, 3)
+
+            q, k, v = split_heads(q), split_heads(k), split_heads(v)
+            att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+            att = jnp.where(mask[None, None, :, :], att, -1e9)
+            att = jax.nn.softmax(att, axis=-1)
+            ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+            ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, dim)
+            z = z + mm(ctx, h[f"l{l}.wo"]).reshape(b, s, dim)
+            zi = layernorm(z, h[f"l{l}.ln2"])
+            ff = jax.nn.relu(mm(zi.reshape(b * s, dim), h[f"l{l}.w1"]) + h[f"l{l}.b1"][None, :])
+            z = z + (mm(ff, h[f"l{l}.w2"]) + h[f"l{l}.b2"][None, :]).reshape(b, s, dim)
+        logits = mm(z.reshape(b * s, dim), h["head"])  # (B*S, V)
+        return kernels.softmax_xent(logits, y.reshape(b * s))
+
+    meta = {
+        "name": "transformer",
+        "batch": batch,
+        "input_shape": [seq],
+        "input_kind": "tokens",
+        "input_is_tokens": True,
+        "seq_len": seq,
+        "classes": vocab,
+        "x_dtype": jnp.int32,
+        "y_shape": (batch, seq),
+    }
+    return layout, loss_fn, (batch, seq), meta
+
+
+CONFIGS = {
+    "mlp": mlp_config,
+    "lenet": lenet_config,
+    "textcnn": textcnn_config,
+    "transformer": transformer_config,
+}
+
+
+def make_step(name, **overrides):
+    """Build the flat-parameter train step for model ``name``.
+
+    Returns ``(step_fn, example_args, meta)`` where ``step_fn`` has the
+    artifact signature and ``example_args`` are ShapeDtypeStructs for
+    ``jax.jit(...).lower``.
+    """
+    layout, loss_fn, x_shape, meta = CONFIGS[name](**overrides)
+    p = layout.total
+    meta = dict(meta)
+    meta["param_dim"] = p
+    meta["init_blocks"] = layout.meta_blocks()
+
+    def step(params, delta, x, y, gamma):
+        loss, grad = jax.value_and_grad(loss_fn)(params, x, y)
+        new_params = kernels.vrl_update(params, grad, delta, gamma)
+        return new_params, loss
+
+    x_dtype = meta.pop("x_dtype")
+    y_shape = meta.pop("y_shape")
+    example_args = (
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct(x_shape, x_dtype),
+        jax.ShapeDtypeStruct(y_shape, jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return step, example_args, meta
+
+
+def init_params(meta, key):
+    """Reference initializer (python side, for tests): normal(0, scale)
+    per block, matching the rust ``XlaEngine::init_params`` scheme."""
+    parts = []
+    for blk in meta["init_blocks"]:
+        key, sub = jax.random.split(key)
+        if blk["scale"] == 0.0:
+            parts.append(jnp.zeros((blk["len"],), jnp.float32))
+        else:
+            parts.append(
+                jax.random.normal(sub, (blk["len"],), jnp.float32) * blk["scale"]
+            )
+    return jnp.concatenate(parts)
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_step(name):
+    """Cached jitted step for the python-side tests."""
+    step, _, meta = make_step(name)
+    return jax.jit(step), meta

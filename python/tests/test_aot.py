@@ -1,0 +1,72 @@
+"""AOT pipeline tests: lowering to HLO text and metadata integrity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    metas = {name: aot.build_one(name, str(out)) for name in M.CONFIGS}
+    return str(out), metas
+
+
+def test_all_artifacts_written(built):
+    out, metas = built
+    for name in M.CONFIGS:
+        hlo = os.path.join(out, f"{name}.hlo.txt")
+        meta = os.path.join(out, f"{name}.meta.json")
+        assert os.path.exists(hlo), hlo
+        assert os.path.exists(meta), meta
+        assert os.path.getsize(hlo) > 1000
+
+
+def test_hlo_is_text_with_entry(built):
+    out, _ = built
+    for name in M.CONFIGS:
+        with open(os.path.join(out, f"{name}.hlo.txt")) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # the step has 5 parameters
+        for i in range(5):
+            assert f"parameter({i})" in text, f"{name} missing parameter {i}"
+
+
+def test_meta_json_contract(built):
+    out, metas = built
+    for name, meta in metas.items():
+        with open(os.path.join(out, f"{name}.meta.json")) as f:
+            loaded = json.load(f)
+        assert loaded == meta
+        assert loaded["name"] == name
+        assert loaded["param_dim"] == sum(b["len"] for b in loaded["init_blocks"])
+        assert loaded["batch"] >= 1
+        assert loaded["classes"] >= 2
+        if loaded["input_is_tokens"]:
+            assert loaded["seq_len"] == loaded["input_shape"][0]
+
+
+def test_lowering_is_deterministic():
+    step, ex, _ = M.make_step("mlp")
+    import jax
+
+    t1 = aot.to_hlo_text(jax.jit(step).lower(*ex))
+    t2 = aot.to_hlo_text(jax.jit(step).lower(*ex))
+    assert t1 == t2
+
+
+def test_hlo_mentions_no_python_or_callbacks(built):
+    """The artifact must be self-contained: no host callbacks, no custom
+    calls that the CPU PJRT client can't execute (the interpret=True
+    Pallas path lowers to plain HLO)."""
+    out, _ = built
+    for name in M.CONFIGS:
+        with open(os.path.join(out, f"{name}.hlo.txt")) as f:
+            text = f.read()
+        assert "custom-call" not in text, f"{name} contains a custom-call"
+        assert "CallbackFn" not in text, name

@@ -1,0 +1,181 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (including non-multiples of the block sizes, so
+the padding paths are exercised) and checks `assert_allclose` against
+``kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import kernels
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    got = kernels.matmul_raw(jnp.array(x), jnp.array(w))
+    want = ref.matmul(jnp.array(x), jnp.array(w))
+    assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([8, 32, 128]),
+)
+def test_matmul_block_size_invariance(m, seed, block):
+    """The result must not depend on the tile size (padding correctness)."""
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, 17), rand(rng, 17, 9)
+    got = kernels.matmul_raw(jnp.array(x), jnp.array(w), block=block)
+    want = ref.matmul(jnp.array(x), jnp.array(w))
+    assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_multiple_of_block_exact():
+    """256x256 @ 256x256 with block=128: no padding path at all."""
+    rng = np.random.default_rng(0)
+    x, w = rand(rng, 256, 256), rand(rng, 256, 256)
+    got = kernels.matmul_raw(jnp.array(x), jnp.array(w))
+    want = ref.matmul(jnp.array(x), jnp.array(w))
+    assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_grad_matches_jnp_grad():
+    rng = np.random.default_rng(1)
+    x, w = rand(rng, 6, 8), rand(rng, 8, 5)
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.sin(kernels.matmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(ref.matmul(x, w)))
+
+    gx_p, gw_p = jax.grad(f_pallas, argnums=(0, 1))(jnp.array(x), jnp.array(w))
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(jnp.array(x), jnp.array(w))
+    assert_allclose(np.array(gx_p), np.array(gx_r), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.array(gw_p), np.array(gw_r), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# vrl_update
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 5000),
+    gamma=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vrl_update_matches_ref(p, gamma, seed):
+    rng = np.random.default_rng(seed)
+    params, grad, delta = rand(rng, p), rand(rng, p), rand(rng, p)
+    got = kernels.vrl_update(
+        jnp.array(params), jnp.array(grad), jnp.array(delta), gamma
+    )
+    want = ref.vrl_update(params, grad, delta, np.float32(gamma))
+    assert_allclose(np.array(got), want, rtol=1e-6, atol=1e-6)
+
+
+def test_vrl_update_zero_delta_is_sgd():
+    rng = np.random.default_rng(2)
+    p, g = rand(rng, 100), rand(rng, 100)
+    got = kernels.vrl_update(jnp.array(p), jnp.array(g), jnp.zeros(100), 0.1)
+    assert_allclose(np.array(got), p - 0.1 * g, rtol=1e-6)
+
+
+def test_vrl_update_small_block_padding():
+    rng = np.random.default_rng(3)
+    p, g, d = rand(rng, 1000), rand(rng, 1000), rand(rng, 1000)
+    got = kernels.vrl_update(
+        jnp.array(p), jnp.array(g), jnp.array(d), 0.3, block=64
+    )
+    assert_allclose(
+        np.array(got), ref.vrl_update(p, g, d, np.float32(0.3)), rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 200),
+    c=st.integers(2, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_matches_ref(b, c, seed):
+    rng = np.random.default_rng(seed)
+    logits = rand(rng, b, c) * 3.0
+    labels = rng.integers(0, c, b).astype(np.int32)
+    loss, dlog = kernels.softmax_xent_raw(jnp.array(logits), jnp.array(labels))
+    want_loss = ref.softmax_xent_per_sample(jnp.array(logits), jnp.array(labels))
+    want_dlog = ref.softmax_xent_dlogits(jnp.array(logits), jnp.array(labels))
+    assert_allclose(np.array(loss), np.array(want_loss), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.array(dlog), np.array(want_dlog), rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_xent_is_stable_for_large_logits():
+    logits = jnp.array([[1000.0, -1000.0], [-1000.0, 1000.0]], jnp.float32)
+    labels = jnp.array([0, 1], jnp.int32)
+    loss, dlog = kernels.softmax_xent_raw(logits, labels)
+    assert np.all(np.isfinite(np.array(loss)))
+    assert np.all(np.isfinite(np.array(dlog)))
+    assert_allclose(np.array(loss), [0.0, 0.0], atol=1e-6)
+
+
+def test_softmax_xent_grad_matches_jax_grad_of_ref():
+    rng = np.random.default_rng(4)
+    logits = rand(rng, 12, 7)
+    labels = rng.integers(0, 7, 12).astype(np.int32)
+    g_pallas = jax.grad(lambda z: kernels.softmax_xent(z, jnp.array(labels)))(
+        jnp.array(logits)
+    )
+    g_ref = jax.grad(lambda z: ref.softmax_xent(z, jnp.array(labels)))(
+        jnp.array(logits)
+    )
+    assert_allclose(np.array(g_pallas), np.array(g_ref), rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_xent_mean_reduction():
+    rng = np.random.default_rng(5)
+    logits = rand(rng, 9, 4)
+    labels = rng.integers(0, 4, 9).astype(np.int32)
+    total = kernels.softmax_xent(jnp.array(logits), jnp.array(labels))
+    per = ref.softmax_xent_per_sample(jnp.array(logits), jnp.array(labels))
+    assert_allclose(float(total), float(jnp.mean(per)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("b", [1, 127, 128, 129])
+def test_softmax_xent_batch_block_boundaries(b):
+    rng = np.random.default_rng(b)
+    logits = rand(rng, b, 5)
+    labels = rng.integers(0, 5, b).astype(np.int32)
+    loss, _ = kernels.softmax_xent_raw(jnp.array(logits), jnp.array(labels))
+    want = ref.softmax_xent_per_sample(jnp.array(logits), jnp.array(labels))
+    assert_allclose(np.array(loss), np.array(want), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,197 @@
+"""Layer-2 model tests: train-step semantics, gradient correctness,
+parameter-layout contract with the rust engines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+
+def make_batch(meta, ex, seed=0):
+    rng = np.random.default_rng(seed)
+    x_spec, y_spec = ex[2], ex[3]
+    if meta["input_is_tokens"]:
+        x = rng.integers(0, meta["classes"], x_spec.shape).astype(np.int32)
+    else:
+        x = rng.standard_normal(x_spec.shape).astype(np.float32)
+    y = rng.integers(0, meta["classes"], y_spec.shape).astype(np.int32)
+    return jnp.array(x), jnp.array(y)
+
+
+ALL_MODELS = ["mlp", "lenet", "textcnn", "transformer"]
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_step_shapes_and_meta(name):
+    step, ex, meta = M.make_step(name)
+    p_dim = meta["param_dim"]
+    assert ex[0].shape == (p_dim,)
+    assert ex[1].shape == (p_dim,)
+    assert sum(b["len"] for b in meta["init_blocks"]) == p_dim
+    x, y = make_batch(meta, ex)
+    p = M.init_params(meta, jax.random.PRNGKey(0))
+    new_p, loss = jax.jit(step)(p, jnp.zeros_like(p), x, y, jnp.float32(0.01))
+    assert new_p.shape == (p_dim,)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_initial_loss_is_near_log_c(name):
+    """With small random init the classifier is near-uniform: loss ≈ ln C."""
+    step, ex, meta = M.make_step(name)
+    x, y = make_batch(meta, ex)
+    p = M.init_params(meta, jax.random.PRNGKey(1))
+    _, loss = jax.jit(step)(p, jnp.zeros_like(p), x, y, jnp.float32(0.0))
+    expect = np.log(meta["classes"])
+    assert abs(float(loss) - expect) < 0.75 * expect + 0.5, (
+        f"{name}: loss {float(loss)} vs ln C {expect}"
+    )
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_step_descends_on_fixed_batch(name):
+    step, ex, meta = M.make_step(name)
+    x, y = make_batch(meta, ex, seed=3)
+    p = M.init_params(meta, jax.random.PRNGKey(2))
+    d = jnp.zeros_like(p)
+    js = jax.jit(step)
+    first = None
+    lr = 0.02 if name == "transformer" else 0.05
+    for i in range(12):
+        p, loss = js(p, d, x, y, jnp.float32(lr))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.9, f"{name}: {first} -> {float(loss)}"
+
+
+def test_gamma_zero_keeps_params():
+    step, ex, meta = M.make_step("mlp")
+    x, y = make_batch(meta, ex)
+    p = M.init_params(meta, jax.random.PRNGKey(3))
+    new_p, _ = jax.jit(step)(p, jnp.zeros_like(p), x, y, jnp.float32(0.0))
+    assert_allclose(np.array(new_p), np.array(p), rtol=0, atol=0)
+
+
+def test_delta_shifts_update_exactly():
+    """step(p, Δ, ...) − step(p, 0, ...) = γΔ — the variance-reduction
+    correction enters the update linearly (eq. 5/6)."""
+    step, ex, meta = M.make_step("mlp")
+    x, y = make_batch(meta, ex)
+    p = M.init_params(meta, jax.random.PRNGKey(4))
+    delta = jax.random.normal(jax.random.PRNGKey(5), p.shape, jnp.float32)
+    gamma = jnp.float32(0.1)
+    with_d, _ = jax.jit(step)(p, delta, x, y, gamma)
+    without, _ = jax.jit(step)(p, jnp.zeros_like(p), x, y, gamma)
+    assert_allclose(
+        np.array(with_d - without), np.array(gamma * delta), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_mlp_grad_matches_finite_differences():
+    step, ex, meta = M.make_step("mlp")
+    x, y = make_batch(meta, ex, seed=7)
+    p = M.init_params(meta, jax.random.PRNGKey(6))
+    gamma = jnp.float32(1.0)
+    js = jax.jit(step)
+    new_p, _ = js(p, jnp.zeros_like(p), x, y, gamma)
+    grad = np.array((p - new_p) / gamma)
+
+    def loss_at(q):
+        _, l = js(jnp.array(q), jnp.zeros_like(p), x, y, jnp.float32(0.0))
+        return float(l)
+
+    eps = 1e-3
+    rng = np.random.default_rng(0)
+    for j in rng.integers(0, meta["param_dim"], 6):
+        q = np.array(p).copy()
+        q[j] += eps
+        up = loss_at(q)
+        q[j] -= 2 * eps
+        down = loss_at(q)
+        fd = (up - down) / (2 * eps)
+        assert abs(fd - grad[j]) < 2e-2, f"coord {j}: fd {fd} vs {grad[j]}"
+
+
+def test_mlp_layout_matches_rust_engine_contract():
+    """The flat layout must be W1 [h,d] | b1 | W2 [c,h] | b2 — the same
+    order the rust MlpEngine uses, so cross-engine tests can compare."""
+    _, _, meta = M.make_step("mlp", features=8, hidden=4, classes=3, batch=2)
+    names = [b["name"] for b in meta["init_blocks"]]
+    lens = [b["len"] for b in meta["init_blocks"]]
+    assert names == ["w1", "b1", "w2", "b2"]
+    assert lens == [4 * 8, 4, 3 * 4, 3]
+    assert meta["param_dim"] == 32 + 4 + 12 + 3
+
+
+def test_transformer_meta_contract():
+    _, ex, meta = M.make_step("transformer")
+    assert meta["input_is_tokens"] is True
+    assert meta["seq_len"] == ex[2].shape[1]
+    assert ex[3].shape == ex[2].shape  # next-token targets
+    assert meta["input_shape"] == [meta["seq_len"]]
+
+
+def test_transformer_causality():
+    """Changing a future token must not change earlier-position losses:
+    evaluate per-position loss via the step's loss at gamma=0 on crafted
+    batches."""
+    step, ex, meta = M.make_step("transformer")
+    b, s = ex[2].shape
+    rng = np.random.default_rng(11)
+    x = rng.integers(0, meta["classes"], (b, s)).astype(np.int32)
+    y = rng.integers(0, meta["classes"], (b, s)).astype(np.int32)
+    p = M.init_params(meta, jax.random.PRNGKey(8))
+    js = jax.jit(step)
+
+    # perturb the last input token only; mask targets to count only the
+    # first position's loss by comparing full-batch losses of pairs that
+    # agree everywhere except position s-1.
+    x2 = x.copy()
+    x2[:, -1] = (x2[:, -1] + 1) % meta["classes"]
+    # loss difference must come only from position s-1's prediction; make
+    # targets at s-1 identical so any diff would be a causality leak from
+    # positions < s-1... they can't see x[s-1], so total loss changes only
+    # via position s-1's own logits. Check positions 0..s-2 indirectly:
+    # zero-out their contribution by comparing loss deltas on two target
+    # sets that differ only at early positions.
+    _, l1 = js(p, jnp.zeros_like(p), jnp.array(x), jnp.array(y), jnp.float32(0.0))
+    _, l2 = js(p, jnp.zeros_like(p), jnp.array(x2), jnp.array(y), jnp.float32(0.0))
+    # the two losses differ (the last position sees different input)...
+    assert abs(float(l1) - float(l2)) > 0
+    # ...but masking the last position's target contribution equalizes:
+    # set y[:, -1] to the argmax-free same value and subtract per-sample
+    # contribution by recomputing with a y that differs only at s-1.
+    y3 = y.copy()
+    y3[:, -1] = (y3[:, -1] + 1) % meta["classes"]
+    _, l1b = js(p, jnp.zeros_like(p), jnp.array(x), jnp.array(y3), jnp.float32(0.0))
+    _, l2b = js(p, jnp.zeros_like(p), jnp.array(x2), jnp.array(y3), jnp.float32(0.0))
+    # delta from changing y at position s-1 under x vs x2: both capture
+    # only position s-1 terms; causality ⇒ (l1 - l1b) and (l2 - l2b) are
+    # the only places x/x2 matter, so l1 - l2 == (l1 - l1b) - (l2 - l2b)
+    # + (l1b - l2b) trivially; the real check: recompute l1/l2 with
+    # early-position targets changed — deltas must be identical.
+    y4 = y.copy()
+    y4[:, 0] = (y4[:, 0] + 1) % meta["classes"]
+    _, l1c = js(p, jnp.zeros_like(p), jnp.array(x), jnp.array(y4), jnp.float32(0.0))
+    _, l2c = js(p, jnp.zeros_like(p), jnp.array(x2), jnp.array(y4), jnp.float32(0.0))
+    # position-0 loss term is unaffected by the last input token:
+    assert_allclose(
+        float(l1) - float(l1c), float(l2) - float(l2c), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_init_params_respects_scales():
+    _, _, meta = M.make_step("mlp")
+    p = np.array(M.init_params(meta, jax.random.PRNGKey(9)))
+    off = 0
+    for blk in meta["init_blocks"]:
+        seg = p[off : off + blk["len"]]
+        off += blk["len"]
+        if blk["scale"] == 0.0:
+            assert np.all(seg == 0.0), blk["name"]
+        else:
+            assert abs(np.std(seg) - blk["scale"]) < 0.3 * blk["scale"], blk["name"]

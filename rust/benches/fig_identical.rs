@@ -1,0 +1,30 @@
+//! Bench: regenerate **Figure 2** — epoch loss in the identical case:
+//! all four algorithms should converge at similar rates.
+//!
+//! Run: `cargo bench --bench fig_identical`
+
+use vrl_sgd::benchutil;
+use vrl_sgd::experiments::{fig2, Scale};
+
+fn main() {
+    println!("=== Figure 2: identical case ===\n");
+    let mut set = None;
+    let r = benchutil::bench("fig2 grid (3 tasks x 4 algorithms)", 0, 1, || {
+        set = Some(fig2(Scale::Smoke));
+    });
+    let set = set.unwrap();
+    print!("{}", set.summary());
+    benchutil::report(&r);
+
+    println!("\nspread of final losses per task (should be small — all similar):");
+    for task in ["lenet-mnist-synth", "textcnn-dbpedia-synth", "transfer-tinyimagenet-synth"] {
+        let losses: Vec<f64> = ["s-sgd", "local-sgd", "vrl-sgd", "easgd"]
+            .iter()
+            .map(|a| set.get(task, a).unwrap().final_loss())
+            .collect();
+        let init = set.get(task, "s-sgd").unwrap().initial_loss();
+        let max = losses.iter().cloned().fold(f64::MIN, f64::max);
+        let min = losses.iter().cloned().fold(f64::MAX, f64::min);
+        println!("  {task:<28} spread {:.4} (normalized {:.3})", max - min, (max - min) / init);
+    }
+}

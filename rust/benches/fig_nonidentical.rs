@@ -1,0 +1,34 @@
+//! Bench: regenerate **Figure 1** — epoch loss in the non-identical case
+//! on the three synthetic stand-ins for the paper's tasks (LeNet/MNIST,
+//! TextCNN/DBPedia, transfer learning), with the paper's periods
+//! (k = 20 / 50 / 20) and N = 8.
+//!
+//! Run: `cargo bench --bench fig_nonidentical`
+
+use vrl_sgd::benchutil;
+use vrl_sgd::experiments::{fig1, Scale};
+
+fn main() {
+    println!("=== Figure 1: non-identical case (paper periods) ===\n");
+    let mut set = None;
+    let r = benchutil::bench("fig1 grid (3 tasks x 4 algorithms)", 0, 1, || {
+        set = Some(fig1(Scale::Smoke));
+    });
+    let set = set.unwrap();
+    print!("{}", set.summary());
+    benchutil::report(&r);
+
+    // the paper's qualitative ranking per task: VRL ~ S-SGD << Local, EASGD
+    println!("\nnormalized final-loss gap to S-SGD (lower = closer to S-SGD):");
+    for task in ["lenet-mnist-synth", "textcnn-dbpedia-synth", "transfer-tinyimagenet-synth"] {
+        let ssgd = set.get(task, "s-sgd").unwrap();
+        let init = ssgd.initial_loss();
+        let base = ssgd.final_loss();
+        print!("  {task:<28}");
+        for algo in ["local-sgd", "vrl-sgd", "easgd"] {
+            let l = set.get(task, algo).unwrap().final_loss();
+            print!(" {algo}={:+.3}", (l - base) / init);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench: regenerate **Figures 3 and 4** (Appendix E) — the exact
+//! quadratic: log distance-to-minimum and log variance-among-workers
+//! for b ∈ {1, 10, 100} × k ∈ {2, 10, 50}.
+//!
+//! Run: `cargo bench --bench fig_quadratic`
+
+use vrl_sgd::benchutil;
+use vrl_sgd::experiments::quadratic_appendix;
+
+fn main() {
+    println!("=== Figures 3+4: Appendix E quadratic ===\n");
+    let mut cells = None;
+    let r = benchutil::bench("quadratic grid (3b x 3k x 4 algos, 1500 it)", 0, 1, || {
+        cells = Some(quadratic_appendix(1500));
+    });
+    let cells = cells.unwrap();
+    benchutil::report(&r);
+
+    println!("\nfinal dist² to x* (Figure 3) / final worker variance (Figure 4):");
+    println!(
+        "{:<6} {:<4} {:>22} {:>22}",
+        "b", "k", "local-sgd (dist²/var)", "vrl-sgd (dist²/var)"
+    );
+    for &b in &[1.0, 10.0, 100.0] {
+        for &k in &[2usize, 10, 50] {
+            let get = |algo: &str| {
+                let c = cells
+                    .iter()
+                    .find(|c| c.b == b && c.k == k && c.algorithm == algo)
+                    .unwrap();
+                let last = c.out.history.dense_rows.last().unwrap();
+                (last.dist_sq_to_target.unwrap(), last.worker_variance)
+            };
+            let (ld, lv) = get("local-sgd");
+            let (vd, vv) = get("vrl-sgd");
+            println!("{b:<6} {k:<4} {ld:>11.2e}/{lv:>9.2e} {vd:>11.2e}/{vv:>9.2e}");
+        }
+    }
+    println!(
+        "\nShape: Local SGD's error floor rises with b·k (gradient variance\n\
+         among workers); VRL-SGD drives both metrics to numerical zero."
+    );
+}

@@ -1,0 +1,160 @@
+//! Perf microbenches for the L3 hot paths (EXPERIMENTS.md §Perf).
+//!
+//! Covers every per-iteration / per-round cost center of the coordinator:
+//!   * fused `vrl_step` update (rust mirror of the Pallas kernel)
+//!   * N-way model averaging (`mean_rows`) — the sync path
+//!   * executable ring allreduce reference
+//!   * pure-rust engine steps (softmax, MLP)
+//!   * the full sync round (average + Δ update) at transformer scale
+//!   * XLA artifact step latency (when artifacts are present)
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use vrl_sgd::benchutil::{bench, report, report_throughput};
+use vrl_sgd::config::{Partition, TaskKind, TrainSpec};
+use vrl_sgd::engine::build_pure_engines;
+use vrl_sgd::rng::Pcg32;
+use vrl_sgd::tensor;
+
+fn main() {
+    println!("=== L3 hot-path microbenches ===\n");
+    let mut rng = Pcg32::new(1, 1);
+
+    // --- fused VRL update: 3 reads + 1 write per element -----------------
+    for &p in &[100_000usize, 1_000_000, 10_000_000] {
+        let mut x = vec![0.0f32; p];
+        let mut g = vec![0.0f32; p];
+        let mut d = vec![0.0f32; p];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut g, 1.0);
+        rng.fill_normal(&mut d, 1.0);
+        let r = bench(&format!("vrl_step P={p}"), 3, 20, || {
+            tensor::vrl_step(&mut x, &g, &d, 0.01);
+            std::hint::black_box(&x);
+        });
+        report_throughput(&r, (p * 16) as f64 / 1e9, "GB");
+    }
+    println!();
+
+    // --- N-way averaging (the sync collective) ---------------------------
+    for &(n, p) in &[(8usize, 100_000usize), (8, 1_000_000), (32, 1_000_000)] {
+        let rows_data: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let mut v = vec![0.0f32; p];
+                Pcg32::new(i as u64, 0).fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let mut out = vec![0.0f32; p];
+        let r = bench(&format!("mean_rows N={n} P={p}"), 3, 20, || {
+            let refs: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+            tensor::mean_rows(&mut out, &refs);
+            std::hint::black_box(&out);
+        });
+        report_throughput(&r, (n * p * 4) as f64 / 1e9, "GB read");
+    }
+    println!();
+
+    // --- executable ring allreduce reference ------------------------------
+    for &(n, p) in &[(8usize, 1_000_000usize)] {
+        let template: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let mut v = vec![0.0f32; p];
+                Pcg32::new(i as u64, 1).fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let mut rows = template.clone();
+        let r = bench(&format!("ring_allreduce_sum N={n} P={p}"), 1, 10, || {
+            rows.clone_from(&template);
+            vrl_sgd::comm::allreduce::ring_allreduce_sum(&mut rows);
+            std::hint::black_box(&rows);
+        });
+        report(&r);
+    }
+    println!();
+
+    // --- engine local steps -----------------------------------------------
+    let spec = TrainSpec { workers: 1, batch: 32, seed: 3, ..TrainSpec::default() };
+    let engines: Vec<(&str, TaskKind)> = vec![
+        (
+            "softmax d=128 c=10 b=32",
+            TaskKind::SoftmaxSynthetic { classes: 10, features: 128, samples_per_worker: 512 },
+        ),
+        (
+            "mlp 2048->1024->200 b=32 (paper head)",
+            TaskKind::MlpFeatures {
+                features: 2048,
+                hidden: 1024,
+                classes: 200,
+                samples_per_worker: 256,
+            },
+        ),
+    ];
+    for (name, task) in engines {
+        let (mut es, _) = build_pure_engines(&task, Partition::Identical, &spec).unwrap();
+        let e = &mut es[0];
+        let mut p = e.init_params(&mut rng);
+        let delta = vec![0.0f32; p.len()];
+        let mut srng = Pcg32::new(5, 5);
+        let r = bench(&format!("engine step {name}"), 3, 20, || {
+            let l = e.sgd_step(&mut p, &delta, 1e-4, 0.0, &mut srng);
+            std::hint::black_box(l);
+        });
+        report(&r);
+    }
+    println!();
+
+    // --- full sync round at scale -----------------------------------------
+    for &(n, p) in &[(8usize, 84_608usize), (8, 1_000_000)] {
+        use vrl_sgd::comm::{AllReduceAlgo, Cluster};
+        use vrl_sgd::coordinator::algorithms::{Algorithm, VrlSgd, WorkerState};
+        let root = Pcg32::new(9, 9);
+        let mut workers: Vec<WorkerState> = (0..n)
+            .map(|i| {
+                let mut w = WorkerState::new(i, &vec![0.0f32; p], &root);
+                Pcg32::new(i as u64, 7).fill_normal(&mut w.params, 1.0);
+                w
+            })
+            .collect();
+        let mut cluster =
+            Cluster::new(n, &vrl_sgd::config::NetworkSpec::default(), AllReduceAlgo::Ring);
+        let mut algo = VrlSgd { k: 10, warmup: false };
+        let mut round = 0usize;
+        let r = bench(&format!("vrl sync round N={n} P={p}"), 3, 20, || {
+            algo.sync(round, 10, 0.01, &mut workers, &mut cluster);
+            round += 1;
+            std::hint::black_box(&workers);
+        });
+        report_throughput(&r, (n * p * 4) as f64 / 1e9, "GB");
+    }
+    println!();
+
+    // --- XLA artifact step latency (needs `make artifacts`) ---------------
+    let art_dir = std::path::Path::new("artifacts");
+    if vrl_sgd::runtime::Runtime::artifacts_available(art_dir, &["mlp", "transformer"]) {
+        let rt = vrl_sgd::runtime::Runtime::cpu("artifacts").expect("pjrt");
+        for name in ["mlp", "transformer"] {
+            let spec = TrainSpec { workers: 1, seed: 1, ..TrainSpec::default() };
+            let mut engines = vrl_sgd::runtime::build_xla_engines(
+                &rt,
+                name,
+                &spec,
+                Partition::Identical,
+                128,
+            )
+            .expect("engines");
+            let e = &mut engines[0];
+            let mut p = e.init_params(&mut rng);
+            let delta = vec![0.0f32; p.len()];
+            let mut srng = Pcg32::new(2, 2);
+            let r = bench(&format!("xla artifact step {name}"), 3, 20, || {
+                let l = e.sgd_step(&mut p, &delta, 1e-3, 0.0, &mut srng);
+                std::hint::black_box(l);
+            });
+            report(&r);
+        }
+    } else {
+        println!("(xla step benches skipped: run `make artifacts` first)");
+    }
+}

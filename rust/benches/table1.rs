@@ -1,0 +1,34 @@
+//! Bench: regenerate **Table 1** — communication-complexity exponents.
+//!
+//! Measures the largest admissible period k(T) for Local SGD vs VRL-SGD
+//! on the noisy non-identical quadratic and fits `rounds ∝ T^p`.
+//! Paper orders: Local SGD p = 3/4, VRL-SGD p = 1/2 (non-identical case).
+//!
+//! Run: `cargo bench --bench table1`
+
+use vrl_sgd::benchutil;
+use vrl_sgd::experiments::{table1, Scale};
+
+fn main() {
+    println!("=== Table 1: communication complexity (non-identical case) ===\n");
+    let mut result = None;
+    let r = benchutil::bench("table1 sweep (smoke scale)", 0, 1, || {
+        result = Some(table1(Scale::Smoke));
+    });
+    let res = result.unwrap();
+    println!("{}", res.to_csv());
+    print!("{}", res.summary());
+    benchutil::report(&r);
+
+    // shape assertions mirrored from the integration tests: the fitted
+    // exponents must order correctly even at smoke scale
+    let get = |name: &str| res.fits.iter().find(|(n, _, _)| n == name).unwrap().1;
+    let p_local = get("local-sgd");
+    let p_vrl = get("vrl-sgd");
+    println!("\nlocal-sgd exponent {p_local:.3} (paper 0.75), vrl-sgd {p_vrl:.3} (paper 0.50)");
+    if p_vrl < p_local {
+        println!("shape HOLDS: VRL-SGD needs asymptotically fewer rounds");
+    } else {
+        println!("WARNING: expected p_vrl < p_local");
+    }
+}

@@ -1,0 +1,125 @@
+//! Analysis utilities: least-squares slope fitting on log-log data and
+//! communication-complexity exponent estimation for the Table-1
+//! experiments.
+//!
+//! Table 1 states orders: Local SGD needs `O(T^{3/4} N^{3/4})` rounds in
+//! the non-identical case, VRL-SGD `O(T^{1/2} N^{3/2})`. Empirically we
+//! measure rounds-to-ε across a sweep of T (or N) and fit the slope of
+//! `log(rounds)` vs `log(T)` — the fitted exponent is the reproduced
+//! quantity (shape, not absolute constant).
+
+/// Ordinary least squares fit `y = a + b x`; returns `(a, b, r²)`.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let syy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    assert!(sxx > 0.0, "degenerate x values");
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+/// Fit the exponent `p` of `y ≈ c · x^p` from positive samples by OLS on
+/// log-log axes; returns `(c, p, r²)`.
+pub fn power_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    let lx: Vec<f64> = xs.iter().map(|&x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|&y| y.ln()).collect();
+    let (a, b, r2) = linear_fit(&lx, &ly);
+    (a.exp(), b, r2)
+}
+
+/// Smooth a series with a centered moving average of window `w` (odd
+/// windows recommended); endpoints use truncated windows.
+pub fn moving_average(ys: &[f64], w: usize) -> Vec<f64> {
+    assert!(w >= 1);
+    let n = ys.len();
+    let half = w / 2;
+    (0..n)
+        .map(|i| {
+            let lo = i.saturating_sub(half);
+            let hi = (i + half + 1).min(n);
+            ys[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        })
+        .collect()
+}
+
+/// Geometric sweep of `points` integers from `lo` to `hi` inclusive,
+/// deduplicated and sorted — used to pick T values for scaling fits.
+pub fn geometric_sweep(lo: usize, hi: usize, points: usize) -> Vec<usize> {
+    assert!(lo >= 1 && hi >= lo && points >= 2);
+    let ratio = (hi as f64 / lo as f64).powf(1.0 / (points - 1) as f64);
+    let mut out: Vec<usize> = (0..points)
+        .map(|i| (lo as f64 * ratio.powi(i as i32)).round() as usize)
+        .collect();
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0];
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_fit_recovers_exponent() {
+        // y = 3 x^0.75
+        let xs: Vec<f64> = (1..20).map(|i| i as f64 * 10.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x.powf(0.75)).collect();
+        let (c, p, r2) = power_fit(&xs, &ys);
+        assert!((c - 3.0).abs() < 1e-9);
+        assert!((p - 0.75).abs() < 1e-9);
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn power_fit_with_noise_is_close() {
+        let xs: Vec<f64> = (1..30).map(|i| i as f64 * 7.0).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| 2.0 * x.powf(0.5) * (1.0 + 0.05 * ((i as f64).sin())))
+            .collect();
+        let (_, p, r2) = power_fit(&xs, &ys);
+        assert!((p - 0.5).abs() < 0.05, "exponent {p}");
+        assert!(r2 > 0.98);
+    }
+
+    #[test]
+    fn moving_average_smooths() {
+        let ys = [0.0, 10.0, 0.0, 10.0, 0.0];
+        let sm = moving_average(&ys, 3);
+        assert_eq!(sm.len(), 5);
+        assert!((sm[2] - 20.0 / 3.0).abs() < 1e-12);
+        // w=1 is identity
+        assert_eq!(moving_average(&ys, 1), ys.to_vec());
+    }
+
+    #[test]
+    fn geometric_sweep_bounds() {
+        let s = geometric_sweep(100, 10_000, 5);
+        assert_eq!(*s.first().unwrap(), 100);
+        assert_eq!(*s.last().unwrap(), 10_000);
+        assert!(s.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two points")]
+    fn linear_fit_needs_points() {
+        linear_fit(&[1.0], &[1.0]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Used by the `rust/benches/*.rs` targets (`harness = false`): warmup +
+//! repeated timed runs, robust summary statistics, and a stable
+//! `name ... median ± spread` output format that `EXPERIMENTS.md` quotes.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case name.
+    pub name: String,
+    /// Median wall time per iteration, seconds.
+    pub median_s: f64,
+    /// Minimum observed time.
+    pub min_s: f64,
+    /// Maximum observed time.
+    pub max_s: f64,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// Throughput in items/s given items-per-iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        median_s: samples[samples.len() / 2],
+        min_s: samples[0],
+        max_s: *samples.last().unwrap(),
+        iters,
+    }
+}
+
+/// Pretty time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Print one result row.
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<48} {:>12} (min {:>12}, max {:>12}, n={})",
+        r.name,
+        fmt_time(r.median_s),
+        fmt_time(r.min_s),
+        fmt_time(r.max_s),
+        r.iters
+    );
+}
+
+/// Print a result row with a throughput column.
+pub fn report_throughput(r: &BenchResult, items: f64, unit: &str) {
+    println!(
+        "{:<48} {:>12}   {:>14.3e} {unit}/s",
+        r.name,
+        fmt_time(r.median_s),
+        r.throughput(items)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench("spin", 1, 5, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        std::hint::black_box(acc);
+        assert!(r.median_s > 0.0);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.max_s);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with("s"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            median_s: 0.5,
+            min_s: 0.5,
+            max_s: 0.5,
+            iters: 1,
+        };
+        assert_eq!(r.throughput(100.0), 200.0);
+    }
+}

@@ -1,0 +1,237 @@
+//! Allreduce algorithms and their α–β cost models.
+//!
+//! Two things live here: (a) *executable* reference implementations that
+//! actually move data between per-worker buffers the way the real
+//! algorithm would (used by tests to prove the cost model counts what the
+//! data movement does), and (b) closed-form cost formulas used by the
+//! fast path in [`super::Cluster`].
+
+use super::Network;
+
+/// Which collective algorithm to charge for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllReduceAlgo {
+    /// Bandwidth-optimal ring: 2(N−1) phases of M/N bytes per link.
+    Ring,
+    /// Naive star: gather N−1 messages of M bytes to the leader, then
+    /// broadcast N−1 back. Latency-optimal for tiny messages.
+    Naive,
+}
+
+/// Cost of one collective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CollectiveCost {
+    /// Total point-to-point messages.
+    pub messages: u64,
+    /// Total bytes over all links.
+    pub bytes: u64,
+    /// Critical-path time, seconds.
+    pub time_s: f64,
+}
+
+impl AllReduceAlgo {
+    /// Cost of an allreduce of `msg_bytes` over `n` workers.
+    pub fn cost(&self, n: usize, msg_bytes: usize, net: &Network) -> CollectiveCost {
+        if n <= 1 {
+            return CollectiveCost { messages: 0, bytes: 0, time_s: 0.0 };
+        }
+        let n_u = n as u64;
+        match self {
+            AllReduceAlgo::Ring => {
+                // reduce-scatter + allgather: 2(N-1) steps, each worker
+                // sends one chunk of M/N per step (all links busy in
+                // parallel — critical path is the per-step cost).
+                let chunk = msg_bytes.div_ceil(n);
+                let steps = 2 * (n_u - 1);
+                CollectiveCost {
+                    messages: steps * n_u,
+                    bytes: steps * n_u * chunk as u64,
+                    time_s: steps as f64 * net.message_cost(chunk),
+                }
+            }
+            AllReduceAlgo::Naive => {
+                // gather serially into the leader, broadcast serially out.
+                let msgs = 2 * (n_u - 1);
+                CollectiveCost {
+                    messages: msgs,
+                    bytes: msgs * msg_bytes as u64,
+                    time_s: msgs as f64 * net.message_cost(msg_bytes),
+                }
+            }
+        }
+    }
+}
+
+/// Executable ring allreduce-sum over per-worker buffers (reference
+/// implementation: really performs the reduce-scatter + allgather chunk
+/// schedule). After the call every buffer holds the elementwise sum.
+pub fn ring_allreduce_sum(rows: &mut [Vec<f32>]) {
+    let n = rows.len();
+    if n <= 1 {
+        return;
+    }
+    let dim = rows[0].len();
+    assert!(rows.iter().all(|r| r.len() == dim));
+    // chunk boundaries
+    let bounds: Vec<(usize, usize)> = (0..n)
+        .map(|c| {
+            let lo = c * dim / n;
+            let hi = (c + 1) * dim / n;
+            (lo, hi)
+        })
+        .collect();
+    // reduce-scatter: step s, worker w sends chunk (w - s) to w+1
+    for s in 0..n - 1 {
+        for w in 0..n {
+            let src = w;
+            let dst = (w + 1) % n;
+            let chunk = (w + n - s) % n;
+            let (lo, hi) = bounds[chunk];
+            // dst accumulates src's chunk
+            let (a, b) = if src < dst {
+                let (left, right) = rows.split_at_mut(dst);
+                (&left[src], &mut right[0])
+            } else {
+                let (left, right) = rows.split_at_mut(src);
+                (&right[0], &mut left[dst])
+            };
+            // note: in a real ring all sends in a step are concurrent and
+            // use the *pre-step* values; emulate by staging.
+            let staged: Vec<f32> = a[lo..hi].to_vec();
+            for (bi, &sv) in b[lo..hi].iter_mut().zip(staged.iter()) {
+                *bi += sv;
+            }
+        }
+    }
+    // after reduce-scatter, worker w owns the full sum of chunk (w+1) % n
+    // allgather: rotate ownership n-1 times
+    for s in 0..n - 1 {
+        for w in 0..n {
+            let src = w;
+            let dst = (w + 1) % n;
+            let chunk = (w + 1 + n - s) % n;
+            let (lo, hi) = bounds[chunk];
+            let staged: Vec<f32> = rows[src][lo..hi].to_vec();
+            rows[dst][lo..hi].copy_from_slice(&staged);
+        }
+    }
+}
+
+// NOTE on the emulation above: performing the sends worker-by-worker
+// within a step is only equivalent to the concurrent ring if each
+// destination chunk is written exactly once per step — which holds because
+// chunk indices (w - s) are distinct across w. The staging copy guards the
+// single overlapping case src==dst-1 where rust aliasing rules would
+// otherwise bite.
+
+/// Executable naive (gather + broadcast) allreduce-sum.
+pub fn naive_allreduce_sum(rows: &mut [Vec<f32>]) {
+    let n = rows.len();
+    if n <= 1 {
+        return;
+    }
+    let dim = rows[0].len();
+    let mut sum = vec![0.0f32; dim];
+    {
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        crate::tensor::sum_rows(&mut sum, &refs);
+    }
+    for r in rows.iter_mut() {
+        r.copy_from_slice(&sum);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn random_rows(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::new(seed, 0);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; dim];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    fn sequential_sum(rows: &[Vec<f32>]) -> Vec<f32> {
+        let dim = rows[0].len();
+        let mut s = vec![0.0f32; dim];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        crate::tensor::sum_rows(&mut s, &refs);
+        s
+    }
+
+    #[test]
+    fn ring_allreduce_matches_sequential_sum() {
+        for n in [2usize, 3, 4, 7, 8] {
+            for dim in [1usize, 5, 16, 33] {
+                let mut rows = random_rows(n, dim, (n * 100 + dim) as u64);
+                let want = sequential_sum(&rows);
+                ring_allreduce_sum(&mut rows);
+                for (w, r) in rows.iter().enumerate() {
+                    let diff = crate::tensor::max_abs_diff(r, &want);
+                    assert!(diff < 1e-4, "n={n} dim={dim} worker {w}: diff {diff}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn naive_allreduce_matches_sum() {
+        let mut rows = random_rows(5, 13, 7);
+        let want = sequential_sum(&rows);
+        naive_allreduce_sum(&mut rows);
+        for r in &rows {
+            assert_eq!(r, &want);
+        }
+    }
+
+    #[test]
+    fn ring_cost_is_bandwidth_optimal_for_large_messages() {
+        let net = Network { alpha: 1e-6, beta: 1e-9 };
+        // 100 MB over 8 workers: ring beats naive handily
+        let ring = AllReduceAlgo::Ring.cost(8, 100_000_000, &net);
+        let naive = AllReduceAlgo::Naive.cost(8, 100_000_000, &net);
+        assert!(ring.time_s < naive.time_s / 3.0, "{} vs {}", ring.time_s, naive.time_s);
+    }
+
+    #[test]
+    fn latency_dominated_costs_converge() {
+        // Both algorithms pay 2(N−1) serial latencies on the critical
+        // path; for tiny messages the byte term vanishes and the two
+        // models must agree to within a percent.
+        let net = Network { alpha: 1e-3, beta: 1e-9 };
+        let ring = AllReduceAlgo::Ring.cost(8, 64, &net);
+        let naive = AllReduceAlgo::Naive.cost(8, 64, &net);
+        let ratio = naive.time_s / ring.time_s;
+        assert!((ratio - 1.0).abs() < 0.01, "ratio {ratio}");
+        // total wire bytes agree (allreduce moves 2(N−1)·M either way);
+        // the ring spreads them over N× more messages
+        assert_eq!(naive.bytes, ring.bytes);
+        assert!(ring.messages > naive.messages);
+    }
+
+    #[test]
+    fn single_worker_costs_nothing() {
+        let net = Network { alpha: 1e-3, beta: 1e-9 };
+        for algo in [AllReduceAlgo::Ring, AllReduceAlgo::Naive] {
+            let c = algo.cost(1, 1024, &net);
+            assert_eq!(c, CollectiveCost { messages: 0, bytes: 0, time_s: 0.0 });
+        }
+        let mut rows = vec![vec![1.0f32, 2.0]];
+        ring_allreduce_sum(&mut rows);
+        assert_eq!(rows[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn ring_bytes_scale_with_message_size() {
+        let net = Network { alpha: 0.0, beta: 1.0 };
+        let small = AllReduceAlgo::Ring.cost(4, 4_000, &net);
+        let big = AllReduceAlgo::Ring.cost(4, 8_000, &net);
+        assert!((big.bytes as f64 / small.bytes as f64 - 2.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,236 @@
+//! Simulated cluster network with exact communication accounting.
+//!
+//! The paper's claims are stated in *communication rounds* (and the
+//! derived wall-clock time); the workers here are in-process, so instead
+//! of a real NIC we charge every collective against an analytic cost
+//! model (α–β model: per-message latency α + bytes/bandwidth β) and keep
+//! exact counters. The convergence results never depend on the network
+//! parameters — only the simulated-time axis does.
+
+pub mod allreduce;
+
+pub use allreduce::AllReduceAlgo;
+
+use crate::config::NetworkSpec;
+
+/// α–β network cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct Network {
+    /// Per-message latency, seconds.
+    pub alpha: f64,
+    /// Seconds per byte (inverse bandwidth).
+    pub beta: f64,
+}
+
+impl Network {
+    /// Build from the user-facing spec (µs latency, Gb/s bandwidth).
+    pub fn from_spec(spec: &NetworkSpec) -> Self {
+        Network {
+            alpha: spec.latency_us * 1e-6,
+            beta: 8.0 / (spec.bandwidth_gbps * 1e9),
+        }
+    }
+
+    /// Cost of one point-to-point message of `bytes`.
+    pub fn message_cost(&self, bytes: usize) -> f64 {
+        self.alpha + self.beta * bytes as f64
+    }
+}
+
+/// Exact communication counters for one training run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    /// Number of synchronization rounds (collectives issued).
+    pub rounds: u64,
+    /// Total bytes moved across all links.
+    pub bytes: u64,
+    /// Total point-to-point messages.
+    pub messages: u64,
+    /// Simulated communication time, seconds (critical-path).
+    pub sim_time_s: f64,
+}
+
+impl CommStats {
+    /// Merge counters (e.g. across phases).
+    pub fn merge(&mut self, other: &CommStats) {
+        self.rounds += other.rounds;
+        self.bytes += other.bytes;
+        self.messages += other.messages;
+        self.sim_time_s += other.sim_time_s;
+    }
+}
+
+/// The collective-communication facade used by the coordinator.
+///
+/// All workers' flat buffers live in the leader's address space; `average`
+/// replaces each row with the exact mean (what Algorithm 1 line 4
+/// computes) and charges the configured allreduce algorithm's cost.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    net: Network,
+    algo: AllReduceAlgo,
+    stats: CommStats,
+    workers: usize,
+}
+
+impl Cluster {
+    /// New cluster of `workers` nodes.
+    pub fn new(workers: usize, spec: &NetworkSpec, algo: AllReduceAlgo) -> Self {
+        assert!(workers >= 1);
+        Cluster { net: Network::from_spec(spec), algo, stats: CommStats::default(), workers }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> CommStats {
+        self.stats
+    }
+
+    /// Reset counters (e.g. after warm-up).
+    pub fn reset_stats(&mut self) {
+        self.stats = CommStats::default();
+    }
+
+    /// Allreduce-mean over the workers' rows: every row is replaced by the
+    /// elementwise mean. Bit-exact regardless of algorithm (the sum is
+    /// computed once in f64 and broadcast), while cost accounting follows
+    /// the chosen algorithm.
+    pub fn average(&mut self, rows: &mut [Vec<f32>]) {
+        assert_eq!(rows.len(), self.workers, "row count != workers");
+        if self.workers == 1 {
+            self.stats.rounds += 1;
+            return;
+        }
+        let dim = rows[0].len();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut mean = vec![0.0f32; dim];
+        crate::tensor::mean_rows(&mut mean, &refs);
+        for r in rows.iter_mut() {
+            r.copy_from_slice(&mean);
+        }
+        self.charge(dim);
+    }
+
+    /// Allreduce-mean into a single output buffer without touching the
+    /// worker rows (used by S-SGD gradient averaging diagnostics).
+    pub fn average_into(&mut self, rows: &[&[f32]], out: &mut [f32]) {
+        assert_eq!(rows.len(), self.workers);
+        crate::tensor::mean_rows(out, rows);
+        self.charge(out.len());
+    }
+
+    /// Broadcast `src` to all rows — one round of the cost model's
+    /// broadcast (used by EASGD center distribution and initialization).
+    pub fn broadcast(&mut self, src: &[f32], rows: &mut [Vec<f32>]) {
+        assert_eq!(rows.len(), self.workers);
+        for r in rows.iter_mut() {
+            r.copy_from_slice(src);
+        }
+        let bytes = src.len() * 4;
+        let (msgs, total_bytes, time) = match self.algo {
+            // tree broadcast: ceil(log2 N) serial hops, N-1 messages
+            _ => {
+                let n = self.workers as u64;
+                let hops = (64 - (n - 1).leading_zeros().min(63)) as f64;
+                ((n - 1), (n - 1) * bytes as u64, hops * self.net.message_cost(bytes))
+            }
+        };
+        self.stats.rounds += 1;
+        self.stats.messages += msgs;
+        self.stats.bytes += total_bytes;
+        self.stats.sim_time_s += time;
+    }
+
+    /// Charge one allreduce of `dim` f32 elements without moving data —
+    /// for algorithms whose data movement happens elsewhere but whose wire
+    /// traffic equals one model allreduce (e.g. EASGD's elastic exchange).
+    pub fn charge_allreduce(&mut self, dim: usize) {
+        self.charge(dim);
+    }
+
+    /// Charge one allreduce of `dim` f32 elements.
+    fn charge(&mut self, dim: usize) {
+        let cost = self.algo.cost(self.workers, dim * 4, &self.net);
+        self.stats.rounds += 1;
+        self.stats.messages += cost.messages;
+        self.stats.bytes += cost.bytes;
+        self.stats.sim_time_s += cost.time_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> NetworkSpec {
+        NetworkSpec { latency_us: 100.0, bandwidth_gbps: 1.0 }
+    }
+
+    #[test]
+    fn network_cost_model() {
+        let net = Network::from_spec(&spec());
+        assert!((net.alpha - 1e-4).abs() < 1e-12);
+        // 1 Gb/s = 8e-9 s per byte
+        assert!((net.beta - 8e-9).abs() < 1e-15);
+        let c = net.message_cost(1000);
+        assert!((c - (1e-4 + 8e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn average_produces_exact_mean_for_all_rows() {
+        let mut cl = Cluster::new(3, &spec(), AllReduceAlgo::Ring);
+        let mut rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 9.0]];
+        cl.average(&mut rows);
+        for r in &rows {
+            assert_eq!(r, &vec![3.0, 5.0]);
+        }
+        assert_eq!(cl.stats().rounds, 1);
+        assert!(cl.stats().bytes > 0);
+    }
+
+    #[test]
+    fn single_worker_average_is_free() {
+        let mut cl = Cluster::new(1, &spec(), AllReduceAlgo::Ring);
+        let mut rows = vec![vec![1.0f32, 2.0]];
+        cl.average(&mut rows);
+        assert_eq!(rows[0], vec![1.0, 2.0]);
+        assert_eq!(cl.stats().bytes, 0);
+        assert_eq!(cl.stats().rounds, 1);
+    }
+
+    #[test]
+    fn stats_accumulate_and_reset() {
+        let mut cl = Cluster::new(4, &spec(), AllReduceAlgo::Naive);
+        let mut rows = vec![vec![0.0f32; 8]; 4];
+        cl.average(&mut rows);
+        cl.average(&mut rows);
+        assert_eq!(cl.stats().rounds, 2);
+        let b2 = cl.stats().bytes;
+        cl.reset_stats();
+        assert_eq!(cl.stats(), CommStats::default());
+        assert!(b2 > 0);
+    }
+
+    #[test]
+    fn broadcast_copies_and_charges() {
+        let mut cl = Cluster::new(4, &spec(), AllReduceAlgo::Ring);
+        let src = vec![7.0f32; 16];
+        let mut rows = vec![vec![0.0f32; 16]; 4];
+        cl.broadcast(&src, &mut rows);
+        assert!(rows.iter().all(|r| r == &src));
+        assert_eq!(cl.stats().messages, 3);
+        assert_eq!(cl.stats().bytes, 3 * 64);
+    }
+
+    #[test]
+    fn merge_stats() {
+        let mut a = CommStats { rounds: 1, bytes: 10, messages: 2, sim_time_s: 0.5 };
+        let b = CommStats { rounds: 2, bytes: 30, messages: 4, sim_time_s: 1.0 };
+        a.merge(&b);
+        assert_eq!(a, CommStats { rounds: 3, bytes: 40, messages: 6, sim_time_s: 1.5 });
+    }
+}

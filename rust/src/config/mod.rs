@@ -1,0 +1,514 @@
+//! Configuration: algorithm/task/partition enums, the [`TrainSpec`] that
+//! parameterizes every run, and TOML loading for the launcher.
+//!
+//! Defaults follow the paper's Table 2 (N=8, k=20, γ per task) where they
+//! apply; everything is overridable from TOML (via the in-tree
+//! [`crate::format::toml_lite`] parser) or the CLI.
+
+use crate::format::TomlDoc;
+
+/// Which distributed algorithm to run (paper §6.1 Baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgorithmKind {
+    /// Synchronous SGD — average models every step.
+    SSgd,
+    /// Local SGD (Stich 2019) — k local steps, then model averaging.
+    LocalSgd,
+    /// VRL-SGD (this paper, Algorithm 1).
+    VrlSgd,
+    /// VRL-SGD with warm-up (Remark 5.3): first period runs with k=1,
+    /// which zeroes the `C` constant of Theorem 5.1.
+    VrlSgdWarmup,
+    /// Elastic Averaging SGD (Zhang et al. 2015) with moving-rate ρ.
+    Easgd,
+    /// Local SGD with momentum (Yu et al. 2019a) — Table-1 baseline.
+    MomentumLocalSgd,
+    /// CoCoD-SGD (Shen et al. 2019): computation/communication decoupled
+    /// (delayed, overlapped model averaging) — Table-1 baseline.
+    CocodSgd,
+}
+
+impl AlgorithmKind {
+    /// All algorithms, in the order the paper's figures list them.
+    pub const ALL: [AlgorithmKind; 7] = [
+        AlgorithmKind::SSgd,
+        AlgorithmKind::LocalSgd,
+        AlgorithmKind::VrlSgd,
+        AlgorithmKind::VrlSgdWarmup,
+        AlgorithmKind::Easgd,
+        AlgorithmKind::MomentumLocalSgd,
+        AlgorithmKind::CocodSgd,
+    ];
+
+    /// Short display name used in CSV headers and plots.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgorithmKind::SSgd => "s-sgd",
+            AlgorithmKind::LocalSgd => "local-sgd",
+            AlgorithmKind::VrlSgd => "vrl-sgd",
+            AlgorithmKind::VrlSgdWarmup => "vrl-sgd-w",
+            AlgorithmKind::Easgd => "easgd",
+            AlgorithmKind::MomentumLocalSgd => "mom-local-sgd",
+            AlgorithmKind::CocodSgd => "cocod-sgd",
+        }
+    }
+}
+
+impl std::str::FromStr for AlgorithmKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "s-sgd" | "ssgd" | "sync" => Ok(AlgorithmKind::SSgd),
+            "local-sgd" | "local" => Ok(AlgorithmKind::LocalSgd),
+            "vrl-sgd" | "vrl" => Ok(AlgorithmKind::VrlSgd),
+            "vrl-sgd-w" | "vrl-w" | "vrl-warmup" => Ok(AlgorithmKind::VrlSgdWarmup),
+            "easgd" => Ok(AlgorithmKind::Easgd),
+            "mom-local-sgd" | "momentum" | "local-sgd-m" => Ok(AlgorithmKind::MomentumLocalSgd),
+            "cocod-sgd" | "cocod" => Ok(AlgorithmKind::CocodSgd),
+            other => Err(format!("unknown algorithm '{other}'")),
+        }
+    }
+}
+
+/// How data is distributed across workers (paper §6.1 Data Partitioning).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    /// *Identical case*: every worker sees an iid shuffle of the full set.
+    Identical,
+    /// *Non-identical case*: samples sorted by label, contiguous shards —
+    /// each worker holds only a subset of classes (the paper's extreme).
+    LabelSharded,
+    /// Intermediate heterogeneity: per-class Dirichlet(α) allocation
+    /// (standard federated-learning benchmark partitioner).
+    Dirichlet(f64),
+}
+
+impl Partition {
+    /// Display name for CSVs.
+    pub fn name(&self) -> String {
+        match self {
+            Partition::Identical => "identical".into(),
+            Partition::LabelSharded => "label-sharded".into(),
+            Partition::Dirichlet(a) => format!("dirichlet-{a}"),
+        }
+    }
+}
+
+/// Which training task (model × dataset) to run. The three synthetic tasks
+/// mirror the paper's LeNet/MNIST, TextCNN/DBPedia and transfer-learning
+/// setups; `Quadratic` is Appendix E; `Artifact` names an XLA artifact
+/// (including the transformer e2e driver).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskKind {
+    /// Appendix E toy: f1 = (x+2b)², f2 = 2(x−b)² on two workers (the
+    /// worker-count generalization tiles the two losses).
+    Quadratic {
+        /// Extent-of-non-iid parameter b.
+        b: f64,
+        /// Additive gradient noise σ.
+        noise: f64,
+    },
+    /// d-dimensional linear regression with per-worker ground-truth shift.
+    LinReg {
+        /// Feature dimension.
+        features: usize,
+        /// Samples per worker shard.
+        samples_per_worker: usize,
+        /// Per-worker minimizer shift (non-identical knob).
+        shift: f32,
+    },
+    /// Multinomial logistic regression on Gaussian-mixture features.
+    SoftmaxSynthetic {
+        /// Number of classes.
+        classes: usize,
+        /// Feature dimension.
+        features: usize,
+        /// Samples per worker shard.
+        samples_per_worker: usize,
+    },
+    /// The paper's transfer-learning task: MLP on synthetic
+    /// Inception-V3-like feature clusters. Pure-rust manual backprop.
+    MlpFeatures {
+        /// Feature dimension (paper: 2048).
+        features: usize,
+        /// Hidden width (paper: 1024).
+        hidden: usize,
+        /// Classes (paper: 200).
+        classes: usize,
+        /// Samples per worker shard.
+        samples_per_worker: usize,
+    },
+    /// XLA-artifact task: name of an `artifacts/<name>.hlo.txt` model
+    /// (`mlp`, `lenet`, `textcnn`, `transformer`).
+    Artifact {
+        /// Artifact name.
+        name: String,
+        /// Samples per worker shard.
+        samples_per_worker: usize,
+    },
+}
+
+impl TaskKind {
+    /// Display name for CSVs.
+    pub fn name(&self) -> String {
+        match self {
+            TaskKind::Quadratic { b, .. } => format!("quadratic-b{b}"),
+            TaskKind::LinReg { features, .. } => format!("linreg-d{features}"),
+            TaskKind::SoftmaxSynthetic { classes, features, .. } => {
+                format!("softmax-c{classes}-d{features}")
+            }
+            TaskKind::MlpFeatures { .. } => "mlp-features".into(),
+            TaskKind::Artifact { name, .. } => format!("artifact-{name}"),
+        }
+    }
+
+    /// Parse from a flattened TOML doc (`task.*` keys).
+    pub fn from_doc(doc: &TomlDoc) -> Result<TaskKind, String> {
+        let kind = doc
+            .get("task.kind")
+            .and_then(|v| v.as_str())
+            .ok_or("missing task.kind")?;
+        match kind {
+            "quadratic" => Ok(TaskKind::Quadratic {
+                b: doc.f64_or("task.b", 1.0),
+                noise: doc.f64_or("task.noise", 0.0),
+            }),
+            "linreg" => Ok(TaskKind::LinReg {
+                features: doc.usize_or("task.features", 16),
+                samples_per_worker: doc.usize_or("task.samples_per_worker", 256),
+                shift: doc.f64_or("task.shift", 1.0) as f32,
+            }),
+            "softmax-synthetic" => Ok(TaskKind::SoftmaxSynthetic {
+                classes: doc.usize_or("task.classes", 10),
+                features: doc.usize_or("task.features", 32),
+                samples_per_worker: doc.usize_or("task.samples_per_worker", 256),
+            }),
+            "mlp-features" => Ok(TaskKind::MlpFeatures {
+                features: doc.usize_or("task.features", 2048),
+                hidden: doc.usize_or("task.hidden", 1024),
+                classes: doc.usize_or("task.classes", 200),
+                samples_per_worker: doc.usize_or("task.samples_per_worker", 256),
+            }),
+            "artifact" => Ok(TaskKind::Artifact {
+                name: doc
+                    .get("task.name")
+                    .and_then(|v| v.as_str())
+                    .ok_or("artifact task needs task.name")?
+                    .to_string(),
+                samples_per_worker: doc.usize_or("task.samples_per_worker", 256),
+            }),
+            other => Err(format!("unknown task.kind '{other}'")),
+        }
+    }
+}
+
+/// Simulated-network parameters (see `comm::Network`). Defaults model a
+/// 10 Gb/s, 50 µs-latency datacenter link; only the simulated-time metric
+/// depends on them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkSpec {
+    /// One-way message latency in microseconds.
+    pub latency_us: f64,
+    /// Link bandwidth in gigabits per second.
+    pub bandwidth_gbps: f64,
+}
+
+impl Default for NetworkSpec {
+    fn default() -> Self {
+        NetworkSpec { latency_us: 50.0, bandwidth_gbps: 10.0 }
+    }
+}
+
+/// Full specification of one training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainSpec {
+    /// Distributed algorithm.
+    pub algorithm: AlgorithmKind,
+    /// Number of workers N.
+    pub workers: usize,
+    /// Communication period k (local steps between synchronizations).
+    pub period: usize,
+    /// Learning rate γ.
+    pub lr: f32,
+    /// Per-worker minibatch size b.
+    pub batch: usize,
+    /// Total iterations T (per worker).
+    pub steps: usize,
+    /// EASGD moving rate ρ (ignored by other algorithms). The EASGD paper
+    /// recommends ρ = β/(kN) with β ≈ 0.9.
+    pub easgd_rho: f32,
+    /// Momentum coefficient β for `mom-local-sgd` (Yu et al. use 0.9).
+    pub momentum: f32,
+    /// Weight decay (paper uses 1e-4 on the three real tasks).
+    pub weight_decay: f32,
+    /// Root seed; all worker streams derive from it.
+    pub seed: u64,
+    /// Simulated network for the time model.
+    pub network: NetworkSpec,
+    /// Record per-step (not just per-sync) metrics — slower, used by the
+    /// Appendix-E figures that plot every iteration.
+    pub dense_metrics: bool,
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        TrainSpec {
+            algorithm: AlgorithmKind::VrlSgd,
+            workers: 8,
+            period: 20,
+            lr: 0.005,
+            batch: 32,
+            steps: 1000,
+            easgd_rho: 0.9 / 8.0,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            seed: 42,
+            network: NetworkSpec::default(),
+            dense_metrics: false,
+        }
+    }
+}
+
+impl TrainSpec {
+    /// Validate invariants; returns a human-readable error list.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut errs = Vec::new();
+        if self.workers == 0 {
+            errs.push("workers must be >= 1".to_string());
+        }
+        if self.period == 0 {
+            errs.push("period must be >= 1".to_string());
+        }
+        if !(self.lr > 0.0) {
+            errs.push(format!("lr must be positive, got {}", self.lr));
+        }
+        if self.batch == 0 {
+            errs.push("batch must be >= 1".to_string());
+        }
+        if self.steps == 0 {
+            errs.push("steps must be >= 1".to_string());
+        }
+        if self.easgd_rho < 0.0 || self.easgd_rho > 1.0 {
+            errs.push(format!("easgd_rho must be in [0,1], got {}", self.easgd_rho));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    /// Number of synchronization rounds this spec will perform.
+    pub fn sync_rounds(&self) -> usize {
+        self.steps.div_ceil(self.period)
+    }
+
+    /// Parse from a flattened TOML doc (`spec.*` keys), defaulting missing
+    /// fields to [`TrainSpec::default`].
+    pub fn from_doc(doc: &TomlDoc) -> Result<TrainSpec, String> {
+        let d = TrainSpec::default();
+        let algorithm: AlgorithmKind =
+            doc.str_or("spec.algorithm", "vrl-sgd").parse()?;
+        let workers = doc.usize_or("spec.workers", d.workers);
+        let period = doc.usize_or("spec.period", d.period);
+        Ok(TrainSpec {
+            algorithm,
+            workers,
+            period,
+            lr: doc.f64_or("spec.lr", d.lr as f64) as f32,
+            batch: doc.usize_or("spec.batch", d.batch),
+            steps: doc.usize_or("spec.steps", d.steps),
+            easgd_rho: doc.f64_or(
+                "spec.easgd_rho",
+                0.9 / workers as f64,
+            ) as f32,
+            momentum: doc.f64_or("spec.momentum", d.momentum as f64) as f32,
+            weight_decay: doc.f64_or("spec.weight_decay", d.weight_decay as f64) as f32,
+            seed: doc.u64_or("spec.seed", d.seed),
+            network: NetworkSpec {
+                latency_us: doc.f64_or("spec.latency_us", d.network.latency_us),
+                bandwidth_gbps: doc.f64_or("spec.bandwidth_gbps", d.network.bandwidth_gbps),
+            },
+            dense_metrics: doc.bool_or("spec.dense_metrics", d.dense_metrics),
+        })
+    }
+}
+
+/// Top-level launcher config file (TOML): a spec plus a task and partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// The training spec.
+    pub spec: TrainSpec,
+    /// The task to train.
+    pub task: TaskKind,
+    /// Identical vs non-identical data distribution.
+    pub partition: Partition,
+    /// Where to write CSV output (optional).
+    pub output: Option<String>,
+}
+
+impl RunConfig {
+    /// Parse a TOML string.
+    pub fn from_toml(s: &str) -> Result<Self, String> {
+        let doc = TomlDoc::parse(s)?;
+        let spec = TrainSpec::from_doc(&doc)?;
+        spec.validate()?;
+        let task = TaskKind::from_doc(&doc)?;
+        let partition = match doc.str_or("partition", "identical") {
+            "identical" => Partition::Identical,
+            "label-sharded" | "non-identical" => Partition::LabelSharded,
+            "dirichlet" => Partition::Dirichlet(doc.f64_or("partition_alpha", 0.5)),
+            other => return Err(format!("unknown partition '{other}'")),
+        };
+        let output = doc.get("output").and_then(|v| v.as_str()).map(|s| s.to_string());
+        Ok(RunConfig { spec, task, partition, output })
+    }
+
+    /// Load a TOML file.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let s = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_toml(&s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_valid_and_matches_paper_table2() {
+        let s = TrainSpec::default();
+        s.validate().unwrap();
+        assert_eq!(s.workers, 8);
+        assert_eq!(s.period, 20);
+        assert_eq!(s.batch, 32);
+        assert!((s.lr - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_catches_errors() {
+        let mut s = TrainSpec { workers: 0, ..TrainSpec::default() };
+        s.period = 0;
+        s.lr = -1.0;
+        let err = s.validate().unwrap_err();
+        assert!(err.contains("workers"));
+        assert!(err.contains("period"));
+        assert!(err.contains("lr"));
+    }
+
+    #[test]
+    fn sync_rounds_rounds_up() {
+        let s = TrainSpec { steps: 101, period: 20, ..TrainSpec::default() };
+        assert_eq!(s.sync_rounds(), 6);
+        let s1 = TrainSpec { steps: 100, period: 20, ..TrainSpec::default() };
+        assert_eq!(s1.sync_rounds(), 5);
+    }
+
+    #[test]
+    fn algorithm_from_str_roundtrip() {
+        for a in AlgorithmKind::ALL {
+            let parsed: AlgorithmKind = a.name().parse().unwrap();
+            assert_eq!(parsed, a);
+        }
+        assert!("bogus".parse::<AlgorithmKind>().is_err());
+    }
+
+    #[test]
+    fn run_config_from_toml() {
+        let toml_src = r#"
+            partition = "label-sharded"
+            output = "out.csv"
+
+            [task]
+            kind = "softmax-synthetic"
+            classes = 10
+            features = 32
+            samples_per_worker = 128
+
+            [spec]
+            algorithm = "vrl-sgd"
+            workers = 4
+            period = 10
+            lr = 0.05
+            batch = 16
+            steps = 200
+        "#;
+        let cfg = RunConfig::from_toml(toml_src).unwrap();
+        assert_eq!(cfg.spec.workers, 4);
+        assert_eq!(cfg.spec.period, 10);
+        assert!((cfg.spec.lr - 0.05).abs() < 1e-9);
+        assert_eq!(cfg.partition, Partition::LabelSharded);
+        assert_eq!(cfg.output.as_deref(), Some("out.csv"));
+        match &cfg.task {
+            TaskKind::SoftmaxSynthetic { classes, features, samples_per_worker } => {
+                assert_eq!((*classes, *features, *samples_per_worker), (10, 32, 128));
+            }
+            other => panic!("wrong task {other:?}"),
+        }
+    }
+
+    #[test]
+    fn config_defaults_missing_spec_fields() {
+        let cfg = RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\nb = 2.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.spec.workers, 8);
+        assert_eq!(cfg.task, TaskKind::Quadratic { b: 2.0, noise: 0.0 });
+        assert_eq!(cfg.output, None);
+        // default easgd_rho is 0.9/N
+        assert!((cfg.spec.easgd_rho - 0.9 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn config_rejects_invalid() {
+        // invalid spec
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[spec]\nworkers = 0\n"
+        )
+        .is_err());
+        // missing task
+        assert!(RunConfig::from_toml("partition = \"identical\"\n").is_err());
+        // bad partition
+        assert!(RunConfig::from_toml(
+            "partition = \"bogus\"\n[task]\nkind = \"quadratic\"\n"
+        )
+        .is_err());
+        // artifact without a name
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"artifact\"\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn dirichlet_partition_with_alpha() {
+        let cfg = RunConfig::from_toml(
+            "partition = \"dirichlet\"\npartition_alpha = 0.25\n[task]\nkind = \"quadratic\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.partition, Partition::Dirichlet(0.25));
+    }
+
+    #[test]
+    fn partition_names() {
+        assert_eq!(Partition::Identical.name(), "identical");
+        assert_eq!(Partition::LabelSharded.name(), "label-sharded");
+        assert_eq!(Partition::Dirichlet(0.5).name(), "dirichlet-0.5");
+    }
+
+    #[test]
+    fn every_task_kind_parses_from_doc() {
+        for (kind, extra) in [
+            ("quadratic", ""),
+            ("linreg", ""),
+            ("softmax-synthetic", ""),
+            ("mlp-features", ""),
+            ("artifact", "name = \"mlp\"\n"),
+        ] {
+            let src = format!("[task]\nkind = \"{kind}\"\n{extra}");
+            let doc = TomlDoc::parse(&src).unwrap();
+            TaskKind::from_doc(&doc).unwrap_or_else(|e| panic!("{kind}: {e}"));
+        }
+    }
+}

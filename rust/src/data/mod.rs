@@ -1,0 +1,197 @@
+//! Synthetic datasets, partitioners and batch iteration.
+//!
+//! The paper's phenomenon — Local SGD degrading under non-identical data —
+//! depends only on *label-sharded heterogeneity*: each worker's local
+//! objective `f_i` has a different minimizer, so local gradients are
+//! mutually biased. The generators here produce class-conditional
+//! distributions (Gaussian clusters for images/features, class-dependent
+//! token mixtures for text) so that label sharding reproduces exactly that
+//! bias structure; see `DESIGN.md §Substitutions`.
+
+pub mod corpus;
+pub mod generators;
+pub mod partition;
+
+pub use corpus::Corpus;
+pub use partition::{partition_dataset, shard_sizes};
+
+use crate::rng::Pcg32;
+
+/// A labelled dataset with flat `f32` feature rows.
+///
+/// `features` is row-major `[n, dim]`; `labels[i] < classes`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    /// Row-major feature matrix, `n * dim` values.
+    pub features: Vec<f32>,
+    /// Class labels, length `n`.
+    pub labels: Vec<u32>,
+    /// Feature dimension of one row.
+    pub dim: usize,
+    /// Number of classes.
+    pub classes: usize,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when the dataset holds no samples.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Borrow feature row `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Build a new dataset from a subset of indices.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut features = Vec::with_capacity(idx.len() * self.dim);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            features.extend_from_slice(self.row(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset { features, labels, dim: self.dim, classes: self.classes }
+    }
+
+    /// Count of samples per class.
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.classes];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+
+    /// Sanity-check internal consistency.
+    pub fn check(&self) -> Result<(), String> {
+        if self.features.len() != self.labels.len() * self.dim {
+            return Err(format!(
+                "feature buffer {} != n*dim {}",
+                self.features.len(),
+                self.labels.len() * self.dim
+            ));
+        }
+        if let Some(&l) = self.labels.iter().find(|&&l| l as usize >= self.classes) {
+            return Err(format!("label {l} out of range ({} classes)", self.classes));
+        }
+        Ok(())
+    }
+}
+
+/// Uniform with-replacement minibatch sampler over a dataset shard.
+///
+/// With-replacement sampling matches the iid-within-worker stochastic
+/// gradient model of Assumption 1(2)/(3); the iterator owns its RNG stream
+/// so two workers with split streams draw independent batches.
+#[derive(Debug, Clone)]
+pub struct BatchIter {
+    rng: Pcg32,
+    batch: usize,
+}
+
+impl BatchIter {
+    /// Create a sampler with batch size `batch` over `data`.
+    pub fn new(rng: Pcg32, batch: usize) -> Self {
+        assert!(batch > 0);
+        BatchIter { rng, batch }
+    }
+
+    /// Sample one minibatch: copies `batch` feature rows into `x` (resized)
+    /// and labels into `y`.
+    pub fn next_batch(&mut self, data: &Dataset, x: &mut Vec<f32>, y: &mut Vec<u32>) {
+        assert!(!data.is_empty(), "cannot sample from an empty shard");
+        x.clear();
+        y.clear();
+        x.reserve(self.batch * data.dim);
+        y.reserve(self.batch);
+        for _ in 0..self.batch {
+            let i = self.rng.below(data.len() as u32) as usize;
+            x.extend_from_slice(data.row(i));
+            y.push(data.labels[i]);
+        }
+    }
+
+    /// Batch size.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset {
+            features: vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0],
+            labels: vec![0, 0, 1, 1],
+            dim: 2,
+            classes: 2,
+        }
+    }
+
+    #[test]
+    fn rows_and_subset() {
+        let d = toy();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.row(2), &[2.0, 2.0]);
+        let s = d.subset(&[3, 0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(0), &[3.0, 3.0]);
+        assert_eq!(s.labels, vec![1, 0]);
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let d = toy();
+        assert_eq!(d.class_histogram(), vec![2, 2]);
+    }
+
+    #[test]
+    fn check_catches_bad_labels() {
+        let mut d = toy();
+        d.labels[0] = 9;
+        assert!(d.check().is_err());
+        let mut d2 = toy();
+        d2.features.pop();
+        assert!(d2.check().is_err());
+    }
+
+    #[test]
+    fn batch_iter_shapes_and_determinism() {
+        let d = toy();
+        let mut it1 = BatchIter::new(Pcg32::new(5, 0), 3);
+        let mut it2 = BatchIter::new(Pcg32::new(5, 0), 3);
+        let (mut x1, mut y1) = (Vec::new(), Vec::new());
+        let (mut x2, mut y2) = (Vec::new(), Vec::new());
+        for _ in 0..10 {
+            it1.next_batch(&d, &mut x1, &mut y1);
+            it2.next_batch(&d, &mut x2, &mut y2);
+            assert_eq!(x1.len(), 3 * d.dim);
+            assert_eq!(y1.len(), 3);
+            assert_eq!(x1, x2);
+            assert_eq!(y1, y2);
+        }
+    }
+
+    #[test]
+    fn batch_labels_match_rows() {
+        let d = toy();
+        let mut it = BatchIter::new(Pcg32::new(1, 1), 8);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        it.next_batch(&d, &mut x, &mut y);
+        for (bi, &label) in y.iter().enumerate() {
+            let row = &x[bi * 2..bi * 2 + 2];
+            // in the toy set, features equal the row index, labels = idx/2
+            let idx = row[0] as usize;
+            assert_eq!(label, d.labels[idx]);
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Data partitioners: the *identical* vs *non-identical* cases of §6.1.
+//!
+//! - [`Partition::Identical`]: iid shuffle, contiguous equal slices — every
+//!   worker's shard is an unbiased sample of the global distribution.
+//! - [`Partition::LabelSharded`]: sort by label, contiguous slices — the
+//!   paper's extreme non-identical case ("when 5 workers train on 10
+//!   classes, each worker only accesses two classes").
+//! - [`Partition::Dirichlet(α)`]: per-class Dirichlet allocation, the
+//!   standard federated-learning heterogeneity knob (α→∞ ≈ identical,
+//!   α→0 ≈ label-sharded).
+
+use super::Dataset;
+use crate::config::Partition;
+use crate::rng::Pcg32;
+
+/// Split `data` into `workers` shards according to `partition`.
+///
+/// Every sample is assigned to exactly one worker (the shards form a
+/// partition of the index set — verified by the property tests).
+pub fn partition_dataset(
+    data: &Dataset,
+    workers: usize,
+    partition: Partition,
+    seed: u64,
+) -> Vec<Dataset> {
+    assert!(workers >= 1);
+    let mut rng = Pcg32::new(seed, 0x9A27);
+    let idx_groups = match partition {
+        Partition::Identical => identical_indices(data.len(), workers, &mut rng),
+        Partition::LabelSharded => label_sharded_indices(data, workers),
+        Partition::Dirichlet(alpha) => dirichlet_indices(data, workers, alpha, &mut rng),
+    };
+    idx_groups.iter().map(|g| data.subset(g)).collect()
+}
+
+/// Balanced shard sizes: first `n % workers` shards get one extra element.
+pub fn shard_sizes(n: usize, workers: usize) -> Vec<usize> {
+    let base = n / workers;
+    let extra = n % workers;
+    (0..workers).map(|w| base + usize::from(w < extra)).collect()
+}
+
+fn identical_indices(n: usize, workers: usize, rng: &mut Pcg32) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    chunk_by_sizes(&idx, &shard_sizes(n, workers))
+}
+
+fn label_sharded_indices(data: &Dataset, workers: usize) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    // stable sort by label keeps the generator's within-class order,
+    // making the partition deterministic.
+    idx.sort_by_key(|&i| data.labels[i]);
+    chunk_by_sizes(&idx, &shard_sizes(data.len(), workers))
+}
+
+fn dirichlet_indices(
+    data: &Dataset,
+    workers: usize,
+    alpha: f64,
+    rng: &mut Pcg32,
+) -> Vec<Vec<usize>> {
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); data.classes];
+    for (i, &l) in data.labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); workers];
+    for class_idx in by_class {
+        if class_idx.is_empty() {
+            continue;
+        }
+        let probs = rng.next_dirichlet(alpha, workers);
+        // convert proportions to counts summing to the class size
+        let n = class_idx.len();
+        let mut counts: Vec<usize> = probs.iter().map(|p| (p * n as f64) as usize).collect();
+        let mut assigned: usize = counts.iter().sum();
+        // distribute the rounding remainder to the largest fractional parts
+        let mut order: Vec<usize> = (0..workers).collect();
+        order.sort_by(|&a, &b| {
+            let fa = probs[a] * n as f64 - counts[a] as f64;
+            let fb = probs[b] * n as f64 - counts[b] as f64;
+            fb.partial_cmp(&fa).unwrap()
+        });
+        let mut oi = 0;
+        while assigned < n {
+            counts[order[oi % workers]] += 1;
+            assigned += 1;
+            oi += 1;
+        }
+        let mut pos = 0;
+        for (w, &c) in counts.iter().enumerate() {
+            shards[w].extend_from_slice(&class_idx[pos..pos + c]);
+            pos += c;
+        }
+    }
+    shards
+}
+
+fn chunk_by_sizes(idx: &[usize], sizes: &[usize]) -> Vec<Vec<usize>> {
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut pos = 0;
+    for &s in sizes {
+        out.push(idx[pos..pos + s].to_vec());
+        pos += s;
+    }
+    debug_assert_eq!(pos, idx.len());
+    out
+}
+
+/// Heterogeneity score of a sharding: mean total-variation distance between
+/// each shard's label distribution and the global one. 0 = identical,
+/// →1 as shards become single-class. Used by `examples/federated_sim`.
+pub fn heterogeneity(global: &Dataset, shards: &[Dataset]) -> f64 {
+    let gh = global.class_histogram();
+    let gn: usize = gh.iter().sum();
+    let gp: Vec<f64> = gh.iter().map(|&c| c as f64 / gn as f64).collect();
+    let mut acc = 0.0;
+    for s in shards {
+        if s.is_empty() {
+            acc += 1.0;
+            continue;
+        }
+        let sh = s.class_histogram();
+        let sn: usize = sh.iter().sum();
+        let tv: f64 = sh
+            .iter()
+            .zip(gp.iter())
+            .map(|(&c, &p)| (c as f64 / sn as f64 - p).abs())
+            .sum::<f64>()
+            / 2.0;
+        acc += tv;
+    }
+    acc / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::feature_clusters;
+
+    fn toy(n: usize, classes: usize) -> Dataset {
+        let mut rng = Pcg32::new(77, 0);
+        feature_clusters(&mut rng, n, 4, classes, 3.0)
+    }
+
+    fn total_len(shards: &[Dataset]) -> usize {
+        shards.iter().map(|s| s.len()).sum()
+    }
+
+    #[test]
+    fn shard_sizes_balanced() {
+        assert_eq!(shard_sizes(10, 3), vec![4, 3, 3]);
+        assert_eq!(shard_sizes(9, 3), vec![3, 3, 3]);
+        assert_eq!(shard_sizes(2, 4), vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn identical_partition_preserves_everything() {
+        let d = toy(100, 10);
+        let shards = partition_dataset(&d, 4, Partition::Identical, 1);
+        assert_eq!(shards.len(), 4);
+        assert_eq!(total_len(&shards), 100);
+        // each shard should see most classes (iid)
+        for s in &shards {
+            let nonzero = s.class_histogram().iter().filter(|&&c| c > 0).count();
+            assert!(nonzero >= 7, "iid shard missing classes: {nonzero}");
+        }
+    }
+
+    #[test]
+    fn label_sharded_is_extreme() {
+        let d = toy(100, 10);
+        let shards = partition_dataset(&d, 5, Partition::LabelSharded, 1);
+        assert_eq!(total_len(&shards), 100);
+        // 5 workers, 10 classes -> each worker sees exactly 2 classes
+        for s in &shards {
+            let nonzero = s.class_histogram().iter().filter(|&&c| c > 0).count();
+            assert_eq!(nonzero, 2, "label shard saw {nonzero} classes");
+        }
+    }
+
+    #[test]
+    fn dirichlet_interpolates() {
+        let d = toy(1000, 10);
+        let near_iid = partition_dataset(&d, 4, Partition::Dirichlet(100.0), 3);
+        let skewed = partition_dataset(&d, 4, Partition::Dirichlet(0.05), 3);
+        assert_eq!(total_len(&near_iid), 1000);
+        assert_eq!(total_len(&skewed), 1000);
+        let h_iid = heterogeneity(&d, &near_iid);
+        let h_skew = heterogeneity(&d, &skewed);
+        assert!(h_iid < 0.15, "alpha=100 should be near-iid: {h_iid}");
+        assert!(h_skew > 0.4, "alpha=0.05 should be skewed: {h_skew}");
+        assert!(h_skew > h_iid);
+    }
+
+    #[test]
+    fn heterogeneity_ordering() {
+        let d = toy(200, 10);
+        let iid = partition_dataset(&d, 5, Partition::Identical, 9);
+        let shard = partition_dataset(&d, 5, Partition::LabelSharded, 9);
+        assert!(heterogeneity(&d, &shard) > heterogeneity(&d, &iid) + 0.3);
+    }
+
+    #[test]
+    fn partition_is_deterministic_in_seed() {
+        let d = toy(100, 10);
+        let a = partition_dataset(&d, 4, Partition::Dirichlet(0.5), 11);
+        let b = partition_dataset(&d, 4, Partition::Dirichlet(0.5), 11);
+        assert_eq!(a, b);
+        let c = partition_dataset(&d, 4, Partition::Dirichlet(0.5), 12);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn partition_preserves_multiset_of_labels() {
+        let d = toy(123, 7);
+        for p in [Partition::Identical, Partition::LabelSharded, Partition::Dirichlet(0.3)] {
+            let shards = partition_dataset(&d, 4, p, 5);
+            let mut merged = vec![0usize; d.classes];
+            for s in &shards {
+                for (c, &count) in s.class_histogram().iter().enumerate() {
+                    merged[c] += count;
+                }
+            }
+            assert_eq!(merged, d.class_histogram(), "partition {p:?} lost samples");
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Least-squares linear regression engine — a convex, analytically
+//! tractable task used by the Table-1 scaling experiments (rounds-to-ε is
+//! well defined) and by property tests that need a non-trivial but smooth
+//! objective.
+
+use super::StepEngine;
+use crate::data::{BatchIter, Dataset};
+use crate::rng::Pcg32;
+use crate::tensor;
+
+/// Worker-local least squares `f_i(w) = 1/(2n) ‖X w − y‖²`.
+///
+/// Synthetic construction: a shared ground truth `w*` plus a per-worker
+/// shift of magnitude `shift` — non-zero shift makes the local minimizers
+/// disagree, i.e. the *non-identical case* with exactly controllable
+/// gradient bias.
+#[derive(Debug, Clone)]
+pub struct LinRegEngine {
+    x: Vec<f32>, // [n, d] row-major
+    y: Vec<f32>, // [n]
+    d: usize,
+    iter: BatchIter,
+    scratch_g: Vec<f32>,
+}
+
+impl LinRegEngine {
+    /// Build from explicit design matrix and targets.
+    pub fn new(x: Vec<f32>, y: Vec<f32>, d: usize, batch: usize) -> Self {
+        assert_eq!(x.len(), y.len() * d);
+        let n = y.len();
+        assert!(n > 0);
+        LinRegEngine {
+            x,
+            y,
+            d,
+            iter: BatchIter::new(Pcg32::new(0, 0), batch.min(n)),
+            scratch_g: vec![0.0; d],
+        }
+    }
+
+    /// Synthetic worker shard: `y = X (w* + shift_i) + ε`. Worker index
+    /// seeds the shift direction deterministically.
+    pub fn synthetic(
+        rng: &mut Pcg32,
+        d: usize,
+        n: usize,
+        batch: usize,
+        worker: usize,
+        shift: f32,
+    ) -> Self {
+        // Shared ground truth from a dedicated stream (same for all workers).
+        let mut wrng = rng.split(0x17AB);
+        let mut w_star = vec![0.0f32; d];
+        wrng.fill_normal(&mut w_star, 1.0);
+        // Deterministic per-worker shift direction.
+        let mut srng = wrng.split(worker as u64 + 1);
+        let mut w_local = w_star.clone();
+        if shift != 0.0 {
+            let mut dir = vec![0.0f32; d];
+            srng.fill_normal(&mut dir, 1.0);
+            let norm = tensor::norm2(&dir).max(1e-6);
+            tensor::axpy(&mut w_local, shift / norm, &dir);
+        }
+        let mut data_rng = rng.split(0xBEEF ^ worker as u64);
+        let mut x = vec![0.0f32; n * d];
+        data_rng.fill_normal(&mut x, 1.0);
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            let row = &x[i * d..(i + 1) * d];
+            y[i] = tensor::dot(row, &w_local) as f32 + data_rng.next_normal() * 0.05;
+        }
+        let mut e = LinRegEngine::new(x, y, d, batch);
+        e.iter = BatchIter::new(data_rng.split(0x1), batch.min(n));
+        e
+    }
+
+    fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Loss and gradient over an index subset (gradient accumulated into
+    /// `g`, pre-zeroed by caller).
+    fn loss_grad_rows(&self, params: &[f32], rows: &[usize], g: &mut [f32]) -> f64 {
+        let mut loss = 0.0f64;
+        for &i in rows {
+            let row = &self.x[i * self.d..(i + 1) * self.d];
+            let r = tensor::dot(row, params) as f32 - self.y[i];
+            loss += 0.5 * (r as f64) * (r as f64);
+            tensor::axpy(g, r / rows.len() as f32, row);
+        }
+        loss / rows.len() as f64
+    }
+}
+
+impl StepEngine for LinRegEngine {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.d];
+        rng.fill_normal(&mut p, 0.1);
+        p
+    }
+
+    fn sgd_step(
+        &mut self,
+        params: &mut [f32],
+        delta: &[f32],
+        gamma: f32,
+        weight_decay: f32,
+        rng: &mut Pcg32,
+    ) -> f32 {
+        let b = self.iter.batch_size();
+        let rows: Vec<usize> = (0..b).map(|_| rng.below(self.n() as u32) as usize).collect();
+        self.scratch_g.iter_mut().for_each(|v| *v = 0.0);
+        let mut g = std::mem::take(&mut self.scratch_g);
+        let loss = self.loss_grad_rows(params, &rows, &mut g);
+        if weight_decay != 0.0 {
+            tensor::axpy(&mut g, weight_decay, params);
+        }
+        super::apply_step(params, &g, delta, gamma);
+        self.scratch_g = g;
+        loss as f32
+    }
+
+    fn eval_loss(&mut self, params: &[f32]) -> f64 {
+        let mut loss = 0.0f64;
+        for i in 0..self.n() {
+            let row = &self.x[i * self.d..(i + 1) * self.d];
+            let r = tensor::dot(row, params) as f32 - self.y[i];
+            loss += 0.5 * (r as f64) * (r as f64);
+        }
+        loss / self.n() as f64
+    }
+
+    fn shard_len(&self) -> usize {
+        self.n()
+    }
+
+    fn full_grad(&mut self, params: &[f32], out: &mut [f32]) -> bool {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let rows: Vec<usize> = (0..self.n()).collect();
+        self.loss_grad_rows(params, &rows, out);
+        true
+    }
+}
+
+/// Convert a classification [`Dataset`] row-set into a regression target
+/// (label as float) — convenience for tests that want a `LinRegEngine`
+/// over generated data.
+pub fn linreg_from_dataset(data: &Dataset, batch: usize) -> LinRegEngine {
+    let y: Vec<f32> = data.labels.iter().map(|&l| l as f32).collect();
+    LinRegEngine::new(data.features.clone(), y, data.dim, batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gd_recovers_ground_truth() {
+        let mut rng = Pcg32::new(5, 0);
+        let mut e = LinRegEngine::synthetic(&mut rng, 6, 256, 32, 0, 0.0);
+        let mut rng2 = Pcg32::new(6, 0);
+        let mut p = e.init_params(&mut rng2);
+        let delta = vec![0.0f32; 6];
+        for _ in 0..500 {
+            e.sgd_step(&mut p, &delta, 0.05, 0.0, &mut rng2);
+        }
+        let loss = e.eval_loss(&p);
+        assert!(loss < 0.01, "final loss {loss}");
+    }
+
+    #[test]
+    fn full_grad_matches_finite_difference() {
+        let mut rng = Pcg32::new(8, 0);
+        let mut e = LinRegEngine::synthetic(&mut rng, 4, 32, 8, 0, 0.3);
+        let p: Vec<f32> = vec![0.3, -0.2, 0.1, 0.9];
+        let mut g = vec![0.0f32; 4];
+        assert!(e.full_grad(&p, &mut g));
+        let eps = 1e-3f32;
+        for j in 0..4 {
+            let mut pp = p.clone();
+            pp[j] += eps;
+            let up = e.eval_loss(&pp);
+            pp[j] -= 2.0 * eps;
+            let down = e.eval_loss(&pp);
+            let fd = ((up - down) / (2.0 * eps as f64)) as f32;
+            assert!((fd - g[j]).abs() < 2e-2, "coord {j}: fd {fd} vs g {}", g[j]);
+        }
+    }
+
+    #[test]
+    fn shift_moves_local_minimizer() {
+        let mut rng_a = Pcg32::new(5, 0);
+        let mut rng_b = Pcg32::new(5, 0);
+        let mut e0 = LinRegEngine::synthetic(&mut rng_a, 4, 512, 32, 0, 2.0);
+        let mut e1 = LinRegEngine::synthetic(&mut rng_b, 4, 512, 32, 1, 2.0);
+        // descend each to its own minimum; minima should differ by ~shift
+        let run = |e: &mut LinRegEngine| {
+            let mut rng = Pcg32::new(1, 1);
+            let mut p = vec![0.0f32; 4];
+            let delta = vec![0.0f32; 4];
+            for _ in 0..800 {
+                e.sgd_step(&mut p, &delta, 0.05, 0.0, &mut rng);
+            }
+            p
+        };
+        let p0 = run(&mut e0);
+        let p1 = run(&mut e1);
+        let dist = tensor::dist2_sq(&p0, &p1).sqrt();
+        assert!(dist > 1.0, "local minima should disagree: dist {dist}");
+    }
+
+    #[test]
+    fn from_dataset_roundtrip() {
+        let d = Dataset {
+            features: vec![1.0, 0.0, 0.0, 1.0],
+            labels: vec![0, 1],
+            dim: 2,
+            classes: 2,
+        };
+        let mut e = linreg_from_dataset(&d, 2);
+        assert_eq!(e.dim(), 2);
+        assert_eq!(e.shard_len(), 2);
+        // w = (0, 1) fits exactly: loss 0
+        assert!(e.eval_loss(&[0.0, 1.0]) < 1e-12);
+    }
+}

@@ -1,0 +1,264 @@
+//! Two-layer MLP engine with manual backprop — the paper's
+//! transfer-learning head (2048-d Inception features → 1024 hidden relu →
+//! 200 classes) as a pure-rust `StepEngine`. Also the cross-check oracle
+//! for the XLA `mlp` artifact (same architecture, same parameter layout).
+
+use super::StepEngine;
+use crate::data::Dataset;
+use crate::rng::Pcg32;
+use crate::tensor;
+
+/// MLP `d → h (relu) → c` with softmax cross-entropy.
+///
+/// Flat parameter layout (must match `python/compile/model.py::mlp`):
+/// `W1 [h, d] | b1 [h] | W2 [c, h] | b2 [c]`, `P = h(d+1) + c(h+1)`.
+#[derive(Debug, Clone)]
+pub struct MlpEngine {
+    data: Dataset,
+    hidden: usize,
+    batch: usize,
+    // scratch
+    h_act: Vec<f32>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    dh: Vec<f32>,
+    grad: Vec<f32>,
+}
+
+impl MlpEngine {
+    /// New engine over a shard.
+    pub fn new(data: Dataset, hidden: usize, batch: usize) -> Self {
+        assert!(!data.is_empty());
+        data.check().expect("invalid dataset");
+        let c = data.classes;
+        let d = data.dim;
+        let p = hidden * d + hidden + c * hidden + c;
+        MlpEngine {
+            data,
+            hidden,
+            batch,
+            h_act: vec![0.0; hidden],
+            logits: vec![0.0; c],
+            dlogits: vec![0.0; c],
+            dh: vec![0.0; hidden],
+            grad: vec![0.0; p],
+        }
+    }
+
+    fn d(&self) -> usize {
+        self.data.dim
+    }
+    fn c(&self) -> usize {
+        self.data.classes
+    }
+
+    /// Offsets into the flat parameter vector.
+    fn offsets(&self) -> (usize, usize, usize) {
+        let (d, h, c) = (self.d(), self.hidden, self.c());
+        let b1 = h * d;
+        let w2 = b1 + h;
+        let b2 = w2 + c * h;
+        (b1, w2, b2)
+    }
+
+    /// Forward pass for one row; fills `h_act` and `logits`; returns
+    /// (max_logit, sumexp) for a stable softmax.
+    fn forward(&mut self, params: &[f32], row: &[f32]) -> (f32, f32) {
+        let (d, h, c) = (self.d(), self.hidden, self.c());
+        let (o_b1, o_w2, o_b2) = self.offsets();
+        for j in 0..h {
+            let w_row = &params[j * d..(j + 1) * d];
+            let z = tensor::dot(w_row, row) as f32 + params[o_b1 + j];
+            self.h_act[j] = z.max(0.0);
+        }
+        for k in 0..c {
+            let w_row = &params[o_w2 + k * h..o_w2 + (k + 1) * h];
+            self.logits[k] = tensor::dot(w_row, &self.h_act) as f32 + params[o_b2 + k];
+        }
+        let m = self.logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sumexp: f32 = self.logits.iter().map(|&z| (z - m).exp()).sum();
+        (m, sumexp)
+    }
+
+    /// Loss + gradient accumulation for sample `i` with weight `wgt`.
+    fn accum_sample(&mut self, params: &[f32], i: usize, wgt: f32) -> f64 {
+        let (d, h, c) = (self.d(), self.hidden, self.c());
+        let (o_b1, o_w2, o_b2) = self.offsets();
+        let label = self.data.labels[i] as usize;
+        let row: Vec<f32> = self.data.row(i).to_vec();
+        let (m, sumexp) = self.forward(params, &row);
+        let loss = (m + sumexp.ln() - self.logits[label]) as f64;
+
+        // dL/dlogits
+        for k in 0..c {
+            self.dlogits[k] =
+                ((self.logits[k] - m).exp() / sumexp) - if k == label { 1.0 } else { 0.0 };
+        }
+        // grads of W2, b2; backprop into dh
+        self.dh.iter_mut().for_each(|v| *v = 0.0);
+        for k in 0..c {
+            let gk = self.dlogits[k] * wgt;
+            let gw2 = &mut self.grad[o_w2 + k * h..o_w2 + (k + 1) * h];
+            tensor::axpy(gw2, gk, &self.h_act);
+            self.grad[o_b2 + k] += gk;
+            let w_row = &params[o_w2 + k * h..o_w2 + (k + 1) * h];
+            // dh += dlogit_k * W2[k, :]  (weight wgt applied at the end)
+            for (dhj, &wj) in self.dh.iter_mut().zip(w_row.iter()) {
+                *dhj += self.dlogits[k] * wj;
+            }
+        }
+        // relu mask + grads of W1, b1
+        for j in 0..h {
+            if self.h_act[j] <= 0.0 {
+                continue;
+            }
+            let gj = self.dh[j] * wgt;
+            let gw1 = &mut self.grad[j * d..(j + 1) * d];
+            tensor::axpy(gw1, gj, &row);
+            self.grad[o_b1 + j] += gj;
+        }
+        loss
+    }
+}
+
+impl StepEngine for MlpEngine {
+    fn dim(&self) -> usize {
+        let (d, h, c) = (self.d(), self.hidden, self.c());
+        h * d + h + c * h + c
+    }
+
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        let (d, h, c) = (self.d(), self.hidden, self.c());
+        let (o_b1, o_w2, o_b2) = self.offsets();
+        let mut p = vec![0.0f32; self.dim()];
+        // He init for the relu layer, Xavier-ish for the head
+        let s1 = (2.0 / d as f32).sqrt();
+        rng.fill_normal(&mut p[..h * d], s1);
+        let s2 = (1.0 / h as f32).sqrt();
+        rng.fill_normal(&mut p[o_w2..o_b2], s2);
+        let _ = (o_b1, c);
+        p
+    }
+
+    fn sgd_step(
+        &mut self,
+        params: &mut [f32],
+        delta: &[f32],
+        gamma: f32,
+        weight_decay: f32,
+        rng: &mut Pcg32,
+    ) -> f32 {
+        let b = self.batch.min(self.data.len());
+        self.grad.iter_mut().for_each(|v| *v = 0.0);
+        let wgt = 1.0 / b as f32;
+        let mut loss = 0.0f64;
+        for _ in 0..b {
+            let i = rng.below(self.data.len() as u32) as usize;
+            loss += self.accum_sample(params, i, wgt);
+        }
+        loss /= b as f64;
+        let mut g = std::mem::take(&mut self.grad);
+        if weight_decay != 0.0 {
+            tensor::axpy(&mut g, weight_decay, params);
+        }
+        super::apply_step(params, &g, delta, gamma);
+        self.grad = g;
+        loss as f32
+    }
+
+    fn eval_loss(&mut self, params: &[f32]) -> f64 {
+        let n = self.data.len();
+        let mut loss = 0.0f64;
+        for i in 0..n {
+            let label = self.data.labels[i] as usize;
+            let row: Vec<f32> = self.data.row(i).to_vec();
+            let (m, sumexp) = self.forward(params, &row);
+            loss += (m + sumexp.ln() - self.logits[label]) as f64;
+        }
+        loss / n as f64
+    }
+
+    fn shard_len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn full_grad(&mut self, params: &[f32], out: &mut [f32]) -> bool {
+        self.grad.iter_mut().for_each(|v| *v = 0.0);
+        let n = self.data.len();
+        let wgt = 1.0 / n as f32;
+        for i in 0..n {
+            self.accum_sample(params, i, wgt);
+        }
+        out.copy_from_slice(&self.grad);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::feature_clusters;
+
+    fn toy_engine() -> MlpEngine {
+        let mut rng = Pcg32::new(6, 0);
+        let d = feature_clusters(&mut rng, 60, 5, 3, 5.0);
+        MlpEngine::new(d, 7, 16)
+    }
+
+    #[test]
+    fn dim_matches_layout() {
+        let e = toy_engine();
+        // 7*5 + 7 + 3*7 + 3 = 35+7+21+3 = 66
+        assert_eq!(e.dim(), 66);
+    }
+
+    #[test]
+    fn loss_at_zero_params_is_log_c() {
+        let mut e = toy_engine();
+        let p = vec![0.0f32; e.dim()];
+        assert!((e.eval_loss(&p) - (3.0f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn full_grad_matches_finite_difference() {
+        let mut e = toy_engine();
+        let mut rng = Pcg32::new(2, 2);
+        let p = e.init_params(&mut rng);
+        let mut g = vec![0.0f32; e.dim()];
+        assert!(e.full_grad(&p, &mut g));
+        let eps = 1e-3f32;
+        // sample coords from every parameter block
+        for j in [0usize, 20, 36, 44, 63, 65] {
+            let mut pp = p.clone();
+            pp[j] += eps;
+            let up = e.eval_loss(&pp);
+            pp[j] -= 2.0 * eps;
+            let down = e.eval_loss(&pp);
+            let fd = ((up - down) / (2.0 * eps as f64)) as f32;
+            assert!((fd - g[j]).abs() < 2e-2, "coord {j}: fd {fd} vs g {}", g[j]);
+        }
+    }
+
+    #[test]
+    fn sgd_descends_below_chance() {
+        let mut e = toy_engine();
+        let mut rng = Pcg32::new(9, 9);
+        let mut p = e.init_params(&mut rng);
+        let delta = vec![0.0f32; e.dim()];
+        for _ in 0..600 {
+            e.sgd_step(&mut p, &delta, 0.05, 0.0, &mut rng);
+        }
+        let after = e.eval_loss(&p);
+        assert!(after < 0.5 * (3.0f64).ln(), "after {after}");
+    }
+
+    #[test]
+    fn paper_architecture_dims() {
+        // the real transfer-learning head: 2048 -> 1024 -> 200
+        let mut rng = Pcg32::new(1, 0);
+        let d = feature_clusters(&mut rng, 200, 16, 4, 3.0); // small stand-in data
+        let e = MlpEngine::new(d, 1024, 32);
+        // P = 1024*16 + 1024 + 4*1024 + 4
+        assert_eq!(e.dim(), 1024 * 16 + 1024 + 4 * 1024 + 4);
+    }
+}

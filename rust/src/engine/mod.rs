@@ -1,0 +1,233 @@
+//! The train-step abstraction ([`StepEngine`]) and its pure-rust
+//! implementations.
+//!
+//! A `StepEngine` is *one worker's* view of the optimization problem: it
+//! owns that worker's data shard and can (a) take one VRL-SGD local step
+//! `x ← x − γ(∇f_i(x;ξ) − Δ)` (eqs. 5–6 — with `Δ = 0` this is the plain
+//! Local-SGD/S-SGD step) and (b) evaluate the deterministic full-shard
+//! loss for the epoch-loss curves of Figures 1–2.
+//!
+//! Two families implement it:
+//! * pure-rust engines in this module ([`QuadraticEngine`],
+//!   [`LinRegEngine`], [`SoftmaxEngine`], [`MlpEngine`]) — used by tests,
+//!   benches and all convergence experiments; zero external dependencies;
+//! * [`crate::runtime::XlaEngine`] — executes the JAX/Pallas AOT artifact
+//!   through the PJRT CPU client (the production path).
+
+pub mod linreg;
+pub mod mlp;
+pub mod quadratic;
+pub mod softmax;
+
+pub use linreg::LinRegEngine;
+pub use mlp::MlpEngine;
+pub use quadratic::QuadraticEngine;
+pub use softmax::SoftmaxEngine;
+
+use crate::config::{Partition, TaskKind, TrainSpec};
+use crate::data::{generators, partition_dataset, Dataset};
+use crate::rng::Pcg32;
+
+/// One worker's train-step engine. See module docs.
+///
+/// Not `Send`: the XLA-backed engine wraps PJRT raw pointers. The
+/// coordinator drives workers in lockstep on one thread (required anyway
+/// for the synchronous semantics the paper analyzes).
+pub trait StepEngine {
+    /// Flat parameter dimension `P`.
+    fn dim(&self) -> usize;
+
+    /// Initialize a parameter vector (all workers must call this with the
+    /// *same* rng stream so they start from the same point — Algorithm 1
+    /// line 1: `x_i^0 = x̂^0`).
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32>;
+
+    /// One local step: sample a minibatch with `rng`, compute the
+    /// stochastic gradient `g` (plus `weight_decay * params` if nonzero),
+    /// and update `params ← params − γ (g − Δ)`. Returns the minibatch
+    /// loss *before* the update.
+    fn sgd_step(
+        &mut self,
+        params: &mut [f32],
+        delta: &[f32],
+        gamma: f32,
+        weight_decay: f32,
+        rng: &mut Pcg32,
+    ) -> f32;
+
+    /// Deterministic mean loss over this worker's full shard.
+    fn eval_loss(&mut self, params: &[f32]) -> f64;
+
+    /// Number of samples in this worker's shard (weights the global loss).
+    fn shard_len(&self) -> usize;
+
+    /// Deterministic full-shard gradient — used by diagnostics and the
+    /// Appendix-E noise-free runs. Engines that can't provide it return
+    /// `false` and leave `out` untouched.
+    fn full_grad(&mut self, _params: &[f32], _out: &mut [f32]) -> bool {
+        false
+    }
+}
+
+/// Shared helper: apply the fused VRL step given a computed gradient.
+/// `g` already includes any weight decay.
+#[inline]
+pub(crate) fn apply_step(params: &mut [f32], g: &[f32], delta: &[f32], gamma: f32) {
+    crate::tensor::vrl_step(params, g, delta, gamma);
+}
+
+/// Build one engine per worker for a pure-rust task.
+///
+/// Returns the engines plus the *global* dataset (when the task has one)
+/// for heterogeneity diagnostics. Fails for [`TaskKind::Artifact`] — those
+/// are constructed by `runtime::build_xla_engines` instead.
+pub fn build_pure_engines(
+    task: &TaskKind,
+    partition: Partition,
+    spec: &TrainSpec,
+) -> Result<(Vec<Box<dyn StepEngine>>, Option<Dataset>), String> {
+    let n = spec.workers;
+    match task {
+        TaskKind::Quadratic { b, noise } => {
+            let engines: Vec<Box<dyn StepEngine>> = (0..n)
+                .map(|i| {
+                    let mut e = QuadraticEngine::for_worker(i, n, *b, *noise);
+                    e.batch = spec.batch;
+                    Box::new(e) as Box<dyn StepEngine>
+                })
+                .collect();
+            Ok((engines, None))
+        }
+        TaskKind::LinReg { features, samples_per_worker, shift } => {
+            let mut rng = Pcg32::new(spec.seed, 0xDA7A);
+            let engines: Vec<Box<dyn StepEngine>> = (0..n)
+                .map(|i| {
+                    // per-worker ground-truth shift creates the non-identical
+                    // case; shift=0 (or Identical partition) removes it.
+                    let s = match partition {
+                        Partition::Identical => 0.0,
+                        _ => *shift,
+                    };
+                    Box::new(LinRegEngine::synthetic(
+                        &mut rng,
+                        *features,
+                        *samples_per_worker,
+                        spec.batch,
+                        i,
+                        s,
+                    )) as Box<dyn StepEngine>
+                })
+                .collect();
+            Ok((engines, None))
+        }
+        TaskKind::SoftmaxSynthetic { classes, features, samples_per_worker } => {
+            let mut rng = Pcg32::new(spec.seed, 0xDA7A);
+            let global =
+                generators::feature_clusters(&mut rng, samples_per_worker * n, *features, *classes, 4.0);
+            let shards = partition_dataset(&global, n, partition, spec.seed);
+            let engines: Vec<Box<dyn StepEngine>> = shards
+                .into_iter()
+                .map(|s| Box::new(SoftmaxEngine::new(s, spec.batch)) as Box<dyn StepEngine>)
+                .collect();
+            Ok((engines, Some(global)))
+        }
+        TaskKind::MlpFeatures { features, hidden, classes, samples_per_worker } => {
+            let mut rng = Pcg32::new(spec.seed, 0xDA7A);
+            let global =
+                generators::feature_clusters(&mut rng, samples_per_worker * n, *features, *classes, 6.0);
+            let shards = partition_dataset(&global, n, partition, spec.seed);
+            let engines: Vec<Box<dyn StepEngine>> = shards
+                .into_iter()
+                .map(|s| {
+                    Box::new(MlpEngine::new(s, *hidden, spec.batch)) as Box<dyn StepEngine>
+                })
+                .collect();
+            Ok((engines, Some(global)))
+        }
+        TaskKind::Artifact { .. } => Err(
+            "artifact tasks need the XLA runtime: use runtime::build_xla_engines / the CLI"
+                .to_string(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AlgorithmKind;
+
+    fn spec(workers: usize) -> TrainSpec {
+        TrainSpec {
+            algorithm: AlgorithmKind::VrlSgd,
+            workers,
+            batch: 8,
+            seed: 3,
+            ..TrainSpec::default()
+        }
+    }
+
+    #[test]
+    fn factory_builds_each_pure_task() {
+        let tasks = [
+            TaskKind::Quadratic { b: 1.0, noise: 0.0 },
+            TaskKind::LinReg { features: 4, samples_per_worker: 32, shift: 0.5 },
+            TaskKind::SoftmaxSynthetic { classes: 4, features: 8, samples_per_worker: 32 },
+            TaskKind::MlpFeatures { features: 8, hidden: 6, classes: 4, samples_per_worker: 32 },
+        ];
+        for t in tasks {
+            let (engines, _) = build_pure_engines(&t, Partition::LabelSharded, &spec(3)).unwrap();
+            assert_eq!(engines.len(), 3, "task {t:?}");
+            let dim = engines[0].dim();
+            assert!(dim >= 1);
+            for e in &engines {
+                assert_eq!(e.dim(), dim);
+            }
+        }
+    }
+
+    #[test]
+    fn factory_rejects_artifact_tasks() {
+        let t = TaskKind::Artifact { name: "mlp".into(), samples_per_worker: 8 };
+        assert!(build_pure_engines(&t, Partition::Identical, &spec(2)).is_err());
+    }
+
+    #[test]
+    fn engines_share_init_given_same_stream() {
+        let (engines, _) = build_pure_engines(
+            &TaskKind::SoftmaxSynthetic { classes: 3, features: 5, samples_per_worker: 16 },
+            Partition::Identical,
+            &spec(2),
+        )
+        .unwrap();
+        let p0 = engines[0].init_params(&mut Pcg32::new(1, 2));
+        let p1 = engines[1].init_params(&mut Pcg32::new(1, 2));
+        assert_eq!(p0, p1);
+    }
+
+    #[test]
+    fn every_engine_descends_on_its_own_shard() {
+        // one engine, many plain SGD steps: shard loss must drop.
+        let tasks = [
+            TaskKind::LinReg { features: 4, samples_per_worker: 64, shift: 0.0 },
+            TaskKind::SoftmaxSynthetic { classes: 4, features: 8, samples_per_worker: 64 },
+            TaskKind::MlpFeatures { features: 8, hidden: 8, classes: 4, samples_per_worker: 64 },
+        ];
+        for t in tasks {
+            let (mut engines, _) =
+                build_pure_engines(&t, Partition::Identical, &spec(1)).unwrap();
+            let e = &mut engines[0];
+            let mut rng = Pcg32::new(7, 7);
+            let mut p = e.init_params(&mut rng);
+            let delta = vec![0.0; p.len()];
+            let before = e.eval_loss(&p);
+            for _ in 0..300 {
+                e.sgd_step(&mut p, &delta, 0.05, 0.0, &mut rng);
+            }
+            let after = e.eval_loss(&p);
+            assert!(
+                after < before * 0.8,
+                "task {t:?} did not descend: {before} -> {after}"
+            );
+        }
+    }
+}

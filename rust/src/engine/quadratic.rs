@@ -1,0 +1,158 @@
+//! Appendix-E toy problem: exact 1-D quadratics with controllable noise.
+//!
+//! The paper's two-worker instance (eq. 58):
+//! `f_1(x) = (x + 2b)²`, `f_2(x) = 2(x − b)²`, global minimum `x* = 0`.
+//! The parameter `b` sets the *extent of non-iid*: the workers' minimizers
+//! are `−2b` and `b`, so their gradients at any common point differ by
+//! `O(b)` — exactly the "gradient variance among workers" VRL-SGD
+//! eliminates. For `N > 2` workers we tile the same two losses, preserving
+//! the global objective up to a constant.
+
+use super::StepEngine;
+use crate::rng::Pcg32;
+
+/// One worker's quadratic loss `a (x − c)²` with additive gradient noise.
+#[derive(Debug, Clone)]
+pub struct QuadraticEngine {
+    /// Curvature coefficient `a` (L-smoothness constant is `2a`).
+    pub a: f64,
+    /// Minimizer `c` of this worker's local loss.
+    pub c: f64,
+    /// Standard deviation of additive gradient noise (σ of Assumption 1).
+    pub noise: f64,
+    /// Mini-batch size: each stochastic gradient averages `batch` noise
+    /// draws (Remark 5.7 — σ²_eff = σ²/b).
+    pub batch: usize,
+}
+
+impl QuadraticEngine {
+    /// The paper's worker `i` of `n`: even workers get `f_1 = (x+2b)²`
+    /// (a=1, c=−2b), odd workers `f_2 = 2(x−b)²` (a=2, c=b).
+    pub fn for_worker(i: usize, _n: usize, b: f64, noise: f64) -> Self {
+        if i % 2 == 0 {
+            QuadraticEngine { a: 1.0, c: -2.0 * b, noise, batch: 1 }
+        } else {
+            QuadraticEngine { a: 2.0, c: b, noise, batch: 1 }
+        }
+    }
+
+    /// Global minimizer of the averaged objective over a tiled even/odd
+    /// population: argmin of `mean_i a_i (x−c_i)²` = `Σ a_i c_i / Σ a_i`.
+    /// For the paper's pair: `(1·(−2b) + 2·b) / 3 = 0`.
+    pub fn global_minimum(b: f64) -> f64 {
+        let _ = b;
+        0.0
+    }
+
+    fn grad_at(&self, x: f64, rng: &mut Pcg32) -> f64 {
+        let exact = 2.0 * self.a * (x - self.c);
+        if self.noise > 0.0 {
+            let b = self.batch.max(1);
+            let mut acc = 0.0f64;
+            for _ in 0..b {
+                acc += rng.next_normal() as f64;
+            }
+            exact + acc / b as f64 * self.noise
+        } else {
+            exact
+        }
+    }
+}
+
+impl StepEngine for QuadraticEngine {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        // The appendix starts away from the optimum; a fixed draw keeps all
+        // workers identical (they must share x^0).
+        vec![5.0 + rng.next_f32() * 0.0]
+    }
+
+    fn sgd_step(
+        &mut self,
+        params: &mut [f32],
+        delta: &[f32],
+        gamma: f32,
+        weight_decay: f32,
+        rng: &mut Pcg32,
+    ) -> f32 {
+        let x = params[0] as f64;
+        let loss = self.a * (x - self.c) * (x - self.c);
+        let g = self.grad_at(x, rng) + weight_decay as f64 * x;
+        params[0] = (x - gamma as f64 * (g - delta[0] as f64)) as f32;
+        loss as f32
+    }
+
+    fn eval_loss(&mut self, params: &[f32]) -> f64 {
+        let x = params[0] as f64;
+        self.a * (x - self.c) * (x - self.c)
+    }
+
+    fn shard_len(&self) -> usize {
+        1
+    }
+
+    fn full_grad(&mut self, params: &[f32], out: &mut [f32]) -> bool {
+        out[0] = (2.0 * self.a * (params[0] as f64 - self.c)) as f32;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_pair_matches_eq_58() {
+        let w0 = QuadraticEngine::for_worker(0, 2, 3.0, 0.0);
+        let w1 = QuadraticEngine::for_worker(1, 2, 3.0, 0.0);
+        assert_eq!((w0.a, w0.c), (1.0, -6.0));
+        assert_eq!((w1.a, w1.c), (2.0, 3.0));
+        // f(x) = ½(f1+f2) has gradient (2(x+2b) + 4(x−b))/2 = 3x → min 0
+        let x = 1.7f64;
+        let g_mean = (2.0 * (x + 6.0) + 4.0 * (x - 3.0)) / 2.0;
+        assert!((g_mean - 3.0 * x).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_gradient_descent_converges_to_worker_min() {
+        let mut e = QuadraticEngine::for_worker(1, 2, 2.0, 0.0);
+        let mut p = vec![5.0f32];
+        let delta = vec![0.0f32];
+        let mut rng = Pcg32::new(0, 0);
+        for _ in 0..200 {
+            e.sgd_step(&mut p, &delta, 0.1, 0.0, &mut rng);
+        }
+        assert!((p[0] - 2.0).abs() < 1e-4, "should reach local min b=2, got {}", p[0]);
+    }
+
+    #[test]
+    fn noise_perturbs_but_keeps_mean() {
+        let e = QuadraticEngine { a: 1.0, c: 0.0, noise: 0.5, batch: 1 };
+        let mut rng = Pcg32::new(9, 9);
+        let x = 1.0;
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| e.grad_at(x, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.02, "noisy grad mean {mean}");
+    }
+
+    #[test]
+    fn full_grad_is_exact() {
+        let mut e = QuadraticEngine { a: 2.0, c: 1.0, noise: 1.0, batch: 1 };
+        let mut g = vec![0.0f32];
+        assert!(e.full_grad(&[3.0], &mut g));
+        assert_eq!(g[0], 8.0); // 2*2*(3-1)
+    }
+
+    #[test]
+    fn delta_shifts_the_update() {
+        let mut e = QuadraticEngine { a: 1.0, c: 0.0, noise: 0.0, batch: 1 };
+        let mut p = vec![1.0f32];
+        let mut rng = Pcg32::new(0, 0);
+        // gradient at 1 is 2; delta of 2 cancels it exactly
+        e.sgd_step(&mut p, &[2.0], 0.5, 0.0, &mut rng);
+        assert_eq!(p[0], 1.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Minimal self-contained serialization substrates.
+//!
+//! The build environment is fully offline (no serde/toml/serde_json), so
+//! the two wire formats the system needs are implemented here:
+//!
+//! * [`json`] — a small, strict JSON parser + writer. Used for the
+//!   `artifacts/<name>.meta.json` contract with `python/compile/aot.py`
+//!   (kept as *standard JSON* so the python side stays ordinary
+//!   `json.dump`).
+//! * [`toml_lite`] — a TOML subset (tables, string/number/bool keys)
+//!   covering the launcher's run configs.
+
+pub mod json;
+pub mod toml_lite;
+
+pub use json::Json;
+pub use toml_lite::TomlDoc;

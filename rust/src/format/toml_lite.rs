@@ -1,0 +1,258 @@
+//! A TOML subset parser for launcher configs.
+//!
+//! Supported grammar (everything the run configs need):
+//! * `[table]` and `[table.subtable]` headers,
+//! * `key = value` with string (`"..."`), integer, float, boolean values,
+//! * `#` comments and blank lines.
+//!
+//! Keys are flattened to dotted paths: `[spec]` + `lr = 0.1` becomes
+//! `spec.lr`.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl TomlValue {
+    /// String accessor.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Float accessor (ints widen).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Unsigned integer accessor.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    /// u64 accessor.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    /// Bool accessor.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A flattened TOML document: dotted path → value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    map: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(src: &str) -> Result<TomlDoc, String> {
+        let mut map = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty table name", lineno + 1));
+                }
+                prefix = format!("{name}.");
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let full = format!("{prefix}{key}");
+            if map.insert(full.clone(), val).is_some() {
+                return Err(format!("line {}: duplicate key '{full}'", lineno + 1));
+            }
+        }
+        Ok(TomlDoc { map })
+    }
+
+    /// Raw lookup by dotted path.
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.map.get(path)
+    }
+
+    /// Typed lookups with defaults.
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    /// usize with default.
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    /// u64 with default.
+    pub fn u64_or(&self, path: &str, default: u64) -> u64 {
+        self.get(path).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+
+    /// f64 with default.
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    /// bool with default.
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// All keys under a dotted prefix.
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let want = format!("{prefix}.");
+        self.map.keys().filter(|k| k.starts_with(&want)).map(|k| k.as_str()).collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote in string (escapes unsupported)".to_string());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# launcher config
+partition = "label-sharded"
+output = "out.csv"   # trailing comment
+
+[task]
+kind = "softmax-synthetic"
+classes = 10
+sep = 4.5
+
+[spec]
+algorithm = "vrl-sgd"
+workers = 4
+lr = 0.05
+dense_metrics = true
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.str_or("partition", ""), "label-sharded");
+        assert_eq!(doc.usize_or("task.classes", 0), 10);
+        assert_eq!(doc.f64_or("task.sep", 0.0), 4.5);
+        assert_eq!(doc.f64_or("spec.lr", 0.0), 0.05);
+        assert!(doc.bool_or("spec.dense_metrics", false));
+        assert_eq!(doc.str_or("spec.algorithm", ""), "vrl-sgd");
+        // default fallback
+        assert_eq!(doc.usize_or("spec.period", 20), 20);
+    }
+
+    #[test]
+    fn int_widens_to_f64() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.f64_or("x", 0.0), 3.0);
+        assert_eq!(doc.usize_or("x", 0), 3);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"name = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.str_or("name", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = TomlDoc::parse("a = 1\nbogus line\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("a = 1\na = 2\n").unwrap_err().contains("duplicate"));
+        assert!(TomlDoc::parse("= 3\n").is_err());
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        let keys = doc.keys_under("task");
+        assert!(keys.contains(&"task.kind"));
+        assert!(keys.contains(&"task.classes"));
+        assert!(!keys.contains(&"partition"));
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = TomlDoc::parse("a = -4\nb = 1e-4\nc = -2.5e3\n").unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Int(-4)));
+        assert_eq!(doc.f64_or("b", 0.0), 1e-4);
+        assert_eq!(doc.f64_or("c", 0.0), -2500.0);
+        assert_eq!(doc.get("a").unwrap().as_usize(), None);
+    }
+}

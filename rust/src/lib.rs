@@ -1,0 +1,62 @@
+//! # VRL-SGD — Variance Reduced Local SGD with Lower Communication Complexity
+//!
+//! Production-grade reproduction of Liang et al. (2019). The crate is the
+//! **Layer-3 coordinator** of a three-layer rust + JAX + Pallas stack:
+//!
+//! * [`coordinator`] — the paper's contribution: `S-SGD`, `Local SGD`,
+//!   `VRL-SGD` (+ warm-up variant) and `EASGD` behind one [`coordinator::Algorithm`]
+//!   trait, driven by a periodic-averaging scheduler over a worker pool.
+//! * [`engine`] — the train-step abstraction ([`engine::StepEngine`]):
+//!   either pure-rust analytic engines (quadratic / linreg / softmax / MLP)
+//!   or [`runtime::XlaEngine`], which executes JAX/Pallas models AOT-lowered
+//!   to HLO and loaded through the PJRT CPU client (`xla` crate).
+//! * [`comm`] — simulated cluster network with latency/bandwidth cost model,
+//!   allreduce implementations and exact byte/round accounting.
+//! * [`data`] — synthetic datasets matching the paper's three tasks, plus
+//!   iid / label-sharded / Dirichlet partitioners (identical vs
+//!   non-identical case).
+//! * [`experiments`] — harness regenerating every table and figure of the
+//!   paper's evaluation (Table 1, Figures 1–6, warm-up study).
+//!
+//! Quick start (pure rust, no artifacts needed):
+//!
+//! ```no_run
+//! use vrl_sgd::prelude::*;
+//!
+//! let spec = TrainSpec {
+//!     algorithm: AlgorithmKind::VrlSgd,
+//!     workers: 4,
+//!     period: 8,
+//!     lr: 0.05,
+//!     steps: 200,
+//!     seed: 7,
+//!     ..TrainSpec::default()
+//! };
+//! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
+//! let out = run_training(&spec, &task, Partition::LabelSharded).unwrap();
+//! assert!(out.final_loss() < out.initial_loss());
+//! ```
+
+pub mod analysis;
+pub mod benchutil;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod experiments;
+pub mod format;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
+    pub use crate::coordinator::{run_training, Algorithm, TrainOutput};
+    pub use crate::data::Dataset;
+    pub use crate::engine::StepEngine;
+    pub use crate::metrics::History;
+}

@@ -1,0 +1,271 @@
+//! `vrl-sgd` — launcher CLI for the VRL-SGD reproduction.
+//!
+//! Subcommands map 1:1 to the paper's evaluation artifacts:
+//!
+//! ```text
+//! vrl-sgd train --config run.toml          # one training run from TOML
+//! vrl-sgd fig1|fig2|fig5|fig6 [--paper]    # epoch-loss figures
+//! vrl-sgd fig3 [--steps N]                 # Appendix E (figs 3+4)
+//! vrl-sgd table1 [--paper]                 # comm-complexity exponents
+//! vrl-sgd speedup                          # linear-speedup fit
+//! vrl-sgd warmup                           # Remark 5.3 study
+//! vrl-sgd artifact --name mlp ...          # train an XLA artifact task
+//! ```
+//!
+//! (Hand-rolled argument parsing: the build environment is offline and
+//! carries no clap.)
+
+use vrl_sgd::config::{Partition, RunConfig, TrainSpec};
+use vrl_sgd::coordinator::{run_with_engines, RunOptions};
+use vrl_sgd::experiments::{self, Scale};
+use vrl_sgd::metrics::write_report;
+
+const USAGE: &str = "\
+vrl-sgd — Variance Reduced Local SGD reproduction launcher
+
+USAGE: vrl-sgd <COMMAND> [OPTIONS]
+
+COMMANDS:
+  train --config <file.toml>          run one training job
+  fig1|fig2|fig5|fig6 [--paper] [--out <csv>]
+                                      epoch-loss figures (1/2: paper k;
+                                      5: k/2; 6: 2k)
+  fig3 [--steps <n>] [--out <csv>]    Appendix E quadratic sweeps (figs 3+4)
+  table1 [--paper] [--out <csv>]      communication-complexity exponents
+  speedup                             linear iteration speedup fit
+  warmup                              Remark 5.3 warm-up study
+  artifact --name <mlp|lenet|textcnn|transformer>
+           [--dir artifacts] [--algorithm vrl-sgd] [--workers 4]
+           [--period 10] [--lr 0.05] [--steps 200] [--samples 256]
+           [--non-identical] [--out <csv>]
+                                      train an XLA artifact task
+";
+
+/// Tiny flag parser: `--key value` and boolean `--key` switches.
+struct Args {
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args, String> {
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("unexpected argument '{a}'"))?;
+            if bool_flags.contains(&key) {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| format!("--{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("invalid --{key} '{v}'")),
+        }
+    }
+}
+
+fn scale(paper: bool) -> Scale {
+    if paper {
+        Scale::Paper
+    } else {
+        Scale::Smoke
+    }
+}
+
+fn emit_curves(set: experiments::CurveSet, out: Option<&str>) {
+    let path = out
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| format!("reports/{}.csv", set.id));
+    write_report(&path, &set.to_csv()).expect("write report");
+    print!("{}", set.summary());
+    println!("wrote {path}");
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("{msg}");
+    std::process::exit(2);
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        die(USAGE);
+    };
+    let rest = &argv[1..];
+    let result = run_command(cmd, rest);
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        eprintln!();
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+}
+
+fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
+    match cmd {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "train" => {
+            let args = Args::parse(rest, &[])?;
+            let config = args.get("config").ok_or("train needs --config")?;
+            let cfg = RunConfig::load(config)?;
+            // artifact tasks go through the PJRT runtime; everything else
+            // runs on the pure-rust engines
+            let out = match &cfg.task {
+                vrl_sgd::config::TaskKind::Artifact { name, samples_per_worker } => {
+                    let rt = vrl_sgd::runtime::Runtime::cpu("artifacts")?;
+                    let engines = vrl_sgd::runtime::build_xla_engines(
+                        &rt,
+                        name,
+                        &cfg.spec,
+                        cfg.partition,
+                        *samples_per_worker,
+                    )
+                    .map_err(|e| format!("{e} — did you run `make artifacts`?"))?;
+                    run_with_engines(&cfg.spec, engines, &RunOptions::default())?
+                }
+                _ => vrl_sgd::coordinator::run_training(&cfg.spec, &cfg.task, cfg.partition)?,
+            };
+            println!(
+                "{}: loss {:.6} -> {:.6} in {} rounds ({} bytes, {:.3}s simulated)",
+                out.algorithm,
+                out.initial_loss(),
+                out.final_loss(),
+                out.comm.rounds,
+                out.comm.bytes,
+                out.sim_time.total()
+            );
+            if let Some(path) = cfg.output {
+                write_report(&path, &out.history.sync_csv()).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+            Ok(())
+        }
+        "fig1" | "fig2" | "fig5" | "fig6" => {
+            let args = Args::parse(rest, &["paper"])?;
+            let sc = scale(args.has("paper"));
+            let set = match cmd {
+                "fig1" => experiments::fig1(sc),
+                "fig2" => experiments::fig2(sc),
+                "fig5" => experiments::fig5(sc),
+                _ => experiments::fig6(sc),
+            };
+            emit_curves(set, args.get("out"));
+            Ok(())
+        }
+        "fig3" | "fig4" => {
+            let args = Args::parse(rest, &[])?;
+            let steps: usize = args.parse_num("steps", 2000)?;
+            let out = args.get_or("out", "reports/fig3_fig4_quadratic.csv");
+            let cells = experiments::quadratic_appendix(steps);
+            write_report(out, &experiments::quadratic_csv(&cells))
+                .map_err(|e| e.to_string())?;
+            println!("b      k    algorithm   final_dist_sq    final_worker_var");
+            for c in &cells {
+                let last = c.out.history.dense_rows.last().unwrap();
+                println!(
+                    "{:<6} {:<4} {:<11} {:<16.6e} {:.6e}",
+                    c.b,
+                    c.k,
+                    c.algorithm,
+                    last.dist_sq_to_target.unwrap_or(f64::NAN),
+                    last.worker_variance
+                );
+            }
+            println!("wrote {out}");
+            Ok(())
+        }
+        "table1" => {
+            let args = Args::parse(rest, &["paper"])?;
+            let res = experiments::table1(scale(args.has("paper")));
+            let out = args.get_or("out", "reports/table1.csv");
+            write_report(out, &res.to_csv()).map_err(|e| e.to_string())?;
+            print!("{}", res.summary());
+            println!("wrote {out}");
+            Ok(())
+        }
+        "speedup" => {
+            let (pts, p) = experiments::speedup(Scale::Smoke);
+            println!("N    steps_to_eps");
+            for (n, s) in &pts {
+                println!("{n:<4} {s}");
+            }
+            println!("fitted steps ∝ N^{p:.3} (linear speedup ⇒ ≈ -1)");
+            Ok(())
+        }
+        "warmup" => {
+            let rows = experiments::warmup_study(200);
+            println!("b      algorithm   peak_worker_var   final_dist_sq");
+            for r in rows {
+                println!(
+                    "{:<6} {:<11} {:<17.6e} {:.6e}",
+                    r.b, r.algorithm, r.peak_worker_variance, r.final_dist_sq
+                );
+            }
+            Ok(())
+        }
+        "artifact" => {
+            let args = Args::parse(rest, &["non-identical"])?;
+            let name = args.get("name").ok_or("artifact needs --name")?;
+            let dir = args.get_or("dir", "artifacts");
+            let spec = TrainSpec {
+                algorithm: args.get_or("algorithm", "vrl-sgd").parse()?,
+                workers: args.parse_num("workers", 4)?,
+                period: args.parse_num("period", 10)?,
+                lr: args.parse_num("lr", 0.05f32)?,
+                steps: args.parse_num("steps", 200)?,
+                ..TrainSpec::default()
+            };
+            let samples: usize = args.parse_num("samples", 256)?;
+            let partition = if args.has("non-identical") {
+                Partition::LabelSharded
+            } else {
+                Partition::Identical
+            };
+            let rt = vrl_sgd::runtime::Runtime::cpu(dir)?;
+            let engines = vrl_sgd::runtime::build_xla_engines(&rt, name, &spec, partition, samples)
+                .map_err(|e| format!("{e} — did you run `make artifacts`?"))?;
+            let res = run_with_engines(&spec, engines, &RunOptions::default())?;
+            println!(
+                "artifact {name} / {}: loss {:.5} -> {:.5} over {} rounds",
+                res.algorithm,
+                res.initial_loss(),
+                res.final_loss(),
+                res.comm.rounds
+            );
+            if let Some(path) = args.get("out") {
+                write_report(path, &res.history.sync_csv()).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'")),
+    }
+}

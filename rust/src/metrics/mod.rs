@@ -1,0 +1,206 @@
+//! Training histories and CSV/JSON emission.
+//!
+//! Two granularities:
+//! * **sync rows** — one per communication round: global train loss
+//!   (weighted over shards), consensus variance, cumulative communication
+//!   counters and simulated time. This is what the epoch-loss figures
+//!   (Figures 1, 2, 5, 6) plot.
+//! * **dense rows** — one per iteration (opt-in via
+//!   `TrainSpec::dense_metrics`): per-step mean minibatch loss, variance
+//!   among workers and distance to a reference point. Appendix E
+//!   (Figures 3–4) plots these.
+
+/// One record per synchronization round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncRow {
+    /// Round index (0 = state after the first synchronization).
+    pub round: usize,
+    /// Total local iterations elapsed per worker.
+    pub step: usize,
+    /// Deterministic global train loss at the averaged model.
+    pub train_loss: f64,
+    /// `(1/N) Σ ‖x_i − x̂‖²` *before* averaging (consensus gap).
+    pub worker_variance: f64,
+    /// Cumulative communication rounds.
+    pub comm_rounds: u64,
+    /// Cumulative bytes over all links.
+    pub comm_bytes: u64,
+    /// Cumulative simulated time (compute + comm), seconds.
+    pub sim_time_s: f64,
+}
+
+/// One record per iteration (dense mode).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseRow {
+    /// Iteration t.
+    pub step: usize,
+    /// Mean minibatch loss across workers at this iteration.
+    pub mean_loss: f64,
+    /// `(1/N) Σ ‖x_i − x̂‖²`.
+    pub worker_variance: f64,
+    /// `‖x̂ − target‖²` when a reference point was provided.
+    pub dist_sq_to_target: Option<f64>,
+}
+
+/// Full history of one training run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct History {
+    /// Loss at the shared initial model, before any step.
+    pub initial_loss: f64,
+    /// Per-round records.
+    pub sync_rows: Vec<SyncRow>,
+    /// Per-iteration records (empty unless dense mode).
+    pub dense_rows: Vec<DenseRow>,
+}
+
+impl History {
+    /// Empty history with a recorded initial loss.
+    pub fn new(initial_loss: f64) -> Self {
+        History { initial_loss, sync_rows: Vec::new(), dense_rows: Vec::new() }
+    }
+
+    /// Loss at the last synchronization (or the initial loss if none).
+    pub fn final_loss(&self) -> f64 {
+        self.sync_rows.last().map(|r| r.train_loss).unwrap_or(self.initial_loss)
+    }
+
+    /// First recorded loss.
+    pub fn first_loss(&self) -> f64 {
+        self.initial_loss
+    }
+
+    /// Smallest train loss seen at any sync.
+    pub fn best_loss(&self) -> f64 {
+        self.sync_rows
+            .iter()
+            .map(|r| r.train_loss)
+            .fold(self.initial_loss, f64::min)
+    }
+
+    /// First round index at which the train loss drops to `<= threshold`;
+    /// `None` if never. Used by the Table-1 rounds-to-ε experiments.
+    pub fn rounds_to_loss(&self, threshold: f64) -> Option<usize> {
+        self.sync_rows.iter().find(|r| r.train_loss <= threshold).map(|r| r.round + 1)
+    }
+
+    /// Iterations to reach `threshold` (sync granularity).
+    pub fn steps_to_loss(&self, threshold: f64) -> Option<usize> {
+        self.sync_rows.iter().find(|r| r.train_loss <= threshold).map(|r| r.step)
+    }
+
+    /// CSV of the sync rows (header + one line per round).
+    pub fn sync_csv(&self) -> String {
+        let mut s =
+            String::from("round,step,train_loss,worker_variance,comm_rounds,comm_bytes,sim_time_s\n");
+        for r in &self.sync_rows {
+            s.push_str(&format!(
+                "{},{},{:.8e},{:.8e},{},{},{:.6e}\n",
+                r.round, r.step, r.train_loss, r.worker_variance, r.comm_rounds, r.comm_bytes,
+                r.sim_time_s
+            ));
+        }
+        s
+    }
+
+    /// CSV of the dense rows.
+    pub fn dense_csv(&self) -> String {
+        let mut s = String::from("step,mean_loss,worker_variance,dist_sq_to_target\n");
+        for r in &self.dense_rows {
+            s.push_str(&format!(
+                "{},{:.8e},{:.8e},{}\n",
+                r.step,
+                r.mean_loss,
+                r.worker_variance,
+                r.dist_sq_to_target.map(|d| format!("{d:.8e}")).unwrap_or_default()
+            ));
+        }
+        s
+    }
+}
+
+/// Write a string to a file, creating parent directories.
+pub fn write_report(path: &str, contents: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> History {
+        let mut h = History::new(2.0);
+        for (i, loss) in [1.5, 0.9, 0.4, 0.6].iter().enumerate() {
+            h.sync_rows.push(SyncRow {
+                round: i,
+                step: (i + 1) * 10,
+                train_loss: *loss,
+                worker_variance: 0.1,
+                comm_rounds: (i + 1) as u64,
+                comm_bytes: 100,
+                sim_time_s: 0.1,
+            });
+        }
+        h
+    }
+
+    #[test]
+    fn loss_accessors() {
+        let h = sample();
+        assert_eq!(h.first_loss(), 2.0);
+        assert_eq!(h.final_loss(), 0.6);
+        assert_eq!(h.best_loss(), 0.4);
+    }
+
+    #[test]
+    fn rounds_to_loss_finds_first_crossing() {
+        let h = sample();
+        assert_eq!(h.rounds_to_loss(1.0), Some(2)); // round idx 1 => 2 rounds
+        assert_eq!(h.steps_to_loss(1.0), Some(20));
+        assert_eq!(h.rounds_to_loss(0.3), None);
+        assert_eq!(h.rounds_to_loss(1.6), Some(1));
+    }
+
+    #[test]
+    fn empty_history_falls_back_to_initial() {
+        let h = History::new(3.0);
+        assert_eq!(h.final_loss(), 3.0);
+        assert_eq!(h.best_loss(), 3.0);
+        assert_eq!(h.rounds_to_loss(1.0), None);
+    }
+
+    #[test]
+    fn csv_shapes() {
+        let h = sample();
+        let csv = h.sync_csv();
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("round,step,"));
+        let mut h2 = h.clone();
+        h2.dense_rows.push(DenseRow {
+            step: 1,
+            mean_loss: 0.5,
+            worker_variance: 0.0,
+            dist_sq_to_target: Some(1.25),
+        });
+        h2.dense_rows.push(DenseRow {
+            step: 2,
+            mean_loss: 0.4,
+            worker_variance: 0.0,
+            dist_sq_to_target: None,
+        });
+        let dcsv = h2.dense_csv();
+        assert_eq!(dcsv.lines().count(), 3);
+        assert!(dcsv.contains("1.25"));
+    }
+
+    #[test]
+    fn write_report_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("vrl_metrics_{}", std::process::id()));
+        let path = dir.join("a/b/c.csv");
+        write_report(path.to_str().unwrap(), "x,y\n1,2\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x,y\n1,2\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,267 @@
+//! Deterministic, splittable random number generation.
+//!
+//! Distributed-training reproductions live and die on determinism: the
+//! proptest invariants in `coordinator` compare *bit-exact* trajectories
+//! (e.g. VRL-SGD with `k = 1` against S-SGD), which requires that worker
+//! `i` draws the same sample/minibatch stream regardless of scheduling
+//! order. We therefore use a small, self-contained PCG-XSH-RR 64/32
+//! generator with an explicit stream id: worker streams are derived from a
+//! root seed with [`Pcg32::split`], never shared.
+
+/// PCG-XSH-RR 64/32: 64-bit state, 63-bit stream selector, 32-bit output.
+///
+/// Reference: O'Neill, "PCG: A Family of Simple Fast Space-Efficient
+/// Statistically Good Algorithms for Random Number Generation" (2014).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pcg32 {
+    state: u64,
+    /// Odd increment; encodes the stream. Two generators with different
+    /// increments produce independent sequences from any state.
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and a stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child generator (e.g. per-worker stream).
+    ///
+    /// The child stream id mixes the parent's stream with `lane` through a
+    /// 64-bit finalizer so that `split(a) != split(b)` for `a != b` with
+    /// overwhelming probability.
+    pub fn split(&self, lane: u64) -> Self {
+        let mixed = splitmix64(self.inc ^ lane.wrapping_mul(0x9E3779B97F4A7C15));
+        Pcg32::new(splitmix64(self.state ^ lane), mixed)
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64-bit output (two 32-bit draws).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let hi = self.next_u32() as u64;
+        let lo = self.next_u32() as u64;
+        (hi << 32) | lo
+    }
+
+    /// Uniform in `[0, 1)` with 32 bits of precision.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 mantissa bits keep the value exactly representable.
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` without modulo bias (Lemire).
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32() as u64;
+            let m = x * bound as u64;
+            let l = m as u32;
+            if l >= bound || l >= (u32::MAX - bound + 1) % bound {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller (cached second value is intentionally
+    /// *not* kept: statelessness keeps splitting semantics simple).
+    pub fn next_normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Fill a slice with standard normals scaled by `scale`.
+    pub fn fill_normal(&mut self, out: &mut [f32], scale: f32) {
+        for v in out.iter_mut() {
+            *v = self.next_normal() * scale;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        let n = slice.len();
+        for i in (1..n).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            slice.swap(i, j);
+        }
+    }
+
+    /// Sample from a Gamma(alpha, 1) distribution (Marsaglia–Tsang), used by
+    /// the Dirichlet partitioner.
+    pub fn next_gamma(&mut self, alpha: f64) -> f64 {
+        if alpha < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let u = self.next_f64().max(f64::MIN_POSITIVE);
+            return self.next_gamma(alpha + 1.0) * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.next_normal() as f64;
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1_n) sample.
+    pub fn next_dirichlet(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..n).map(|_| self.next_gamma(alpha)).collect();
+        let s: f64 = g.iter().sum();
+        if s <= 0.0 {
+            return vec![1.0 / n as f64; n];
+        }
+        for v in g.iter_mut() {
+            *v /= s;
+        }
+        g
+    }
+}
+
+/// SplitMix64 finalizer, used for seed mixing.
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "streams should be independent, {same} collisions");
+    }
+
+    #[test]
+    fn split_lanes_are_independent() {
+        let root = Pcg32::new(7, 0);
+        let mut w0 = root.split(0);
+        let mut w1 = root.split(1);
+        let same = (0..64).filter(|_| w0.next_u32() == w1.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn split_is_pure() {
+        let root = Pcg32::new(7, 0);
+        assert_eq!(root.split(3), root.split(3));
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Pcg32::new(1, 1);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Pcg32::new(9, 3);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "count {c} out of range");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::new(123, 5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(4, 4);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Pcg32::new(11, 0);
+        for &alpha in &[0.1, 0.5, 1.0, 10.0] {
+            let d = r.next_dirichlet(alpha, 8);
+            let s: f64 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn gamma_mean_matches_alpha() {
+        let mut r = Pcg32::new(21, 0);
+        let n = 20_000;
+        let alpha = 2.5;
+        let mean = (0..n).map(|_| r.next_gamma(alpha)).sum::<f64>() / n as f64;
+        assert!((mean - alpha).abs() < 0.1, "gamma mean {mean}");
+    }
+}

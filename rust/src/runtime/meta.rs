@@ -1,0 +1,300 @@
+//! Artifact metadata: the shape contract between `python/compile/aot.py`
+//! and the rust runtime, serialized as `artifacts/<name>.meta.json`
+//! (standard JSON, parsed with the in-tree [`crate::format::json`]).
+
+use crate::format::Json;
+use std::collections::BTreeMap;
+
+/// One contiguous block of the flat parameter vector with its init scale
+/// (normal(0, scale)); blocks are listed in layout order and must sum to
+/// `param_dim`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InitBlock {
+    /// Human-readable block name (e.g. "w1").
+    pub name: String,
+    /// Element count.
+    pub len: usize,
+    /// Init standard deviation.
+    pub scale: f32,
+}
+
+/// Shape metadata for one train-step artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    /// Artifact name (matches the file stem).
+    pub name: String,
+    /// Flat parameter dimension P.
+    pub param_dim: usize,
+    /// Fixed batch size B the step was lowered with.
+    pub batch: usize,
+    /// Per-sample input shape (excludes batch), e.g. `[784]` or `[50, 50]`.
+    pub input_shape: Vec<usize>,
+    /// "feature" | "image" | "text" | "tokens" — selects the synthetic
+    /// data generator on the rust side.
+    pub input_kind: String,
+    /// True when x is `s32` token ids (transformer LM).
+    pub input_is_tokens: bool,
+    /// Sequence length for token artifacts.
+    pub seq_len: Option<usize>,
+    /// Number of classes (classification) or vocabulary size (LM).
+    pub classes: usize,
+    /// Parameter layout blocks with init scales.
+    pub init_blocks: Vec<InitBlock>,
+}
+
+impl ArtifactMeta {
+    /// Load `<dir>/<name>.meta.json`.
+    pub fn load(dir: &std::path::Path, name: &str) -> Result<Self, String> {
+        let path = dir.join(format!("{name}.meta.json"));
+        let s = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let meta = Self::from_json_str(&s).map_err(|e| format!("{}: {e}", path.display()))?;
+        meta.check()?;
+        Ok(meta)
+    }
+
+    /// Parse from a JSON string.
+    pub fn from_json_str(s: &str) -> Result<Self, String> {
+        let v = Json::parse(s)?;
+        let req_usize = |k: &str| {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| format!("missing/invalid '{k}'"))
+        };
+        let req_str = |k: &str| {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| format!("missing/invalid '{k}'"))
+        };
+        let input_shape = v
+            .get("input_shape")
+            .and_then(|x| x.as_arr())
+            .ok_or("missing 'input_shape'")?
+            .iter()
+            .map(|e| e.as_usize().ok_or("bad input_shape entry".to_string()))
+            .collect::<Result<Vec<_>, _>>()?;
+        let init_blocks = v
+            .get("init_blocks")
+            .and_then(|x| x.as_arr())
+            .ok_or("missing 'init_blocks'")?
+            .iter()
+            .map(|b| {
+                Ok(InitBlock {
+                    name: b
+                        .get("name")
+                        .and_then(|x| x.as_str())
+                        .ok_or("block missing name")?
+                        .to_string(),
+                    len: b.get("len").and_then(|x| x.as_usize()).ok_or("block missing len")?,
+                    scale: b
+                        .get("scale")
+                        .and_then(|x| x.as_f64())
+                        .ok_or("block missing scale")? as f32,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(ArtifactMeta {
+            name: req_str("name")?,
+            param_dim: req_usize("param_dim")?,
+            batch: req_usize("batch")?,
+            input_shape,
+            input_kind: req_str("input_kind")?,
+            input_is_tokens: v.get("input_is_tokens").and_then(|x| x.as_bool()).unwrap_or(false),
+            seq_len: v.get("seq_len").and_then(|x| x.as_usize()),
+            classes: req_usize("classes")?,
+            init_blocks,
+        })
+    }
+
+    /// Serialize to JSON (used by round-trip tests; python writes the real
+    /// files).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("param_dim".into(), Json::Num(self.param_dim as f64));
+        m.insert("batch".into(), Json::Num(self.batch as f64));
+        m.insert(
+            "input_shape".into(),
+            Json::Arr(self.input_shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+        );
+        m.insert("input_kind".into(), Json::Str(self.input_kind.clone()));
+        m.insert("input_is_tokens".into(), Json::Bool(self.input_is_tokens));
+        if let Some(s) = self.seq_len {
+            m.insert("seq_len".into(), Json::Num(s as f64));
+        }
+        m.insert("classes".into(), Json::Num(self.classes as f64));
+        m.insert(
+            "init_blocks".into(),
+            Json::Arr(
+                self.init_blocks
+                    .iter()
+                    .map(|b| {
+                        let mut bm = BTreeMap::new();
+                        bm.insert("name".into(), Json::Str(b.name.clone()));
+                        bm.insert("len".into(), Json::Num(b.len as f64));
+                        bm.insert("scale".into(), Json::Num(b.scale as f64));
+                        Json::Obj(bm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// Validate internal consistency.
+    pub fn check(&self) -> Result<(), String> {
+        let total: usize = self.init_blocks.iter().map(|b| b.len).sum();
+        if total != self.param_dim {
+            return Err(format!(
+                "init blocks sum to {total}, param_dim is {}",
+                self.param_dim
+            ));
+        }
+        if self.batch == 0 || self.param_dim == 0 {
+            return Err("batch and param_dim must be positive".to_string());
+        }
+        if self.input_is_tokens && self.seq_len.is_none() {
+            return Err("token artifact requires seq_len".to_string());
+        }
+        Ok(())
+    }
+
+    /// Elements of one input sample.
+    pub fn input_elems_per_sample(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Full x dims including batch, as i64 for literal reshape.
+    pub fn x_dims(&self) -> Vec<i64> {
+        let mut v = vec![self.batch as i64];
+        v.extend(self.input_shape.iter().map(|&d| d as i64));
+        v
+    }
+
+    /// Full y dims including batch.
+    pub fn y_dims(&self) -> Vec<i64> {
+        if self.input_is_tokens {
+            vec![self.batch as i64, self.seq_len.unwrap() as i64]
+        } else {
+            vec![self.batch as i64]
+        }
+    }
+
+    /// (seq_len, embed) for pre-embedded text artifacts.
+    pub fn text_dims(&self) -> Option<(usize, usize)> {
+        if self.input_shape.len() == 2 {
+            Some((self.input_shape[0], self.input_shape[1]))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "mlp".into(),
+            param_dim: 10,
+            batch: 4,
+            input_shape: vec![3],
+            input_kind: "feature".into(),
+            input_is_tokens: false,
+            seq_len: None,
+            classes: 2,
+            init_blocks: vec![
+                InitBlock { name: "w".into(), len: 6, scale: 0.1 },
+                InitBlock { name: "b".into(), len: 4, scale: 0.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn check_accepts_consistent_meta() {
+        sample().check().unwrap();
+    }
+
+    #[test]
+    fn check_rejects_bad_blocks() {
+        let mut m = sample();
+        m.init_blocks[0].len = 99;
+        assert!(m.check().is_err());
+    }
+
+    #[test]
+    fn check_rejects_tokens_without_seq() {
+        let mut m = sample();
+        m.input_is_tokens = true;
+        assert!(m.check().is_err());
+        m.seq_len = Some(8);
+        m.check().unwrap();
+    }
+
+    #[test]
+    fn dims_helpers() {
+        let m = sample();
+        assert_eq!(m.x_dims(), vec![4, 3]);
+        assert_eq!(m.y_dims(), vec![4]);
+        assert_eq!(m.input_elems_per_sample(), 3);
+        let mut t = sample();
+        t.input_is_tokens = true;
+        t.seq_len = Some(8);
+        t.input_shape = vec![8];
+        assert_eq!(t.y_dims(), vec![4, 8]);
+        let mut txt = sample();
+        txt.input_shape = vec![5, 7];
+        assert_eq!(txt.text_dims(), Some((5, 7)));
+        assert_eq!(sample().text_dims(), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample();
+        let s = m.to_json().to_string();
+        let m2 = ArtifactMeta::from_json_str(&s).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn parses_python_style_json() {
+        // what aot.py's json.dump(..., indent=2) produces
+        let src = r#"{
+  "name": "lenet",
+  "param_dim": 10,
+  "batch": 4,
+  "input_shape": [3],
+  "input_kind": "image",
+  "input_is_tokens": false,
+  "classes": 2,
+  "init_blocks": [
+    {"name": "w", "len": 6, "scale": 0.1},
+    {"name": "b", "len": 4, "scale": 0.0}
+  ]
+}"#;
+        let m = ArtifactMeta::from_json_str(src).unwrap();
+        assert_eq!(m.name, "lenet");
+        assert_eq!(m.seq_len, None);
+        m.check().unwrap();
+    }
+
+    #[test]
+    fn missing_fields_error_clearly() {
+        let err = ArtifactMeta::from_json_str(r#"{"name": "x"}"#).unwrap_err();
+        assert!(err.contains("param_dim") || err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn load_from_dir() {
+        let dir = std::env::temp_dir().join(format!("vrl_meta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample();
+        std::fs::write(dir.join("mlp.meta.json"), m.to_json().to_string()).unwrap();
+        let loaded = ArtifactMeta::load(&dir, "mlp").unwrap();
+        assert_eq!(loaded, m);
+        assert!(ArtifactMeta::load(&dir, "nope").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

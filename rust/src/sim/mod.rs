@@ -1,0 +1,83 @@
+//! Simulated wall-clock model.
+//!
+//! The paper's §6 Metrics paragraph argues: all periodic-averaging
+//! algorithms do the same compute per epoch, so wall-clock differences
+//! come from communication rounds only. We make that argument executable:
+//! total simulated time = (local steps) × (per-step compute cost) +
+//! (communication time from the α–β model in [`crate::comm`]). This gives
+//! the "time speedup" axis without needing the authors' 8-GPU testbed.
+
+/// Per-step compute cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct TimeModel {
+    /// Seconds per local SGD step (one minibatch fwd+bwd+update).
+    pub step_s: f64,
+}
+
+impl TimeModel {
+    /// Estimate from problem size: a fwd+bwd over `P` parameters with
+    /// batch `b` costs ≈ `6·P·b` flops (dense-layer dominated); divided by
+    /// an effective device throughput (default 1 TFLOP/s, GTX-1080Ti-ish
+    /// for f32 with realistic utilization).
+    pub fn from_dims(param_dim: usize, batch: usize) -> Self {
+        const THROUGHPUT: f64 = 1.0e12;
+        let flops = 6.0 * param_dim as f64 * batch as f64;
+        // floor at 2 µs: kernel-launch / small-problem overhead
+        TimeModel { step_s: (flops / THROUGHPUT).max(2e-6) }
+    }
+
+    /// Fixed per-step cost.
+    pub fn fixed(step_s: f64) -> Self {
+        TimeModel { step_s }
+    }
+}
+
+/// Accumulated simulated time split by source.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SimTime {
+    /// Compute seconds (workers run in parallel: this is per-worker
+    /// critical path, not the sum over workers).
+    pub compute_s: f64,
+    /// Communication seconds (critical path of the collectives).
+    pub comm_s: f64,
+}
+
+impl SimTime {
+    /// Total simulated wall-clock.
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.comm_s
+    }
+
+    /// Charge `steps` local steps under `model`.
+    pub fn charge_steps(&mut self, steps: usize, model: &TimeModel) {
+        self.compute_s += steps as f64 * model.step_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_dims_scales_with_problem() {
+        let small = TimeModel::from_dims(1_000, 32);
+        let big = TimeModel::from_dims(1_000_000, 32);
+        // small hits the overhead floor, big is ~1.9e-4 s
+        assert!(big.step_s > small.step_s * 50.0);
+    }
+
+    #[test]
+    fn small_problems_hit_overhead_floor() {
+        let tiny = TimeModel::from_dims(1, 1);
+        assert_eq!(tiny.step_s, 2e-6);
+    }
+
+    #[test]
+    fn charge_accumulates() {
+        let mut t = SimTime::default();
+        t.charge_steps(100, &TimeModel::fixed(1e-3));
+        t.comm_s += 0.05;
+        assert!((t.compute_s - 0.1).abs() < 1e-12);
+        assert!((t.total() - 0.15).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,91 @@
+//! Flat `f32` vector math — the coordinator's hot path.
+//!
+//! Every model variant is exposed to the coordinator as a *flat* parameter
+//! vector `f32[P]` (see `DESIGN.md §Artifact signature`), so the whole
+//! synchronization path of the paper — model averaging, the Δ-correction
+//! update (eq. 4), the EASGD elastic pull — reduces to a handful of
+//! elementwise kernels over `&[f32]` buffers. These are written as
+//! unrolled, allocation-free loops that the compiler autovectorizes; the
+//! `perf_hotpath` bench tracks their throughput.
+
+pub mod ops;
+pub mod stats;
+
+pub use ops::*;
+pub use stats::*;
+
+/// A heap-allocated flat parameter vector with convenience constructors.
+///
+/// This is a deliberately thin wrapper: the hot path operates on `&[f32]`
+/// slices, `FlatVec` only adds ergonomics for ownership-heavy call sites
+/// (worker state, Δ accumulators).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatVec(pub Vec<f32>);
+
+impl FlatVec {
+    /// All-zeros vector of dimension `n`.
+    pub fn zeros(n: usize) -> Self {
+        FlatVec(vec![0.0; n])
+    }
+
+    /// Dimension of the vector.
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    /// True when dimension is zero.
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Borrow as a slice.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+
+    /// Borrow as a mutable slice.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.0
+    }
+
+    /// Euclidean norm.
+    pub fn norm(&self) -> f32 {
+        ops::norm2(&self.0)
+    }
+}
+
+impl From<Vec<f32>> for FlatVec {
+    fn from(v: Vec<f32>) -> Self {
+        FlatVec(v)
+    }
+}
+
+impl std::ops::Index<usize> for FlatVec {
+    type Output = f32;
+    fn index(&self, i: usize) -> &f32 {
+        &self.0[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for FlatVec {
+    fn index_mut(&mut self, i: usize) -> &mut f32 {
+        &mut self.0[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatvec_basics() {
+        let mut v = FlatVec::zeros(4);
+        assert_eq!(v.len(), 4);
+        assert!(!v.is_empty());
+        v[2] = 3.0;
+        assert_eq!(v[2], 3.0);
+        assert_eq!(v.norm(), 3.0);
+        let w: FlatVec = vec![1.0, 2.0].into();
+        assert_eq!(w.as_slice(), &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Cross-worker statistics used by the experiment harness and the
+//! Appendix-E figures (variance among workers, consensus distance).
+
+use super::ops;
+
+/// Mean squared distance of each row to the mean row:
+/// `(1/N) Σ_i ‖x_i - x̄‖²` — the "variance among workers" plotted in
+/// Figure 4 of the paper, and the consensus term bounded by Lemma 3.
+pub fn worker_variance(rows: &[&[f32]]) -> f64 {
+    assert!(!rows.is_empty());
+    let n = rows[0].len();
+    let mut mean = vec![0.0f32; n];
+    ops::mean_rows(&mut mean, rows);
+    rows.iter().map(|r| ops::dist2_sq(r, &mean)).sum::<f64>() / rows.len() as f64
+}
+
+/// `(1/N) Σ_i ‖x_i - target‖²` — distance of the worker ensemble to a
+/// fixed point (Figure 3 plots this against the global minimum).
+pub fn mean_sq_dist_to(rows: &[&[f32]], target: &[f32]) -> f64 {
+    assert!(!rows.is_empty());
+    rows.iter().map(|r| ops::dist2_sq(r, target)).sum::<f64>() / rows.len() as f64
+}
+
+/// Online mean/variance accumulator (Welford) for scalar series — used by
+/// the metrics layer to aggregate per-step losses into per-epoch rows
+/// without storing every step.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one observation.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean (0 for empty).
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (0 for fewer than 2 observations).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Merge another accumulator (parallel Welford / Chan et al.).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64) * (other.n as f64) / n as f64;
+        self.mean += d * other.n as f64 / n as f64;
+        self.n = n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_variance_zero_when_equal() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let rows: Vec<&[f32]> = vec![&a, &a, &a];
+        assert_eq!(worker_variance(&rows), 0.0);
+    }
+
+    #[test]
+    fn worker_variance_matches_hand_calc() {
+        // rows {0, 2} in 1-D: mean 1, variance ((1)^2 + (1)^2)/2 = 1
+        let a = vec![0.0f32];
+        let b = vec![2.0f32];
+        let rows: Vec<&[f32]> = vec![&a, &b];
+        assert!((worker_variance(&rows) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_sq_dist() {
+        let a = vec![0.0f32];
+        let b = vec![2.0f32];
+        let rows: Vec<&[f32]> = vec![&a, &b];
+        // to target 1: (1 + 1)/2 = 1
+        assert!((mean_sq_dist_to(&rows, &[1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn welford_merge_matches_single() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 3.0).collect();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.variance() - whole.variance()).abs() < 1e-10);
+        // merging an empty accumulator is a no-op
+        let before = a.clone();
+        a.merge(&Welford::new());
+        assert!((a.mean() - before.mean()).abs() < 1e-15);
+    }
+}

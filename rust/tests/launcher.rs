@@ -1,0 +1,74 @@
+//! Launcher-level integration: TOML config file -> full training run ->
+//! CSV report, exactly the path the `vrl-sgd train` subcommand takes.
+
+use vrl_sgd::config::RunConfig;
+use vrl_sgd::coordinator::run_training;
+use vrl_sgd::metrics::write_report;
+
+const CONFIG: &str = r#"
+# quickstart config (see examples/)
+partition = "label-sharded"
+
+[task]
+kind = "softmax-synthetic"
+classes = 6
+features = 16
+samples_per_worker = 64
+
+[spec]
+algorithm = "vrl-sgd"
+workers = 4
+period = 8
+lr = 0.05
+batch = 16
+steps = 160
+seed = 3
+"#;
+
+#[test]
+fn config_file_to_training_to_csv() {
+    let dir = std::env::temp_dir().join(format!("vrl_launcher_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("run.toml");
+    std::fs::write(&cfg_path, CONFIG).unwrap();
+
+    let cfg = RunConfig::load(cfg_path.to_str().unwrap()).expect("config loads");
+    assert_eq!(cfg.spec.workers, 4);
+
+    let out = run_training(&cfg.spec, &cfg.task, cfg.partition).expect("training runs");
+    assert!(out.final_loss() < out.initial_loss(), "training descends");
+    assert_eq!(out.comm.rounds, 20); // 160 / 8
+
+    let csv_path = dir.join("out.csv");
+    write_report(csv_path.to_str().unwrap(), &out.history.sync_csv()).unwrap();
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert_eq!(csv.lines().count(), 21); // header + 20 rounds
+    assert!(csv.starts_with("round,step,train_loss"));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn paper_defaults_run_every_algorithm() {
+    // TrainSpec::default is the paper's Table-2 LeNet row; a short run
+    // with each algorithm must work out of the box.
+    for algo in vrl_sgd::config::AlgorithmKind::ALL {
+        let spec = vrl_sgd::config::TrainSpec {
+            algorithm: algo,
+            steps: 60,
+            period: 10,
+            workers: 4,
+            lr: 0.05,
+            batch: 8,
+            ..Default::default()
+        };
+        let task = vrl_sgd::config::TaskKind::SoftmaxSynthetic {
+            classes: 4,
+            features: 8,
+            samples_per_worker: 32,
+        };
+        let out = run_training(&spec, &task, vrl_sgd::config::Partition::Identical)
+            .unwrap_or_else(|e| panic!("{algo:?}: {e}"));
+        assert!(out.final_loss().is_finite());
+    }
+}

@@ -1,0 +1,191 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; each test skips (with a
+//! message) when the artifacts are missing so `cargo test` stays green on
+//! a fresh checkout.
+
+use vrl_sgd::config::{AlgorithmKind, Partition, TrainSpec};
+use vrl_sgd::coordinator::{run_with_engines, RunOptions};
+use vrl_sgd::data::generators;
+use vrl_sgd::engine::{MlpEngine, StepEngine};
+use vrl_sgd::rng::Pcg32;
+use vrl_sgd::runtime::{build_xla_engines, Runtime, WorkerData, XlaEngine};
+
+const ALL: [&str; 4] = ["mlp", "lenet", "textcnn", "transformer"];
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+macro_rules! require_artifacts {
+    ($($name:expr),*) => {
+        if !Runtime::artifacts_available(&artifacts_dir(), &[$($name),*]) {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn every_artifact_loads_and_steps() {
+    require_artifacts!("mlp", "lenet", "textcnn", "transformer");
+    let rt = Runtime::cpu(artifacts_dir()).expect("pjrt client");
+    for name in ALL {
+        let spec = TrainSpec { workers: 1, seed: 7, ..TrainSpec::default() };
+        let mut engines =
+            build_xla_engines(&rt, name, &spec, Partition::Identical, 64).expect(name);
+        assert_eq!(engines.len(), 1);
+        let e = &mut engines[0];
+        let mut rng = Pcg32::new(3, 3);
+        let mut p = e.init_params(&mut rng);
+        let delta = vec![0.0f32; p.len()];
+        let l0 = e.sgd_step(&mut p, &delta, 0.05, 0.0, &mut rng);
+        assert!(l0.is_finite(), "{name} first loss");
+        // a handful of steps on the same shard should reduce the loss
+        let mut last = l0;
+        for _ in 0..15 {
+            last = e.sgd_step(&mut p, &delta, 0.05, 0.0, &mut rng);
+        }
+        assert!(
+            last < l0,
+            "{name}: loss should drop over 16 steps: {l0} -> {last}"
+        );
+        assert!(p.iter().all(|v| v.is_finite()), "{name} params finite");
+    }
+}
+
+#[test]
+fn xla_mlp_matches_pure_rust_engine() {
+    // The strongest cross-stack check: the JAX/Pallas `mlp` artifact and
+    // the hand-written rust backprop implement the *same architecture
+    // with the same flat layout*; fed the same dataset, the same params
+    // and the same RNG stream, one step must agree to f32 tolerance.
+    require_artifacts!("mlp");
+    let rt = Runtime::cpu(artifacts_dir()).expect("pjrt client");
+    let art = rt.load("mlp").expect("load mlp");
+    let meta = art.meta.clone();
+    assert_eq!(meta.input_kind, "feature");
+
+    let features = meta.input_shape[0];
+    let classes = meta.classes;
+    // hidden implied by layout: first block is w1 [h, d]
+    let hidden = meta.init_blocks[0].len / features;
+
+    let mut drng = Pcg32::new(77, 0);
+    let data = generators::feature_clusters(&mut drng, 96, features, classes, 5.0);
+
+    let mut xla = XlaEngine::new(art, WorkerData::Labelled(data.clone())).expect("engine");
+    let mut rust = MlpEngine::new(data, hidden, meta.batch);
+    assert_eq!(xla.dim(), rust.dim(), "layouts disagree");
+
+    let mut irng = Pcg32::new(5, 5);
+    let p0 = xla.init_params(&mut irng);
+    let delta: Vec<f32> = {
+        let mut d = vec![0.0f32; p0.len()];
+        Pcg32::new(9, 9).fill_normal(&mut d, 0.01);
+        d
+    };
+
+    // same sampling stream => identical minibatches (both engines draw
+    // batch indices via rng.below(len) in order)
+    let mut r1 = Pcg32::new(1234, 0);
+    let mut r2 = Pcg32::new(1234, 0);
+    let mut p_xla = p0.clone();
+    let mut p_rust = p0.clone();
+    let gamma = 0.05;
+    let l_xla = xla.sgd_step(&mut p_xla, &delta, gamma, 0.0, &mut r1);
+    let l_rust = rust.sgd_step(&mut p_rust, &delta, gamma, 0.0, &mut r2);
+
+    assert!(
+        (l_xla - l_rust).abs() < 1e-3 * l_rust.abs().max(1.0),
+        "losses diverge: xla {l_xla} rust {l_rust}"
+    );
+    let diff = vrl_sgd::tensor::max_abs_diff(&p_xla, &p_rust);
+    assert!(diff < 5e-4, "params diverge after one step: max |Δ| = {diff}");
+}
+
+#[test]
+fn xla_eval_loss_is_deterministic() {
+    require_artifacts!("textcnn");
+    let rt = Runtime::cpu(artifacts_dir()).expect("pjrt client");
+    let spec = TrainSpec { workers: 1, seed: 3, ..TrainSpec::default() };
+    let mut engines =
+        build_xla_engines(&rt, "textcnn", &spec, Partition::Identical, 48).expect("engines");
+    let e = &mut engines[0];
+    let mut rng = Pcg32::new(1, 1);
+    let p = e.init_params(&mut rng);
+    let a = e.eval_loss(&p);
+    let b = e.eval_loss(&p);
+    assert_eq!(a, b);
+    assert!(a.is_finite() && a > 0.0);
+}
+
+#[test]
+fn vrl_beats_local_on_noniid_mlp_artifact() {
+    // The paper's headline, through the full stack: non-identical shards,
+    // k = 10, N = 4 — VRL-SGD's final loss must beat Local SGD's.
+    require_artifacts!("mlp");
+    let rt = Runtime::cpu(artifacts_dir()).expect("pjrt client");
+    let run = |algorithm| {
+        let spec = TrainSpec {
+            algorithm,
+            workers: 4,
+            period: 10,
+            lr: 0.05,
+            steps: 120,
+            seed: 21,
+            ..TrainSpec::default()
+        };
+        let engines = build_xla_engines(&rt, "mlp", &spec, Partition::LabelSharded, 96)
+            .expect("engines");
+        run_with_engines(&spec, engines, &RunOptions { target: None, eval_every: 2 })
+            .expect("train")
+    };
+    let local = run(AlgorithmKind::LocalSgd);
+    let vrl = run(AlgorithmKind::VrlSgd);
+    assert!(vrl.final_loss() < vrl.initial_loss() * 0.9, "VRL did not descend");
+    assert!(
+        vrl.final_loss() < local.final_loss(),
+        "vrl {} should beat local {}",
+        vrl.final_loss(),
+        local.final_loss()
+    );
+    // Σ Δ = 0 invariant holds through the XLA path too
+    assert!(vrl.delta_residual < 1e-2, "residual {}", vrl.delta_residual);
+}
+
+#[test]
+fn transformer_lm_descends_through_stack() {
+    require_artifacts!("transformer");
+    let rt = Runtime::cpu(artifacts_dir()).expect("pjrt client");
+    let spec = TrainSpec {
+        algorithm: AlgorithmKind::VrlSgd,
+        workers: 2,
+        period: 5,
+        lr: 0.05,
+        steps: 40,
+        seed: 13,
+        ..TrainSpec::default()
+    };
+    let engines =
+        build_xla_engines(&rt, "transformer", &spec, Partition::LabelSharded, 256)
+            .expect("engines");
+    let out = run_with_engines(&spec, engines, &RunOptions { target: None, eval_every: 2 })
+        .expect("train");
+    assert!(
+        out.final_loss() < out.initial_loss(),
+        "LM loss should drop: {} -> {}",
+        out.initial_loss(),
+        out.final_loss()
+    );
+}
+
+#[test]
+fn build_engines_rejects_unknown_artifact() {
+    let rt = match Runtime::cpu(artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(_) => return,
+    };
+    let spec = TrainSpec::default();
+    assert!(build_xla_engines(&rt, "nonexistent", &spec, Partition::Identical, 8).is_err());
+}
