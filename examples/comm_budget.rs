@@ -10,7 +10,7 @@
 //! Run: `cargo run --release --example comm_budget`
 
 use vrl_sgd::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
-use vrl_sgd::coordinator::run_training;
+use vrl_sgd::trainer::Trainer;
 
 fn main() {
     let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 192 };
@@ -37,7 +37,11 @@ fn main() {
                 easgd_rho: 0.9 / 8.0,
                 ..TrainSpec::default()
             };
-            run_training(&spec, &task, Partition::LabelSharded).expect("run")
+            Trainer::new(task.clone())
+                .spec(spec)
+                .partition(Partition::LabelSharded)
+                .run()
+                .expect("run")
         };
         let local = run(AlgorithmKind::LocalSgd);
         let vrl = run(AlgorithmKind::VrlSgd);

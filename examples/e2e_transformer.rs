@@ -11,9 +11,9 @@
 //! Run: `cargo run --release --example e2e_transformer`
 
 use vrl_sgd::config::{AlgorithmKind, Partition, TrainSpec};
-use vrl_sgd::coordinator::{run_with_engines, RunOptions};
 use vrl_sgd::metrics::write_report;
 use vrl_sgd::runtime::{build_xla_engines, Runtime};
+use vrl_sgd::trainer::Trainer;
 
 fn main() {
     let dir = std::path::Path::new("artifacts");
@@ -45,9 +45,11 @@ fn main() {
         let engines = build_xla_engines(&rt, "transformer", &spec, Partition::LabelSharded, 512)
             .expect("engines");
         let t0 = std::time::Instant::now();
-        let out =
-            run_with_engines(&spec, engines, &RunOptions { target: None, eval_every: 2 })
-                .expect("train");
+        let out = Trainer::from_engines(engines)
+            .spec(spec)
+            .eval_every(2)
+            .run()
+            .expect("train");
         let wall = t0.elapsed().as_secs_f64();
 
         println!("{}:", out.algorithm);

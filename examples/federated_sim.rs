@@ -9,8 +9,8 @@
 //! Run: `cargo run --release --example federated_sim`
 
 use vrl_sgd::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
-use vrl_sgd::coordinator::run_training;
 use vrl_sgd::data::partition::heterogeneity;
+use vrl_sgd::trainer::Trainer;
 use vrl_sgd::data::{generators, partition_dataset};
 use vrl_sgd::rng::Pcg32;
 
@@ -43,7 +43,10 @@ fn main() {
                 seed: 42,
                 ..TrainSpec::default()
             };
-            run_training(&spec, &task, Partition::Dirichlet(a))
+            Trainer::new(task.clone())
+                .spec(spec)
+                .partition(Partition::Dirichlet(a))
+                .run()
                 .expect("run")
                 .final_loss()
         };

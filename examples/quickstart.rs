@@ -15,17 +15,17 @@ fn main() {
     );
 
     for algorithm in [AlgorithmKind::SSgd, AlgorithmKind::LocalSgd, AlgorithmKind::VrlSgd] {
-        let spec = TrainSpec {
-            algorithm,
-            workers: 8,
-            period: 20,
-            lr: 0.05,
-            batch: 32,
-            steps: 1000,
-            seed: 7,
-            ..TrainSpec::default()
-        };
-        let out = run_training(&spec, &task, Partition::LabelSharded).expect("training failed");
+        let out = Trainer::new(task.clone())
+            .algorithm(algorithm)
+            .partition(Partition::LabelSharded)
+            .workers(8)
+            .period(20)
+            .lr(0.05)
+            .batch(32)
+            .steps(1000)
+            .seed(7)
+            .run()
+            .expect("training failed");
         println!(
             "{:<12} {:>12.4} {:>12.4} {:>8} {:>14}",
             out.algorithm,

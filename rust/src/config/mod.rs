@@ -334,6 +334,67 @@ impl TrainSpec {
     }
 }
 
+/// Optional run-time schedules, parsed from the `[schedule]` TOML table.
+/// Empty by default (constant γ and k — the seed behaviour); the launcher
+/// maps these onto `trainer::StepDecayLr` / `trainer::StagewisePeriod`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ScheduleSpec {
+    /// Multiplicative γ decay applied every `lr_decay_every` sync rounds
+    /// (`schedule.lr_decay_factor`).
+    pub lr_decay_factor: Option<f64>,
+    /// Rounds per decay stage (`schedule.lr_decay_every`).
+    pub lr_decay_every: usize,
+    /// Stagewise communication periods as `(rounds, k)` pairs, parsed
+    /// from `schedule.period_stages = "rounds:k,rounds:k,..."`; the last
+    /// stage's k persists to the end of the run (STL-SGD style).
+    pub period_stages: Vec<(usize, usize)>,
+}
+
+impl ScheduleSpec {
+    /// Parse from a flattened TOML doc (`schedule.*` keys).
+    pub fn from_doc(doc: &TomlDoc) -> Result<ScheduleSpec, String> {
+        let lr_decay_factor = doc.get("schedule.lr_decay_factor").and_then(|v| v.as_f64());
+        let lr_decay_every = doc.usize_or("schedule.lr_decay_every", 0);
+        if lr_decay_factor.is_some() && lr_decay_every == 0 {
+            return Err("schedule.lr_decay_factor needs schedule.lr_decay_every >= 1".into());
+        }
+        if lr_decay_factor.is_none() && lr_decay_every > 0 {
+            return Err("schedule.lr_decay_every needs schedule.lr_decay_factor".into());
+        }
+        let mut period_stages = Vec::new();
+        if let Some(s) = doc.get("schedule.period_stages").and_then(|v| v.as_str()) {
+            for part in s.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let (r, k) = part
+                    .split_once(':')
+                    .ok_or_else(|| format!("bad period stage '{part}' (want rounds:k)"))?;
+                let rounds: usize = r
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad stage round count '{r}'"))?;
+                let k: usize =
+                    k.trim().parse().map_err(|_| format!("bad stage period '{k}'"))?;
+                if k == 0 {
+                    return Err(format!("stage period must be >= 1 in '{part}'"));
+                }
+                if rounds == 0 {
+                    return Err(format!("stage round count must be >= 1 in '{part}'"));
+                }
+                period_stages.push((rounds, k));
+            }
+        }
+        Ok(ScheduleSpec { lr_decay_factor, lr_decay_every, period_stages })
+    }
+
+    /// True when no schedule key was set (constant γ and k).
+    pub fn is_empty(&self) -> bool {
+        self.lr_decay_factor.is_none() && self.period_stages.is_empty()
+    }
+}
+
 /// Top-level launcher config file (TOML): a spec plus a task and partition.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -343,6 +404,8 @@ pub struct RunConfig {
     pub task: TaskKind,
     /// Identical vs non-identical data distribution.
     pub partition: Partition,
+    /// Optional γ / period schedules.
+    pub schedule: ScheduleSpec,
     /// Where to write CSV output (optional).
     pub output: Option<String>,
 }
@@ -360,8 +423,9 @@ impl RunConfig {
             "dirichlet" => Partition::Dirichlet(doc.f64_or("partition_alpha", 0.5)),
             other => return Err(format!("unknown partition '{other}'")),
         };
+        let schedule = ScheduleSpec::from_doc(&doc)?;
         let output = doc.get("output").and_then(|v| v.as_str()).map(|s| s.to_string());
-        Ok(RunConfig { spec, task, partition, output })
+        Ok(RunConfig { spec, task, partition, schedule, output })
     }
 
     /// Load a TOML file.
@@ -477,6 +541,58 @@ mod tests {
         // artifact without a name
         assert!(RunConfig::from_toml(
             "partition = \"identical\"\n[task]\nkind = \"artifact\"\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn schedule_table_parses() {
+        let cfg = RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[schedule]\n\
+             lr_decay_factor = 0.5\nlr_decay_every = 10\nperiod_stages = \"10:4, 20:8\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.schedule.lr_decay_factor, Some(0.5));
+        assert_eq!(cfg.schedule.lr_decay_every, 10);
+        assert_eq!(cfg.schedule.period_stages, vec![(10, 4), (20, 8)]);
+        assert!(!cfg.schedule.is_empty());
+    }
+
+    #[test]
+    fn schedule_defaults_empty_and_rejects_bad_stages() {
+        let cfg = RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n",
+        )
+        .unwrap();
+        assert!(cfg.schedule.is_empty());
+        // decay factor without a cadence
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[schedule]\n\
+             lr_decay_factor = 0.5\n"
+        )
+        .is_err());
+        // malformed stage string
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[schedule]\n\
+             period_stages = \"10x4\"\n"
+        )
+        .is_err());
+        // zero period
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[schedule]\n\
+             period_stages = \"10:0\"\n"
+        )
+        .is_err());
+        // zero-round stage (would silently vanish downstream)
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[schedule]\n\
+             period_stages = \"0:8\"\n"
+        )
+        .is_err());
+        // decay cadence without a factor
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[schedule]\n\
+             lr_decay_every = 10\n"
         )
         .is_err());
     }

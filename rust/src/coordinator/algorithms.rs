@@ -1,9 +1,11 @@
 //! The distributed algorithms: S-SGD, Local SGD, VRL-SGD (±warm-up),
 //! EASGD — each as an implementation of [`Algorithm`].
 //!
-//! The generic training loop (in [`super`]) runs, for each round `r`,
-//! `period(r)` lockstep local iterations on every worker (each iteration
-//! is `x_i ← x_i − γ(∇f_i(x_i;ξ) − Δ_i)`, with `Δ_i ≡ 0` unless the
+//! The generic training loop (in [`crate::trainer`]) runs, for each round
+//! `r`, `period(r, base)` lockstep local iterations on every worker —
+//! `base` comes from the session's
+//! [`crate::trainer::PeriodSchedule`] — (each iteration is
+//! `x_i ← x_i − γ(∇f_i(x_i;ξ) − Δ_i)`, with `Δ_i ≡ 0` unless the
 //! algorithm populates it), then calls [`Algorithm::sync`]. Everything
 //! that distinguishes the methods lives in `period` and `sync`.
 
@@ -38,9 +40,11 @@ pub trait Algorithm: Send {
     /// Display name.
     fn name(&self) -> &'static str;
 
-    /// Number of local steps in round `round` (S-SGD: always 1;
-    /// VRL-SGD-W: 1 for round 0, k afterwards).
-    fn period(&self, round: usize) -> usize;
+    /// Number of local steps in round `round`, given the `base` period
+    /// the session's period schedule proposes. Most algorithms take
+    /// `base` as-is; S-SGD always returns 1 and VRL-SGD-W returns 1 for
+    /// round 0 (the warm-up step).
+    fn period(&self, round: usize, base: usize) -> usize;
 
     /// Synchronize the workers after `elapsed` local steps were taken in
     /// this round. `lr` is the learning rate γ used during the round
@@ -95,7 +99,7 @@ impl Algorithm for SSgd {
         "s-sgd"
     }
 
-    fn period(&self, _round: usize) -> usize {
+    fn period(&self, _round: usize, _base: usize) -> usize {
         1
     }
 
@@ -113,7 +117,7 @@ impl Algorithm for SSgd {
 
 /// Local SGD (Stich 2019): k local steps, then model averaging.
 pub struct LocalSgd {
-    /// Communication period k.
+    /// Default communication period k (used when no schedule overrides).
     pub k: usize,
 }
 
@@ -122,8 +126,8 @@ impl Algorithm for LocalSgd {
         "local-sgd"
     }
 
-    fn period(&self, _round: usize) -> usize {
-        self.k
+    fn period(&self, _round: usize, base: usize) -> usize {
+        base
     }
 
     fn sync(
@@ -143,7 +147,7 @@ impl Algorithm for LocalSgd {
 /// `Δ_i = ∇f_i(x̂⁰;ξ) − (1/N) Σ_j ∇f_j(x̂⁰;ξ)` and zeroes the `C`
 /// constant of Theorem 5.1.
 pub struct VrlSgd {
-    /// Communication period k.
+    /// Default communication period k (used when no schedule overrides).
     pub k: usize,
     /// Run the first round with period 1.
     pub warmup: bool,
@@ -158,11 +162,11 @@ impl Algorithm for VrlSgd {
         }
     }
 
-    fn period(&self, round: usize) -> usize {
+    fn period(&self, round: usize, base: usize) -> usize {
         if self.warmup && round == 0 {
             1
         } else {
-            self.k
+            base
         }
     }
 
@@ -200,7 +204,7 @@ impl Algorithm for VrlSgd {
 /// Stability needs `N·ρ ≤ 1`; the default `ρ = 0.9/N` (Zhang et al.'s
 /// β = Nρ ≈ 0.9 per communication event) satisfies it.
 pub struct Easgd {
-    /// Communication period k.
+    /// Default communication period k (used when no schedule overrides).
     pub k: usize,
     /// Moving rate ρ.
     pub rho: f32,
@@ -213,8 +217,8 @@ impl Algorithm for Easgd {
         "easgd"
     }
 
-    fn period(&self, _round: usize) -> usize {
-        self.k
+    fn period(&self, _round: usize, base: usize) -> usize {
+        base
     }
 
     fn sync(
@@ -271,8 +275,8 @@ impl Algorithm for MomentumLocalSgd {
         "mom-local-sgd"
     }
 
-    fn period(&self, _round: usize) -> usize {
-        self.k
+    fn period(&self, _round: usize, base: usize) -> usize {
+        base
     }
 
     fn wants_post_step(&self) -> bool {
@@ -347,8 +351,8 @@ impl Algorithm for CocodSgd {
         "cocod-sgd"
     }
 
-    fn period(&self, _round: usize) -> usize {
-        self.k
+    fn period(&self, _round: usize, base: usize) -> usize {
+        base
     }
 
     fn sync(
@@ -452,19 +456,21 @@ mod tests {
     }
 
     #[test]
-    fn warmup_period_is_one_then_k() {
+    fn warmup_period_is_one_then_base() {
         let a = VrlSgd { k: 20, warmup: true };
-        assert_eq!(a.period(0), 1);
-        assert_eq!(a.period(1), 20);
+        assert_eq!(a.period(0, 20), 1);
+        assert_eq!(a.period(1, 20), 20);
         let b = VrlSgd { k: 20, warmup: false };
-        assert_eq!(b.period(0), 20);
+        assert_eq!(b.period(0, 20), 20);
+        // a stagewise schedule's base flows through untouched after warm-up
+        assert_eq!(a.period(3, 7), 7);
     }
 
     #[test]
     fn ssgd_period_is_always_one() {
         let a = SSgd;
-        assert_eq!(a.period(0), 1);
-        assert_eq!(a.period(99), 1);
+        assert_eq!(a.period(0, 20), 1);
+        assert_eq!(a.period(99, 5), 1);
     }
 
     #[test]

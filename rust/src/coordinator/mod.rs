@@ -1,12 +1,17 @@
 //! The training coordinator — the paper's system contribution.
 //!
-//! [`run_training`] (pure-rust tasks) and [`run_with_engines`] (any
-//! engines, including [`crate::runtime::XlaEngine`]) drive N workers in
-//! lockstep through the periodic-averaging family of algorithms:
+//! The generic driver lives in [`crate::trainer`] ([`crate::trainer::Trainer`]
+//! builder → [`crate::trainer::Session`]); this module keeps the algorithm
+//! implementations, the [`TrainOutput`] report, and thin **deprecated**
+//! shims for the seed's two free functions ([`run_training`] /
+//! [`run_with_engines`]), which delegate to the builder and produce
+//! bit-identical output (verified by `tests/trainer_api.rs`).
+//!
+//! The loop the driver runs is the paper's synchronous model:
 //!
 //! ```text
-//! round r:   p = algo.period(r) local steps on every worker
-//!            x_i ← x_i − γ (∇f_i(x_i; ξ) − Δ_i)        (k times)
+//! round r:   p = algo.period(r, schedule.period(r)) local steps
+//!            x_i ← x_i − γ_r (∇f_i(x_i; ξ) − Δ_i)        (p times)
 //! sync:      algo.sync(...)  — averaging / Δ update / elastic pull
 //! metrics:   global loss at x̂, consensus variance, comm counters
 //! ```
@@ -20,15 +25,18 @@ pub mod algorithms;
 
 pub use algorithms::{make_algorithm, Algorithm, WorkerState};
 
-use crate::comm::{AllReduceAlgo, Cluster, CommStats};
+use crate::comm::CommStats;
 use crate::config::{Partition, TaskKind, TrainSpec};
-use crate::engine::{build_pure_engines, StepEngine};
-use crate::metrics::{DenseRow, History, SyncRow};
-use crate::rng::Pcg32;
-use crate::sim::{SimTime, TimeModel};
-use crate::tensor;
+use crate::engine::StepEngine;
+use crate::metrics::History;
+use crate::sim::SimTime;
+use crate::trainer::Trainer;
 
 /// Extra knobs for a run that are not part of the algorithm spec.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the trainer::Trainer builder (`.target(..)` / `.eval_every(..)`)"
+)]
 #[derive(Debug, Clone, Default)]
 pub struct RunOptions {
     /// Reference point for dense-mode distance tracking (Appendix E plots
@@ -70,166 +78,52 @@ impl TrainOutput {
     }
 }
 
-/// Run a pure-rust task end to end. Artifact tasks must go through
-/// `runtime::build_xla_engines` + [`run_with_engines`].
+/// Run a pure-rust task end to end.
+///
+/// Deprecated shim over [`crate::trainer::Trainer`]; kept for downstream
+/// compatibility. Artifact tasks must go through
+/// `runtime::build_xla_engines` + [`run_with_engines`] (or
+/// `Trainer::from_engines`).
+#[deprecated(
+    since = "0.2.0",
+    note = "use trainer::Trainer::new(task).spec(spec).partition(partition).run()"
+)]
 pub fn run_training(
     spec: &TrainSpec,
     task: &TaskKind,
     partition: Partition,
 ) -> Result<TrainOutput, String> {
-    spec.validate()?;
-    let (engines, _) = build_pure_engines(task, partition, spec)?;
-    run_with_engines(spec, engines, &RunOptions::default())
+    Trainer::new(task.clone()).spec(spec.clone()).partition(partition).run()
 }
 
 /// Run with explicit per-worker engines (one per worker).
+///
+/// Deprecated shim over [`crate::trainer::Trainer::from_engines`]; kept
+/// for downstream compatibility.
+#[deprecated(
+    since = "0.2.0",
+    note = "use trainer::Trainer::from_engines(engines).spec(spec).run()"
+)]
+#[allow(deprecated)]
 pub fn run_with_engines(
     spec: &TrainSpec,
-    mut engines: Vec<Box<dyn StepEngine>>,
+    engines: Vec<Box<dyn StepEngine>>,
     opts: &RunOptions,
 ) -> Result<TrainOutput, String> {
-    spec.validate()?;
-    let n = spec.workers;
-    if engines.len() != n {
-        return Err(format!("{} engines for {} workers", engines.len(), n));
+    let mut t = Trainer::from_engines(engines)
+        .spec(spec.clone())
+        .eval_every(opts.eval_every);
+    if let Some(target) = &opts.target {
+        t = t.target(target.clone());
     }
-    let dim = engines[0].dim();
-    if engines.iter().any(|e| e.dim() != dim) {
-        return Err("engines disagree on parameter dimension".to_string());
-    }
-    if let Some(t) = &opts.target {
-        if t.len() != dim {
-            return Err(format!("target dim {} != param dim {dim}", t.len()));
-        }
-    }
-    let eval_every = opts.eval_every.max(1);
-
-    // Shared initialization: all workers start at the same x^0
-    // (Algorithm 1 line 1), drawn from a dedicated stream.
-    let root = Pcg32::new(spec.seed, 0x5EED);
-    let mut init_rng = root.split(u64::MAX);
-    let params0 = engines[0].init_params(&mut init_rng);
-    debug_assert_eq!(params0.len(), dim);
-
-    let mut workers: Vec<WorkerState> =
-        (0..n).map(|i| WorkerState::new(i, &params0, &root)).collect();
-    let mut algo = make_algorithm(spec, &params0);
-    let mut cluster = Cluster::new(n, &spec.network, AllReduceAlgo::Ring);
-    let time_model = TimeModel::from_dims(dim, spec.batch);
-    let mut sim_time = SimTime::default();
-
-    let initial_loss = global_loss(&mut engines, &params0);
-    let mut history = History::new(initial_loss);
-
-    let mut step = 0usize;
-    let mut round = 0usize;
-    let mut mean_buf = vec![0.0f32; dim];
-    // pre-step snapshot buffer, only used by momentum-style algorithms
-    let wants_post = algo.wants_post_step();
-    let mut before_buf = if wants_post { vec![0.0f32; dim] } else { Vec::new() };
-
-    while step < spec.steps {
-        let p = algo.period(round).min(spec.steps - step);
-        // lockstep local iterations
-        for _ in 0..p {
-            let mut loss_acc = 0.0f64;
-            for (i, (w, e)) in workers.iter_mut().zip(engines.iter_mut()).enumerate() {
-                if wants_post {
-                    before_buf.copy_from_slice(&w.params);
-                }
-                loss_acc += e.sgd_step(
-                    &mut w.params,
-                    &w.delta,
-                    spec.lr,
-                    spec.weight_decay,
-                    &mut w.rng,
-                ) as f64;
-                if wants_post {
-                    algo.post_step(i, &mut w.params, &before_buf, spec.lr);
-                }
-            }
-            step += 1;
-            if spec.dense_metrics {
-                let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
-                let var = tensor::worker_variance(&rows);
-                tensor::mean_rows(&mut mean_buf, &rows);
-                let dist = opts.target.as_ref().map(|t| tensor::dist2_sq(&mean_buf, t));
-                history.dense_rows.push(DenseRow {
-                    step,
-                    mean_loss: loss_acc / n as f64,
-                    worker_variance: var,
-                    dist_sq_to_target: dist,
-                });
-            }
-        }
-        sim_time.charge_steps(p, &time_model);
-
-        // consensus gap just before averaging
-        let variance = {
-            let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
-            tensor::worker_variance(&rows)
-        };
-
-        algo.sync(round, p, spec.lr, &mut workers, &mut cluster);
-        let comm = cluster.stats();
-        sim_time.comm_s = comm.sim_time_s;
-
-        // global train loss at the averaged model
-        let train_loss = if round % eval_every == 0 || step >= spec.steps {
-            let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
-            tensor::mean_rows(&mut mean_buf, &rows);
-            global_loss(&mut engines, &mean_buf)
-        } else {
-            history.final_loss()
-        };
-
-        history.sync_rows.push(SyncRow {
-            round,
-            step,
-            train_loss,
-            worker_variance: variance,
-            comm_rounds: comm.rounds,
-            comm_bytes: comm.bytes,
-            sim_time_s: sim_time.total(),
-        });
-        round += 1;
-    }
-
-    let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
-    tensor::mean_rows(&mut mean_buf, &rows);
-    // Σ_i Δ_i = 0 invariant residual (max abs coordinate of the sum)
-    let mut delta_sum = vec![0.0f32; dim];
-    for w in &workers {
-        tensor::add_assign(&mut delta_sum, &w.delta);
-    }
-    let delta_residual = delta_sum.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    Ok(TrainOutput {
-        history,
-        comm: cluster.stats(),
-        sim_time,
-        final_params: mean_buf,
-        algorithm: algo.name(),
-        delta_residual,
-    })
-}
-
-/// Shard-size-weighted global loss `f(x) = (1/n_total) Σ_i n_i f_i(x)`.
-fn global_loss(engines: &mut [Box<dyn StepEngine>], params: &[f32]) -> f64 {
-    let total: usize = engines.iter().map(|e| e.shard_len()).sum();
-    if total == 0 {
-        return 0.0;
-    }
-    engines
-        .iter_mut()
-        .map(|e| e.eval_loss(params) * e.shard_len() as f64)
-        .sum::<f64>()
-        / total as f64
+    t.run()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::AlgorithmKind;
+    use crate::engine::build_pure_engines;
 
     fn base_spec(algorithm: AlgorithmKind) -> TrainSpec {
         TrainSpec {
@@ -248,12 +142,21 @@ mod tests {
         TaskKind::SoftmaxSynthetic { classes: 4, features: 8, samples_per_worker: 64 }
     }
 
+    /// Builder-path equivalent of the old `run_training` free function.
+    fn run(spec: &TrainSpec, task: &TaskKind, partition: Partition) -> TrainOutput {
+        Trainer::new(task.clone())
+            .spec(spec.clone())
+            .partition(partition)
+            .run()
+            .unwrap()
+    }
+
     #[test]
     fn every_algorithm_descends_on_identical_data() {
         for kind in AlgorithmKind::ALL {
             let mut spec = base_spec(kind);
             spec.easgd_rho = 0.9 / spec.workers as f32;
-            let out = run_training(&spec, &softmax_task(), Partition::Identical).unwrap();
+            let out = run(&spec, &softmax_task(), Partition::Identical);
             assert!(
                 out.final_loss() < out.initial_loss() * 0.7,
                 "{kind:?}: {} -> {}",
@@ -272,8 +175,8 @@ mod tests {
         // from `−γg`, so we assert agreement up to accumulated rounding.
         let spec_vrl = TrainSpec { period: 1, ..base_spec(AlgorithmKind::VrlSgd) };
         let spec_ssgd = TrainSpec { period: 1, ..base_spec(AlgorithmKind::SSgd) };
-        let a = run_training(&spec_vrl, &softmax_task(), Partition::LabelSharded).unwrap();
-        let b = run_training(&spec_ssgd, &softmax_task(), Partition::LabelSharded).unwrap();
+        let a = run(&spec_vrl, &softmax_task(), Partition::LabelSharded);
+        let b = run(&spec_ssgd, &softmax_task(), Partition::LabelSharded);
         let diff = crate::tensor::max_abs_diff(&a.final_params, &b.final_params);
         let norm = crate::tensor::norm2(&b.final_params);
         assert!(diff / norm < 1e-3, "relative drift {diff}/{norm}");
@@ -288,9 +191,9 @@ mod tests {
         // Local SGD and S-SGD all reduce to sequential SGD.
         let mk = |kind| TrainSpec { workers: 1, ..base_spec(kind) };
         let t = softmax_task();
-        let a = run_training(&mk(AlgorithmKind::VrlSgd), &t, Partition::Identical).unwrap();
-        let b = run_training(&mk(AlgorithmKind::LocalSgd), &t, Partition::Identical).unwrap();
-        let c = run_training(&mk(AlgorithmKind::SSgd), &t, Partition::Identical).unwrap();
+        let a = run(&mk(AlgorithmKind::VrlSgd), &t, Partition::Identical);
+        let b = run(&mk(AlgorithmKind::LocalSgd), &t, Partition::Identical);
+        let c = run(&mk(AlgorithmKind::SSgd), &t, Partition::Identical);
         assert_eq!(a.final_params, b.final_params);
         assert_eq!(a.final_params, c.final_params);
     }
@@ -298,8 +201,8 @@ mod tests {
     #[test]
     fn deterministic_replay() {
         let spec = base_spec(AlgorithmKind::VrlSgd);
-        let a = run_training(&spec, &softmax_task(), Partition::LabelSharded).unwrap();
-        let b = run_training(&spec, &softmax_task(), Partition::LabelSharded).unwrap();
+        let a = run(&spec, &softmax_task(), Partition::LabelSharded);
+        let b = run(&spec, &softmax_task(), Partition::LabelSharded);
         assert_eq!(a.final_params, b.final_params);
         assert_eq!(a.history, b.history);
     }
@@ -308,8 +211,8 @@ mod tests {
     fn seed_changes_trajectory() {
         let spec1 = base_spec(AlgorithmKind::VrlSgd);
         let spec2 = TrainSpec { seed: 12, ..spec1.clone() };
-        let a = run_training(&spec1, &softmax_task(), Partition::LabelSharded).unwrap();
-        let b = run_training(&spec2, &softmax_task(), Partition::LabelSharded).unwrap();
+        let a = run(&spec1, &softmax_task(), Partition::LabelSharded);
+        let b = run(&spec2, &softmax_task(), Partition::LabelSharded);
         assert_ne!(a.final_params, b.final_params);
     }
 
@@ -318,8 +221,8 @@ mod tests {
         let t = softmax_task();
         let k1 = TrainSpec { period: 1, ..base_spec(AlgorithmKind::LocalSgd) };
         let k10 = TrainSpec { period: 10, ..base_spec(AlgorithmKind::LocalSgd) };
-        let a = run_training(&k1, &t, Partition::Identical).unwrap();
-        let b = run_training(&k10, &t, Partition::Identical).unwrap();
+        let a = run(&k1, &t, Partition::Identical);
+        let b = run(&k10, &t, Partition::Identical);
         assert_eq!(a.comm.rounds, 200);
         assert_eq!(b.comm.rounds, 20);
         assert!(a.comm.bytes > b.comm.bytes * 9);
@@ -340,10 +243,8 @@ mod tests {
             batch: 1,
             ..TrainSpec::default()
         };
-        let vrl =
-            run_training(&mk(AlgorithmKind::VrlSgd), &task, Partition::LabelSharded).unwrap();
-        let local =
-            run_training(&mk(AlgorithmKind::LocalSgd), &task, Partition::LabelSharded).unwrap();
+        let vrl = run(&mk(AlgorithmKind::VrlSgd), &task, Partition::LabelSharded);
+        let local = run(&mk(AlgorithmKind::LocalSgd), &task, Partition::LabelSharded);
         // global min is x*=0: judge by |x̂|
         let x_vrl = vrl.final_params[0].abs();
         let x_local = local.final_params[0].abs();
@@ -354,20 +255,18 @@ mod tests {
     #[test]
     fn dense_metrics_track_target_distance() {
         let task = TaskKind::Quadratic { b: 2.0, noise: 0.0 };
-        let spec = TrainSpec {
-            algorithm: AlgorithmKind::VrlSgd,
-            workers: 2,
-            period: 5,
-            lr: 0.05,
-            steps: 400,
-            batch: 1,
-            dense_metrics: true,
-            ..TrainSpec::default()
-        };
-        let (engines, _) =
-            crate::engine::build_pure_engines(&task, Partition::LabelSharded, &spec).unwrap();
-        let opts = RunOptions { target: Some(vec![0.0]), eval_every: 1 };
-        let out = run_with_engines(&spec, engines, &opts).unwrap();
+        let out = Trainer::new(task)
+            .algorithm(AlgorithmKind::VrlSgd)
+            .workers(2)
+            .period(5)
+            .lr(0.05)
+            .steps(400)
+            .batch(1)
+            .dense_metrics(true)
+            .partition(Partition::LabelSharded)
+            .target(vec![0.0])
+            .run()
+            .unwrap();
         assert_eq!(out.history.dense_rows.len(), 400);
         let first = out.history.dense_rows[10].dist_sq_to_target.unwrap();
         let last = out.history.dense_rows.last().unwrap().dist_sq_to_target.unwrap();
@@ -377,24 +276,25 @@ mod tests {
     #[test]
     fn run_rejects_mismatched_engines() {
         let spec = base_spec(AlgorithmKind::SSgd);
-        let (engines, _) = crate::engine::build_pure_engines(
+        let (engines, _) = build_pure_engines(
             &softmax_task(),
             Partition::Identical,
             &TrainSpec { workers: 2, ..spec.clone() },
         )
         .unwrap();
         // 2 engines for 4 workers
-        assert!(run_with_engines(&spec, engines, &RunOptions::default()).is_err());
+        assert!(Trainer::from_engines(engines).spec(spec).build().is_err());
     }
 
     #[test]
     fn eval_every_reduces_evaluations_but_keeps_last() {
         let spec = TrainSpec { steps: 50, period: 5, ..base_spec(AlgorithmKind::LocalSgd) };
-        let (engines, _) =
-            crate::engine::build_pure_engines(&softmax_task(), Partition::Identical, &spec)
-                .unwrap();
-        let opts = RunOptions { target: None, eval_every: 4 };
-        let out = run_with_engines(&spec, engines, &opts).unwrap();
+        let out = Trainer::new(softmax_task())
+            .spec(spec)
+            .partition(Partition::Identical)
+            .eval_every(4)
+            .run()
+            .unwrap();
         assert_eq!(out.history.sync_rows.len(), 10);
         // last row is always a real evaluation
         let last = out.history.sync_rows.last().unwrap();
@@ -404,9 +304,22 @@ mod tests {
     #[test]
     fn partial_final_round_respects_step_budget() {
         let spec = TrainSpec { steps: 23, period: 10, ..base_spec(AlgorithmKind::LocalSgd) };
-        let out = run_training(&spec, &softmax_task(), Partition::Identical).unwrap();
+        let out = run(&spec, &softmax_task(), Partition::Identical);
         let last = out.history.sync_rows.last().unwrap();
         assert_eq!(last.step, 23);
         assert_eq!(out.history.sync_rows.len(), 3); // 10 + 10 + 3
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_run() {
+        let spec = TrainSpec { steps: 40, ..base_spec(AlgorithmKind::VrlSgd) };
+        let out = run_training(&spec, &softmax_task(), Partition::LabelSharded).unwrap();
+        assert!(out.final_loss().is_finite());
+        let (engines, _) =
+            build_pure_engines(&softmax_task(), Partition::LabelSharded, &spec).unwrap();
+        let out2 = run_with_engines(&spec, engines, &RunOptions::default()).unwrap();
+        assert_eq!(out.final_params, out2.final_params);
+        assert_eq!(out.history, out2.history);
     }
 }

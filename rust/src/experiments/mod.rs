@@ -5,8 +5,8 @@
 //! (`vrl-sgd fig1` etc.), the criterion benches and `EXPERIMENTS.md`.
 
 use crate::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
-use crate::coordinator::{run_training, run_with_engines, RunOptions, TrainOutput};
-use crate::engine::build_pure_engines;
+use crate::coordinator::TrainOutput;
+use crate::trainer::Trainer;
 
 /// Experiment scale: `Smoke` finishes in seconds (CI / benches), `Paper`
 /// uses dimensions close to the paper's tasks (minutes).
@@ -159,7 +159,11 @@ pub fn run_curves(
                 easgd_rho: 0.9 / base.workers as f32,
                 ..base.clone()
             };
-            let out = run_training(&spec, &task, partition).expect("run failed");
+            let out = Trainer::new(task.clone())
+                .spec(spec)
+                .partition(partition)
+                .run()
+                .expect("run failed");
             runs.push((name.clone(), algo.name().to_string(), out));
         }
     }
@@ -225,10 +229,12 @@ pub fn quadratic_appendix(steps: usize) -> Vec<QuadCell> {
                     seed: 13,
                     ..TrainSpec::default()
                 };
-                let (engines, _) =
-                    build_pure_engines(&task, Partition::LabelSharded, &spec).unwrap();
-                let opts = RunOptions { target: Some(vec![0.0]), eval_every: 1 };
-                let out = run_with_engines(&spec, engines, &opts).unwrap();
+                let out = Trainer::new(task)
+                    .spec(spec)
+                    .partition(Partition::LabelSharded)
+                    .target(vec![0.0])
+                    .run()
+                    .unwrap();
                 cells.push(QuadCell { b, k, algorithm: algo.name().to_string(), out });
             }
         }
@@ -348,7 +354,11 @@ pub fn table1(scale: Scale) -> Table1Result {
                 seed,
                 ..TrainSpec::default()
             };
-            let out = run_training(&spec, &task, Partition::LabelSharded).unwrap();
+            let out = Trainer::new(task.clone())
+                .spec(spec)
+                .partition(Partition::LabelSharded)
+                .run()
+                .unwrap();
             // average excess over trailing quarter of rounds (reduce noise)
             let rows = &out.history.sync_rows;
             let tail = rows.len().div_ceil(4).max(1);
@@ -458,9 +468,14 @@ pub fn speedup(scale: Scale) -> (Vec<(usize, usize)>, f64) {
             seed: 21,
             ..TrainSpec::default()
         };
-        let out = run_training(&spec, &task, Partition::LabelSharded).unwrap();
+        let steps_budget = spec.steps;
+        let out = Trainer::new(task.clone())
+            .spec(spec)
+            .partition(Partition::LabelSharded)
+            .run()
+            .unwrap();
         // threshold: excess loss 0.05 over f* = 0
-        let steps = out.history.steps_to_loss(0.05).unwrap_or(spec.steps);
+        let steps = out.history.steps_to_loss(0.05).unwrap_or(steps_budget);
         pts.push((n, steps));
     }
     let xs: Vec<f64> = pts.iter().map(|&(n, _)| n as f64).collect();
@@ -506,9 +521,12 @@ pub fn warmup_study(probe: usize) -> Vec<WarmupRow> {
                 seed: 5,
                 ..TrainSpec::default()
             };
-            let (engines, _) = build_pure_engines(&task, Partition::LabelSharded, &spec).unwrap();
-            let opts = RunOptions { target: Some(vec![0.0]), eval_every: 1 };
-            let out = run_with_engines(&spec, engines, &opts).unwrap();
+            let out = Trainer::new(task)
+                .spec(spec)
+                .partition(Partition::LabelSharded)
+                .target(vec![0.0])
+                .run()
+                .unwrap();
             // skip iteration 1: the very first local step happens before
             // any sync on both variants and its spread (∝ γ²ζ₀²) is
             // identical for plain and warm-up.
@@ -648,7 +666,11 @@ mod tests {
                 seed: 19,
                 ..TrainSpec::default()
             };
-            run_training(&spec, &task, Partition::LabelSharded).unwrap()
+            Trainer::new(task.clone())
+                .spec(spec)
+                .partition(Partition::LabelSharded)
+                .run()
+                .unwrap()
         };
         let small = run(1);
         let big = run(16);
@@ -690,7 +712,11 @@ mod tests {
                 seed: 4,
                 ..TrainSpec::default()
             };
-            run_training(&spec, &task, Partition::LabelSharded).unwrap()
+            Trainer::new(task.clone())
+                .spec(spec)
+                .partition(Partition::LabelSharded)
+                .run()
+                .unwrap()
         };
         let k1 = run(1);
         let k20 = run(20);

@@ -3,13 +3,18 @@
 //! Production-grade reproduction of Liang et al. (2019). The crate is the
 //! **Layer-3 coordinator** of a three-layer rust + JAX + Pallas stack:
 //!
+//! * [`trainer`] — the public entry point: the [`trainer::Trainer`]
+//!   builder composes an algorithm, schedules ([`trainer::LrSchedule`],
+//!   [`trainer::PeriodSchedule`]), observers, early stopping and
+//!   streaming metric sinks into a [`trainer::Session`] that drives any
+//!   [`engine::StepEngine`].
 //! * [`coordinator`] — the paper's contribution: `S-SGD`, `Local SGD`,
-//!   `VRL-SGD` (+ warm-up variant) and `EASGD` behind one [`coordinator::Algorithm`]
-//!   trait, driven by a periodic-averaging scheduler over a worker pool.
+//!   `VRL-SGD` (+ warm-up variant), `EASGD`, momentum Local SGD and
+//!   CoCoD-SGD behind one [`coordinator::Algorithm`] trait.
 //! * [`engine`] — the train-step abstraction ([`engine::StepEngine`]):
 //!   either pure-rust analytic engines (quadratic / linreg / softmax / MLP)
 //!   or [`runtime::XlaEngine`], which executes JAX/Pallas models AOT-lowered
-//!   to HLO and loaded through the PJRT CPU client (`xla` crate).
+//!   to HLO and loaded through the PJRT CPU client (`xla` feature).
 //! * [`comm`] — simulated cluster network with latency/bandwidth cost model,
 //!   allreduce implementations and exact byte/round accounting.
 //! * [`data`] — synthetic datasets matching the paper's three tasks, plus
@@ -23,18 +28,40 @@
 //! ```no_run
 //! use vrl_sgd::prelude::*;
 //!
-//! let spec = TrainSpec {
-//!     algorithm: AlgorithmKind::VrlSgd,
-//!     workers: 4,
-//!     period: 8,
-//!     lr: 0.05,
-//!     steps: 200,
-//!     seed: 7,
-//!     ..TrainSpec::default()
-//! };
 //! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
-//! let out = run_training(&spec, &task, Partition::LabelSharded).unwrap();
+//! let out = Trainer::new(task)
+//!     .algorithm(AlgorithmKind::VrlSgd)
+//!     .partition(Partition::LabelSharded)
+//!     .workers(4)
+//!     .period(8)
+//!     .lr(0.05)
+//!     .steps(200)
+//!     .seed(7)
+//!     .run()
+//!     .unwrap();
 //! assert!(out.final_loss() < out.initial_loss());
+//! ```
+//!
+//! Schedules, observers and early stopping compose on the same builder —
+//! e.g. STL-SGD-style stagewise periods with step-decayed γ, stopping at
+//! a target loss while streaming metrics to disk:
+//!
+//! ```no_run
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
+//! let out = Trainer::new(task)
+//!     .algorithm(AlgorithmKind::VrlSgd)
+//!     .partition(Partition::LabelSharded)
+//!     .workers(8)
+//!     .steps(4000)
+//!     .lr_schedule(StepDecayLr::new(0.05, 0.5, 50))
+//!     .period_schedule(StagewisePeriod::doubling(4, 25, 64))
+//!     .early_stop(StopAtLoss(0.05))
+//!     .sink(CsvSink::file("reports/run.csv").unwrap())
+//!     .run()
+//!     .unwrap();
+//! println!("{} rounds, {} bytes", out.comm.rounds, out.comm.bytes);
 //! ```
 
 pub mod analysis;
@@ -51,12 +78,20 @@ pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod tensor;
+pub mod trainer;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
-    pub use crate::coordinator::{run_training, Algorithm, TrainOutput};
+    #[allow(deprecated)]
+    pub use crate::coordinator::run_training;
+    pub use crate::coordinator::{Algorithm, TrainOutput};
     pub use crate::data::Dataset;
     pub use crate::engine::StepEngine;
     pub use crate::metrics::History;
+    pub use crate::trainer::{
+        ConsensusTracker, ConstLr, ConstPeriod, CosineLr, CsvSink, EarlyStop, FnObserver,
+        LrSchedule, MetricSink, Patience, PeriodSchedule, RoundInfo, RoundObserver, Session,
+        StagewisePeriod, StepDecayLr, StopAtLoss, SyncInfo, Trainer,
+    };
 }

@@ -16,9 +16,9 @@
 //! carries no clap.)
 
 use vrl_sgd::config::{Partition, RunConfig, TrainSpec};
-use vrl_sgd::coordinator::{run_with_engines, RunOptions};
 use vrl_sgd::experiments::{self, Scale};
 use vrl_sgd::metrics::write_report;
+use vrl_sgd::trainer::Trainer;
 
 const USAGE: &str = "\
 vrl-sgd — Variance Reduced Local SGD reproduction launcher
@@ -26,7 +26,9 @@ vrl-sgd — Variance Reduced Local SGD reproduction launcher
 USAGE: vrl-sgd <COMMAND> [OPTIONS]
 
 COMMANDS:
-  train --config <file.toml>          run one training job
+  train --config <file.toml>          run one training job (the optional
+                                      [schedule] table maps to lr decay /
+                                      stagewise periods)
   fig1|fig2|fig5|fig6 [--paper] [--out <csv>]
                                       epoch-loss figures (1/2: paper k;
                                       5: k/2; 6: 2k)
@@ -138,7 +140,7 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
             let cfg = RunConfig::load(config)?;
             // artifact tasks go through the PJRT runtime; everything else
             // runs on the pure-rust engines
-            let out = match &cfg.task {
+            let trainer = match &cfg.task {
                 vrl_sgd::config::TaskKind::Artifact { name, samples_per_worker } => {
                     let rt = vrl_sgd::runtime::Runtime::cpu("artifacts")?;
                     let engines = vrl_sgd::runtime::build_xla_engines(
@@ -149,10 +151,14 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
                         *samples_per_worker,
                     )
                     .map_err(|e| format!("{e} — did you run `make artifacts`?"))?;
-                    run_with_engines(&cfg.spec, engines, &RunOptions::default())?
+                    Trainer::from_engines(engines).spec(cfg.spec.clone())
                 }
-                _ => vrl_sgd::coordinator::run_training(&cfg.spec, &cfg.task, cfg.partition)?,
+                _ => Trainer::new(cfg.task.clone())
+                    .spec(cfg.spec.clone())
+                    .partition(cfg.partition),
             };
+            // optional [schedule] table -> pluggable schedules
+            let out = trainer.schedules(&cfg.schedule).run()?;
             println!(
                 "{}: loss {:.6} -> {:.6} in {} rounds ({} bytes, {:.3}s simulated)",
                 out.algorithm,
@@ -252,7 +258,7 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
             let rt = vrl_sgd::runtime::Runtime::cpu(dir)?;
             let engines = vrl_sgd::runtime::build_xla_engines(&rt, name, &spec, partition, samples)
                 .map_err(|e| format!("{e} — did you run `make artifacts`?"))?;
-            let res = run_with_engines(&spec, engines, &RunOptions::default())?;
+            let res = Trainer::from_engines(engines).spec(spec).run()?;
             println!(
                 "artifact {name} / {}: loss {:.5} -> {:.5} over {} rounds",
                 res.algorithm,

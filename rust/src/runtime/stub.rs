@@ -1,0 +1,122 @@
+//! Offline stand-in for the PJRT runtime (default build, `xla` feature
+//! off).
+//!
+//! Mirrors the API surface of [`super::pjrt`] so artifact-path consumers
+//! (CLI `artifact` subcommand, `tests/xla_integration.rs`, the e2e
+//! examples) compile without the `xla` crate. Every entry point that
+//! would touch PJRT returns an error naming the missing feature, and
+//! [`Runtime::artifacts_available`] reports `false` so gated tests and
+//! benches skip instead of failing.
+
+use super::meta::ArtifactMeta;
+use crate::config::{Partition, TrainSpec};
+use crate::data::{Corpus, Dataset};
+use crate::engine::StepEngine;
+use crate::rng::Pcg32;
+use std::rc::Rc;
+
+const UNAVAILABLE: &str =
+    "built without the `xla` feature: PJRT artifact execution is unavailable \
+     (rebuild with `--features xla` and the vendored xla crate)";
+
+/// A compiled artifact (stub: never constructed).
+pub struct Artifact {
+    /// Shape metadata.
+    pub meta: ArtifactMeta,
+}
+
+/// The PJRT runtime handle (stub: [`Runtime::cpu`] always errors).
+pub struct Runtime {
+    /// Directory holding `<name>.hlo.txt` / `<name>.meta.json`.
+    pub artifact_dir: std::path::PathBuf,
+}
+
+impl Runtime {
+    /// Always fails in the stub build.
+    pub fn cpu(_artifact_dir: impl Into<std::path::PathBuf>) -> Result<Self, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    /// Always fails in the stub build.
+    pub fn load(&self, _name: &str) -> Result<Rc<Artifact>, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    /// Always `false` in the stub build — artifacts may exist on disk,
+    /// but nothing here can execute them, so callers must skip.
+    pub fn artifacts_available(_dir: &std::path::Path, _names: &[&str]) -> bool {
+        false
+    }
+}
+
+/// The per-worker data a step samples from.
+pub enum WorkerData {
+    /// Labelled feature rows (classification tasks).
+    Labelled(Dataset),
+    /// Token corpus (the transformer LM task).
+    Tokens(Corpus),
+}
+
+/// XLA-backed engine (stub: [`XlaEngine::new`] always errors, so no
+/// instance ever exists and the trait methods are unreachable).
+pub struct XlaEngine {
+    _priv: (),
+}
+
+impl XlaEngine {
+    /// Always fails in the stub build.
+    pub fn new(_art: Rc<Artifact>, _data: WorkerData) -> Result<Self, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+}
+
+impl StepEngine for XlaEngine {
+    fn dim(&self) -> usize {
+        unreachable!("{UNAVAILABLE}")
+    }
+
+    fn init_params(&self, _rng: &mut Pcg32) -> Vec<f32> {
+        unreachable!("{UNAVAILABLE}")
+    }
+
+    fn sgd_step(
+        &mut self,
+        _params: &mut [f32],
+        _delta: &[f32],
+        _gamma: f32,
+        _weight_decay: f32,
+        _rng: &mut Pcg32,
+    ) -> f32 {
+        unreachable!("{UNAVAILABLE}")
+    }
+
+    fn eval_loss(&mut self, _params: &[f32]) -> f64 {
+        unreachable!("{UNAVAILABLE}")
+    }
+
+    fn shard_len(&self) -> usize {
+        unreachable!("{UNAVAILABLE}")
+    }
+}
+
+/// Always fails in the stub build.
+pub fn build_xla_engines(
+    _rt: &Runtime,
+    _name: &str,
+    _spec: &TrainSpec,
+    _partition: Partition,
+    _samples_per_worker: usize,
+) -> Result<Vec<Box<dyn StepEngine>>, String> {
+    Err(UNAVAILABLE.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(Runtime::cpu("artifacts").is_err());
+        assert!(!Runtime::artifacts_available(std::path::Path::new("artifacts"), &["mlp"]));
+    }
+}

@@ -1,0 +1,641 @@
+//! The composable training entry point: [`Trainer`] (builder) →
+//! [`Session`] → [`crate::coordinator::TrainOutput`].
+//!
+//! One generic driver replaces the seed's two rigid free functions
+//! (`run_training` / `run_with_engines`, both now thin deprecated shims
+//! over this module). Every run-time policy is a pluggable component:
+//!
+//! * [`LrSchedule`] — γ per round (const / step decay / cosine);
+//! * [`PeriodSchedule`] — communication period k per round (const /
+//!   stagewise à la STL-SGD);
+//! * [`RoundObserver`] — callbacks at sync and round end with loss,
+//!   consensus variance and communication counters;
+//! * [`EarlyStop`] — stop the run at a round boundary;
+//! * [`MetricSink`] — stream metrics instead of buffering the history.
+//!
+//! ```no_run
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
+//! let out = Trainer::new(task)
+//!     .algorithm(AlgorithmKind::VrlSgd)
+//!     .partition(Partition::LabelSharded)
+//!     .workers(8)
+//!     .steps(2000)
+//!     .lr_schedule(StepDecayLr::new(0.05, 0.5, 40))
+//!     .period_schedule(StagewisePeriod::doubling(8, 20, 64))
+//!     .early_stop(StopAtLoss(0.1))
+//!     .run()
+//!     .unwrap();
+//! assert!(out.final_loss() < out.initial_loss());
+//! ```
+
+pub mod observe;
+pub mod schedule;
+
+pub use observe::{
+    ConsensusTracker, CsvSink, EarlyStop, FnObserver, MetricSink, Patience, RoundInfo,
+    RoundObserver, StopAtLoss, SyncInfo,
+};
+pub use schedule::{
+    ConstLr, ConstPeriod, CosineLr, LrSchedule, PeriodSchedule, StagewisePeriod, StepDecayLr,
+};
+
+use crate::comm::{AllReduceAlgo, Cluster};
+use crate::config::{AlgorithmKind, NetworkSpec, Partition, TaskKind, TrainSpec};
+use crate::coordinator::{make_algorithm, TrainOutput};
+use crate::coordinator::WorkerState;
+use crate::engine::{build_pure_engines, StepEngine};
+use crate::metrics::{DenseRow, History, SyncRow};
+use crate::rng::Pcg32;
+use crate::sim::{SimTime, TimeModel};
+use crate::tensor;
+
+/// Where the per-worker engines come from.
+enum EngineSource {
+    /// A pure-rust task, partitioned at build time.
+    Task(TaskKind),
+    /// Explicit engines (e.g. `runtime::build_xla_engines`), one per worker.
+    Engines(Vec<Box<dyn StepEngine>>),
+}
+
+/// Builder for a training run. Construct with [`Trainer::new`] (pure-rust
+/// task) or [`Trainer::from_engines`] (explicit engines, e.g. XLA), chain
+/// setters, then [`Trainer::build`] a [`Session`] — or [`Trainer::run`]
+/// directly.
+pub struct Trainer {
+    spec: TrainSpec,
+    partition: Partition,
+    source: EngineSource,
+    lr_schedule: Option<Box<dyn LrSchedule>>,
+    period_schedule: Option<Box<dyn PeriodSchedule>>,
+    observers: Vec<Box<dyn RoundObserver>>,
+    sinks: Vec<Box<dyn MetricSink>>,
+    early_stop: Option<Box<dyn EarlyStop>>,
+    target: Option<Vec<f32>>,
+    eval_every: usize,
+    keep_history: bool,
+}
+
+impl Trainer {
+    /// Train `task` with [`TrainSpec::default`] hyperparameters and an
+    /// identical (iid) partition; override via the setters.
+    pub fn new(task: TaskKind) -> Self {
+        Trainer {
+            spec: TrainSpec::default(),
+            partition: Partition::Identical,
+            source: EngineSource::Task(task),
+            lr_schedule: None,
+            period_schedule: None,
+            observers: Vec::new(),
+            sinks: Vec::new(),
+            early_stop: None,
+            target: None,
+            eval_every: 1,
+            keep_history: true,
+        }
+    }
+
+    /// Train with explicit per-worker engines (one per worker) — the path
+    /// XLA artifact tasks take.
+    pub fn from_engines(engines: Vec<Box<dyn StepEngine>>) -> Self {
+        let mut t = Trainer::new(TaskKind::Quadratic { b: 0.0, noise: 0.0 });
+        t.source = EngineSource::Engines(engines);
+        t
+    }
+
+    /// Replace the whole spec (all hyperparameters at once).
+    pub fn spec(mut self, spec: TrainSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Distributed algorithm.
+    pub fn algorithm(mut self, algorithm: AlgorithmKind) -> Self {
+        self.spec.algorithm = algorithm;
+        self
+    }
+
+    /// Number of workers N.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.spec.workers = workers;
+        self
+    }
+
+    /// Base communication period k (what [`ConstPeriod`] serves when no
+    /// period schedule is set).
+    pub fn period(mut self, period: usize) -> Self {
+        self.spec.period = period;
+        self
+    }
+
+    /// Base learning rate γ (what [`ConstLr`] serves when no lr schedule
+    /// is set).
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.spec.lr = lr;
+        self
+    }
+
+    /// Per-worker minibatch size.
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.spec.batch = batch;
+        self
+    }
+
+    /// Total local iterations T per worker.
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.spec.steps = steps;
+        self
+    }
+
+    /// Root seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = seed;
+        self
+    }
+
+    /// Weight decay.
+    pub fn weight_decay(mut self, wd: f32) -> Self {
+        self.spec.weight_decay = wd;
+        self
+    }
+
+    /// Momentum coefficient (momentum Local SGD only).
+    pub fn momentum(mut self, beta: f32) -> Self {
+        self.spec.momentum = beta;
+        self
+    }
+
+    /// EASGD moving rate ρ.
+    pub fn easgd_rho(mut self, rho: f32) -> Self {
+        self.spec.easgd_rho = rho;
+        self
+    }
+
+    /// Simulated network parameters.
+    pub fn network(mut self, network: NetworkSpec) -> Self {
+        self.spec.network = network;
+        self
+    }
+
+    /// Record per-iteration dense metrics (Appendix-E style).
+    pub fn dense_metrics(mut self, on: bool) -> Self {
+        self.spec.dense_metrics = on;
+        self
+    }
+
+    /// Data partition (pure-rust tasks only; engines are pre-sharded).
+    pub fn partition(mut self, partition: Partition) -> Self {
+        self.partition = partition;
+        self
+    }
+
+    /// Reference point for dense-mode distance tracking (`‖x̂ − x*‖²`).
+    pub fn target(mut self, target: Vec<f32>) -> Self {
+        self.target = Some(target);
+        self
+    }
+
+    /// Evaluate the full train loss only every `n` sync rounds (the last
+    /// round is always evaluated). 0 is treated as 1.
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.eval_every = n;
+        self
+    }
+
+    /// Learning-rate schedule (default: [`ConstLr`] at the spec's γ).
+    pub fn lr_schedule(mut self, s: impl LrSchedule + 'static) -> Self {
+        self.lr_schedule = Some(Box::new(s));
+        self
+    }
+
+    /// Communication-period schedule (default: [`ConstPeriod`] at the
+    /// spec's k).
+    pub fn period_schedule(mut self, s: impl PeriodSchedule + 'static) -> Self {
+        self.period_schedule = Some(Box::new(s));
+        self
+    }
+
+    /// Apply a launcher `[schedule]` table
+    /// ([`crate::config::ScheduleSpec`]): lr decay maps to
+    /// [`StepDecayLr`] off the *current* spec's γ (call after
+    /// [`Trainer::spec`] / [`Trainer::lr`]), stages to
+    /// [`StagewisePeriod`]. Empty fields leave the defaults untouched.
+    pub fn schedules(mut self, s: &crate::config::ScheduleSpec) -> Self {
+        if let Some(factor) = s.lr_decay_factor {
+            let decay = StepDecayLr::new(self.spec.lr, factor as f32, s.lr_decay_every);
+            self = self.lr_schedule(decay);
+        }
+        if !s.period_stages.is_empty() {
+            self = self.period_schedule(StagewisePeriod::new(s.period_stages.clone()));
+        }
+        self
+    }
+
+    /// Register a round observer (may be called repeatedly).
+    pub fn observer(mut self, o: impl RoundObserver + 'static) -> Self {
+        self.observers.push(Box::new(o));
+        self
+    }
+
+    /// Register a streaming metric sink (may be called repeatedly).
+    pub fn sink(mut self, s: impl MetricSink + 'static) -> Self {
+        self.sinks.push(Box::new(s));
+        self
+    }
+
+    /// Early-stopping policy (at most one).
+    pub fn early_stop(mut self, e: impl EarlyStop + 'static) -> Self {
+        self.early_stop = Some(Box::new(e));
+        self
+    }
+
+    /// Don't buffer the full history: keep only the last sync row (so
+    /// `TrainOutput::final_loss` still works) and rely on sinks for the
+    /// record. For multi-million-round runs.
+    pub fn stream_only(mut self) -> Self {
+        self.keep_history = false;
+        self
+    }
+
+    /// Validate and resolve everything into a runnable [`Session`].
+    pub fn build(self) -> Result<Session, String> {
+        self.spec.validate()?;
+        let engines = match self.source {
+            EngineSource::Task(task) => build_pure_engines(&task, self.partition, &self.spec)?.0,
+            EngineSource::Engines(engines) => engines,
+        };
+        let n = self.spec.workers;
+        if engines.len() != n {
+            return Err(format!("{} engines for {n} workers", engines.len()));
+        }
+        let dim = engines[0].dim();
+        if engines.iter().any(|e| e.dim() != dim) {
+            return Err("engines disagree on parameter dimension".to_string());
+        }
+        if let Some(t) = &self.target {
+            if t.len() != dim {
+                return Err(format!("target dim {} != param dim {dim}", t.len()));
+            }
+        }
+        let lr_schedule =
+            self.lr_schedule.unwrap_or_else(|| Box::new(ConstLr(self.spec.lr)));
+        let period_schedule =
+            self.period_schedule.unwrap_or_else(|| Box::new(ConstPeriod(self.spec.period)));
+        Ok(Session {
+            spec: self.spec,
+            engines,
+            lr_schedule,
+            period_schedule,
+            observers: self.observers,
+            sinks: self.sinks,
+            early_stop: self.early_stop,
+            target: self.target,
+            eval_every: self.eval_every.max(1),
+            keep_history: self.keep_history,
+        })
+    }
+
+    /// `build()` + `run()` in one call.
+    pub fn run(self) -> Result<TrainOutput, String> {
+        self.build()?.run()
+    }
+}
+
+/// A validated, ready-to-run training session produced by
+/// [`Trainer::build`]. Consumed by [`Session::run`].
+pub struct Session {
+    spec: TrainSpec,
+    engines: Vec<Box<dyn StepEngine>>,
+    lr_schedule: Box<dyn LrSchedule>,
+    period_schedule: Box<dyn PeriodSchedule>,
+    observers: Vec<Box<dyn RoundObserver>>,
+    sinks: Vec<Box<dyn MetricSink>>,
+    early_stop: Option<Box<dyn EarlyStop>>,
+    target: Option<Vec<f32>>,
+    eval_every: usize,
+    keep_history: bool,
+}
+
+impl Session {
+    /// The resolved spec.
+    pub fn spec(&self) -> &TrainSpec {
+        &self.spec
+    }
+
+    /// Drive the run to completion (or early stop). The loop is the
+    /// paper's synchronous model: for each round, `k` lockstep local
+    /// iterations on every worker, then `Algorithm::sync`, then metrics.
+    pub fn run(mut self) -> Result<TrainOutput, String> {
+        let spec = &self.spec;
+        let n = spec.workers;
+        let engines = &mut self.engines;
+        let dim = engines[0].dim();
+
+        // Shared initialization: all workers start at the same x^0
+        // (Algorithm 1 line 1), drawn from a dedicated stream.
+        let root = Pcg32::new(spec.seed, 0x5EED);
+        let mut init_rng = root.split(u64::MAX);
+        let params0 = engines[0].init_params(&mut init_rng);
+        debug_assert_eq!(params0.len(), dim);
+
+        let mut workers: Vec<WorkerState> =
+            (0..n).map(|i| WorkerState::new(i, &params0, &root)).collect();
+        let mut algo = make_algorithm(spec, &params0);
+        let mut cluster = Cluster::new(n, &spec.network, AllReduceAlgo::Ring);
+        let time_model = TimeModel::from_dims(dim, spec.batch);
+        let mut sim_time = SimTime::default();
+
+        let initial_loss = global_loss(engines, &params0);
+        let mut history = History::new(initial_loss);
+        for s in self.sinks.iter_mut() {
+            s.on_start(initial_loss);
+        }
+        let mut last_loss = initial_loss;
+
+        let mut step = 0usize;
+        let mut round = 0usize;
+        let mut mean_buf = vec![0.0f32; dim];
+        // pre-step snapshot buffer, only used by momentum-style algorithms
+        let wants_post = algo.wants_post_step();
+        let mut before_buf = if wants_post { vec![0.0f32; dim] } else { Vec::new() };
+
+        while step < spec.steps {
+            let lr = self.lr_schedule.lr(round, step);
+            let base = self.period_schedule.period(round).max(1);
+            let p = algo.period(round, base).max(1).min(spec.steps - step);
+
+            // lockstep local iterations
+            for _ in 0..p {
+                let mut loss_acc = 0.0f64;
+                for (i, (w, e)) in workers.iter_mut().zip(engines.iter_mut()).enumerate() {
+                    if wants_post {
+                        before_buf.copy_from_slice(&w.params);
+                    }
+                    loss_acc += e.sgd_step(
+                        &mut w.params,
+                        &w.delta,
+                        lr,
+                        spec.weight_decay,
+                        &mut w.rng,
+                    ) as f64;
+                    if wants_post {
+                        algo.post_step(i, &mut w.params, &before_buf, lr);
+                    }
+                }
+                step += 1;
+                if spec.dense_metrics {
+                    let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
+                    let var = tensor::worker_variance(&rows);
+                    tensor::mean_rows(&mut mean_buf, &rows);
+                    let dist =
+                        self.target.as_ref().map(|t| tensor::dist2_sq(&mean_buf, t));
+                    let row = DenseRow {
+                        step,
+                        mean_loss: loss_acc / n as f64,
+                        worker_variance: var,
+                        dist_sq_to_target: dist,
+                    };
+                    for s in self.sinks.iter_mut() {
+                        s.on_dense_row(&row);
+                    }
+                    if self.keep_history {
+                        history.dense_rows.push(row);
+                    }
+                }
+            }
+            sim_time.charge_steps(p, &time_model);
+
+            // consensus gap just before averaging
+            let variance = {
+                let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
+                tensor::worker_variance(&rows)
+            };
+
+            algo.sync(round, p, lr, &mut workers, &mut cluster);
+            let comm = cluster.stats();
+            sim_time.comm_s = comm.sim_time_s;
+
+            let sync_info = SyncInfo {
+                round,
+                step,
+                period: p,
+                lr,
+                worker_variance: variance,
+                comm,
+            };
+            for o in self.observers.iter_mut() {
+                o.on_sync(&sync_info);
+            }
+
+            // global train loss at the averaged model
+            let evaluated = round % self.eval_every == 0 || step >= spec.steps;
+            let train_loss = if evaluated {
+                let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
+                tensor::mean_rows(&mut mean_buf, &rows);
+                global_loss(engines, &mean_buf)
+            } else {
+                last_loss
+            };
+            last_loss = train_loss;
+
+            let row = SyncRow {
+                round,
+                step,
+                train_loss,
+                worker_variance: variance,
+                comm_rounds: comm.rounds,
+                comm_bytes: comm.bytes,
+                sim_time_s: sim_time.total(),
+            };
+            for s in self.sinks.iter_mut() {
+                s.on_sync_row(&row);
+            }
+            if !self.keep_history {
+                // O(1) memory: only the latest row survives, so
+                // `TrainOutput::final_loss` stays meaningful.
+                history.sync_rows.clear();
+            }
+            history.sync_rows.push(row);
+
+            let round_info = RoundInfo {
+                round,
+                step,
+                period: p,
+                lr,
+                train_loss,
+                evaluated,
+                worker_variance: variance,
+                comm,
+                sim_time,
+            };
+            for o in self.observers.iter_mut() {
+                o.on_round_end(&round_info);
+            }
+            round += 1;
+            if let Some(stop) = self.early_stop.as_mut() {
+                if stop.should_stop(&round_info) {
+                    break;
+                }
+            }
+        }
+
+        for s in self.sinks.iter_mut() {
+            s.finish()?;
+        }
+
+        let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
+        tensor::mean_rows(&mut mean_buf, &rows);
+        // Σ_i Δ_i = 0 invariant residual (max abs coordinate of the sum)
+        let mut delta_sum = vec![0.0f32; dim];
+        for w in &workers {
+            tensor::add_assign(&mut delta_sum, &w.delta);
+        }
+        let delta_residual = delta_sum.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        Ok(TrainOutput {
+            history,
+            comm: cluster.stats(),
+            sim_time,
+            final_params: mean_buf,
+            algorithm: algo.name(),
+            delta_residual,
+        })
+    }
+}
+
+/// Shard-size-weighted global loss `f(x) = (1/n_total) Σ_i n_i f_i(x)`.
+pub(crate) fn global_loss(engines: &mut [Box<dyn StepEngine>], params: &[f32]) -> f64 {
+    let total: usize = engines.iter().map(|e| e.shard_len()).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    engines
+        .iter_mut()
+        .map(|e| e.eval_loss(params) * e.shard_len() as f64)
+        .sum::<f64>()
+        / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn softmax_task() -> TaskKind {
+        TaskKind::SoftmaxSynthetic { classes: 4, features: 8, samples_per_worker: 64 }
+    }
+
+    fn base(algorithm: AlgorithmKind) -> Trainer {
+        Trainer::new(softmax_task())
+            .algorithm(algorithm)
+            .workers(4)
+            .period(5)
+            .lr(0.05)
+            .batch(8)
+            .steps(100)
+            .seed(11)
+            .partition(Partition::LabelSharded)
+    }
+
+    #[test]
+    fn builder_runs_and_descends() {
+        let out = base(AlgorithmKind::VrlSgd).run().unwrap();
+        assert!(out.final_loss() < out.initial_loss());
+        assert_eq!(out.history.sync_rows.len(), 20);
+    }
+
+    #[test]
+    fn build_rejects_invalid_spec() {
+        let err = base(AlgorithmKind::VrlSgd).workers(0).build().err().unwrap();
+        assert!(err.contains("workers"));
+    }
+
+    #[test]
+    fn build_rejects_engine_count_mismatch() {
+        let spec = TrainSpec { workers: 2, batch: 8, ..TrainSpec::default() };
+        let (engines, _) =
+            build_pure_engines(&softmax_task(), Partition::Identical, &spec).unwrap();
+        let err = Trainer::from_engines(engines)
+            .spec(TrainSpec { workers: 4, ..spec })
+            .build()
+            .err()
+            .unwrap();
+        assert!(err.contains("engines"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_bad_target_dim() {
+        let err = base(AlgorithmKind::VrlSgd).target(vec![0.0; 3]).build().err().unwrap();
+        assert!(err.contains("target dim"), "{err}");
+    }
+
+    #[test]
+    fn early_stop_shortens_run() {
+        let full = base(AlgorithmKind::VrlSgd).run().unwrap();
+        let threshold = full.final_loss() * 1.5;
+        let stopped =
+            base(AlgorithmKind::VrlSgd).early_stop(StopAtLoss(threshold)).run().unwrap();
+        assert!(
+            stopped.history.sync_rows.len() < full.history.sync_rows.len(),
+            "early stop should cut rounds: {} vs {}",
+            stopped.history.sync_rows.len(),
+            full.history.sync_rows.len()
+        );
+        assert!(stopped.final_loss() <= threshold);
+    }
+
+    #[test]
+    fn stream_only_keeps_last_row_and_final_loss() {
+        let full = base(AlgorithmKind::LocalSgd).run().unwrap();
+        let lean = base(AlgorithmKind::LocalSgd).stream_only().run().unwrap();
+        assert_eq!(lean.history.sync_rows.len(), 1);
+        assert_eq!(lean.final_loss(), full.final_loss());
+        assert_eq!(lean.final_params, full.final_params);
+    }
+
+    #[test]
+    fn observers_fire_once_per_round() {
+        let tracker = ConsensusTracker::shared();
+        let out = base(AlgorithmKind::VrlSgd).observer(tracker.clone()).run().unwrap();
+        let t = tracker.borrow();
+        assert_eq!(t.rounds, out.history.sync_rows.len());
+        assert_eq!(t.syncs, out.history.sync_rows.len());
+        assert_eq!(t.last_loss, out.final_loss());
+        assert!(t.peak_worker_variance > 0.0);
+    }
+
+    #[test]
+    fn period_schedule_controls_round_lengths() {
+        // 2 rounds of k=5 then k=10 thereafter over 40 steps:
+        // syncs at steps 5, 10, 20, 30, 40.
+        let out = base(AlgorithmKind::LocalSgd)
+            .steps(40)
+            .period_schedule(StagewisePeriod::new(vec![(2, 5), (usize::MAX, 10)]))
+            .run()
+            .unwrap();
+        let steps: Vec<usize> = out.history.sync_rows.iter().map(|r| r.step).collect();
+        assert_eq!(steps, vec![5, 10, 20, 30, 40]);
+        assert_eq!(out.comm.rounds, 5);
+    }
+
+    #[test]
+    fn lr_schedule_changes_trajectory() {
+        let const_lr = base(AlgorithmKind::VrlSgd).run().unwrap();
+        let decayed = base(AlgorithmKind::VrlSgd)
+            .lr_schedule(StepDecayLr::new(0.05, 0.5, 4))
+            .run()
+            .unwrap();
+        assert_ne!(const_lr.final_params, decayed.final_params);
+        assert!(decayed.final_loss().is_finite());
+    }
+
+    #[test]
+    fn ssgd_overrides_period_schedule() {
+        // S-SGD syncs every step regardless of the schedule's base k.
+        let out = base(AlgorithmKind::SSgd)
+            .steps(20)
+            .period_schedule(ConstPeriod(10))
+            .run()
+            .unwrap();
+        assert_eq!(out.comm.rounds, 20);
+    }
+}

@@ -1,0 +1,389 @@
+//! Round observers, early stopping, and streaming metric sinks.
+//!
+//! These three hooks replace the seed's hardcoded `RunOptions` plumbing:
+//!
+//! * [`RoundObserver`] — callbacks fired by the driver at each sync
+//!   ([`RoundObserver::on_sync`], right after the collective, with the
+//!   consensus variance and communication counters) and at the end of
+//!   each round ([`RoundObserver::on_round_end`], with the evaluated
+//!   loss). Stateful observers the caller wants to read after the run go
+//!   through `Rc<RefCell<_>>` (the engines are single-threaded anyway).
+//! * [`EarlyStop`] — polled once per round; returning `true` ends the
+//!   run at the next round boundary (after the sync, so the output is a
+//!   consistent averaged model).
+//! * [`MetricSink`] — receives every [`SyncRow`]/[`DenseRow`] as it is
+//!   produced, so long runs can stream metrics to disk instead of
+//!   buffering the whole history (see `Trainer::stream_only`).
+
+use crate::comm::CommStats;
+use crate::metrics::{DenseRow, SyncRow};
+use crate::sim::SimTime;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Snapshot handed to [`RoundObserver::on_sync`] immediately after the
+/// round's collective.
+#[derive(Debug, Clone, Copy)]
+pub struct SyncInfo {
+    /// Sync round index (0-based).
+    pub round: usize,
+    /// Total local iterations elapsed per worker.
+    pub step: usize,
+    /// Local steps taken this round.
+    pub period: usize,
+    /// Learning rate γ used during this round.
+    pub lr: f32,
+    /// Consensus gap `(1/N) Σ ‖x_i − x̂‖²` measured *before* the sync.
+    pub worker_variance: f64,
+    /// Cumulative communication counters after the sync.
+    pub comm: CommStats,
+}
+
+/// Snapshot handed to [`RoundObserver::on_round_end`] and
+/// [`EarlyStop::should_stop`] after metrics for the round are complete.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundInfo {
+    /// Sync round index (0-based).
+    pub round: usize,
+    /// Total local iterations elapsed per worker.
+    pub step: usize,
+    /// Local steps taken this round.
+    pub period: usize,
+    /// Learning rate γ used during this round.
+    pub lr: f32,
+    /// Global train loss at the averaged model. When `evaluated` is
+    /// false this carries the last evaluated value (see
+    /// `Trainer::eval_every`).
+    pub train_loss: f64,
+    /// Whether `train_loss` was freshly evaluated this round.
+    pub evaluated: bool,
+    /// Consensus gap before the sync.
+    pub worker_variance: f64,
+    /// Cumulative communication counters.
+    pub comm: CommStats,
+    /// Cumulative simulated wall-clock.
+    pub sim_time: SimTime,
+}
+
+/// Per-round callbacks. Both methods default to no-ops, so observers
+/// implement only what they need.
+pub trait RoundObserver {
+    /// Fired right after the round's synchronization collective.
+    fn on_sync(&mut self, _info: &SyncInfo) {}
+
+    /// Fired after the round's metrics (loss evaluation) are complete.
+    fn on_round_end(&mut self, _info: &RoundInfo) {}
+}
+
+/// Shared-ownership observer: register `Rc<RefCell<O>>` and keep a clone
+/// to inspect after the run.
+impl<O: RoundObserver> RoundObserver for Rc<RefCell<O>> {
+    fn on_sync(&mut self, info: &SyncInfo) {
+        self.borrow_mut().on_sync(info);
+    }
+
+    fn on_round_end(&mut self, info: &RoundInfo) {
+        self.borrow_mut().on_round_end(info);
+    }
+}
+
+/// Adapter turning a closure into an [`RoundObserver::on_round_end`]
+/// observer.
+pub struct FnObserver<F: FnMut(&RoundInfo)>(pub F);
+
+impl<F: FnMut(&RoundInfo)> RoundObserver for FnObserver<F> {
+    fn on_round_end(&mut self, info: &RoundInfo) {
+        (self.0)(info)
+    }
+}
+
+/// Ready-made observer: tracks peak consensus variance, round count and
+/// the last seen loss. Register via `Rc<RefCell<_>>` to read afterwards.
+#[derive(Debug, Clone, Default)]
+pub struct ConsensusTracker {
+    /// Number of syncs observed.
+    pub syncs: usize,
+    /// Number of completed rounds observed.
+    pub rounds: usize,
+    /// Peak pre-averaging worker variance over the run.
+    pub peak_worker_variance: f64,
+    /// Last train loss reported.
+    pub last_loss: f64,
+}
+
+impl ConsensusTracker {
+    /// Fresh tracker wrapped for registration + later inspection.
+    pub fn shared() -> Rc<RefCell<ConsensusTracker>> {
+        Rc::new(RefCell::new(ConsensusTracker::default()))
+    }
+}
+
+impl RoundObserver for ConsensusTracker {
+    fn on_sync(&mut self, info: &SyncInfo) {
+        self.syncs += 1;
+        if info.worker_variance > self.peak_worker_variance {
+            self.peak_worker_variance = info.worker_variance;
+        }
+    }
+
+    fn on_round_end(&mut self, info: &RoundInfo) {
+        self.rounds += 1;
+        self.last_loss = info.train_loss;
+    }
+}
+
+/// Early-stopping policy, polled once per completed round.
+pub trait EarlyStop {
+    /// Return `true` to end the run after this round.
+    fn should_stop(&mut self, info: &RoundInfo) -> bool;
+}
+
+/// Any `FnMut(&RoundInfo) -> bool` closure is an early-stop policy.
+impl<F: FnMut(&RoundInfo) -> bool> EarlyStop for F {
+    fn should_stop(&mut self, info: &RoundInfo) -> bool {
+        self(info)
+    }
+}
+
+/// Stop as soon as a freshly evaluated train loss reaches the threshold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StopAtLoss(pub f64);
+
+impl EarlyStop for StopAtLoss {
+    fn should_stop(&mut self, info: &RoundInfo) -> bool {
+        info.evaluated && info.train_loss <= self.0
+    }
+}
+
+/// Patience-based early stopping: stop after `patience` consecutive
+/// evaluated rounds without at least `min_delta` improvement over the
+/// best loss seen.
+#[derive(Debug, Clone)]
+pub struct Patience {
+    /// Evaluated rounds without improvement tolerated before stopping.
+    pub patience: usize,
+    /// Minimum loss decrease that counts as improvement.
+    pub min_delta: f64,
+    best: f64,
+    bad: usize,
+}
+
+impl Patience {
+    /// New policy with the given patience and improvement threshold.
+    pub fn new(patience: usize, min_delta: f64) -> Self {
+        Patience { patience: patience.max(1), min_delta, best: f64::INFINITY, bad: 0 }
+    }
+}
+
+impl EarlyStop for Patience {
+    fn should_stop(&mut self, info: &RoundInfo) -> bool {
+        if !info.evaluated {
+            return false;
+        }
+        if info.train_loss < self.best - self.min_delta {
+            self.best = info.train_loss;
+            self.bad = 0;
+        } else {
+            self.bad += 1;
+        }
+        self.bad >= self.patience
+    }
+}
+
+/// Streaming metric consumer. Rows arrive in the order the driver
+/// produces them; `finish` is called once, after the run completes.
+pub trait MetricSink {
+    /// The initial loss, before any step (header-time information).
+    fn on_start(&mut self, _initial_loss: f64) {}
+
+    /// One per synchronization round.
+    fn on_sync_row(&mut self, row: &SyncRow);
+
+    /// One per local iteration (dense mode only).
+    fn on_dense_row(&mut self, _row: &DenseRow) {}
+
+    /// Flush/close. Errors propagate out of `Session::run`.
+    fn finish(&mut self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Streams sync rows as CSV (same format as `History::sync_csv`) into any
+/// writer, so multi-million-round runs never buffer their history.
+pub struct CsvSink<W: std::io::Write> {
+    w: W,
+    wrote_header: bool,
+    err: Option<String>,
+}
+
+impl<W: std::io::Write> CsvSink<W> {
+    /// Stream into `w`.
+    pub fn new(w: W) -> Self {
+        CsvSink { w, wrote_header: false, err: None }
+    }
+
+    fn write(&mut self, s: &str) {
+        if self.err.is_none() {
+            if let Err(e) = self.w.write_all(s.as_bytes()) {
+                self.err = Some(format!("csv sink write: {e}"));
+            }
+        }
+    }
+}
+
+impl CsvSink<std::io::BufWriter<std::fs::File>> {
+    /// Stream to a file, creating parent directories.
+    pub fn file(path: &str) -> Result<Self, String> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent).map_err(|e| format!("mkdir for {path}: {e}"))?;
+        }
+        let f = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
+        Ok(CsvSink::new(std::io::BufWriter::new(f)))
+    }
+}
+
+impl<W: std::io::Write> MetricSink for CsvSink<W> {
+    fn on_sync_row(&mut self, row: &SyncRow) {
+        if !self.wrote_header {
+            self.wrote_header = true;
+            self.write(
+                "round,step,train_loss,worker_variance,comm_rounds,comm_bytes,sim_time_s\n",
+            );
+        }
+        let line = format!(
+            "{},{},{:.8e},{:.8e},{},{},{:.6e}\n",
+            row.round,
+            row.step,
+            row.train_loss,
+            row.worker_variance,
+            row.comm_rounds,
+            row.comm_bytes,
+            row.sim_time_s
+        );
+        self.write(&line);
+    }
+
+    fn finish(&mut self) -> Result<(), String> {
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        self.w.flush().map_err(|e| format!("csv sink flush: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(round: usize, loss: f64, evaluated: bool) -> RoundInfo {
+        RoundInfo {
+            round,
+            step: (round + 1) * 10,
+            period: 10,
+            lr: 0.05,
+            train_loss: loss,
+            evaluated,
+            worker_variance: 0.5 * (round + 1) as f64,
+            comm: CommStats::default(),
+            sim_time: SimTime::default(),
+        }
+    }
+
+    #[test]
+    fn stop_at_loss_requires_fresh_evaluation() {
+        let mut s = StopAtLoss(1.0);
+        assert!(!s.should_stop(&info(0, 0.5, false)), "stale loss must not stop");
+        assert!(!s.should_stop(&info(1, 2.0, true)));
+        assert!(s.should_stop(&info(2, 0.9, true)));
+    }
+
+    #[test]
+    fn patience_counts_only_evaluated_rounds() {
+        let mut p = Patience::new(2, 0.0);
+        assert!(!p.should_stop(&info(0, 1.0, true))); // best = 1.0
+        assert!(!p.should_stop(&info(1, 1.2, false))); // skipped
+        assert!(!p.should_stop(&info(2, 1.1, true))); // bad = 1
+        assert!(p.should_stop(&info(3, 1.05, true))); // bad = 2 -> stop
+    }
+
+    #[test]
+    fn patience_resets_on_improvement() {
+        let mut p = Patience::new(2, 0.0);
+        assert!(!p.should_stop(&info(0, 1.0, true)));
+        assert!(!p.should_stop(&info(1, 1.1, true))); // bad = 1
+        assert!(!p.should_stop(&info(2, 0.9, true))); // improves, bad = 0
+        assert!(!p.should_stop(&info(3, 0.95, true))); // bad = 1
+        assert!(p.should_stop(&info(4, 0.92, true))); // bad = 2
+    }
+
+    #[test]
+    fn consensus_tracker_accumulates() {
+        let shared = ConsensusTracker::shared();
+        let mut obs = shared.clone();
+        obs.on_sync(&SyncInfo {
+            round: 0,
+            step: 10,
+            period: 10,
+            lr: 0.1,
+            worker_variance: 2.0,
+            comm: CommStats::default(),
+        });
+        obs.on_sync(&SyncInfo {
+            round: 1,
+            step: 20,
+            period: 10,
+            lr: 0.1,
+            worker_variance: 1.0,
+            comm: CommStats::default(),
+        });
+        obs.on_round_end(&info(1, 0.25, true));
+        let t = shared.borrow();
+        assert_eq!(t.syncs, 2);
+        assert_eq!(t.rounds, 1);
+        assert_eq!(t.peak_worker_variance, 2.0);
+        assert_eq!(t.last_loss, 0.25);
+    }
+
+    #[test]
+    fn csv_sink_matches_history_format() {
+        let row = SyncRow {
+            round: 0,
+            step: 10,
+            train_loss: 0.5,
+            worker_variance: 0.25,
+            comm_rounds: 1,
+            comm_bytes: 100,
+            sim_time_s: 0.125,
+        };
+        let mut buf = Vec::new();
+        {
+            let mut sink = CsvSink::new(&mut buf);
+            sink.on_sync_row(&row);
+            sink.finish().unwrap();
+        }
+        let mut h = crate::metrics::History::new(1.0);
+        h.sync_rows.push(row);
+        assert_eq!(String::from_utf8(buf).unwrap(), h.sync_csv());
+    }
+
+    #[test]
+    fn fn_observer_fires() {
+        let mut count = 0usize;
+        {
+            let mut obs = FnObserver(|i: &RoundInfo| {
+                assert_eq!(i.round, 3);
+                count += 1;
+            });
+            obs.on_round_end(&info(3, 1.0, true));
+            obs.on_sync(&SyncInfo {
+                round: 3,
+                step: 40,
+                period: 10,
+                lr: 0.05,
+                worker_variance: 0.0,
+                comm: CommStats::default(),
+            });
+        }
+        assert_eq!(count, 1, "on_sync default is a no-op");
+    }
+}

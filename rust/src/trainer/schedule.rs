@@ -1,0 +1,226 @@
+//! Learning-rate and communication-period schedules.
+//!
+//! Both are queried once per synchronization round by the [`super::Session`]
+//! driver: the learning rate is held constant *within* a round (the Δ
+//! update of eq. 4 divides by `elapsed · γ`, which requires a single γ per
+//! period), and the period schedule supplies the *base* number of local
+//! steps, which the algorithm may still override (S-SGD forces 1; the
+//! warm-up variant forces 1 on round 0).
+//!
+//! The stagewise period schedule implements the STL-SGD observation
+//! (Shen et al.): growing the communication period as the iterate
+//! approaches a stationary point keeps convergence while cutting rounds.
+
+/// A learning-rate schedule γ(round, step). `round` is the upcoming sync
+/// round index, `step` the total local iterations already taken per
+/// worker; both start at 0.
+pub trait LrSchedule {
+    /// Learning rate for the round starting at (`round`, `step`).
+    fn lr(&self, round: usize, step: usize) -> f32;
+}
+
+/// Any `Fn(round, step) -> f32` closure is a schedule.
+impl<F: Fn(usize, usize) -> f32> LrSchedule for F {
+    fn lr(&self, round: usize, step: usize) -> f32 {
+        self(round, step)
+    }
+}
+
+/// Constant learning rate (the seed behaviour; default).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConstLr(pub f32);
+
+impl LrSchedule for ConstLr {
+    fn lr(&self, _round: usize, _step: usize) -> f32 {
+        self.0
+    }
+}
+
+/// Step decay: `γ = base · factor^(round / every_rounds)`, floored.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepDecayLr {
+    /// Initial learning rate.
+    pub base: f32,
+    /// Multiplicative decay applied every `every_rounds` sync rounds.
+    pub factor: f32,
+    /// Rounds per decay stage.
+    pub every_rounds: usize,
+    /// Lower bound on the decayed rate.
+    pub floor: f32,
+}
+
+impl StepDecayLr {
+    /// Decay `base` by `factor` every `every_rounds` rounds, never below
+    /// `base * 1e-3`.
+    pub fn new(base: f32, factor: f32, every_rounds: usize) -> Self {
+        StepDecayLr { base, factor, every_rounds: every_rounds.max(1), floor: base * 1e-3 }
+    }
+}
+
+impl LrSchedule for StepDecayLr {
+    fn lr(&self, round: usize, _step: usize) -> f32 {
+        let stage = (round / self.every_rounds.max(1)) as i32;
+        (self.base * self.factor.powi(stage)).max(self.floor)
+    }
+}
+
+/// Cosine annealing from `base` to `min` over `total_steps` iterations
+/// (queried at round granularity; γ is constant within a round).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CosineLr {
+    /// Initial learning rate.
+    pub base: f32,
+    /// Final learning rate.
+    pub min: f32,
+    /// Horizon in local iterations (usually `TrainSpec::steps`).
+    pub total_steps: usize,
+}
+
+impl LrSchedule for CosineLr {
+    fn lr(&self, _round: usize, step: usize) -> f32 {
+        let t = (step.min(self.total_steps) as f64) / (self.total_steps.max(1) as f64);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        self.min + (self.base - self.min) * cos as f32
+    }
+}
+
+/// A communication-period schedule k(round): the base number of local
+/// steps between syncs for the round.
+pub trait PeriodSchedule {
+    /// Base period for sync round `round` (must be ≥ 1; the driver clamps
+    /// 0 to 1).
+    fn period(&self, round: usize) -> usize;
+}
+
+/// Any `Fn(round) -> usize` closure is a period schedule.
+impl<F: Fn(usize) -> usize> PeriodSchedule for F {
+    fn period(&self, round: usize) -> usize {
+        self(round)
+    }
+}
+
+/// Constant period k (the seed behaviour; default).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConstPeriod(pub usize);
+
+impl PeriodSchedule for ConstPeriod {
+    fn period(&self, _round: usize) -> usize {
+        self.0.max(1)
+    }
+}
+
+/// Stagewise period à la STL-SGD: a list of `(rounds, k)` stages; after
+/// the listed stages are exhausted, the last stage's k applies forever.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagewisePeriod {
+    stages: Vec<(usize, usize)>,
+}
+
+impl StagewisePeriod {
+    /// Build from explicit `(rounds_in_stage, k)` pairs. Empty stages
+    /// (0 rounds) are dropped; an empty list behaves as k = 1.
+    pub fn new(stages: Vec<(usize, usize)>) -> Self {
+        StagewisePeriod {
+            stages: stages.into_iter().filter(|&(r, _)| r > 0).collect(),
+        }
+    }
+
+    /// STL-SGD-style doubling: start at `k0`, double every
+    /// `rounds_per_stage` rounds, capped at `k_max`.
+    pub fn doubling(k0: usize, rounds_per_stage: usize, k_max: usize) -> Self {
+        let mut stages = Vec::new();
+        let mut k = k0.max(1);
+        let cap = k_max.max(k);
+        while k < cap {
+            stages.push((rounds_per_stage.max(1), k));
+            k = (k * 2).min(cap);
+        }
+        stages.push((usize::MAX, cap));
+        StagewisePeriod { stages }
+    }
+
+    /// The stage table (rounds, k).
+    pub fn stages(&self) -> &[(usize, usize)] {
+        &self.stages
+    }
+}
+
+impl PeriodSchedule for StagewisePeriod {
+    fn period(&self, round: usize) -> usize {
+        let mut r = round;
+        for &(len, k) in &self.stages {
+            if r < len {
+                return k.max(1);
+            }
+            r -= len;
+        }
+        self.stages.last().map(|&(_, k)| k.max(1)).unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_lr_is_constant() {
+        let s = ConstLr(0.05);
+        assert_eq!(s.lr(0, 0), 0.05);
+        assert_eq!(s.lr(99, 12345), 0.05);
+    }
+
+    #[test]
+    fn step_decay_halves_per_stage_and_floors() {
+        let s = StepDecayLr::new(0.1, 0.5, 10);
+        assert_eq!(s.lr(0, 0), 0.1);
+        assert_eq!(s.lr(9, 0), 0.1);
+        assert!((s.lr(10, 0) - 0.05).abs() < 1e-9);
+        assert!((s.lr(25, 0) - 0.025).abs() < 1e-9);
+        // deep into the schedule the floor binds
+        assert!((s.lr(1000, 0) - 0.1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_interpolates_base_to_min() {
+        let s = CosineLr { base: 0.1, min: 0.01, total_steps: 100 };
+        assert!((s.lr(0, 0) - 0.1).abs() < 1e-7);
+        let mid = s.lr(0, 50);
+        assert!((mid - 0.055).abs() < 1e-3, "mid {mid}");
+        assert!((s.lr(0, 100) - 0.01).abs() < 1e-7);
+        // clamped beyond the horizon
+        assert!((s.lr(0, 1000) - 0.01).abs() < 1e-7);
+    }
+
+    #[test]
+    fn stagewise_walks_stages_then_sticks() {
+        let s = StagewisePeriod::new(vec![(3, 2), (2, 8), (1, 16)]);
+        let ks: Vec<usize> = (0..8).map(|r| s.period(r)).collect();
+        assert_eq!(ks, vec![2, 2, 2, 8, 8, 16, 16, 16]);
+    }
+
+    #[test]
+    fn stagewise_doubling_caps() {
+        let s = StagewisePeriod::doubling(2, 4, 16);
+        assert_eq!(s.period(0), 2);
+        assert_eq!(s.period(4), 4);
+        assert_eq!(s.period(8), 8);
+        assert_eq!(s.period(12), 16);
+        assert_eq!(s.period(10_000), 16);
+    }
+
+    #[test]
+    fn empty_stagewise_defaults_to_one() {
+        let s = StagewisePeriod::new(vec![]);
+        assert_eq!(s.period(0), 1);
+        assert_eq!(s.period(7), 1);
+    }
+
+    #[test]
+    fn closures_are_schedules() {
+        let lr = |round: usize, _step: usize| if round < 2 { 0.1f32 } else { 0.01 };
+        assert_eq!(LrSchedule::lr(&lr, 0, 0), 0.1);
+        assert_eq!(LrSchedule::lr(&lr, 5, 0), 0.01);
+        let k = |round: usize| round + 1;
+        assert_eq!(PeriodSchedule::period(&k, 3), 4);
+    }
+}

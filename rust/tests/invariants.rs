@@ -6,9 +6,19 @@
 //! printing the failing config.)
 
 use vrl_sgd::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
-use vrl_sgd::coordinator::run_training;
+use vrl_sgd::coordinator::TrainOutput;
 use vrl_sgd::data::{generators, partition_dataset};
 use vrl_sgd::rng::Pcg32;
+use vrl_sgd::trainer::Trainer;
+
+/// Builder-path equivalent of the seed's `run_training` free function.
+fn run_training(
+    spec: &TrainSpec,
+    task: &TaskKind,
+    partition: Partition,
+) -> Result<TrainOutput, String> {
+    Trainer::new(task.clone()).spec(spec.clone()).partition(partition).run()
+}
 
 /// Draw a random-but-valid spec for property sweeps.
 fn random_spec(rng: &mut Pcg32, algorithm: AlgorithmKind) -> TrainSpec {

@@ -2,8 +2,8 @@
 //! CSV report, exactly the path the `vrl-sgd train` subcommand takes.
 
 use vrl_sgd::config::RunConfig;
-use vrl_sgd::coordinator::run_training;
 use vrl_sgd::metrics::write_report;
+use vrl_sgd::trainer::Trainer;
 
 const CONFIG: &str = r#"
 # quickstart config (see examples/)
@@ -34,8 +34,13 @@ fn config_file_to_training_to_csv() {
 
     let cfg = RunConfig::load(cfg_path.to_str().unwrap()).expect("config loads");
     assert_eq!(cfg.spec.workers, 4);
+    assert!(cfg.schedule.is_empty(), "no [schedule] table in this config");
 
-    let out = run_training(&cfg.spec, &cfg.task, cfg.partition).expect("training runs");
+    let out = Trainer::new(cfg.task.clone())
+        .spec(cfg.spec.clone())
+        .partition(cfg.partition)
+        .run()
+        .expect("training runs");
     assert!(out.final_loss() < out.initial_loss(), "training descends");
     assert_eq!(out.comm.rounds, 20); // 160 / 8
 
@@ -67,8 +72,56 @@ fn paper_defaults_run_every_algorithm() {
             features: 8,
             samples_per_worker: 32,
         };
-        let out = run_training(&spec, &task, vrl_sgd::config::Partition::Identical)
+        let out = Trainer::new(task)
+            .spec(spec)
+            .partition(vrl_sgd::config::Partition::Identical)
+            .run()
             .unwrap_or_else(|e| panic!("{algo:?}: {e}"));
         assert!(out.final_loss().is_finite());
     }
+}
+
+#[test]
+fn config_schedule_table_drives_the_builder() {
+    // the launcher's [schedule] -> Trainer mapping, end to end: a
+    // stagewise period config must produce the stage-pattern sync steps.
+    let toml_src = r#"
+partition = "label-sharded"
+
+[task]
+kind = "softmax-synthetic"
+classes = 4
+features = 8
+samples_per_worker = 32
+
+[spec]
+algorithm = "vrl-sgd"
+workers = 2
+period = 4
+lr = 0.05
+batch = 8
+steps = 40
+seed = 9
+
+[schedule]
+lr_decay_factor = 0.5
+lr_decay_every = 3
+period_stages = "2:4,2:8"
+"#;
+    let cfg = RunConfig::from_toml(toml_src).expect("config parses");
+    assert_eq!(cfg.schedule.period_stages, vec![(2, 4), (2, 8)]);
+
+    // same mapping the `vrl-sgd train` subcommand applies
+    let out = Trainer::new(cfg.task.clone())
+        .spec(cfg.spec.clone())
+        .partition(cfg.partition)
+        .schedules(&cfg.schedule)
+        .run()
+        .expect("training runs");
+
+    // periods 4,4,8,8 then the last stage's 8 persists: syncs at
+    // 4, 8, 16, 24, 32, 40
+    let steps: Vec<usize> = out.history.sync_rows.iter().map(|r| r.step).collect();
+    assert_eq!(steps, vec![4, 8, 16, 24, 32, 40]);
+    assert!(out.final_loss().is_finite());
 }

@@ -1,0 +1,279 @@
+//! Integration tests for the `Trainer` builder + `Session` redesign:
+//! shim equivalence (the deprecated free functions must be bitwise
+//! indistinguishable from the builder path), schedules end to end, and
+//! the paper's Σ Δ = 0 invariant with observers/schedules attached.
+
+#![allow(deprecated)] // exercising the shims is the point
+
+use vrl_sgd::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
+use vrl_sgd::coordinator::{run_training, run_with_engines, RunOptions, TrainOutput};
+use vrl_sgd::engine::build_pure_engines;
+use vrl_sgd::prelude::Trainer;
+use vrl_sgd::trainer::{
+    ConsensusTracker, ConstPeriod, CosineLr, CsvSink, Patience, StagewisePeriod, StepDecayLr,
+    StopAtLoss,
+};
+
+fn softmax_task() -> TaskKind {
+    TaskKind::SoftmaxSynthetic { classes: 5, features: 12, samples_per_worker: 48 }
+}
+
+fn spec_for(algorithm: AlgorithmKind) -> TrainSpec {
+    TrainSpec {
+        algorithm,
+        workers: 4,
+        period: 5,
+        lr: 0.05,
+        batch: 8,
+        steps: 80,
+        seed: 23,
+        easgd_rho: 0.9 / 4.0,
+        ..TrainSpec::default()
+    }
+}
+
+fn assert_identical(a: &TrainOutput, b: &TrainOutput, ctx: &str) {
+    assert_eq!(a.history, b.history, "{ctx}: history differs");
+    assert_eq!(a.comm, b.comm, "{ctx}: comm counters differ");
+    assert_eq!(a.final_params, b.final_params, "{ctx}: final params differ");
+    assert_eq!(a.delta_residual, b.delta_residual, "{ctx}: delta residual differs");
+    assert_eq!(a.algorithm, b.algorithm, "{ctx}: algorithm name differs");
+    assert_eq!(a.sim_time, b.sim_time, "{ctx}: simulated time differs");
+}
+
+/// Acceptance criterion: for a fixed seed, the deprecated `run_training`
+/// shim and the builder produce identical `TrainOutput` for all seven
+/// algorithms.
+#[test]
+fn run_training_shim_is_bitwise_identical_to_builder() {
+    for kind in AlgorithmKind::ALL {
+        let spec = spec_for(kind);
+        let task = softmax_task();
+        let old = run_training(&spec, &task, Partition::LabelSharded).unwrap();
+        let new = Trainer::new(task.clone())
+            .spec(spec.clone())
+            .partition(Partition::LabelSharded)
+            .run()
+            .unwrap();
+        assert_identical(&old, &new, &format!("{kind:?}"));
+    }
+}
+
+/// Same for the engine-level entry point, including dense metrics with a
+/// target and sparse evaluation.
+#[test]
+fn run_with_engines_shim_is_bitwise_identical_to_builder() {
+    let task = TaskKind::Quadratic { b: 3.0, noise: 0.5 };
+    for kind in AlgorithmKind::ALL {
+        let spec = TrainSpec {
+            batch: 1,
+            dense_metrics: true,
+            ..spec_for(kind)
+        };
+        let opts = RunOptions { target: Some(vec![0.0]), eval_every: 3 };
+        let (engines, _) = build_pure_engines(&task, Partition::LabelSharded, &spec).unwrap();
+        let old = run_with_engines(&spec, engines, &opts).unwrap();
+        let (engines, _) = build_pure_engines(&task, Partition::LabelSharded, &spec).unwrap();
+        let new = Trainer::from_engines(engines)
+            .spec(spec.clone())
+            .target(vec![0.0])
+            .eval_every(3)
+            .run()
+            .unwrap();
+        assert_identical(&old, &new, &format!("{kind:?} engines path"));
+        assert_eq!(new.history.dense_rows.len(), spec.steps);
+    }
+}
+
+/// Default schedules are what the seed hardcoded, so attaching them
+/// explicitly must change nothing either.
+#[test]
+fn explicit_const_schedules_match_defaults() {
+    let spec = spec_for(AlgorithmKind::VrlSgd);
+    let implicit = Trainer::new(softmax_task())
+        .spec(spec.clone())
+        .partition(Partition::LabelSharded)
+        .run()
+        .unwrap();
+    let explicit = Trainer::new(softmax_task())
+        .spec(spec.clone())
+        .partition(Partition::LabelSharded)
+        .lr_schedule(vrl_sgd::trainer::ConstLr(spec.lr))
+        .period_schedule(ConstPeriod(spec.period))
+        .run()
+        .unwrap();
+    assert_identical(&implicit, &explicit, "const schedules");
+}
+
+/// Acceptance criterion: the VRL-SGD Σ Δ = 0 invariant (paper §4.1)
+/// survives arbitrary schedules and observers — the correction terms
+/// cancel regardless of when syncs happen or what γ each round used.
+#[test]
+fn delta_sum_zero_invariant_with_schedules_and_observers() {
+    for warmup in [false, true] {
+        let algorithm =
+            if warmup { AlgorithmKind::VrlSgdWarmup } else { AlgorithmKind::VrlSgd };
+        let tracker = ConsensusTracker::shared();
+        let out = Trainer::new(softmax_task())
+            .algorithm(algorithm)
+            .workers(4)
+            .batch(8)
+            .steps(120)
+            .seed(31)
+            .partition(Partition::LabelSharded)
+            .lr_schedule(StepDecayLr::new(0.05, 0.5, 4))
+            .period_schedule(StagewisePeriod::new(vec![(3, 2), (3, 5), (usize::MAX, 9)]))
+            .observer(tracker.clone())
+            .run()
+            .unwrap();
+        assert!(
+            out.delta_residual < 2e-3,
+            "warmup={warmup}: Σ Δ residual {}",
+            out.delta_residual
+        );
+        let t = tracker.borrow();
+        assert_eq!(t.rounds, out.history.sync_rows.len());
+        assert!(t.peak_worker_variance >= 0.0);
+        assert!(out.final_loss() < out.initial_loss());
+    }
+}
+
+/// Acceptance criterion: a stagewise period schedule drives the round
+/// structure end to end (exact sync steps + comm accounting).
+#[test]
+fn stagewise_period_schedule_end_to_end() {
+    let out = Trainer::new(softmax_task())
+        .algorithm(AlgorithmKind::LocalSgd)
+        .workers(2)
+        .lr(0.05)
+        .batch(8)
+        .steps(60)
+        .seed(3)
+        .period_schedule(StagewisePeriod::new(vec![(2, 5), (2, 10), (usize::MAX, 15)]))
+        .run()
+        .unwrap();
+    // periods 5,5,10,10 then 15,15: syncs at 5,10,20,30,45,60
+    let steps: Vec<usize> = out.history.sync_rows.iter().map(|r| r.step).collect();
+    assert_eq!(steps, vec![5, 10, 20, 30, 45, 60]);
+    assert_eq!(out.comm.rounds, 6);
+    // doubling helper grows the period monotonically
+    let sched = StagewisePeriod::doubling(2, 3, 8);
+    let ks: Vec<usize> = (0..9).map(|r| vrl_sgd::trainer::PeriodSchedule::period(&sched, r)).collect();
+    assert_eq!(ks, vec![2, 2, 2, 4, 4, 4, 8, 8, 8]);
+}
+
+/// Acceptance criterion: a step-decay lr schedule is exercised end to
+/// end — the observed per-round γ follows the decay staircase.
+#[test]
+fn step_decay_lr_schedule_end_to_end() {
+    let seen = std::rc::Rc::new(std::cell::RefCell::new(Vec::<f32>::new()));
+    let sink = seen.clone();
+    let out = Trainer::new(softmax_task())
+        .algorithm(AlgorithmKind::VrlSgd)
+        .workers(2)
+        .period(5)
+        .batch(8)
+        .steps(60)
+        .seed(5)
+        .partition(Partition::LabelSharded)
+        .lr_schedule(StepDecayLr::new(0.08, 0.5, 4))
+        .observer(vrl_sgd::trainer::FnObserver(move |info: &vrl_sgd::trainer::RoundInfo| {
+            sink.borrow_mut().push(info.lr)
+        }))
+        .run()
+        .unwrap();
+    let lrs = seen.borrow();
+    assert_eq!(lrs.len(), 12);
+    assert!(lrs[..4].iter().all(|&g| (g - 0.08).abs() < 1e-7), "{lrs:?}");
+    assert!(lrs[4..8].iter().all(|&g| (g - 0.04).abs() < 1e-7), "{lrs:?}");
+    assert!(lrs[8..].iter().all(|&g| (g - 0.02).abs() < 1e-7), "{lrs:?}");
+    assert!(out.final_loss() < out.initial_loss());
+
+    // and the decayed run really differs from the constant-lr run
+    let const_run = Trainer::new(softmax_task())
+        .algorithm(AlgorithmKind::VrlSgd)
+        .workers(2)
+        .period(5)
+        .batch(8)
+        .steps(60)
+        .seed(5)
+        .partition(Partition::LabelSharded)
+        .lr(0.08)
+        .run()
+        .unwrap();
+    assert_ne!(out.final_params, const_run.final_params);
+}
+
+#[test]
+fn cosine_lr_descends() {
+    let out = Trainer::new(softmax_task())
+        .algorithm(AlgorithmKind::VrlSgd)
+        .workers(2)
+        .period(5)
+        .batch(8)
+        .steps(100)
+        .partition(Partition::LabelSharded)
+        .lr_schedule(CosineLr { base: 0.08, min: 0.005, total_steps: 100 })
+        .run()
+        .unwrap();
+    assert!(out.final_loss() < out.initial_loss());
+}
+
+#[test]
+fn early_stopping_policies_cut_rounds() {
+    let mk = || {
+        Trainer::new(softmax_task())
+            .algorithm(AlgorithmKind::VrlSgd)
+            .workers(4)
+            .period(5)
+            .lr(0.05)
+            .batch(8)
+            .steps(200)
+            .seed(23)
+            .partition(Partition::LabelSharded)
+    };
+    let full = mk().run().unwrap();
+    let target = (full.initial_loss() + full.final_loss()) / 2.0;
+    let stopped = mk().early_stop(StopAtLoss(target)).run().unwrap();
+    assert!(stopped.history.sync_rows.len() < full.history.sync_rows.len());
+    assert!(stopped.final_loss() <= target);
+    // patience: a tiny run with an impossible improvement bar stops fast
+    let impatient = mk().early_stop(Patience::new(2, 1e9)).run().unwrap();
+    assert!(
+        impatient.history.sync_rows.len() <= 3,
+        "patience 2 with absurd min_delta should stop within 3 rounds, ran {}",
+        impatient.history.sync_rows.len()
+    );
+}
+
+#[test]
+fn csv_sink_streams_what_history_buffers() {
+    let dir = std::env::temp_dir().join(format!("vrl_trainer_api_{}", std::process::id()));
+    let path = dir.join("stream.csv");
+    let path_s = path.to_str().unwrap().to_string();
+    let mk = || {
+        Trainer::new(softmax_task())
+            .algorithm(AlgorithmKind::VrlSgd)
+            .workers(2)
+            .period(4)
+            .lr(0.05)
+            .batch(8)
+            .steps(40)
+            .seed(7)
+            .partition(Partition::LabelSharded)
+    };
+    let streamed = mk()
+        .sink(CsvSink::file(&path_s).unwrap())
+        .stream_only()
+        .run()
+        .unwrap();
+    let buffered = mk().run().unwrap();
+    // the streamed file carries the full record even though the in-memory
+    // history kept only the last row
+    let csv = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(csv, buffered.history.sync_csv());
+    assert_eq!(streamed.history.sync_rows.len(), 1);
+    assert_eq!(streamed.final_loss(), buffered.final_loss());
+    assert_eq!(streamed.final_params, buffered.final_params);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,12 +1,14 @@
 //! Integration tests over the real PJRT runtime + AOT artifacts.
 //!
-//! These need `make artifacts` to have run; each test skips (with a
-//! message) when the artifacts are missing so `cargo test` stays green on
-//! a fresh checkout.
+//! These need the `xla` feature AND `make artifacts` to have run; each
+//! test skips (with a message) otherwise, so default offline
+//! `cargo test -q` stays green on a fresh checkout — without the
+//! feature, `Runtime::artifacts_available` is the stub and always
+//! reports false.
 
 use vrl_sgd::config::{AlgorithmKind, Partition, TrainSpec};
-use vrl_sgd::coordinator::{run_with_engines, RunOptions};
 use vrl_sgd::data::generators;
+use vrl_sgd::trainer::Trainer;
 use vrl_sgd::engine::{MlpEngine, StepEngine};
 use vrl_sgd::rng::Pcg32;
 use vrl_sgd::runtime::{build_xla_engines, Runtime, WorkerData, XlaEngine};
@@ -20,7 +22,7 @@ fn artifacts_dir() -> std::path::PathBuf {
 macro_rules! require_artifacts {
     ($($name:expr),*) => {
         if !Runtime::artifacts_available(&artifacts_dir(), &[$($name),*]) {
-            eprintln!("skipping: run `make artifacts` first");
+            eprintln!("skipping: needs the `xla` feature and `make artifacts`");
             return;
         }
     };
@@ -138,8 +140,7 @@ fn vrl_beats_local_on_noniid_mlp_artifact() {
         };
         let engines = build_xla_engines(&rt, "mlp", &spec, Partition::LabelSharded, 96)
             .expect("engines");
-        run_with_engines(&spec, engines, &RunOptions { target: None, eval_every: 2 })
-            .expect("train")
+        Trainer::from_engines(engines).spec(spec).eval_every(2).run().expect("train")
     };
     let local = run(AlgorithmKind::LocalSgd);
     let vrl = run(AlgorithmKind::VrlSgd);
@@ -170,8 +171,7 @@ fn transformer_lm_descends_through_stack() {
     let engines =
         build_xla_engines(&rt, "transformer", &spec, Partition::LabelSharded, 256)
             .expect("engines");
-    let out = run_with_engines(&spec, engines, &RunOptions { target: None, eval_every: 2 })
-        .expect("train");
+    let out = Trainer::from_engines(engines).spec(spec).eval_every(2).run().expect("train");
     assert!(
         out.final_loss() < out.initial_loss(),
         "LM loss should drop: {} -> {}",
