@@ -15,6 +15,12 @@ fn main() {
     );
 
     for algorithm in [AlgorithmKind::SSgd, AlgorithmKind::LocalSgd, AlgorithmKind::VrlSgd] {
+        // Worker-parallel rounds (auto-sized to the machine) are bitwise
+        // identical to the sequential executor, so they are a pure
+        // wall-clock knob — but the round executor spawns threads per
+        // round, so they only pay off when each round carries real work.
+        // S-SGD syncs every single step: keep it sequential.
+        let threads = if algorithm == AlgorithmKind::SSgd { 1 } else { 0 };
         let out = Trainer::new(task.clone())
             .algorithm(algorithm)
             .partition(Partition::LabelSharded)
@@ -24,6 +30,7 @@ fn main() {
             .batch(32)
             .steps(1000)
             .seed(7)
+            .parallelism(threads)
             .run()
             .expect("training failed");
         println!(

@@ -6,13 +6,15 @@
 //!   * executable ring allreduce reference
 //!   * pure-rust engine steps (softmax, MLP)
 //!   * the full sync round (average + Δ update) at transformer scale
+//!   * sequential vs threaded round executor (8-worker softmax rounds)
 //!   * XLA artifact step latency (when artifacts are present)
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 
 use vrl_sgd::benchutil::{bench, report, report_throughput};
-use vrl_sgd::config::{Partition, TaskKind, TrainSpec};
+use vrl_sgd::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
 use vrl_sgd::engine::build_pure_engines;
+use vrl_sgd::prelude::Trainer;
 use vrl_sgd::rng::Pcg32;
 use vrl_sgd::tensor;
 
@@ -110,9 +112,10 @@ fn main() {
         use vrl_sgd::comm::{AllReduceAlgo, Cluster};
         use vrl_sgd::coordinator::algorithms::{Algorithm, VrlSgd, WorkerState};
         let root = Pcg32::new(9, 9);
+        let zeros = vec![0.0f32; p];
         let mut workers: Vec<WorkerState> = (0..n)
             .map(|i| {
-                let mut w = WorkerState::new(i, &vec![0.0f32; p], &root);
+                let mut w = WorkerState::new(i, &zeros, &root);
                 Pcg32::new(i as u64, 7).fill_normal(&mut w.params, 1.0);
                 w
             })
@@ -127,6 +130,64 @@ fn main() {
             std::hint::black_box(&workers);
         });
         report_throughput(&r, (n * p * 4) as f64 / 1e9, "GB");
+    }
+    println!();
+
+    // --- threaded round executor: 8-worker softmax training ---------------
+    // The acceptance case for `Trainer::parallelism`: identical work,
+    // sequential vs threaded; the speedup at 4 threads should approach
+    // min(4, cores) on an idle machine, and the outputs are required to
+    // be bitwise identical (asserted below, not just claimed).
+    {
+        let task = TaskKind::SoftmaxSynthetic {
+            classes: 10,
+            features: 256,
+            samples_per_worker: 1024,
+        };
+        let train = |threads: usize| {
+            Trainer::new(task.clone())
+                .algorithm(AlgorithmKind::VrlSgd)
+                .partition(Partition::LabelSharded)
+                .workers(8)
+                .period(25)
+                .lr(0.05)
+                .batch(32)
+                .steps(300)
+                .seed(7)
+                // skip per-round full-shard loss evals: time the round
+                // executor, not the (single-threaded) metrics path
+                .eval_every(usize::MAX)
+                .parallelism(threads)
+                .run()
+                .expect("bench run")
+        };
+        let seq = bench("train 8-worker softmax seq", 1, 5, || {
+            std::hint::black_box(train(1));
+        });
+        report(&seq);
+        let mut baseline = None;
+        for threads in [2usize, 4, 8] {
+            let r = bench(&format!("train 8-worker softmax t={threads}"), 1, 5, || {
+                std::hint::black_box(train(threads));
+            });
+            report(&r);
+            if threads == 4 {
+                baseline = Some(seq.median_s / r.median_s);
+            }
+        }
+        let out_seq = train(1);
+        let out_thr = train(4);
+        assert_eq!(out_seq.final_params, out_thr.final_params, "executor not bitwise!");
+        assert_eq!(out_seq.history, out_thr.history, "executor not bitwise!");
+        let speedup = baseline.unwrap_or(0.0);
+        println!(
+            "  threaded speedup at 4 threads: {speedup:.2}x (bitwise-identical output)"
+        );
+        if speedup < 2.0 {
+            println!(
+                "  note: < 2x — expected on machines with fewer than 4 idle cores"
+            );
+        }
     }
     println!();
 

@@ -131,13 +131,12 @@ impl Cluster {
             r.copy_from_slice(src);
         }
         let bytes = src.len() * 4;
-        let (msgs, total_bytes, time) = match self.algo {
-            // tree broadcast: ceil(log2 N) serial hops, N-1 messages
-            _ => {
-                let n = self.workers as u64;
-                let hops = (64 - (n - 1).leading_zeros().min(63)) as f64;
-                ((n - 1), (n - 1) * bytes as u64, hops * self.net.message_cost(bytes))
-            }
+        // tree broadcast regardless of the allreduce algorithm:
+        // ceil(log2 N) serial hops, N-1 messages
+        let (msgs, total_bytes, time) = {
+            let n = self.workers as u64;
+            let hops = (64 - (n - 1).leading_zeros().min(63)) as f64;
+            ((n - 1), (n - 1) * bytes as u64, hops * self.net.message_cost(bytes))
         };
         self.stats.rounds += 1;
         self.stats.messages += msgs;
@@ -147,7 +146,9 @@ impl Cluster {
 
     /// Charge one allreduce of `dim` f32 elements without moving data —
     /// for algorithms whose data movement happens elsewhere but whose wire
-    /// traffic equals one model allreduce (e.g. EASGD's elastic exchange).
+    /// traffic equals one model allreduce (e.g. EASGD's elastic exchange)
+    /// or a fused multiple of it (momentum Local SGD charges a single
+    /// `2P` collective for its [params ‖ momentum] sync).
     pub fn charge_allreduce(&mut self, dim: usize) {
         self.charge(dim);
     }
@@ -186,7 +187,7 @@ mod tests {
         let mut rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 9.0]];
         cl.average(&mut rows);
         for r in &rows {
-            assert_eq!(r, &vec![3.0, 5.0]);
+            assert_eq!(r, &[3.0, 5.0]);
         }
         assert_eq!(cl.stats().rounds, 1);
         assert!(cl.stats().bytes > 0);

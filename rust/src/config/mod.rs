@@ -248,6 +248,12 @@ pub struct TrainSpec {
     /// Record per-step (not just per-sync) metrics — slower, used by the
     /// Appendix-E figures that plot every iteration.
     pub dense_metrics: bool,
+    /// Round-executor threads: `> 1` drives each round's local
+    /// iterations worker-parallel on that many OS threads (bitwise
+    /// identical to sequential); `0` defers to the `VRL_SGD_THREADS`
+    /// environment variable, then sequential. See
+    /// `trainer::Trainer::parallelism`.
+    pub threads: usize,
 }
 
 impl Default for TrainSpec {
@@ -265,6 +271,7 @@ impl Default for TrainSpec {
             seed: 42,
             network: NetworkSpec::default(),
             dense_metrics: false,
+            threads: 0,
         }
     }
 }
@@ -330,6 +337,7 @@ impl TrainSpec {
                 bandwidth_gbps: doc.f64_or("spec.bandwidth_gbps", d.network.bandwidth_gbps),
             },
             dense_metrics: doc.bool_or("spec.dense_metrics", d.dense_metrics),
+            threads: doc.usize_or("spec.threads", d.threads),
         })
     }
 }
@@ -509,6 +517,20 @@ mod tests {
             }
             other => panic!("wrong task {other:?}"),
         }
+    }
+
+    #[test]
+    fn threads_knob_parses_and_defaults_to_auto() {
+        let cfg = RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[spec]\nthreads = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.spec.threads, 4);
+        let cfg = RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.spec.threads, 0);
     }
 
     #[test]

@@ -7,11 +7,46 @@
 //! [`crate::trainer::PeriodSchedule`] — (each iteration is
 //! `x_i ← x_i − γ(∇f_i(x_i;ξ) − Δ_i)`, with `Δ_i ≡ 0` unless the
 //! algorithm populates it), then calls [`Algorithm::sync`]. Everything
-//! that distinguishes the methods lives in `period` and `sync`.
+//! that distinguishes the methods lives in `period`, `sync` and the
+//! per-worker [`StepCorrector`] an algorithm may attach.
+//!
+//! The hot loop is data-parallel by construction: all per-step mutable
+//! state is per-worker (`WorkerState`, including its corrector), so the
+//! trainer's round executor may run workers on separate threads and still
+//! produce bitwise-identical trajectories.
 
 use crate::comm::Cluster;
 use crate::config::{AlgorithmKind, TrainSpec};
 use crate::rng::Pcg32;
+
+/// Per-worker hook run after every local engine step. This is where
+/// momentum-style methods keep their per-worker optimizer state: the
+/// state lives with the worker (not on the shared [`Algorithm`]), so the
+/// step loop has no cross-worker `&mut` aliasing and parallel executors
+/// stay bitwise-deterministic.
+pub trait StepCorrector: Send + std::fmt::Debug {
+    /// Adjust `params` after the engine applied `x ← x − γ(g − Δ)`.
+    /// `before` is the parameter vector prior to the engine's update, so
+    /// `(before − params)/γ` recovers the applied stochastic direction.
+    fn post_step(&mut self, params: &mut [f32], before: &[f32], lr: f32);
+
+    /// Flat state the algorithm's `sync` may average across workers
+    /// (e.g. the momentum buffer). `None` when the corrector keeps no
+    /// shareable state.
+    fn shared_state(&mut self) -> Option<&mut Vec<f32>> {
+        None
+    }
+
+    /// Clone into a box (correctors ride inside `WorkerState`, which is
+    /// `Clone` for checkpoint-style snapshots).
+    fn clone_box(&self) -> Box<dyn StepCorrector>;
+}
+
+impl Clone for Box<dyn StepCorrector> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
 
 /// Per-worker mutable state owned by the training loop.
 #[derive(Debug, Clone)]
@@ -22,6 +57,9 @@ pub struct WorkerState {
     pub delta: Vec<f32>,
     /// This worker's private sampling stream.
     pub rng: Pcg32,
+    /// Post-step hook state (momentum buffer etc.), attached by the
+    /// session from [`Algorithm::corrector`]; `None` for most algorithms.
+    pub corrector: Option<Box<dyn StepCorrector>>,
 }
 
 impl WorkerState {
@@ -31,6 +69,7 @@ impl WorkerState {
             params: params0.to_vec(),
             delta: vec![0.0; params0.len()],
             rng: root.split(i as u64),
+            corrector: None,
         }
     }
 }
@@ -58,33 +97,33 @@ pub trait Algorithm: Send {
         cluster: &mut Cluster,
     );
 
-    /// True when the algorithm needs [`Algorithm::post_step`] after every
-    /// local iteration (the training loop then snapshots pre-step params,
-    /// which costs one extra copy per step — only momentum methods pay it).
-    fn wants_post_step(&self) -> bool {
-        false
+    /// Fresh per-worker post-step corrector, or `None` when the
+    /// algorithm has no per-step hook. Called once per worker at session
+    /// start; the trainer then snapshots pre-step params each iteration
+    /// (one extra copy per step — only momentum methods pay it).
+    fn corrector(&self) -> Option<Box<dyn StepCorrector>> {
+        None
     }
 
-    /// Hook after worker `worker`'s local step. `before` is the parameter
-    /// vector prior to the engine's update; the engine has already applied
-    /// `x ← x − γ(g − Δ)`, so `(before − params)/γ` recovers the applied
-    /// stochastic direction.
-    fn post_step(&mut self, _worker: usize, _params: &mut [f32], _before: &[f32], _lr: f32) {}
+    /// Flush any state still in flight after the last round (default
+    /// no-op). CoCoD-SGD applies its pending overlapped correction here
+    /// so the final averaged model includes the last round's allreduce.
+    fn finalize(&mut self, _workers: &mut [WorkerState], _cluster: &mut Cluster) {}
 }
 
 /// Build the algorithm named by `spec`, given the shared initial model
 /// (EASGD needs it to seed the center variable).
 pub fn make_algorithm(spec: &TrainSpec, params0: &[f32]) -> Box<dyn Algorithm> {
     match spec.algorithm {
-        AlgorithmKind::SSgd => Box::new(SSgd),
-        AlgorithmKind::LocalSgd => Box::new(LocalSgd { k: spec.period }),
+        AlgorithmKind::SSgd => Box::new(SSgd::new()),
+        AlgorithmKind::LocalSgd => Box::new(LocalSgd::new(spec.period)),
         AlgorithmKind::VrlSgd => Box::new(VrlSgd { k: spec.period, warmup: false }),
         AlgorithmKind::VrlSgdWarmup => Box::new(VrlSgd { k: spec.period, warmup: true }),
         AlgorithmKind::Easgd => {
             Box::new(Easgd { k: spec.period, rho: spec.easgd_rho, center: params0.to_vec() })
         }
         AlgorithmKind::MomentumLocalSgd => {
-            Box::new(MomentumLocalSgd::new(spec.period, spec.momentum, spec.workers))
+            Box::new(MomentumLocalSgd::new(spec.period, spec.momentum))
         }
         AlgorithmKind::CocodSgd => Box::new(CocodSgd::new(spec.period)),
     }
@@ -92,7 +131,17 @@ pub fn make_algorithm(spec: &TrainSpec, params0: &[f32]) -> Box<dyn Algorithm> {
 
 /// Synchronous SGD: average models after every single step (with one
 /// step between averages this is identical to gradient averaging).
-pub struct SSgd;
+#[derive(Default)]
+pub struct SSgd {
+    mean: Vec<f32>,
+}
+
+impl SSgd {
+    /// New instance.
+    pub fn new() -> Self {
+        SSgd::default()
+    }
+}
 
 impl Algorithm for SSgd {
     fn name(&self) -> &'static str {
@@ -111,7 +160,7 @@ impl Algorithm for SSgd {
         workers: &mut [WorkerState],
         cluster: &mut Cluster,
     ) {
-        average_params(workers, cluster);
+        average_params(workers, cluster, &mut self.mean);
     }
 }
 
@@ -119,6 +168,14 @@ impl Algorithm for SSgd {
 pub struct LocalSgd {
     /// Default communication period k (used when no schedule overrides).
     pub k: usize,
+    mean: Vec<f32>,
+}
+
+impl LocalSgd {
+    /// New instance with default period `k`.
+    pub fn new(k: usize) -> Self {
+        LocalSgd { k, mean: Vec::new() }
+    }
 }
 
 impl Algorithm for LocalSgd {
@@ -138,7 +195,7 @@ impl Algorithm for LocalSgd {
         workers: &mut [WorkerState],
         cluster: &mut Cluster,
     ) {
-        average_params(workers, cluster);
+        average_params(workers, cluster, &mut self.mean);
     }
 }
 
@@ -249,6 +306,49 @@ impl Algorithm for Easgd {
     }
 }
 
+/// Per-worker heavy-ball state for [`MomentumLocalSgd`]: holds this
+/// worker's momentum buffer `m` and applies the momentum tail after the
+/// engine's plain SGD update.
+#[derive(Debug, Clone)]
+pub struct MomentumCorrector {
+    /// Momentum coefficient β.
+    beta: f32,
+    /// Momentum buffer `m` (lazily sized on the first step).
+    m: Vec<f32>,
+}
+
+impl MomentumCorrector {
+    /// Fresh corrector with coefficient `beta`.
+    pub fn new(beta: f32) -> Self {
+        MomentumCorrector { beta, m: Vec::new() }
+    }
+}
+
+impl StepCorrector for MomentumCorrector {
+    fn post_step(&mut self, params: &mut [f32], before: &[f32], lr: f32) {
+        if self.m.is_empty() {
+            self.m.resize(params.len(), 0.0);
+        }
+        // engine applied x ← x − γ g; add the momentum tail −γ β m_{t−1}
+        // and fold g into the buffer: m_t = β m_{t−1} + g.
+        let beta = self.beta;
+        let inv_lr = 1.0 / lr;
+        for ((p, &b), mi) in params.iter_mut().zip(before.iter()).zip(self.m.iter_mut()) {
+            let g = (b - *p) * inv_lr;
+            *p -= lr * beta * *mi;
+            *mi = beta * *mi + g;
+        }
+    }
+
+    fn shared_state(&mut self) -> Option<&mut Vec<f32>> {
+        Some(&mut self.m)
+    }
+
+    fn clone_box(&self) -> Box<dyn StepCorrector> {
+        Box::new(self.clone())
+    }
+}
+
 /// Local SGD with momentum (Yu et al. 2019a): every worker runs
 /// heavy-ball SGD locally (`m ← β m + g; x ← x − γ m`), and each sync
 /// averages both the models *and* the momentum buffers — the scheme whose
@@ -259,14 +359,14 @@ pub struct MomentumLocalSgd {
     pub k: usize,
     /// Momentum coefficient β.
     pub beta: f32,
-    /// Per-worker momentum buffers (lazily sized on first step).
-    momenta: Vec<Vec<f32>>,
+    mean: Vec<f32>,
+    mom_mean: Vec<f32>,
 }
 
 impl MomentumLocalSgd {
-    /// New instance for `n` workers.
-    pub fn new(k: usize, beta: f32, n: usize) -> Self {
-        MomentumLocalSgd { k, beta, momenta: vec![Vec::new(); n] }
+    /// New instance.
+    pub fn new(k: usize, beta: f32) -> Self {
+        MomentumLocalSgd { k, beta, mean: Vec::new(), mom_mean: Vec::new() }
     }
 }
 
@@ -279,24 +379,8 @@ impl Algorithm for MomentumLocalSgd {
         base
     }
 
-    fn wants_post_step(&self) -> bool {
-        true
-    }
-
-    fn post_step(&mut self, worker: usize, params: &mut [f32], before: &[f32], lr: f32) {
-        let m = &mut self.momenta[worker];
-        if m.is_empty() {
-            m.resize(params.len(), 0.0);
-        }
-        // engine applied x ← x − γ g; add the momentum tail −γ β m_{t−1}
-        // and fold g into the buffer: m_t = β m_{t−1} + g.
-        let beta = self.beta;
-        let inv_lr = 1.0 / lr;
-        for ((p, &b), mi) in params.iter_mut().zip(before.iter()).zip(m.iter_mut()) {
-            let g = (b - *p) * inv_lr;
-            *p -= lr * beta * *mi;
-            *mi = beta * *mi + g;
-        }
+    fn corrector(&self) -> Option<Box<dyn StepCorrector>> {
+        Some(Box::new(MomentumCorrector::new(self.beta)))
     }
 
     fn sync(
@@ -307,20 +391,41 @@ impl Algorithm for MomentumLocalSgd {
         workers: &mut [WorkerState],
         cluster: &mut Cluster,
     ) {
-        average_params(workers, cluster);
-        // average the momentum buffers too (same collective, folded into
-        // the round: wire traffic is 2P — charged as a second allreduce's
-        // bytes on the same round via charge below being part of average?
-        // Keep accounting honest: one extra buffer allreduce, same round.
+        let n = workers.len();
         let dim = workers[0].params.len();
-        let live: Vec<&[f32]> =
-            self.momenta.iter().filter(|m| !m.is_empty()).map(|m| m.as_slice()).collect();
-        if live.len() == workers.len() {
-            let mut mean = vec![0.0f32; dim];
-            crate::tensor::mean_rows(&mut mean, &live);
-            for m in self.momenta.iter_mut() {
-                m.copy_from_slice(&mean);
+        // Model average — first half of the round's collective.
+        self.mean.resize(dim, 0.0);
+        {
+            let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
+            crate::tensor::mean_rows(&mut self.mean, &rows);
+        }
+        for w in workers.iter_mut() {
+            w.params.copy_from_slice(&self.mean);
+        }
+        // Momentum-buffer average — second half. Both rides share one
+        // sync barrier, so we charge a single fused allreduce of
+        // [params ‖ momentum]: 2P f32 on the wire (the accounting the
+        // old code promised but never performed — comm_bytes used to
+        // underreport this algorithm by ~2×).
+        let mut states: Vec<&mut Vec<f32>> = workers
+            .iter_mut()
+            .filter_map(|w| w.corrector.as_mut().and_then(|c| c.shared_state()))
+            .filter(|m| !m.is_empty())
+            .collect();
+        if states.len() == n {
+            self.mom_mean.resize(dim, 0.0);
+            {
+                let rows: Vec<&[f32]> = states.iter().map(|m| m.as_slice()).collect();
+                crate::tensor::mean_rows(&mut self.mom_mean, &rows);
             }
+            for m in states.iter_mut() {
+                m.copy_from_slice(&self.mom_mean);
+            }
+            cluster.charge_allreduce(2 * dim);
+        } else {
+            // No momentum state attached (e.g. driven outside the
+            // session before any step): only the model moved.
+            cluster.charge_allreduce(dim);
         }
     }
 }
@@ -344,6 +449,16 @@ impl CocodSgd {
     pub fn new(k: usize) -> Self {
         CocodSgd { k, pending: None }
     }
+
+    fn apply_pending(&mut self, workers: &mut [WorkerState]) {
+        if let Some((mean, snaps)) = self.pending.take() {
+            for (w, snap) in workers.iter_mut().zip(snaps.iter()) {
+                for ((p, &m), &s) in w.params.iter_mut().zip(mean.iter()).zip(snap.iter()) {
+                    *p += m - s;
+                }
+            }
+        }
+    }
 }
 
 impl Algorithm for CocodSgd {
@@ -364,13 +479,7 @@ impl Algorithm for CocodSgd {
         cluster: &mut Cluster,
     ) {
         // apply the correction from the allreduce launched last period
-        if let Some((mean, snaps)) = self.pending.take() {
-            for (w, snap) in workers.iter_mut().zip(snaps.iter()) {
-                for ((p, &m), &s) in w.params.iter_mut().zip(mean.iter()).zip(snap.iter()) {
-                    *p += m - s;
-                }
-            }
-        }
+        self.apply_pending(workers);
         // snapshot + launch the (simulated) overlapped allreduce
         let dim = workers[0].params.len();
         let snaps: Vec<Vec<f32>> = workers.iter().map(|w| w.params.clone()).collect();
@@ -379,14 +488,27 @@ impl Algorithm for CocodSgd {
         cluster.average_into(&refs, &mut mean);
         self.pending = Some((mean, snaps));
     }
+
+    fn finalize(&mut self, workers: &mut [WorkerState], _cluster: &mut Cluster) {
+        // The last round's allreduce was already launched (and charged)
+        // in `sync`; without this flush its result would be dropped and
+        // the final averaged model would miss one correction.
+        self.apply_pending(workers);
+    }
 }
 
-/// Shared helper: replace every worker's model with the exact mean.
-fn average_params(workers: &mut [WorkerState], cluster: &mut Cluster) {
-    let mut rows: Vec<Vec<f32>> = workers.iter().map(|w| w.params.clone()).collect();
-    cluster.average(&mut rows);
-    for (w, r) in workers.iter_mut().zip(rows.into_iter()) {
-        w.params = r;
+/// Shared helper: replace every worker's model with the exact mean,
+/// reducing into the caller's reusable `mean` buffer (no per-sync row
+/// clones — see §Perf log).
+fn average_params(workers: &mut [WorkerState], cluster: &mut Cluster, mean: &mut Vec<f32>) {
+    let dim = workers[0].params.len();
+    mean.resize(dim, 0.0);
+    {
+        let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
+        cluster.average_into(&rows, mean);
+    }
+    for w in workers.iter_mut() {
+        w.params.copy_from_slice(mean);
     }
 }
 
@@ -416,7 +538,7 @@ mod tests {
     fn local_sgd_sync_averages() {
         let mut ws = states(&[vec![0.0, 2.0], vec![4.0, 6.0]]);
         let mut cl = cluster(2);
-        LocalSgd { k: 5 }.sync(0, 5, 0.1, &mut ws, &mut cl);
+        LocalSgd::new(5).sync(0, 5, 0.1, &mut ws, &mut cl);
         assert_eq!(ws[0].params, vec![2.0, 4.0]);
         assert_eq!(ws[1].params, vec![2.0, 4.0]);
         // delta untouched
@@ -468,7 +590,7 @@ mod tests {
 
     #[test]
     fn ssgd_period_is_always_one() {
-        let a = SSgd;
+        let a = SSgd::new();
         assert_eq!(a.period(0, 20), 1);
         assert_eq!(a.period(99, 5), 1);
     }
@@ -492,39 +614,55 @@ mod tests {
     }
 
     #[test]
-    fn momentum_post_step_matches_heavy_ball() {
+    fn momentum_corrector_matches_heavy_ball() {
         // one worker, two manual "engine" steps with known gradients;
         // post_step must reproduce m_t = β m + g, x ← x − γ(g + β m).
         let gamma = 0.1f32;
         let beta = 0.5f32;
-        let mut algo = MomentumLocalSgd::new(4, beta, 1);
+        let mut c = MomentumCorrector::new(beta);
         let mut x = vec![1.0f32];
         // step 1: g = 2 → engine applies x ← 1 − 0.1·2 = 0.8
         let before = x.clone();
         x[0] -= gamma * 2.0;
-        algo.post_step(0, &mut x, &before, gamma);
+        c.post_step(&mut x, &before, gamma);
         // m was 0 ⇒ no extra displacement; m = 2
         assert!((x[0] - 0.8).abs() < 1e-6);
         // step 2: g = 1 → engine x ← 0.8 − 0.1 = 0.7
         let before = x.clone();
         x[0] -= gamma * 1.0;
-        algo.post_step(0, &mut x, &before, gamma);
+        c.post_step(&mut x, &before, gamma);
         // extra −γβm = −0.1·0.5·2 = −0.1 ⇒ x = 0.6 ; m = 0.5·2 + 1 = 2
         assert!((x[0] - 0.6).abs() < 1e-6, "x = {}", x[0]);
-        assert!((algo.momenta[0][0] - 2.0).abs() < 1e-5);
+        assert!((c.shared_state().unwrap()[0] - 2.0).abs() < 1e-5);
+    }
+
+    fn seed_momentum(w: &mut WorkerState, algo: &MomentumLocalSgd, m: &[f32]) {
+        let mut c = algo.corrector().unwrap();
+        c.shared_state().unwrap().extend_from_slice(m);
+        w.corrector = Some(c);
     }
 
     #[test]
-    fn momentum_sync_averages_buffers() {
-        let mut algo = MomentumLocalSgd::new(4, 0.9, 2);
-        algo.momenta[0] = vec![1.0, 3.0];
-        algo.momenta[1] = vec![3.0, 1.0];
+    fn momentum_sync_averages_buffers_and_charges_2p() {
+        let mut algo = MomentumLocalSgd::new(4, 0.9);
         let mut ws = states(&[vec![0.0, 0.0], vec![2.0, 2.0]]);
+        seed_momentum(&mut ws[0], &algo, &[1.0, 3.0]);
+        seed_momentum(&mut ws[1], &algo, &[3.0, 1.0]);
         let mut cl = cluster(2);
         algo.sync(0, 4, 0.1, &mut ws, &mut cl);
         assert_eq!(ws[0].params, vec![1.0, 1.0]);
-        assert_eq!(algo.momenta[0], vec![2.0, 2.0]);
-        assert_eq!(algo.momenta[1], vec![2.0, 2.0]);
+        let m0 = ws[0].corrector.as_mut().unwrap().shared_state().unwrap().clone();
+        let m1 = ws[1].corrector.as_mut().unwrap().shared_state().unwrap().clone();
+        assert_eq!(m0, vec![2.0, 2.0]);
+        assert_eq!(m1, vec![2.0, 2.0]);
+        // both allreduces ride one collective: bytes must equal a plain
+        // Local SGD sync on a 2×-dim model, in a single comm round
+        let mut lref = LocalSgd::new(4);
+        let mut ws_ref = states(&[vec![0.0; 4], vec![2.0; 4]]);
+        let mut cl_ref = cluster(2);
+        lref.sync(0, 4, 0.1, &mut ws_ref, &mut cl_ref);
+        assert_eq!(cl.stats().rounds, 1);
+        assert_eq!(cl.stats().bytes, cl_ref.stats().bytes);
     }
 
     #[test]
@@ -546,6 +684,24 @@ mod tests {
     }
 
     #[test]
+    fn cocod_finalize_flushes_pending_correction() {
+        let mut algo = CocodSgd::new(3);
+        let mut ws = states(&[vec![0.0], vec![4.0]]);
+        let mut cl = cluster(2);
+        algo.sync(0, 3, 0.1, &mut ws, &mut cl);
+        let rounds_after_sync = cl.stats().rounds;
+        // the run ends here: the flush must apply the in-flight mean
+        algo.finalize(&mut ws, &mut cl);
+        assert_eq!(ws[0].params, vec![2.0]);
+        assert_eq!(ws[1].params, vec![2.0]);
+        // flushing consumes the already-charged allreduce: no new round
+        assert_eq!(cl.stats().rounds, rounds_after_sync);
+        // and a second finalize is a no-op
+        algo.finalize(&mut ws, &mut cl);
+        assert_eq!(ws[0].params, vec![2.0]);
+    }
+
+    #[test]
     fn make_algorithm_dispatch() {
         let p0 = vec![0.0f32; 3];
         for kind in AlgorithmKind::ALL {
@@ -556,12 +712,34 @@ mod tests {
     }
 
     #[test]
+    fn only_momentum_attaches_a_corrector() {
+        let p0 = vec![0.0f32; 3];
+        for kind in AlgorithmKind::ALL {
+            let spec = TrainSpec { algorithm: kind, ..TrainSpec::default() };
+            let a = make_algorithm(&spec, &p0);
+            assert_eq!(
+                a.corrector().is_some(),
+                kind == AlgorithmKind::MomentumLocalSgd,
+                "algo {}",
+                a.name()
+            );
+        }
+    }
+
+    #[test]
     fn every_sync_charges_exactly_one_round() {
         let p0 = vec![0.0f32; 4];
         for kind in AlgorithmKind::ALL {
             let spec = TrainSpec { algorithm: kind, period: 3, ..TrainSpec::default() };
             let mut algo = make_algorithm(&spec, &p0);
             let mut ws = states(&[vec![1.0; 4], vec![2.0; 4]]);
+            for w in ws.iter_mut() {
+                w.corrector = algo.corrector();
+                // size the shared state as one post-step would
+                if let Some(m) = w.corrector.as_mut().and_then(|c| c.shared_state()) {
+                    m.resize(4, 0.0);
+                }
+            }
             let mut cl = cluster(2);
             algo.sync(0, 3, 0.1, &mut ws, &mut cl);
             assert_eq!(cl.stats().rounds, 1, "algo {}", algo.name());

@@ -23,7 +23,7 @@
 
 pub mod algorithms;
 
-pub use algorithms::{make_algorithm, Algorithm, WorkerState};
+pub use algorithms::{make_algorithm, Algorithm, MomentumCorrector, StepCorrector, WorkerState};
 
 use crate::comm::CommStats;
 use crate::config::{Partition, TaskKind, TrainSpec};
@@ -72,7 +72,12 @@ impl TrainOutput {
         self.history.first_loss()
     }
 
-    /// Loss at the last synchronization.
+    /// Loss at the last synchronization, as evaluated inside the round
+    /// loop. For algorithms with a post-loop flush (CoCoD-SGD's
+    /// `Algorithm::finalize` applies its in-flight correction after the
+    /// last round), [`TrainOutput::final_params`] additionally includes
+    /// that flush, so it can sit one averaging step past the model this
+    /// loss was measured at.
     pub fn final_loss(&self) -> f64 {
         self.history.final_loss()
     }

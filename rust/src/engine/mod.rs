@@ -30,10 +30,12 @@ use crate::rng::Pcg32;
 
 /// One worker's train-step engine. See module docs.
 ///
-/// Not `Send`: the XLA-backed engine wraps PJRT raw pointers. The
-/// coordinator drives workers in lockstep on one thread (required anyway
-/// for the synchronous semantics the paper analyzes).
-pub trait StepEngine {
+/// `Send` so the trainer's threaded round executor can park each worker
+/// (engine + state) on its own scoped thread; an engine is only ever
+/// *used* by one worker at a time, so no `Sync` is required. The
+/// synchronous semantics the paper analyzes are preserved by the round
+/// barrier in `trainer::Executor`, not by single-threadedness.
+pub trait StepEngine: Send {
     /// Flat parameter dimension `P`.
     fn dim(&self) -> usize;
 
@@ -122,8 +124,13 @@ pub fn build_pure_engines(
         }
         TaskKind::SoftmaxSynthetic { classes, features, samples_per_worker } => {
             let mut rng = Pcg32::new(spec.seed, 0xDA7A);
-            let global =
-                generators::feature_clusters(&mut rng, samples_per_worker * n, *features, *classes, 4.0);
+            let global = generators::feature_clusters(
+                &mut rng,
+                samples_per_worker * n,
+                *features,
+                *classes,
+                4.0,
+            );
             let shards = partition_dataset(&global, n, partition, spec.seed);
             let engines: Vec<Box<dyn StepEngine>> = shards
                 .into_iter()
@@ -133,8 +140,13 @@ pub fn build_pure_engines(
         }
         TaskKind::MlpFeatures { features, hidden, classes, samples_per_worker } => {
             let mut rng = Pcg32::new(spec.seed, 0xDA7A);
-            let global =
-                generators::feature_clusters(&mut rng, samples_per_worker * n, *features, *classes, 6.0);
+            let global = generators::feature_clusters(
+                &mut rng,
+                samples_per_worker * n,
+                *features,
+                *classes,
+                6.0,
+            );
             let shards = partition_dataset(&global, n, partition, spec.seed);
             let engines: Vec<Box<dyn StepEngine>> = shards
                 .into_iter()

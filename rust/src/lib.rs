@@ -5,8 +5,9 @@
 //!
 //! * [`trainer`] — the public entry point: the [`trainer::Trainer`]
 //!   builder composes an algorithm, schedules ([`trainer::LrSchedule`],
-//!   [`trainer::PeriodSchedule`]), observers, early stopping and
-//!   streaming metric sinks into a [`trainer::Session`] that drives any
+//!   [`trainer::PeriodSchedule`]), a round executor
+//!   ([`trainer::Executor`]), observers, early stopping and streaming
+//!   metric sinks into a [`trainer::Session`] that drives any
 //!   [`engine::StepEngine`].
 //! * [`coordinator`] — the paper's contribution: `S-SGD`, `Local SGD`,
 //!   `VRL-SGD` (+ warm-up variant), `EASGD`, momentum Local SGD and
@@ -23,7 +24,12 @@
 //! * [`experiments`] — harness regenerating every table and figure of the
 //!   paper's evaluation (Table 1, Figures 1–6, warm-up study).
 //!
-//! Quick start (pure rust, no artifacts needed):
+//! Quick start (pure rust, no artifacts needed). `parallelism(n)` runs
+//! each round's workers on `n` OS threads — the trajectory is bitwise
+//! identical to the sequential executor, so figures stay reproducible
+//! while wall-clock stops scaling with the worker count
+//! (`parallelism(0)` auto-sizes to the machine; the `VRL_SGD_THREADS`
+//! env var or the TOML `spec.threads` key select it without code):
 //!
 //! ```no_run
 //! use vrl_sgd::prelude::*;
@@ -37,6 +43,7 @@
 //!     .lr(0.05)
 //!     .steps(200)
 //!     .seed(7)
+//!     .parallelism(4)
 //!     .run()
 //!     .unwrap();
 //! assert!(out.final_loss() < out.initial_loss());
@@ -90,8 +97,8 @@ pub mod prelude {
     pub use crate::engine::StepEngine;
     pub use crate::metrics::History;
     pub use crate::trainer::{
-        ConsensusTracker, ConstLr, ConstPeriod, CosineLr, CsvSink, EarlyStop, FnObserver,
-        LrSchedule, MetricSink, Patience, PeriodSchedule, RoundInfo, RoundObserver, Session,
-        StagewisePeriod, StepDecayLr, StopAtLoss, SyncInfo, Trainer,
+        ConsensusTracker, ConstLr, ConstPeriod, CosineLr, CsvSink, EarlyStop, Executor,
+        FnObserver, LrSchedule, MetricSink, Patience, PeriodSchedule, RoundInfo, RoundObserver,
+        Session, StagewisePeriod, StepDecayLr, StopAtLoss, SyncInfo, Trainer,
     };
 }

@@ -26,9 +26,14 @@ vrl-sgd — Variance Reduced Local SGD reproduction launcher
 USAGE: vrl-sgd <COMMAND> [OPTIONS]
 
 COMMANDS:
-  train --config <file.toml>          run one training job (the optional
+  train --config <file.toml> [--threads <n>]
+                                      run one training job (the optional
                                       [schedule] table maps to lr decay /
-                                      stagewise periods)
+                                      stagewise periods; --threads > 1
+                                      runs each round's workers on that
+                                      many OS threads, bitwise identical
+                                      to sequential — overrides the TOML
+                                      spec.threads key)
   fig1|fig2|fig5|fig6 [--paper] [--out <csv>]
                                       epoch-loss figures (1/2: paper k;
                                       5: k/2; 6: 2k)
@@ -39,7 +44,7 @@ COMMANDS:
   artifact --name <mlp|lenet|textcnn|transformer>
            [--dir artifacts] [--algorithm vrl-sgd] [--workers 4]
            [--period 10] [--lr 0.05] [--steps 200] [--samples 256]
-           [--non-identical] [--out <csv>]
+           [--threads 1] [--non-identical] [--out <csv>]
                                       train an XLA artifact task
 ";
 
@@ -137,7 +142,8 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
         "train" => {
             let args = Args::parse(rest, &[])?;
             let config = args.get("config").ok_or("train needs --config")?;
-            let cfg = RunConfig::load(config)?;
+            let mut cfg = RunConfig::load(config)?;
+            cfg.spec.threads = args.parse_num("threads", cfg.spec.threads)?;
             // artifact tasks go through the PJRT runtime; everything else
             // runs on the pure-rust engines
             let trainer = match &cfg.task {
@@ -247,6 +253,7 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
                 period: args.parse_num("period", 10)?,
                 lr: args.parse_num("lr", 0.05f32)?,
                 steps: args.parse_num("steps", 200)?,
+                threads: args.parse_num("threads", 0)?,
                 ..TrainSpec::default()
             };
             let samples: usize = args.parse_num("samples", 256)?;

@@ -27,7 +27,7 @@ use crate::config::{Partition, TrainSpec};
 use crate::data::{generators, partition_dataset, Corpus, Dataset};
 use crate::engine::StepEngine;
 use crate::rng::Pcg32;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// A compiled artifact shared by all workers (one compilation per model).
 pub struct Artifact {
@@ -36,6 +36,21 @@ pub struct Artifact {
     /// Shape metadata.
     pub meta: ArtifactMeta,
 }
+
+// SAFETY: required by `StepEngine: Send` so the threaded round executor
+// can run one XlaEngine per worker thread. The PJRT C API documents
+// PJRT_Client / PJRT_LoadedExecutable as thread-safe (concurrent
+// Execute calls are supported; the CPU client synchronizes internally),
+// and the wrapper types lack auto-Send only because of their raw
+// pointers. AUDIT NOTE for whoever vendors the `xla` crate: this claim
+// also assumes the *wrapper*'s `PjRtClient::clone` / `Drop` are
+// thread-safe (e.g. atomic, not `Rc`-style, reference counting) — the
+// last `Arc<Artifact>` may drop on a worker thread while the
+// `Runtime`-owned client clone lives on the driver thread. Verify both
+// against the vendored version before enabling `xla` together with
+// `Trainer::parallelism`; until then run artifact tasks sequentially.
+unsafe impl Send for Artifact {}
+unsafe impl Sync for Artifact {}
 
 /// The PJRT CPU runtime: owns the client and a cache of compiled
 /// executables.
@@ -53,14 +68,14 @@ impl Runtime {
     }
 
     /// Load + compile `artifacts/<name>.hlo.txt`.
-    pub fn load(&self, name: &str) -> Result<Rc<Artifact>, String> {
+    pub fn load(&self, name: &str) -> Result<Arc<Artifact>, String> {
         let meta = ArtifactMeta::load(&self.artifact_dir, name)?;
         let hlo_path = self.artifact_dir.join(format!("{name}.hlo.txt"));
         let proto = xla::HloModuleProto::from_text_file(&hlo_path)
             .map_err(|e| format!("parse {}: {e}", hlo_path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| format!("compile {name}: {e}"))?;
-        Ok(Rc::new(Artifact { exe, client: self.client.clone(), meta }))
+        Ok(Arc::new(Artifact { exe, client: self.client.clone(), meta }))
     }
 
     /// True when every listed artifact exists on disk (used by tests to
@@ -92,7 +107,7 @@ impl WorkerData {
 /// XLA-backed [`StepEngine`]: every local step executes the AOT train-step
 /// artifact on the PJRT CPU client.
 pub struct XlaEngine {
-    art: Rc<Artifact>,
+    art: Arc<Artifact>,
     data: WorkerData,
     // scratch batch buffers
     x_f32: Vec<f32>,
@@ -103,7 +118,7 @@ pub struct XlaEngine {
 
 impl XlaEngine {
     /// New engine over a worker shard.
-    pub fn new(art: Rc<Artifact>, data: WorkerData) -> Result<Self, String> {
+    pub fn new(art: Arc<Artifact>, data: WorkerData) -> Result<Self, String> {
         match (&data, art.meta.input_is_tokens) {
             (WorkerData::Labelled(d), false) => {
                 let per = art.meta.input_elems_per_sample();

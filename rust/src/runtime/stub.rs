@@ -13,7 +13,7 @@ use crate::config::{Partition, TrainSpec};
 use crate::data::{Corpus, Dataset};
 use crate::engine::StepEngine;
 use crate::rng::Pcg32;
-use std::rc::Rc;
+use std::sync::Arc;
 
 const UNAVAILABLE: &str =
     "built without the `xla` feature: PJRT artifact execution is unavailable \
@@ -38,7 +38,7 @@ impl Runtime {
     }
 
     /// Always fails in the stub build.
-    pub fn load(&self, _name: &str) -> Result<Rc<Artifact>, String> {
+    pub fn load(&self, _name: &str) -> Result<Arc<Artifact>, String> {
         Err(UNAVAILABLE.to_string())
     }
 
@@ -65,7 +65,7 @@ pub struct XlaEngine {
 
 impl XlaEngine {
     /// Always fails in the stub build.
-    pub fn new(_art: Rc<Artifact>, _data: WorkerData) -> Result<Self, String> {
+    pub fn new(_art: Arc<Artifact>, _data: WorkerData) -> Result<Self, String> {
         Err(UNAVAILABLE.to_string())
     }
 }

@@ -1,0 +1,180 @@
+//! The round executor: how one round's `k` local iterations are driven
+//! across the N workers.
+//!
+//! Within a round the workers of the paper's synchronous model are
+//! embarrassingly parallel — worker `i` touches only its own
+//! [`WorkerState`] (params, Δ, rng, corrector), its own engine and its
+//! own scratch buffers, and nothing crosses workers until
+//! `Algorithm::sync`. [`Executor::Threaded`] exploits exactly that: it
+//! partitions the worker cells across scoped OS threads
+//! (`std::thread::scope`, zero new dependencies) and joins before the
+//! sync. Because no shared mutable state exists inside the round and all
+//! cross-worker reductions happen on the driver thread in worker order
+//! after the join, the trajectory is **bitwise identical** to
+//! [`Executor::Sequential`] for every algorithm, thread count and
+//! schedule — verified by `tests/parallel_exec.rs`.
+//!
+//! Selection: [`crate::trainer::Trainer::parallelism`], the `spec.threads`
+//! TOML key / `--threads` CLI flag, or the `VRL_SGD_THREADS` environment
+//! variable (in that precedence order).
+
+use crate::coordinator::WorkerState;
+use crate::engine::StepEngine;
+
+/// Strategy for driving one round of local iterations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Executor {
+    /// All workers stepped on the driver thread, in worker order.
+    Sequential,
+    /// Worker cells partitioned across `threads` scoped OS threads.
+    /// Bitwise identical to [`Executor::Sequential`]; thread counts
+    /// above the worker count are clamped.
+    ///
+    /// Cost model: threads are spawned and joined **per round** (scoped
+    /// threads hold `&mut` borrows, so they cannot outlive the round),
+    /// ~tens of µs per spawn. Worth it when a round's per-worker work is
+    /// non-trivial (large models and/or k > 1); for tiny models syncing
+    /// every step (S-SGD on a toy problem) the spawn overhead can exceed
+    /// the step work — keep those sequential.
+    Threaded {
+        /// Number of OS threads to spread the workers over.
+        threads: usize,
+    },
+}
+
+impl Executor {
+    /// Resolve a thread-count knob: `0` or `1` → sequential, else
+    /// threaded.
+    pub fn from_threads(threads: usize) -> Executor {
+        if threads > 1 {
+            Executor::Threaded { threads }
+        } else {
+            Executor::Sequential
+        }
+    }
+
+    /// Display name (CSV/report labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Executor::Sequential => "sequential",
+            Executor::Threaded { .. } => "threaded",
+        }
+    }
+
+    /// Drive `ctx.steps` local iterations on every cell.
+    pub(crate) fn run_round(&self, cells: &mut [WorkerCell<'_>], ctx: &StepCtx) {
+        match *self {
+            Executor::Sequential => {
+                for cell in cells.iter_mut() {
+                    run_cell(cell, ctx);
+                }
+            }
+            Executor::Threaded { threads } => {
+                let lanes = threads.clamp(1, cells.len().max(1));
+                if lanes <= 1 {
+                    for cell in cells.iter_mut() {
+                        run_cell(cell, ctx);
+                    }
+                    return;
+                }
+                let chunk = cells.len().div_ceil(lanes);
+                std::thread::scope(|s| {
+                    for lane in cells.chunks_mut(chunk) {
+                        s.spawn(move || {
+                            for cell in lane.iter_mut() {
+                                run_cell(cell, ctx);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+    }
+}
+
+/// Per-round step parameters shared (immutably) by all workers.
+pub(crate) struct StepCtx {
+    /// Local iterations to take this call.
+    pub steps: usize,
+    /// Learning rate γ for these iterations.
+    pub lr: f32,
+    /// Weight decay.
+    pub weight_decay: f32,
+    /// Record each step's minibatch loss into the cell (dense mode).
+    pub record_losses: bool,
+}
+
+/// One worker's independently-borrowable slice of the session: its
+/// mutable state, engine and scratch buffers. Cells are rebuilt per
+/// round from the session's parallel vectors; the buffers persist so the
+/// hot loop never allocates.
+pub(crate) struct WorkerCell<'a> {
+    /// Worker model/Δ/rng/corrector state.
+    pub state: &'a mut WorkerState,
+    /// This worker's step engine.
+    pub engine: &'a mut dyn StepEngine,
+    /// Pre-step parameter snapshot (sized only when a corrector runs).
+    pub before: &'a mut Vec<f32>,
+    /// Per-step minibatch losses recorded this call (dense mode only).
+    pub losses: &'a mut Vec<f64>,
+}
+
+/// Zip the session's parallel vectors into per-worker cells.
+pub(crate) fn make_cells<'a>(
+    workers: &'a mut [WorkerState],
+    engines: &'a mut [Box<dyn StepEngine>],
+    befores: &'a mut [Vec<f32>],
+    losses: &'a mut [Vec<f64>],
+) -> Vec<WorkerCell<'a>> {
+    workers
+        .iter_mut()
+        .zip(engines.iter_mut())
+        .zip(befores.iter_mut())
+        .zip(losses.iter_mut())
+        .map(|(((state, engine), before), losses)| WorkerCell {
+            state,
+            engine: engine.as_mut(),
+            before,
+            losses,
+        })
+        .collect()
+}
+
+/// The per-worker inner loop: `ctx.steps` iterations of
+/// `x ← x − γ(∇f(x;ξ) − Δ)` plus the optional post-step corrector.
+fn run_cell(cell: &mut WorkerCell<'_>, ctx: &StepCtx) {
+    let state = &mut *cell.state;
+    let wants_post = state.corrector.is_some();
+    for _ in 0..ctx.steps {
+        if wants_post {
+            cell.before.copy_from_slice(&state.params);
+        }
+        let loss = cell.engine.sgd_step(
+            &mut state.params,
+            &state.delta,
+            ctx.lr,
+            ctx.weight_decay,
+            &mut state.rng,
+        );
+        if let Some(c) = state.corrector.as_mut() {
+            c.post_step(&mut state.params, cell.before, ctx.lr);
+        }
+        if ctx.record_losses {
+            cell.losses.push(loss as f64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_threads_maps_zero_and_one_to_sequential() {
+        assert_eq!(Executor::from_threads(0), Executor::Sequential);
+        assert_eq!(Executor::from_threads(1), Executor::Sequential);
+        assert_eq!(Executor::from_threads(4), Executor::Threaded { threads: 4 });
+        assert_eq!(Executor::Sequential.name(), "sequential");
+        assert_eq!(Executor::from_threads(8).name(), "threaded");
+    }
+}

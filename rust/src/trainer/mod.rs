@@ -8,6 +8,9 @@
 //! * [`LrSchedule`] — γ per round (const / step decay / cosine);
 //! * [`PeriodSchedule`] — communication period k per round (const /
 //!   stagewise à la STL-SGD);
+//! * [`Executor`] — how each round's local iterations are driven across
+//!   the workers (sequential, or scoped threads via
+//!   [`Trainer::parallelism`] — bitwise identical either way);
 //! * [`RoundObserver`] — callbacks at sync and round end with loss,
 //!   consensus variance and communication counters;
 //! * [`EarlyStop`] — stop the run at a round boundary;
@@ -30,9 +33,11 @@
 //! assert!(out.final_loss() < out.initial_loss());
 //! ```
 
+mod exec;
 pub mod observe;
 pub mod schedule;
 
+pub use exec::Executor;
 pub use observe::{
     ConsensusTracker, CsvSink, EarlyStop, FnObserver, MetricSink, Patience, RoundInfo,
     RoundObserver, StopAtLoss, SyncInfo,
@@ -50,6 +55,7 @@ use crate::metrics::{DenseRow, History, SyncRow};
 use crate::rng::Pcg32;
 use crate::sim::{SimTime, TimeModel};
 use crate::tensor;
+use exec::{make_cells, StepCtx};
 
 /// Where the per-worker engines come from.
 enum EngineSource {
@@ -75,6 +81,7 @@ pub struct Trainer {
     target: Option<Vec<f32>>,
     eval_every: usize,
     keep_history: bool,
+    parallelism: Option<usize>,
 }
 
 impl Trainer {
@@ -93,6 +100,7 @@ impl Trainer {
             target: None,
             eval_every: 1,
             keep_history: true,
+            parallelism: None,
         }
     }
 
@@ -197,9 +205,28 @@ impl Trainer {
     }
 
     /// Evaluate the full train loss only every `n` sync rounds (the last
-    /// round is always evaluated). 0 is treated as 1.
+    /// round is always evaluated — and so is every round when an
+    /// early-stop policy is attached, so stopping decisions never act on
+    /// a stale carried loss). 0 is treated as 1.
     pub fn eval_every(mut self, n: usize) -> Self {
         self.eval_every = n;
+        self
+    }
+
+    /// Round executor parallelism: `n > 1` drives each round's local
+    /// iterations on `n` scoped OS threads ([`Executor::Threaded`]),
+    /// `n == 1` forces [`Executor::Sequential`], and `n == 0` auto-sizes
+    /// to the machine (`std::thread::available_parallelism`). The
+    /// trajectory is **bitwise identical** regardless of the choice —
+    /// workers are embarrassingly parallel within a round and all
+    /// reductions happen on the driver thread in worker order.
+    ///
+    /// When this setter is not called, the spec's `threads` knob applies,
+    /// then the `VRL_SGD_THREADS` environment variable, then sequential.
+    /// Dense-metrics runs always step sequentially (they observe
+    /// cross-worker state after every iteration).
+    pub fn parallelism(mut self, threads: usize) -> Self {
+        self.parallelism = Some(threads);
         self
     }
 
@@ -282,6 +309,17 @@ impl Trainer {
             self.lr_schedule.unwrap_or_else(|| Box::new(ConstLr(self.spec.lr)));
         let period_schedule =
             self.period_schedule.unwrap_or_else(|| Box::new(ConstPeriod(self.spec.period)));
+        // executor resolution: explicit setter > spec.threads (TOML/CLI)
+        // > VRL_SGD_THREADS env default > sequential
+        let threads = match self.parallelism {
+            Some(0) => std::thread::available_parallelism().map_or(1, |t| t.get()),
+            Some(t) => t,
+            None if self.spec.threads > 0 => self.spec.threads,
+            None => std::env::var("VRL_SGD_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(1),
+        };
         Ok(Session {
             spec: self.spec,
             engines,
@@ -293,6 +331,7 @@ impl Trainer {
             target: self.target,
             eval_every: self.eval_every.max(1),
             keep_history: self.keep_history,
+            executor: Executor::from_threads(threads),
         })
     }
 
@@ -315,6 +354,7 @@ pub struct Session {
     target: Option<Vec<f32>>,
     eval_every: usize,
     keep_history: bool,
+    executor: Executor,
 }
 
 impl Session {
@@ -323,9 +363,15 @@ impl Session {
         &self.spec
     }
 
+    /// The resolved round executor.
+    pub fn executor(&self) -> Executor {
+        self.executor
+    }
+
     /// Drive the run to completion (or early stop). The loop is the
     /// paper's synchronous model: for each round, `k` lockstep local
-    /// iterations on every worker, then `Algorithm::sync`, then metrics.
+    /// iterations on every worker (driven by the configured
+    /// [`Executor`]), then `Algorithm::sync`, then metrics.
     pub fn run(mut self) -> Result<TrainOutput, String> {
         let spec = &self.spec;
         let n = spec.workers;
@@ -339,12 +385,23 @@ impl Session {
         let params0 = engines[0].init_params(&mut init_rng);
         debug_assert_eq!(params0.len(), dim);
 
+        let mut algo = make_algorithm(spec, &params0);
         let mut workers: Vec<WorkerState> =
             (0..n).map(|i| WorkerState::new(i, &params0, &root)).collect();
-        let mut algo = make_algorithm(spec, &params0);
+        // per-worker corrector state (e.g. momentum buffers) rides with
+        // the worker, so the step loop stays data-parallel
+        let mut wants_post = false;
+        for w in workers.iter_mut() {
+            w.corrector = algo.corrector();
+            wants_post |= w.corrector.is_some();
+        }
         let mut cluster = Cluster::new(n, &spec.network, AllReduceAlgo::Ring);
         let time_model = TimeModel::from_dims(dim, spec.batch);
         let mut sim_time = SimTime::default();
+
+        // Dense metrics observe cross-worker quantities after every
+        // iteration, which needs lockstep stepping on the driver thread.
+        let executor = if spec.dense_metrics { Executor::Sequential } else { self.executor };
 
         let initial_loss = global_loss(engines, &params0);
         let mut history = History::new(initial_loss);
@@ -356,35 +413,44 @@ impl Session {
         let mut step = 0usize;
         let mut round = 0usize;
         let mut mean_buf = vec![0.0f32; dim];
-        // pre-step snapshot buffer, only used by momentum-style algorithms
-        let wants_post = algo.wants_post_step();
-        let mut before_buf = if wants_post { vec![0.0f32; dim] } else { Vec::new() };
+        // per-worker scratch: pre-step snapshots (sized only for
+        // corrector algorithms) and dense-mode step losses
+        let mut befores: Vec<Vec<f32>> =
+            vec![vec![0.0f32; if wants_post { dim } else { 0 }]; n];
+        let mut step_losses: Vec<Vec<f64>> = vec![Vec::new(); n];
 
         while step < spec.steps {
             let lr = self.lr_schedule.lr(round, step);
             let base = self.period_schedule.period(round).max(1);
-            let p = algo.period(round, base).max(1).min(spec.steps - step);
+            // clamp is safe: the loop guard keeps steps − step ≥ 1
+            let p = algo.period(round, base).clamp(1, spec.steps - step);
 
-            // lockstep local iterations
-            for _ in 0..p {
-                let mut loss_acc = 0.0f64;
-                for (i, (w, e)) in workers.iter_mut().zip(engines.iter_mut()).enumerate() {
-                    if wants_post {
-                        before_buf.copy_from_slice(&w.params);
+            // local iterations: one worker-parallel shot per round, or
+            // stepwise when dense metrics watch every iteration
+            if spec.dense_metrics {
+                let ctx = StepCtx {
+                    steps: 1,
+                    lr,
+                    weight_decay: spec.weight_decay,
+                    record_losses: true,
+                };
+                for _ in 0..p {
+                    for l in step_losses.iter_mut() {
+                        l.clear();
                     }
-                    loss_acc += e.sgd_step(
-                        &mut w.params,
-                        &w.delta,
-                        lr,
-                        spec.weight_decay,
-                        &mut w.rng,
-                    ) as f64;
-                    if wants_post {
-                        algo.post_step(i, &mut w.params, &before_buf, lr);
+                    {
+                        let mut cells = make_cells(
+                            &mut workers,
+                            engines.as_mut_slice(),
+                            &mut befores,
+                            &mut step_losses,
+                        );
+                        executor.run_round(&mut cells, &ctx);
                     }
-                }
-                step += 1;
-                if spec.dense_metrics {
+                    step += 1;
+                    // reduce losses in worker order: bitwise-stable sum
+                    let loss_acc: f64 =
+                        step_losses.iter().map(|l| l.first().copied().unwrap_or(0.0)).sum();
                     let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
                     let var = tensor::worker_variance(&rows);
                     tensor::mean_rows(&mut mean_buf, &rows);
@@ -403,6 +469,21 @@ impl Session {
                         history.dense_rows.push(row);
                     }
                 }
+            } else {
+                let ctx = StepCtx {
+                    steps: p,
+                    lr,
+                    weight_decay: spec.weight_decay,
+                    record_losses: false,
+                };
+                let mut cells = make_cells(
+                    &mut workers,
+                    engines.as_mut_slice(),
+                    &mut befores,
+                    &mut step_losses,
+                );
+                executor.run_round(&mut cells, &ctx);
+                step += p;
             }
             sim_time.charge_steps(p, &time_model);
 
@@ -428,8 +509,12 @@ impl Session {
                 o.on_sync(&sync_info);
             }
 
-            // global train loss at the averaged model
-            let evaluated = round % self.eval_every == 0 || step >= spec.steps;
+            // global train loss at the averaged model; rounds where an
+            // early-stop policy will be consulted are always evaluated,
+            // so the policy never acts on a stale carried loss
+            let evaluated = round % self.eval_every == 0
+                || step >= spec.steps
+                || self.early_stop.is_some();
             let train_loss = if evaluated {
                 let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
                 tensor::mean_rows(&mut mean_buf, &rows);
@@ -479,6 +564,10 @@ impl Session {
                 }
             }
         }
+
+        // flush in-flight algorithm state (e.g. CoCoD-SGD's overlapped
+        // allreduce result) so the final averaged model is complete
+        algo.finalize(&mut workers, &mut cluster);
 
         for s in self.sinks.iter_mut() {
             s.finish()?;
@@ -626,6 +715,49 @@ mod tests {
             .unwrap();
         assert_ne!(const_lr.final_params, decayed.final_params);
         assert!(decayed.final_loss().is_finite());
+    }
+
+    #[test]
+    fn threaded_executor_matches_sequential_smoke() {
+        let seq = base(AlgorithmKind::VrlSgd).parallelism(1).run().unwrap();
+        let thr = base(AlgorithmKind::VrlSgd).parallelism(2).run().unwrap();
+        assert_eq!(seq.final_params, thr.final_params);
+        assert_eq!(seq.history, thr.history);
+        assert_eq!(seq.comm, thr.comm);
+    }
+
+    #[test]
+    fn executor_resolution_prefers_explicit_setter() {
+        let s = base(AlgorithmKind::LocalSgd).parallelism(3).build().unwrap();
+        assert_eq!(s.executor(), Executor::Threaded { threads: 3 });
+        let s = base(AlgorithmKind::LocalSgd).parallelism(1).build().unwrap();
+        assert_eq!(s.executor(), Executor::Sequential);
+        // spec.threads feeds through when no setter is used
+        let spec = TrainSpec { workers: 4, batch: 8, threads: 2, ..TrainSpec::default() };
+        let s = Trainer::new(softmax_task()).spec(spec).build().unwrap();
+        assert_eq!(s.executor(), Executor::Threaded { threads: 2 });
+        // parallelism(0) auto-sizes to the machine (>= 1 thread)
+        let s = base(AlgorithmKind::LocalSgd).parallelism(0).build().unwrap();
+        assert!(matches!(s.executor(), Executor::Sequential | Executor::Threaded { .. }));
+    }
+
+    #[test]
+    fn early_stop_fires_same_round_for_sparse_eval() {
+        let full = base(AlgorithmKind::VrlSgd).run().unwrap();
+        let threshold = full.history.sync_rows[full.history.sync_rows.len() / 2].train_loss;
+        let rounds_at = |eval_every: usize| {
+            base(AlgorithmKind::VrlSgd)
+                .eval_every(eval_every)
+                .early_stop(StopAtLoss(threshold))
+                .run()
+                .unwrap()
+                .history
+                .sync_rows
+                .len()
+        };
+        // an attached early-stop policy forces fresh evaluation every
+        // round, so the stop round cannot depend on eval_every
+        assert_eq!(rounds_at(1), rounds_at(3));
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //!   consensus variance and communication counters) and at the end of
 //!   each round ([`RoundObserver::on_round_end`], with the evaluated
 //!   loss). Stateful observers the caller wants to read after the run go
-//!   through `Rc<RefCell<_>>` (the engines are single-threaded anyway).
+//!   through `Rc<RefCell<_>>` — observers always fire on the driver
+//!   thread, even when a threaded round executor steps the workers.
 //! * [`EarlyStop`] — polled once per round; returning `true` ends the
 //!   run at the next round boundary (after the sync, so the output is a
 //!   consistent averaged model).
