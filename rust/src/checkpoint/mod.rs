@@ -1,0 +1,825 @@
+//! Checkpoint/resume subsystem: periodic binary snapshots of the
+//! complete run state, with **bitwise-identical** restarts.
+//!
+//! Long non-identical-data runs are exactly where VRL-SGD's communication
+//! advantage shows up, and exactly where a died process used to lose
+//! everything. A snapshot here captures *all* of it — not just the
+//! parameters: every worker's variance-reduction correction `Δ_i` (so a
+//! resumed VRL-SGD run does not silently degenerate to plain Local SGD),
+//! momentum buffers, the per-worker `Pcg32` RNG streams, algorithm-private
+//! state ([`crate::coordinator::Algorithm::save_state`]: EASGD's center,
+//! CoCoD-SGD's pending overlapped correction), the cumulative
+//! communication counters and simulated clock, and the metric history.
+//! Resuming at round `r` then replays the exact trajectory the
+//! uninterrupted run would have taken — verified bitwise for all seven
+//! algorithms under both executors in `tests/checkpoint_resume.rs`.
+//!
+//! Wiring (no new entry points — everything rides `Session::run`):
+//!
+//! ```no_run
+//! use vrl_sgd::checkpoint::{latest_snapshot, Checkpointer};
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
+//! let build = || {
+//!     Trainer::new(task.clone())
+//!         .algorithm(AlgorithmKind::VrlSgd)
+//!         .workers(8)
+//!         .steps(5000)
+//!         .seed(7)
+//! };
+//! // snapshot every 50 rounds, keeping the last 3
+//! let out = build()
+//!     .observer(Checkpointer::new("ckpt").every(50).keep_last(3))
+//!     .run()
+//!     .unwrap();
+//! // ...after a crash: same builder + resume_from == same TrainOutput
+//! if let Some(snap) = latest_snapshot("ckpt").unwrap() {
+//!     let resumed = build().resume_from(&snap).unwrap().run().unwrap();
+//!     assert_eq!(resumed.final_params, out.final_params);
+//! }
+//! ```
+//!
+//! On-disk format: [`crate::format::snap`] container (versioned,
+//! length-prefixed sections, FNV-1a checksum). Writes are atomic
+//! (tmp + rename), so a crash mid-write never corrupts the latest good
+//! snapshot.
+
+use crate::comm::CommStats;
+use crate::config::TrainSpec;
+use crate::coordinator::WorkerState;
+use crate::format::snap::{Dec, Enc, SnapReader, SnapWriter};
+use crate::metrics::{DenseRow, History, SyncRow};
+use crate::sim::SimTime;
+use crate::trainer::{RoundObserver, RunState};
+use std::path::{Path, PathBuf};
+
+/// Current snapshot format version. Bump on any layout change; readers
+/// reject other versions with a clear error instead of misparsing.
+pub const SNAP_VERSION: u32 = 1;
+
+/// One worker's serialized state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSnap {
+    /// Local model `x_i`.
+    pub params: Vec<f32>,
+    /// Variance-reduction correction `Δ_i`.
+    pub delta: Vec<f32>,
+    /// RNG internal state (see [`crate::rng::Pcg32::state`]).
+    pub rng_state: u64,
+    /// RNG stream increment (see [`crate::rng::Pcg32::inc`]).
+    pub rng_inc: u64,
+    /// The corrector's shareable buffer (momentum), when one is attached.
+    pub corrector: Option<Vec<f32>>,
+}
+
+/// A complete, self-validating snapshot of a run at a round boundary.
+/// Produced by [`Checkpointer`] (or [`Snapshot::capture`] directly),
+/// consumed by `Trainer::resume_from`.
+///
+/// The saved [`TrainSpec`] is a *fingerprint*: on resume every
+/// trajectory-shaping hyperparameter must match the rebuilt
+/// configuration (`spec.threads` is exempt — executors are
+/// interchangeable and bitwise identical). What the spec cannot see —
+/// the task, partition, custom schedules, `eval_every`, and any
+/// stateful [`crate::trainer::EarlyStop`] policy — must be recreated by
+/// the caller exactly as in the original run; in particular a policy
+/// like [`crate::trainer::Patience`] restarts its counters on resume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// The originating run's spec (fingerprint; must match on resume).
+    pub spec: TrainSpec,
+    /// Flat parameter dimension P (fingerprint).
+    pub dim: usize,
+    /// Round index the resumed run starts at.
+    pub round: usize,
+    /// Local iterations already taken per worker.
+    pub step: usize,
+    /// Last evaluated (or carried) global train loss.
+    pub last_loss: f64,
+    /// Per-worker state.
+    pub worker_states: Vec<WorkerSnap>,
+    /// Opaque algorithm-private state
+    /// ([`crate::coordinator::Algorithm::save_state`]).
+    pub algo_state: Vec<u8>,
+    /// Cumulative communication counters at the boundary.
+    pub comm: CommStats,
+    /// Cumulative simulated wall-clock at the boundary.
+    pub sim_time: SimTime,
+    /// Metric history recorded so far.
+    pub history: History,
+}
+
+impl Snapshot {
+    /// Capture the run state at a round boundary. The resumed run starts
+    /// at round `state.round + 1`.
+    pub fn capture(state: &mut RunState<'_>) -> Snapshot {
+        let worker_states = state
+            .workers
+            .iter_mut()
+            .map(|w| WorkerSnap {
+                params: w.params.clone(),
+                delta: w.delta.clone(),
+                rng_state: w.rng.state(),
+                rng_inc: w.rng.inc(),
+                corrector: w.corrector.as_mut().and_then(|c| c.shared_state()).cloned(),
+            })
+            .collect();
+        Snapshot {
+            spec: state.spec.clone(),
+            dim: state.dim,
+            round: state.round + 1,
+            step: state.step,
+            last_loss: state.last_loss,
+            worker_states,
+            algo_state: state.algorithm.save_state(),
+            comm: state.comm,
+            sim_time: state.sim_time,
+            history: state.history.clone(),
+        }
+    }
+
+    /// Check this snapshot against the configuration a resuming
+    /// `Trainer` resolved to. Every trajectory-shaping mismatch is
+    /// fatal: resuming under a different spec would silently fork the
+    /// trajectory. `spec.threads` is deliberately exempt (the executors
+    /// are bitwise interchangeable), and what the spec cannot see —
+    /// task, partition, schedules — remains the caller's contract.
+    pub fn validate(&self, spec: &TrainSpec, dim: usize) -> Result<(), String> {
+        let mut errs = Vec::new();
+        let s = &self.spec;
+        if s.algorithm != spec.algorithm {
+            errs.push(format!(
+                "snapshot algorithm '{}' != configured '{}'",
+                s.algorithm.name(),
+                spec.algorithm.name()
+            ));
+        }
+        if s.workers != spec.workers {
+            errs.push(format!("snapshot has {} workers, spec has {}", s.workers, spec.workers));
+        }
+        if self.dim != dim {
+            errs.push(format!("snapshot param dim {} != engine dim {dim}", self.dim));
+        }
+        if s.seed != spec.seed {
+            errs.push(format!("snapshot seed {} != spec seed {}", s.seed, spec.seed));
+        }
+        if s.steps != spec.steps {
+            errs.push(format!("snapshot step budget {} != spec steps {}", s.steps, spec.steps));
+        }
+        if s.period != spec.period {
+            errs.push(format!("snapshot period {} != spec period {}", s.period, spec.period));
+        }
+        if s.batch != spec.batch {
+            errs.push(format!("snapshot batch {} != spec batch {}", s.batch, spec.batch));
+        }
+        // floats compare by bits: any rounding difference forks the run
+        if s.lr.to_bits() != spec.lr.to_bits() {
+            errs.push(format!("snapshot lr {} != spec lr {}", s.lr, spec.lr));
+        }
+        if s.weight_decay.to_bits() != spec.weight_decay.to_bits() {
+            errs.push(format!(
+                "snapshot weight_decay {} != spec weight_decay {}",
+                s.weight_decay, spec.weight_decay
+            ));
+        }
+        if s.momentum.to_bits() != spec.momentum.to_bits() {
+            errs.push(format!(
+                "snapshot momentum {} != spec momentum {}",
+                s.momentum, spec.momentum
+            ));
+        }
+        if s.easgd_rho.to_bits() != spec.easgd_rho.to_bits() {
+            errs.push(format!(
+                "snapshot easgd_rho {} != spec easgd_rho {}",
+                s.easgd_rho, spec.easgd_rho
+            ));
+        }
+        if s.network.latency_us.to_bits() != spec.network.latency_us.to_bits()
+            || s.network.bandwidth_gbps.to_bits() != spec.network.bandwidth_gbps.to_bits()
+        {
+            errs.push("snapshot network spec differs (simulated time would fork)".to_string());
+        }
+        if s.dense_metrics != spec.dense_metrics {
+            errs.push("snapshot dense_metrics setting differs".to_string());
+        }
+        if self.step > s.steps {
+            errs.push(format!("snapshot step {} exceeds its budget {}", self.step, s.steps));
+        }
+        if self.worker_states.len() != s.workers {
+            errs.push(format!(
+                "snapshot carries {} worker states for {} workers",
+                self.worker_states.len(),
+                s.workers
+            ));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("cannot resume: {}", errs.join("; ")))
+        }
+    }
+
+    /// Restore per-worker state into freshly built workers (correctors
+    /// already attached by the session).
+    pub fn apply_workers(&self, workers: &mut [WorkerState]) -> Result<(), String> {
+        if workers.len() != self.worker_states.len() {
+            return Err(format!(
+                "{} live workers != {} snapshot workers",
+                workers.len(),
+                self.worker_states.len()
+            ));
+        }
+        for (i, (w, s)) in workers.iter_mut().zip(self.worker_states.iter()).enumerate() {
+            if s.params.len() != self.dim || s.delta.len() != self.dim {
+                return Err(format!("worker {i}: snapshot vectors disagree with dim {}", self.dim));
+            }
+            w.params.copy_from_slice(&s.params);
+            w.delta.copy_from_slice(&s.delta);
+            w.rng = crate::rng::Pcg32::restore(s.rng_state, s.rng_inc);
+            match (&mut w.corrector, &s.corrector) {
+                (Some(c), Some(m)) => {
+                    let buf = c.shared_state().ok_or_else(|| {
+                        format!("worker {i}: corrector exposes no shareable state to restore")
+                    })?;
+                    buf.clear();
+                    buf.extend_from_slice(m);
+                }
+                (None, Some(_)) => {
+                    return Err(format!(
+                        "worker {i}: snapshot has corrector state but the algorithm attaches none"
+                    ));
+                }
+                // A fresh corrector with no saved buffer (snapshot taken
+                // before any step sized it) starts lazily, like a new run.
+                (_, None) => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize into a [`crate::format::snap`] container.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = SnapWriter::new(SNAP_VERSION);
+
+        let mut meta = Enc::new();
+        meta.put_str(self.spec.algorithm.name());
+        meta.put_usize(self.spec.workers);
+        meta.put_usize(self.spec.period);
+        meta.put_f32(self.spec.lr);
+        meta.put_usize(self.spec.batch);
+        meta.put_usize(self.spec.steps);
+        meta.put_f32(self.spec.easgd_rho);
+        meta.put_f32(self.spec.momentum);
+        meta.put_f32(self.spec.weight_decay);
+        meta.put_u64(self.spec.seed);
+        meta.put_f64(self.spec.network.latency_us);
+        meta.put_f64(self.spec.network.bandwidth_gbps);
+        meta.put_bool(self.spec.dense_metrics);
+        meta.put_usize(self.spec.threads);
+        meta.put_usize(self.dim);
+        meta.put_usize(self.round);
+        meta.put_usize(self.step);
+        meta.put_f64(self.last_loss);
+        w.section("meta", meta.into_bytes());
+
+        let mut ws = Enc::new();
+        ws.put_usize(self.worker_states.len());
+        for s in &self.worker_states {
+            ws.put_f32s(&s.params);
+            ws.put_f32s(&s.delta);
+            ws.put_u64(s.rng_state);
+            ws.put_u64(s.rng_inc);
+            match &s.corrector {
+                Some(m) => {
+                    ws.put_bool(true);
+                    ws.put_f32s(m);
+                }
+                None => ws.put_bool(false),
+            }
+        }
+        w.section("workers", ws.into_bytes());
+
+        w.section("algo", self.algo_state.clone());
+
+        let mut comm = Enc::new();
+        comm.put_u64(self.comm.rounds);
+        comm.put_u64(self.comm.bytes);
+        comm.put_u64(self.comm.messages);
+        comm.put_f64(self.comm.sim_time_s);
+        w.section("comm", comm.into_bytes());
+
+        let mut time = Enc::new();
+        time.put_f64(self.sim_time.compute_s);
+        time.put_f64(self.sim_time.comm_s);
+        w.section("time", time.into_bytes());
+
+        let mut h = Enc::new();
+        h.put_f64(self.history.initial_loss);
+        h.put_usize(self.history.sync_rows.len());
+        for r in &self.history.sync_rows {
+            h.put_usize(r.round);
+            h.put_usize(r.step);
+            h.put_f64(r.train_loss);
+            h.put_f64(r.worker_variance);
+            h.put_u64(r.comm_rounds);
+            h.put_u64(r.comm_bytes);
+            h.put_f64(r.sim_time_s);
+        }
+        h.put_usize(self.history.dense_rows.len());
+        for r in &self.history.dense_rows {
+            h.put_usize(r.step);
+            h.put_f64(r.mean_loss);
+            h.put_f64(r.worker_variance);
+            match r.dist_sq_to_target {
+                Some(d) => {
+                    h.put_bool(true);
+                    h.put_f64(d);
+                }
+                None => h.put_bool(false),
+            }
+        }
+        w.section("history", h.into_bytes());
+
+        w.to_bytes()
+    }
+
+    /// Parse and validate a serialized snapshot.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot, String> {
+        let r = SnapReader::from_bytes(bytes)?;
+        if r.version() != SNAP_VERSION {
+            return Err(format!(
+                "snapshot format version {} is not supported (this build reads version {SNAP_VERSION})",
+                r.version()
+            ));
+        }
+
+        let mut d = Dec::new(r.require("meta")?);
+        let algorithm = d
+            .str()?
+            .parse()
+            .map_err(|e| format!("snapshot names an unknown algorithm: {e}"))?;
+        let spec = TrainSpec {
+            algorithm,
+            workers: d.usize()?,
+            period: d.usize()?,
+            lr: d.f32()?,
+            batch: d.usize()?,
+            steps: d.usize()?,
+            easgd_rho: d.f32()?,
+            momentum: d.f32()?,
+            weight_decay: d.f32()?,
+            seed: d.u64()?,
+            network: crate::config::NetworkSpec { latency_us: d.f64()?, bandwidth_gbps: d.f64()? },
+            dense_metrics: d.bool()?,
+            threads: d.usize()?,
+        };
+        let dim = d.usize()?;
+        let round = d.usize()?;
+        let step = d.usize()?;
+        let last_loss = d.f64()?;
+        d.finish()?;
+
+        let mut d = Dec::new(r.require("workers")?);
+        let n = d.usize()?;
+        if n != spec.workers {
+            return Err(format!(
+                "workers section has {n} entries, meta says {}",
+                spec.workers
+            ));
+        }
+        let mut worker_states = Vec::with_capacity(n);
+        for _ in 0..n {
+            let params = d.f32s()?;
+            let delta = d.f32s()?;
+            let rng_state = d.u64()?;
+            let rng_inc = d.u64()?;
+            let corrector = if d.bool()? { Some(d.f32s()?) } else { None };
+            worker_states.push(WorkerSnap { params, delta, rng_state, rng_inc, corrector });
+        }
+        d.finish()?;
+
+        let algo_state = r.require("algo")?.to_vec();
+
+        let mut d = Dec::new(r.require("comm")?);
+        let comm = CommStats {
+            rounds: d.u64()?,
+            bytes: d.u64()?,
+            messages: d.u64()?,
+            sim_time_s: d.f64()?,
+        };
+        d.finish()?;
+
+        let mut d = Dec::new(r.require("time")?);
+        let sim_time = SimTime { compute_s: d.f64()?, comm_s: d.f64()? };
+        d.finish()?;
+
+        let mut d = Dec::new(r.require("history")?);
+        let mut history = History::new(d.f64()?);
+        let rows = d.usize()?;
+        for _ in 0..rows {
+            history.sync_rows.push(SyncRow {
+                round: d.usize()?,
+                step: d.usize()?,
+                train_loss: d.f64()?,
+                worker_variance: d.f64()?,
+                comm_rounds: d.u64()?,
+                comm_bytes: d.u64()?,
+                sim_time_s: d.f64()?,
+            });
+        }
+        let dense = d.usize()?;
+        for _ in 0..dense {
+            history.dense_rows.push(DenseRow {
+                step: d.usize()?,
+                mean_loss: d.f64()?,
+                worker_variance: d.f64()?,
+                dist_sq_to_target: if d.bool()? { Some(d.f64()?) } else { None },
+            });
+        }
+        d.finish()?;
+
+        Ok(Snapshot {
+            spec,
+            dim,
+            round,
+            step,
+            last_loss,
+            worker_states,
+            algo_state,
+            comm,
+            sim_time,
+            history,
+        })
+    }
+
+    /// Write atomically: serialize to a sibling `.tmp` file, then rename
+    /// over `path`, so readers never observe a half-written snapshot.
+    pub fn write_atomic(&self, path: &Path) -> Result<(), String> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("mkdir {}: {e}", parent.display()))?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_bytes())
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            format!("rename {} -> {}: {e}", tmp.display(), path.display())
+        })
+    }
+
+    /// Load and validate a snapshot file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Snapshot, String> {
+        let path = path.as_ref();
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("read snapshot {}: {e}", path.display()))?;
+        Snapshot::from_bytes(&bytes).map_err(|e| format!("snapshot {}: {e}", path.display()))
+    }
+}
+
+/// File name for the snapshot resuming at `round` (zero-padded so
+/// lexicographic order is numeric order).
+fn snapshot_file_name(round: usize) -> String {
+    format!("round-{round:08}.snap")
+}
+
+/// The newest snapshot in `dir` (by resume round, via file-name order),
+/// or `None` when the directory is missing or holds no snapshots.
+pub fn latest_snapshot(dir: impl AsRef<Path>) -> Result<Option<PathBuf>, String> {
+    let dir = dir.as_ref();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(format!("read checkpoint dir {}: {e}", dir.display())),
+    };
+    let mut best: Option<(String, PathBuf)> = None;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read checkpoint dir {}: {e}", dir.display()))?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !name.starts_with("round-") || !name.ends_with(".snap") {
+            continue;
+        }
+        let newer = match &best {
+            None => true,
+            Some((b, _)) => name > *b,
+        };
+        if newer {
+            best = Some((name, entry.path()));
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+/// Periodic snapshotting as a [`RoundObserver`]: register on the
+/// `Trainer` builder and every `every` rounds the full run state is
+/// written to `dir/round-XXXXXXXX.snap` (atomic tmp+rename), keeping the
+/// newest `keep` files. Failures never abort training: the error is
+/// remembered (see [`Checkpointer::last_error`]) and reported on stderr,
+/// and the next cadence retries.
+pub struct Checkpointer {
+    dir: PathBuf,
+    every: usize,
+    keep: usize,
+    written: Vec<PathBuf>,
+    saves: usize,
+    last_error: Option<String>,
+}
+
+impl Checkpointer {
+    /// Snapshot into `dir` after every round (tune with
+    /// [`Checkpointer::every`]), keeping the last 3 snapshots (tune with
+    /// [`Checkpointer::keep_last`]).
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Checkpointer {
+            dir: dir.into(),
+            every: 1,
+            keep: 3,
+            written: Vec::new(),
+            saves: 0,
+            last_error: None,
+        }
+    }
+
+    /// Snapshot cadence in rounds (0 is treated as 1).
+    pub fn every(mut self, rounds: usize) -> Self {
+        self.every = rounds.max(1);
+        self
+    }
+
+    /// Retention: keep the newest `n` snapshots this instance wrote
+    /// (0 = unlimited). Pre-existing files are never touched.
+    pub fn keep_last(mut self, n: usize) -> Self {
+        self.keep = n;
+        self
+    }
+
+    /// Number of snapshots successfully written so far.
+    pub fn snapshots_written(&self) -> usize {
+        self.saves
+    }
+
+    /// The most recent save error, if any.
+    pub fn last_error(&self) -> Option<&str> {
+        self.last_error.as_deref()
+    }
+
+    /// Wrap for shared registration + later inspection (same pattern as
+    /// [`crate::trainer::ConsensusTracker::shared`]).
+    pub fn shared(self) -> std::rc::Rc<std::cell::RefCell<Checkpointer>> {
+        std::rc::Rc::new(std::cell::RefCell::new(self))
+    }
+
+    fn save(&mut self, state: &mut RunState<'_>) -> Result<(), String> {
+        let snap = Snapshot::capture(state);
+        let path = self.dir.join(snapshot_file_name(snap.round));
+        snap.write_atomic(&path)?;
+        self.saves += 1;
+        self.written.push(path);
+        if self.keep > 0 {
+            while self.written.len() > self.keep {
+                let old = self.written.remove(0);
+                if let Err(e) = std::fs::remove_file(&old) {
+                    // retention is best-effort; the new snapshot is safe
+                    eprintln!("checkpoint: prune {}: {e}", old.display());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl RoundObserver for Checkpointer {
+    fn on_state(&mut self, state: &mut RunState<'_>) {
+        if (state.round + 1) % self.every != 0 {
+            return;
+        }
+        if let Err(e) = self.save(state) {
+            eprintln!("checkpoint: {e}");
+            self.last_error = Some(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{AllReduceAlgo, Cluster};
+    use crate::config::AlgorithmKind;
+    use crate::coordinator::make_algorithm;
+    use crate::rng::Pcg32;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("vrl_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Build a small but fully populated run state and snapshot it.
+    fn sample_snapshot(kind: AlgorithmKind, round: usize) -> Snapshot {
+        let spec = TrainSpec {
+            algorithm: kind,
+            workers: 2,
+            period: 3,
+            steps: 30,
+            batch: 4,
+            seed: 5,
+            ..TrainSpec::default()
+        };
+        let params0 = vec![0.5f32, -1.5, 2.0];
+        let mut algo = make_algorithm(&spec, &params0);
+        let root = Pcg32::new(spec.seed, 0x5EED);
+        let mut workers: Vec<WorkerState> =
+            (0..2).map(|i| WorkerState::new(i, &params0, &root)).collect();
+        for (i, w) in workers.iter_mut().enumerate() {
+            w.corrector = algo.corrector();
+            w.params[0] += i as f32;
+            w.delta[1] = 0.25 - i as f32;
+            w.rng.next_u32();
+            if let Some(m) = w.corrector.as_mut().and_then(|c| c.shared_state()) {
+                m.resize(3, 0.0);
+                m[2] = 1.0 + i as f32;
+            }
+        }
+        let mut cluster = Cluster::new(2, &spec.network, AllReduceAlgo::Ring);
+        algo.sync(0, 3, 0.1, &mut workers, &mut cluster);
+        let mut history = History::new(2.25);
+        history.sync_rows.push(SyncRow {
+            round: 0,
+            step: 3,
+            train_loss: 1.5,
+            worker_variance: 0.125,
+            comm_rounds: 1,
+            comm_bytes: 48,
+            sim_time_s: 0.5,
+        });
+        let mut rs = RunState {
+            spec: &spec,
+            workers: &mut workers,
+            algorithm: algo.as_ref(),
+            dim: 3,
+            comm: cluster.stats(),
+            sim_time: SimTime { compute_s: 1.25, comm_s: 0.5 },
+            history: &history,
+            round,
+            step: 3,
+            last_loss: 1.5,
+        };
+        Snapshot::capture(&mut rs)
+    }
+
+    #[test]
+    fn snapshot_round_trips_bitwise_for_every_algorithm() {
+        for kind in AlgorithmKind::ALL {
+            let snap = sample_snapshot(kind, 0);
+            let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+            assert_eq!(back, snap, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut w = SnapWriter::new(SNAP_VERSION + 1);
+        w.section("meta", Vec::new());
+        let err = Snapshot::from_bytes(&w.to_bytes()).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn corrupted_bytes_are_rejected() {
+        let mut bytes = sample_snapshot(AlgorithmKind::VrlSgd, 0).to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        let err = Snapshot::from_bytes(&bytes).unwrap_err();
+        assert!(err.contains("checksum"), "{err}");
+        let err = Snapshot::from_bytes(&bytes[..bytes.len() - 3]).unwrap_err();
+        assert!(err.contains("checksum") || err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_fingerprint_mismatches() {
+        let snap = sample_snapshot(AlgorithmKind::VrlSgd, 0);
+        // same construction as sample_snapshot's spec
+        let good = snap.spec.clone();
+        snap.validate(&good, 3).unwrap();
+        let bad_algo = TrainSpec { algorithm: AlgorithmKind::LocalSgd, ..good.clone() };
+        assert!(snap.validate(&bad_algo, 3).unwrap_err().contains("algorithm"));
+        let bad_workers = TrainSpec { workers: 4, ..good.clone() };
+        assert!(snap.validate(&bad_workers, 3).unwrap_err().contains("workers"));
+        assert!(snap.validate(&good, 7).unwrap_err().contains("dim"));
+        let bad_seed = TrainSpec { seed: 6, ..good.clone() };
+        assert!(snap.validate(&bad_seed, 3).unwrap_err().contains("seed"));
+        let bad_steps = TrainSpec { steps: 31, ..good.clone() };
+        assert!(snap.validate(&bad_steps, 3).unwrap_err().contains("steps"));
+        // the whole hyperparameter surface is fingerprinted...
+        let bad_lr = TrainSpec { lr: good.lr * 2.0, ..good.clone() };
+        assert!(snap.validate(&bad_lr, 3).unwrap_err().contains("lr"));
+        let bad_period = TrainSpec { period: good.period + 1, ..good.clone() };
+        assert!(snap.validate(&bad_period, 3).unwrap_err().contains("period"));
+        let bad_batch = TrainSpec { batch: good.batch + 1, ..good.clone() };
+        assert!(snap.validate(&bad_batch, 3).unwrap_err().contains("batch"));
+        let bad_wd = TrainSpec { weight_decay: 1e-4, ..good.clone() };
+        assert!(snap.validate(&bad_wd, 3).unwrap_err().contains("weight_decay"));
+        let bad_net = TrainSpec {
+            network: crate::config::NetworkSpec { latency_us: 1.0, bandwidth_gbps: 1.0 },
+            ..good.clone()
+        };
+        assert!(snap.validate(&bad_net, 3).unwrap_err().contains("network"));
+        // ...except threads: executors are bitwise interchangeable
+        let other_exec = TrainSpec { threads: good.threads + 7, ..good };
+        snap.validate(&other_exec, 3).unwrap();
+    }
+
+    #[test]
+    fn write_is_atomic_and_latest_picks_newest() {
+        let dir = temp_dir("atomic");
+        assert_eq!(latest_snapshot(&dir).unwrap(), None, "missing dir is not an error");
+        for round in [3usize, 12, 7] {
+            sample_snapshot(AlgorithmKind::VrlSgd, round)
+                .write_atomic(&dir.join(snapshot_file_name(round + 1)))
+                .unwrap();
+        }
+        // no .tmp residue
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let latest = latest_snapshot(&dir).unwrap().unwrap();
+        assert!(latest.ends_with(snapshot_file_name(13)), "{}", latest.display());
+        assert_eq!(Snapshot::load(&latest).unwrap().round, 13);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_keeps_last_n() {
+        let dir = temp_dir("keep");
+        let mut ck = Checkpointer::new(&dir).every(1).keep_last(2);
+        let spec = TrainSpec { workers: 2, steps: 30, seed: 5, ..TrainSpec::default() };
+        let params0 = vec![0.0f32; 3];
+        let algo = make_algorithm(&spec, &params0);
+        let root = Pcg32::new(spec.seed, 0x5EED);
+        let mut workers: Vec<WorkerState> =
+            (0..2).map(|i| WorkerState::new(i, &params0, &root)).collect();
+        let history = History::new(1.0);
+        for round in 0..5 {
+            let mut rs = RunState {
+                spec: &spec,
+                workers: &mut workers,
+                algorithm: algo.as_ref(),
+                dim: 3,
+                comm: CommStats::default(),
+                sim_time: SimTime::default(),
+                history: &history,
+                round,
+                step: (round + 1) * 3,
+                last_loss: 1.0,
+            };
+            ck.on_state(&mut rs);
+        }
+        assert_eq!(ck.snapshots_written(), 5);
+        assert_eq!(ck.last_error(), None);
+        let mut names: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        assert_eq!(names, vec![snapshot_file_name(4), snapshot_file_name(5)]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cadence_skips_off_rounds() {
+        let dir = temp_dir("cadence");
+        let mut ck = Checkpointer::new(&dir).every(3).keep_last(0);
+        let spec = TrainSpec { workers: 1, steps: 30, ..TrainSpec::default() };
+        let params0 = vec![0.0f32; 2];
+        let algo = make_algorithm(&spec, &params0);
+        let root = Pcg32::new(spec.seed, 0x5EED);
+        let mut workers = vec![WorkerState::new(0, &params0, &root)];
+        let history = History::new(1.0);
+        for round in 0..7 {
+            let mut rs = RunState {
+                spec: &spec,
+                workers: &mut workers,
+                algorithm: algo.as_ref(),
+                dim: 2,
+                comm: CommStats::default(),
+                sim_time: SimTime::default(),
+                history: &history,
+                round,
+                step: round + 1,
+                last_loss: 1.0,
+            };
+            ck.on_state(&mut rs);
+        }
+        // rounds 2 and 5 hit the every-3 cadence (resume rounds 3 and 6)
+        assert_eq!(ck.snapshots_written(), 2);
+        let latest = latest_snapshot(&dir).unwrap().unwrap();
+        assert!(latest.ends_with(snapshot_file_name(6)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -95,6 +95,13 @@ impl Cluster {
         self.stats = CommStats::default();
     }
 
+    /// Overwrite the counters wholesale — used when resuming from a
+    /// checkpoint so cumulative rounds/bytes/sim-time continue from the
+    /// snapshot instead of restarting at zero.
+    pub fn restore_stats(&mut self, stats: CommStats) {
+        self.stats = stats;
+    }
+
     /// Allreduce-mean over the workers' rows: every row is replaced by the
     /// elementwise mean. Bit-exact regardless of algorithm (the sum is
     /// computed once in f64 and broadcast), while cost accounting follows

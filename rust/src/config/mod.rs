@@ -403,6 +403,56 @@ impl ScheduleSpec {
     }
 }
 
+/// Checkpoint/resume settings, parsed from the `[checkpoint]` TOML table
+/// (all overridable by the `train` subcommand's `--checkpoint-dir` /
+/// `--checkpoint-every` / `--checkpoint-keep` / `--resume` flags).
+/// Checkpointing is enabled iff `dir` is set; the launcher then registers
+/// a `checkpoint::Checkpointer` observer on the session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointSpec {
+    /// Snapshot directory (`checkpoint.dir`); `None` disables.
+    pub dir: Option<String>,
+    /// Rounds between snapshots (`checkpoint.every`, default 1).
+    pub every: usize,
+    /// Keep the newest N snapshots (`checkpoint.keep`, default 3;
+    /// 0 = unlimited).
+    pub keep: usize,
+    /// Resume from the newest snapshot in `dir` when one exists
+    /// (`checkpoint.resume`, default false).
+    pub resume: bool,
+}
+
+impl Default for CheckpointSpec {
+    fn default() -> Self {
+        CheckpointSpec { dir: None, every: 1, keep: 3, resume: false }
+    }
+}
+
+impl CheckpointSpec {
+    /// Parse from a flattened TOML doc (`checkpoint.*` keys).
+    pub fn from_doc(doc: &TomlDoc) -> Result<CheckpointSpec, String> {
+        let d = CheckpointSpec::default();
+        let dir = doc.get("checkpoint.dir").and_then(|v| v.as_str()).map(|s| s.to_string());
+        let every = doc.usize_or("checkpoint.every", d.every);
+        if every == 0 {
+            return Err("checkpoint.every must be >= 1".into());
+        }
+        let keep = doc.usize_or("checkpoint.keep", d.keep);
+        let resume = doc.bool_or("checkpoint.resume", d.resume);
+        if dir.is_none()
+            && (resume
+                || doc.get("checkpoint.every").is_some()
+                || doc.get("checkpoint.keep").is_some())
+        {
+            return Err(
+                "checkpoint.every / checkpoint.keep / checkpoint.resume need checkpoint.dir"
+                    .into(),
+            );
+        }
+        Ok(CheckpointSpec { dir, every, keep, resume })
+    }
+}
+
 /// Top-level launcher config file (TOML): a spec plus a task and partition.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -414,6 +464,8 @@ pub struct RunConfig {
     pub partition: Partition,
     /// Optional γ / period schedules.
     pub schedule: ScheduleSpec,
+    /// Optional checkpoint/resume settings.
+    pub checkpoint: CheckpointSpec,
     /// Where to write CSV output (optional).
     pub output: Option<String>,
 }
@@ -432,8 +484,9 @@ impl RunConfig {
             other => return Err(format!("unknown partition '{other}'")),
         };
         let schedule = ScheduleSpec::from_doc(&doc)?;
+        let checkpoint = CheckpointSpec::from_doc(&doc)?;
         let output = doc.get("output").and_then(|v| v.as_str()).map(|s| s.to_string());
-        Ok(RunConfig { spec, task, partition, schedule, output })
+        Ok(RunConfig { spec, task, partition, schedule, checkpoint, output })
     }
 
     /// Load a TOML file.
@@ -615,6 +668,46 @@ mod tests {
         assert!(RunConfig::from_toml(
             "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[schedule]\n\
              lr_decay_every = 10\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn checkpoint_table_parses_and_defaults() {
+        let cfg = RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[checkpoint]\n\
+             dir = \"ckpt\"\nevery = 10\nkeep = 2\nresume = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint.dir.as_deref(), Some("ckpt"));
+        assert_eq!(cfg.checkpoint.every, 10);
+        assert_eq!(cfg.checkpoint.keep, 2);
+        assert!(cfg.checkpoint.resume);
+        // absent table -> disabled defaults
+        let cfg = RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint, CheckpointSpec::default());
+        assert_eq!(cfg.checkpoint.dir, None);
+        // cadence/resume without a directory is a config error
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[checkpoint]\nevery = 5\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[checkpoint]\n\
+             resume = true\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[checkpoint]\nkeep = 2\n"
+        )
+        .is_err());
+        // zero cadence rejected
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[checkpoint]\n\
+             dir = \"ckpt\"\nevery = 0\n"
         )
         .is_err());
     }

@@ -17,6 +17,7 @@
 
 use crate::comm::Cluster;
 use crate::config::{AlgorithmKind, TrainSpec};
+use crate::format::snap::{Dec, Enc};
 use crate::rng::Pcg32;
 
 /// Per-worker hook run after every local engine step. This is where
@@ -109,6 +110,32 @@ pub trait Algorithm: Send {
     /// no-op). CoCoD-SGD applies its pending overlapped correction here
     /// so the final averaged model includes the last round's allreduce.
     fn finalize(&mut self, _workers: &mut [WorkerState], _cluster: &mut Cluster) {}
+
+    /// Serialize algorithm-private state for a checkpoint (default:
+    /// none). Everything a resumed run cannot rebuild from the spec must
+    /// be here — EASGD's center variable, CoCoD-SGD's pending overlapped
+    /// correction. Per-worker state (params, Δ, rng, corrector buffers)
+    /// is captured by the checkpoint subsystem itself and must *not* be
+    /// duplicated here.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore state produced by [`Algorithm::save_state`]. The default
+    /// accepts only an empty payload, so a stateful algorithm that
+    /// forgets to override both hooks fails loudly instead of resuming
+    /// wrong.
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        if bytes.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "{}: unexpected {}-byte checkpoint state (algorithm keeps none)",
+                self.name(),
+                bytes.len()
+            ))
+        }
+    }
 }
 
 /// Build the algorithm named by `spec`, given the shared initial model
@@ -304,6 +331,27 @@ impl Algorithm for Easgd {
         // under the same period k").
         cluster.charge_allreduce(dim);
     }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.put_f32s(&self.center);
+        e.into_bytes()
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut d = Dec::new(bytes);
+        let center = d.f32s().map_err(|e| format!("easgd center: {e}"))?;
+        d.finish().map_err(|e| format!("easgd state: {e}"))?;
+        if center.len() != self.center.len() {
+            return Err(format!(
+                "easgd center dim {} != model dim {}",
+                center.len(),
+                self.center.len()
+            ));
+        }
+        self.center = center;
+        Ok(())
+    }
 }
 
 /// Per-worker heavy-ball state for [`MomentumLocalSgd`]: holds this
@@ -494,6 +542,51 @@ impl Algorithm for CocodSgd {
         // in `sync`; without this flush its result would be dropped and
         // the final averaged model would miss one correction.
         self.apply_pending(workers);
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        // The pending (mean, snapshots) is genuinely in flight at a round
+        // boundary: dropping it on resume would skip one correction and
+        // silently fork the trajectory.
+        let mut e = Enc::new();
+        match &self.pending {
+            None => e.put_bool(false),
+            Some((mean, snaps)) => {
+                e.put_bool(true);
+                e.put_f32s(mean);
+                e.put_usize(snaps.len());
+                for s in snaps {
+                    e.put_f32s(s);
+                }
+            }
+        }
+        e.into_bytes()
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut d = Dec::new(bytes);
+        let has = d.bool().map_err(|e| format!("cocod state: {e}"))?;
+        self.pending = if has {
+            let mean = d.f32s().map_err(|e| format!("cocod mean: {e}"))?;
+            let n = d.usize().map_err(|e| format!("cocod snapshot count: {e}"))?;
+            let mut snaps = Vec::with_capacity(n);
+            for i in 0..n {
+                let s = d.f32s().map_err(|e| format!("cocod snapshot {i}: {e}"))?;
+                if s.len() != mean.len() {
+                    return Err(format!(
+                        "cocod snapshot {i} dim {} != mean dim {}",
+                        s.len(),
+                        mean.len()
+                    ));
+                }
+                snaps.push(s);
+            }
+            Some((mean, snaps))
+        } else {
+            None
+        };
+        d.finish().map_err(|e| format!("cocod state: {e}"))?;
+        Ok(())
     }
 }
 
@@ -723,6 +816,47 @@ mod tests {
                 "algo {}",
                 a.name()
             );
+        }
+    }
+
+    #[test]
+    fn easgd_state_round_trips_and_rejects_bad_dim() {
+        let mut a = Easgd { k: 5, rho: 0.25, center: vec![1.5, -2.0, 0.25] };
+        let bytes = a.save_state();
+        let mut b = Easgd { k: 5, rho: 0.25, center: vec![0.0; 3] };
+        b.restore_state(&bytes).unwrap();
+        assert_eq!(b.center, a.center);
+        let mut c = Easgd { k: 5, rho: 0.25, center: vec![0.0; 2] };
+        assert!(c.restore_state(&bytes).unwrap_err().contains("dim"));
+    }
+
+    #[test]
+    fn cocod_pending_state_round_trips() {
+        let mut a = CocodSgd::new(3);
+        let mut ws = states(&[vec![0.0, 1.0], vec![4.0, 5.0]]);
+        let mut cl = cluster(2);
+        a.sync(0, 3, 0.1, &mut ws, &mut cl); // leaves a pending correction
+        let bytes = a.save_state();
+        let mut b = CocodSgd::new(3);
+        b.restore_state(&bytes).unwrap();
+        assert_eq!(b.pending, a.pending);
+        // empty pending round-trips too
+        let empty = CocodSgd::new(3).save_state();
+        let mut c = CocodSgd::new(3);
+        c.pending = a.pending.clone();
+        c.restore_state(&empty).unwrap();
+        assert_eq!(c.pending, None);
+    }
+
+    #[test]
+    fn stateless_algorithms_reject_foreign_state() {
+        let p0 = vec![0.0f32; 2];
+        for kind in [AlgorithmKind::SSgd, AlgorithmKind::LocalSgd, AlgorithmKind::VrlSgd] {
+            let spec = TrainSpec { algorithm: kind, ..TrainSpec::default() };
+            let mut a = make_algorithm(&spec, &p0);
+            assert!(a.restore_state(&[]).is_ok());
+            let err = a.restore_state(&[1, 2, 3]).unwrap_err();
+            assert!(err.contains("unexpected"), "{err}");
         }
     }
 

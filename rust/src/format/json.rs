@@ -87,13 +87,6 @@ impl Json {
         }
     }
 
-    /// Serialize (compact, deterministic key order).
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -129,6 +122,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization with deterministic (sorted) key order;
+/// `to_string()` comes for free via the blanket `ToString` impl.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -9,9 +9,14 @@
 //!   `json.dump`).
 //! * [`toml_lite`] — a TOML subset (tables, string/number/bool keys)
 //!   covering the launcher's run configs.
+//! * [`snap`] — a versioned, checksummed, length-prefixed binary
+//!   container used by the [`crate::checkpoint`] subsystem; `f32`/`f64`
+//!   payloads round-trip bitwise (required for bit-identical resume).
 
 pub mod json;
+pub mod snap;
 pub mod toml_lite;
 
 pub use json::Json;
+pub use snap::{SnapReader, SnapWriter};
 pub use toml_lite::TomlDoc;

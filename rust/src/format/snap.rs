@@ -1,0 +1,445 @@
+//! `snap` — versioned, length-prefixed binary snapshot container.
+//!
+//! The checkpoint subsystem ([`crate::checkpoint`]) needs an on-disk
+//! format that is (a) zero-dependency like the sibling [`super::json`] /
+//! [`super::toml_lite`] substrates, (b) exact — `f32`/`f64` state must
+//! round-trip *bitwise* for resumed runs to replay identically — and
+//! (c) self-validating, so a truncated or bit-rotted file is rejected
+//! instead of silently resuming from garbage.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic   b"VSNP"                      4 bytes
+//! version u32                          4 bytes
+//! count   u32  (number of sections)    4 bytes
+//! section × count:
+//!   name_len u8, name bytes            (ASCII identifier)
+//!   payload_len u64, payload bytes
+//! checksum u64                         FNV-1a 64 over everything above
+//! ```
+//!
+//! Section payloads are opaque byte strings; [`Enc`] / [`Dec`] provide
+//! the primitive put/get vocabulary ([`Enc::put_f32s`] writes raw IEEE
+//! bits, never a decimal rendering).
+
+/// File magic for snapshot containers.
+pub const MAGIC: [u8; 4] = *b"VSNP";
+
+/// FNV-1a 64-bit checksum (deterministic, dependency-free).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Builds a snapshot container in memory.
+pub struct SnapWriter {
+    version: u32,
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl SnapWriter {
+    /// New container with the given format version.
+    pub fn new(version: u32) -> Self {
+        SnapWriter { version, sections: Vec::new() }
+    }
+
+    /// Append a named section. Names must be non-empty ASCII ≤ 255 bytes;
+    /// duplicates are allowed (the reader returns the first).
+    pub fn section(&mut self, name: &str, payload: Vec<u8>) {
+        debug_assert!(!name.is_empty() && name.len() <= u8::MAX as usize);
+        self.sections.push((name.to_string(), payload));
+    }
+
+    /// Serialize: header, sections, trailing checksum.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&self.version.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for (name, payload) in &self.sections {
+            out.push(name.len() as u8);
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(payload);
+        }
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+}
+
+/// Parses and validates a snapshot container.
+pub struct SnapReader {
+    version: u32,
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl SnapReader {
+    /// Parse `bytes`, verifying magic, structure and checksum. Does *not*
+    /// judge the version — callers compare [`SnapReader::version`]
+    /// against what they support so the error can say both numbers.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SnapReader, String> {
+        // header (12) + checksum (8) is the smallest possible file
+        if bytes.len() < 20 {
+            return Err(format!("snapshot truncated: {} bytes", bytes.len()));
+        }
+        if bytes[..4] != MAGIC {
+            return Err("not a snapshot file (bad magic)".to_string());
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let computed = fnv1a64(body);
+        if stored != computed {
+            return Err(format!(
+                "snapshot checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) — file is corrupted or truncated"
+            ));
+        }
+        let mut d = Dec::new(&body[4..]);
+        let version = d.u32()?;
+        let count = d.u32()? as usize;
+        let mut sections = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = d.u8()? as usize;
+            let name = std::str::from_utf8(d.bytes_raw(name_len)?)
+                .map_err(|_| "section name is not UTF-8".to_string())?
+                .to_string();
+            let payload_len = d.u64()? as usize;
+            let payload = d.bytes_raw(payload_len)?.to_vec();
+            sections.push((name, payload));
+        }
+        d.finish()?;
+        Ok(SnapReader { version, sections })
+    }
+
+    /// The container's format version.
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Payload of the first section named `name`.
+    pub fn section(&self, name: &str) -> Option<&[u8]> {
+        self.sections.iter().find(|(n, _)| n == name).map(|(_, p)| p.as_slice())
+    }
+
+    /// Payload of `name`, or a clear error naming the missing section.
+    pub fn require(&self, name: &str) -> Result<&[u8], String> {
+        self.section(name).ok_or_else(|| format!("snapshot is missing the '{name}' section"))
+    }
+}
+
+/// Primitive encoder for section payloads.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// Fresh empty buffer.
+    pub fn new() -> Self {
+        Enc::default()
+    }
+
+    /// Consume into the payload bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append a `u8`.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `bool` as one byte.
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    /// Append a `u32` (LE).
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64` (LE).
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `usize` as `u64`.
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Append an `f32` (raw IEEE bits).
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f64` (raw IEEE bits).
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append a length-prefixed `f32` slice (raw bits, bitwise-exact).
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Append a length-prefixed raw byte string.
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+}
+
+/// Primitive decoder for section payloads. Every accessor checks bounds
+/// and returns a clear error instead of panicking on truncated input.
+pub struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Decode from `bytes`.
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Dec { b: bytes, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        // checked: a corrupted length prefix near usize::MAX must error,
+        // not overflow the bounds arithmetic
+        let end = match self.i.checked_add(n) {
+            Some(end) if end <= self.b.len() => end,
+            _ => {
+                return Err(format!(
+                    "unexpected end of snapshot data (wanted {n} bytes at offset {}, have {})",
+                    self.i,
+                    self.b.len() - self.i
+                ));
+            }
+        };
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    /// Raw bytes without a length prefix (caller knows the length).
+    pub fn bytes_raw(&mut self, n: usize) -> Result<&'a [u8], String> {
+        self.take(n)
+    }
+
+    /// Read a `u8`.
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a `bool`.
+    pub fn bool(&mut self) -> Result<bool, String> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(format!("invalid bool byte {other}")),
+        }
+    }
+
+    /// Read a `u32`.
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a `u64`.
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a `usize` (stored as `u64`).
+    pub fn usize(&mut self) -> Result<usize, String> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| format!("value {v} overflows usize"))
+    }
+
+    /// Read an `f32` (raw bits).
+    pub fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read an `f64` (raw bits).
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        std::str::from_utf8(self.take(n)?)
+            .map(|s| s.to_string())
+            .map_err(|_| "string is not UTF-8".to_string())
+    }
+
+    /// Read a length-prefixed `f32` vector.
+    pub fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.usize()?;
+        // guard the n*4 arithmetic: a corrupted length must error, not wrap
+        let ok = match n.checked_mul(4) {
+            Some(bytes) => self.i.checked_add(bytes).map(|end| end <= self.b.len()),
+            None => None,
+        };
+        if ok != Some(true) {
+            return Err(format!("f32 vector length {n} exceeds remaining data"));
+        }
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Read a length-prefixed raw byte string.
+    pub fn bytes(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.usize()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Assert the payload was fully consumed.
+    pub fn finish(&self) -> Result<(), String> {
+        if self.i != self.b.len() {
+            return Err(format!("{} trailing bytes after snapshot data", self.b.len() - self.i));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        let mut w = SnapWriter::new(3);
+        let mut e = Enc::new();
+        e.put_u64(42);
+        e.put_f32s(&[1.5, -0.25, f32::MIN_POSITIVE]);
+        e.put_str("hello");
+        w.section("meta", e.into_bytes());
+        w.section("empty", Vec::new());
+        w.to_bytes()
+    }
+
+    #[test]
+    fn container_round_trips() {
+        let bytes = sample();
+        let r = SnapReader::from_bytes(&bytes).unwrap();
+        assert_eq!(r.version(), 3);
+        let mut d = Dec::new(r.require("meta").unwrap());
+        assert_eq!(d.u64().unwrap(), 42);
+        assert_eq!(d.f32s().unwrap(), vec![1.5, -0.25, f32::MIN_POSITIVE]);
+        assert_eq!(d.str().unwrap(), "hello");
+        d.finish().unwrap();
+        assert_eq!(r.require("empty").unwrap(), &[] as &[u8]);
+        assert!(r.require("missing").unwrap_err().contains("missing"));
+    }
+
+    #[test]
+    fn primitives_round_trip_bitwise() {
+        let mut e = Enc::new();
+        e.put_u8(7);
+        e.put_bool(true);
+        e.put_u32(u32::MAX);
+        e.put_usize(12345);
+        e.put_f32(f32::NAN);
+        e.put_f64(-0.0);
+        e.put_bytes(&[1, 2, 3]);
+        let b = e.into_bytes();
+        let mut d = Dec::new(&b);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert!(d.bool().unwrap());
+        assert_eq!(d.u32().unwrap(), u32::MAX);
+        assert_eq!(d.usize().unwrap(), 12345);
+        // NaN payload bits survive
+        assert_eq!(d.f32().unwrap().to_bits(), f32::NAN.to_bits());
+        assert_eq!(d.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(d.bytes().unwrap(), vec![1, 2, 3]);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut bytes = sample();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = SnapReader::from_bytes(&bytes).unwrap_err();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let bytes = sample();
+        for cut in [0, 5, 19, bytes.len() - 1] {
+            let err = SnapReader::from_bytes(&bytes[..cut]).unwrap_err();
+            assert!(
+                err.contains("truncated") || err.contains("checksum"),
+                "cut {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut bytes = sample();
+        bytes[0] = b'X';
+        assert!(SnapReader::from_bytes(&bytes).unwrap_err().contains("magic"));
+    }
+
+    #[test]
+    fn dec_reports_truncated_reads_and_trailing_bytes() {
+        let mut e = Enc::new();
+        e.put_u32(1);
+        let b = e.into_bytes();
+        let mut d = Dec::new(&b);
+        assert!(d.u64().unwrap_err().contains("unexpected end"));
+        let mut d = Dec::new(&b);
+        d.u8().unwrap();
+        assert!(d.finish().unwrap_err().contains("trailing"));
+        // declared vector length beyond the buffer
+        let mut e = Enc::new();
+        e.put_u64(1 << 40);
+        let b = e.into_bytes();
+        assert!(Dec::new(&b).f32s().unwrap_err().contains("exceeds"));
+    }
+
+    #[test]
+    fn huge_declared_section_length_is_rejected_cleanly() {
+        // a crafted container declaring a u64::MAX payload behind a
+        // *valid* checksum must produce a clean error, not an overflow
+        // panic in the bounds arithmetic
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&1u32.to_le_bytes()); // one section
+        out.push(1);
+        out.push(b'x');
+        out.extend_from_slice(&u64::MAX.to_le_bytes());
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        let err = SnapReader::from_bytes(&out).unwrap_err();
+        assert!(err.contains("unexpected end"), "{err}");
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // pinned value so the on-disk format can never drift silently
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"vrl-sgd"), fnv1a64(b"vrl-sgd"));
+        assert_ne!(fnv1a64(b"vrl-sgd"), fnv1a64(b"vrl-sge"));
+    }
+}

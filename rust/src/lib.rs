@@ -16,6 +16,9 @@
 //!   either pure-rust analytic engines (quadratic / linreg / softmax / MLP)
 //!   or [`runtime::XlaEngine`], which executes JAX/Pallas models AOT-lowered
 //!   to HLO and loaded through the PJRT CPU client (`xla` feature).
+//! * [`checkpoint`] — versioned binary snapshots of the complete run
+//!   state ([`checkpoint::Checkpointer`] observer + `Trainer::resume_from`)
+//!   with bitwise-identical restarts for every algorithm and executor.
 //! * [`comm`] — simulated cluster network with latency/bandwidth cost model,
 //!   allreduce implementations and exact byte/round accounting.
 //! * [`data`] — synthetic datasets matching the paper's three tasks, plus
@@ -70,9 +73,41 @@
 //!     .unwrap();
 //! println!("{} rounds, {} bytes", out.comm.rounds, out.comm.bytes);
 //! ```
+//!
+//! Long runs survive crashes: register a [`checkpoint::Checkpointer`]
+//! and the complete run state (params, Δ corrections, RNG streams,
+//! momentum buffers, algorithm state, comm counters, history) is
+//! snapshotted every k rounds; rebuilding the same trainer and resuming
+//! replays the remaining rounds **bitwise identically**:
+//!
+//! ```no_run
+//! use vrl_sgd::checkpoint::{latest_snapshot, Checkpointer};
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
+//! let build = || {
+//!     Trainer::new(task.clone())
+//!         .algorithm(AlgorithmKind::VrlSgd)
+//!         .partition(Partition::LabelSharded)
+//!         .workers(8)
+//!         .steps(20_000)
+//!         .seed(7)
+//! };
+//! // save into ckpt/ every 100 rounds, keep the newest 3 snapshots
+//! let _ = build().observer(Checkpointer::new("ckpt").every(100).keep_last(3)).run();
+//! // ...process died? same builder + latest snapshot = same trajectory
+//! if let Some(snap) = latest_snapshot("ckpt").unwrap() {
+//!     let out = build().resume_from(&snap).unwrap().run().unwrap();
+//!     println!("resumed to loss {}", out.final_loss());
+//! }
+//! ```
+//!
+//! (The CLI exposes the same thing: `vrl-sgd train --config run.toml
+//! --checkpoint-dir ckpt --checkpoint-every 100`, then `--resume`.)
 
 pub mod analysis;
 pub mod benchutil;
+pub mod checkpoint;
 pub mod comm;
 pub mod config;
 pub mod coordinator;
@@ -89,6 +124,7 @@ pub mod trainer;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
+    pub use crate::checkpoint::{Checkpointer, Snapshot};
     pub use crate::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
     #[allow(deprecated)]
     pub use crate::coordinator::run_training;
@@ -99,6 +135,6 @@ pub mod prelude {
     pub use crate::trainer::{
         ConsensusTracker, ConstLr, ConstPeriod, CosineLr, CsvSink, EarlyStop, Executor,
         FnObserver, LrSchedule, MetricSink, Patience, PeriodSchedule, RoundInfo, RoundObserver,
-        Session, StagewisePeriod, StepDecayLr, StopAtLoss, SyncInfo, Trainer,
+        RunState, Session, StagewisePeriod, StepDecayLr, StopAtLoss, SyncInfo, Trainer,
     };
 }

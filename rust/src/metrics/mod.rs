@@ -118,10 +118,14 @@ impl History {
     }
 }
 
-/// Write a string to a file, creating parent directories.
+/// Write a string to a file, creating parent directories — so
+/// `--out reports/...` works on a fresh clone with no `reports/` yet.
 pub fn write_report(path: &str, contents: &str) -> std::io::Result<()> {
     if let Some(parent) = std::path::Path::new(path).parent() {
-        std::fs::create_dir_all(parent)?;
+        // a bare filename has `Some("")` as parent; nothing to create
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
     }
     std::fs::write(path, contents)
 }
@@ -198,9 +202,15 @@ mod tests {
     #[test]
     fn write_report_creates_dirs() {
         let dir = std::env::temp_dir().join(format!("vrl_metrics_{}", std::process::id()));
+        // missing nested parents (the fresh-clone `--out reports/...` case)
         let path = dir.join("a/b/c.csv");
         write_report(path.to_str().unwrap(), "x,y\n1,2\n").unwrap();
         assert_eq!(std::fs::read_to_string(&path).unwrap(), "x,y\n1,2\n");
+        // a bare relative filename (empty parent) must not error either
+        let bare = format!("vrl_metrics_bare_{}.csv", std::process::id());
+        write_report(&bare, "x\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&bare).unwrap(), "x\n");
+        let _ = std::fs::remove_file(&bare);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

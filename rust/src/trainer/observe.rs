@@ -17,7 +17,9 @@
 //!   buffering the whole history (see `Trainer::stream_only`).
 
 use crate::comm::CommStats;
-use crate::metrics::{DenseRow, SyncRow};
+use crate::config::TrainSpec;
+use crate::coordinator::{Algorithm, WorkerState};
+use crate::metrics::{DenseRow, History, SyncRow};
 use crate::sim::SimTime;
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -66,7 +68,39 @@ pub struct RoundInfo {
     pub sim_time: SimTime,
 }
 
-/// Per-round callbacks. Both methods default to no-ops, so observers
+/// Borrowed view of the complete run state at a round boundary, handed
+/// to [`RoundObserver::on_state`]. Everything a resumed run needs is
+/// reachable from here: the per-worker state (params, Δ, rng, corrector
+/// buffers — mutable because [`crate::coordinator::StepCorrector`]
+/// exposes its shareable buffer through `&mut self`), the algorithm's
+/// private state via [`Algorithm::save_state`], and the cumulative
+/// counters. `round` is the just-completed 0-based round index; a
+/// snapshot taken here resumes at round `round + 1` / iteration `step`.
+pub struct RunState<'a> {
+    /// The resolved training spec.
+    pub spec: &'a TrainSpec,
+    /// Per-worker state after this round's sync.
+    pub workers: &'a mut [WorkerState],
+    /// The running algorithm (for [`Algorithm::save_state`]).
+    pub algorithm: &'a dyn Algorithm,
+    /// Flat parameter dimension P.
+    pub dim: usize,
+    /// Cumulative communication counters.
+    pub comm: CommStats,
+    /// Cumulative simulated wall-clock.
+    pub sim_time: SimTime,
+    /// History recorded so far (trimmed to the last row under
+    /// `Trainer::stream_only`).
+    pub history: &'a History,
+    /// Just-completed 0-based round index.
+    pub round: usize,
+    /// Total local iterations elapsed per worker.
+    pub step: usize,
+    /// Last evaluated (or carried) global train loss.
+    pub last_loss: f64,
+}
+
+/// Per-round callbacks. All methods default to no-ops, so observers
 /// implement only what they need.
 pub trait RoundObserver {
     /// Fired right after the round's synchronization collective.
@@ -74,6 +108,12 @@ pub trait RoundObserver {
 
     /// Fired after the round's metrics (loss evaluation) are complete.
     fn on_round_end(&mut self, _info: &RoundInfo) {}
+
+    /// Fired after [`RoundObserver::on_round_end`], with mutable access
+    /// to the full run state. This is the checkpoint hook
+    /// ([`crate::checkpoint::Checkpointer`] serializes the state from
+    /// here); ordinary metric observers ignore it.
+    fn on_state(&mut self, _state: &mut RunState<'_>) {}
 }
 
 /// Shared-ownership observer: register `Rc<RefCell<O>>` and keep a clone
@@ -85,6 +125,10 @@ impl<O: RoundObserver> RoundObserver for Rc<RefCell<O>> {
 
     fn on_round_end(&mut self, info: &RoundInfo) {
         self.borrow_mut().on_round_end(info);
+    }
+
+    fn on_state(&mut self, state: &mut RunState<'_>) {
+        self.borrow_mut().on_state(state);
     }
 }
 

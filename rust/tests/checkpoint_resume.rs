@@ -1,0 +1,306 @@
+//! Checkpoint/resume contract: resuming from a mid-run snapshot produces
+//! a `TrainOutput` **bitwise identical** to the uninterrupted run —
+//! params, history, comm counters, simulated time and the
+//! `delta_residual` zero-sum invariant — for all seven algorithms under
+//! both the sequential and threaded executors. Crashes are injected with
+//! an observer that panics mid-run (caught with `catch_unwind`, exactly
+//! the state a killed process leaves behind: the last atomic snapshot on
+//! disk, nothing else). Corrupted / truncated / version-mismatched
+//! snapshots must be rejected with a clear error.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use vrl_sgd::checkpoint::{latest_snapshot, Checkpointer, Snapshot};
+use vrl_sgd::format::snap::SnapWriter;
+use vrl_sgd::prelude::*;
+
+const CRASH_ROUND: usize = 7;
+
+fn task() -> TaskKind {
+    TaskKind::SoftmaxSynthetic { classes: 4, features: 8, samples_per_worker: 48 }
+}
+
+fn base(algorithm: AlgorithmKind, threads: usize) -> Trainer {
+    Trainer::new(task())
+        .algorithm(algorithm)
+        .workers(4)
+        .period(5)
+        .lr(0.05)
+        .batch(8)
+        .steps(60)
+        .seed(11)
+        .partition(Partition::LabelSharded)
+        .parallelism(threads)
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("vrl_resume_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Crash injection: panics at the end of `self.0`, mid-run.
+struct CrashAt(usize);
+
+impl RoundObserver for CrashAt {
+    fn on_round_end(&mut self, info: &RoundInfo) {
+        if info.round == self.0 {
+            panic!("injected crash at round {}", info.round);
+        }
+    }
+}
+
+/// Run with checkpointing, crash at `CRASH_ROUND`, return the newest
+/// snapshot left on disk.
+fn crash_and_snapshot(algorithm: AlgorithmKind, threads: usize, dir: &Path) -> PathBuf {
+    let crashed = catch_unwind(AssertUnwindSafe(|| {
+        base(algorithm, threads)
+            .observer(Checkpointer::new(dir).every(3).keep_last(2))
+            .observer(CrashAt(CRASH_ROUND))
+            .run()
+    }));
+    assert!(crashed.is_err(), "{algorithm:?}: the injected crash must abort the run");
+    latest_snapshot(dir)
+        .unwrap()
+        .unwrap_or_else(|| panic!("{algorithm:?}: no snapshot survived the crash"))
+}
+
+#[test]
+fn resume_is_bitwise_identical_for_all_algorithms_and_executors() {
+    for algorithm in AlgorithmKind::ALL {
+        for threads in [1usize, 2] {
+            let full = base(algorithm, threads).run().unwrap();
+            let dir = temp_dir(&format!("{}_{threads}", algorithm.name()));
+            let snap_path = crash_and_snapshot(algorithm, threads, &dir);
+            let resumed = base(algorithm, threads)
+                .resume_from(&snap_path)
+                .unwrap()
+                .run()
+                .unwrap();
+            let tag = format!("{algorithm:?} x {threads} thread(s)");
+            assert_eq!(resumed.final_params, full.final_params, "{tag}: params");
+            assert_eq!(resumed.history, full.history, "{tag}: history");
+            assert_eq!(resumed.comm, full.comm, "{tag}: comm counters");
+            assert_eq!(resumed.sim_time, full.sim_time, "{tag}: simulated time");
+            assert_eq!(resumed.delta_residual, full.delta_residual, "{tag}: Σ Δ residual");
+            assert_eq!(resumed.algorithm, full.algorithm, "{tag}: name");
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn threaded_resume_of_sequential_checkpoint_is_identical() {
+    // executors are interchangeable across the boundary too: a snapshot
+    // taken under the sequential executor resumes threaded (and vice
+    // versa) with the same bits
+    let full = base(AlgorithmKind::VrlSgd, 1).run().unwrap();
+    let dir = temp_dir("cross_exec");
+    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    let resumed =
+        base(AlgorithmKind::VrlSgd, 2).resume_from(&snap_path).unwrap().run().unwrap();
+    assert_eq!(resumed.final_params, full.final_params);
+    assert_eq!(resumed.history, full.history);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn comm_and_sim_time_continue_across_the_boundary() {
+    // resumed counters must continue from the snapshot, not reset: every
+    // post-resume history row carries cumulative counters strictly above
+    // the boundary values, and boundary + post-boundary tail == final.
+    let full = base(AlgorithmKind::VrlSgd, 1).run().unwrap();
+    let dir = temp_dir("counters");
+    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    let snap = Snapshot::load(&snap_path).unwrap();
+    assert!(snap.comm.rounds > 0 && snap.comm.bytes > 0, "boundary counters are live");
+    assert!(snap.sim_time.total() > 0.0);
+
+    let resumed = base(AlgorithmKind::VrlSgd, 1)
+        .resume_from(&snap_path)
+        .unwrap()
+        .run()
+        .unwrap();
+    for row in &resumed.history.sync_rows[snap.round..] {
+        assert!(row.comm_rounds > snap.comm.rounds, "round {}: reset rounds", row.round);
+        assert!(row.comm_bytes > snap.comm.bytes, "round {}: reset bytes", row.round);
+        assert!(row.sim_time_s > snap.sim_time.total(), "round {}: reset time", row.round);
+    }
+    // CommStats::merge is the boundary arithmetic: snapshot + tail == final
+    let tail = vrl_sgd::comm::CommStats {
+        rounds: resumed.comm.rounds - snap.comm.rounds,
+        bytes: resumed.comm.bytes - snap.comm.bytes,
+        messages: resumed.comm.messages - snap.comm.messages,
+        sim_time_s: resumed.comm.sim_time_s - snap.comm.sim_time_s,
+    };
+    let mut merged = snap.comm;
+    merged.merge(&tail);
+    assert_eq!(merged.rounds, full.comm.rounds);
+    assert_eq!(merged.bytes, full.comm.bytes);
+    assert_eq!(merged.messages, full.comm.messages);
+    assert!((merged.sim_time_s - full.comm.sim_time_s).abs() < 1e-12);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_snapshot_is_rejected() {
+    let dir = temp_dir("corrupt");
+    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    let mut bytes = std::fs::read(&snap_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x08;
+    let bad = dir.join("round-99999999.snap");
+    std::fs::write(&bad, &bytes).unwrap();
+    let err = base(AlgorithmKind::VrlSgd, 1).resume_from(&bad).err().unwrap();
+    assert!(err.contains("checksum"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_snapshot_is_rejected() {
+    let dir = temp_dir("truncate");
+    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    let bytes = std::fs::read(&snap_path).unwrap();
+    for cut in [7usize, bytes.len() / 3, bytes.len() - 2] {
+        let bad = dir.join("round-88888888.snap");
+        std::fs::write(&bad, &bytes[..cut]).unwrap();
+        let err = base(AlgorithmKind::VrlSgd, 1).resume_from(&bad).err().unwrap();
+        assert!(
+            err.contains("truncated") || err.contains("checksum"),
+            "cut {cut}: {err}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn version_mismatched_snapshot_is_rejected() {
+    let dir = temp_dir("version");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut w = SnapWriter::new(vrl_sgd::checkpoint::SNAP_VERSION + 1);
+    w.section("meta", Vec::new());
+    let bad = dir.join("round-00000001.snap");
+    std::fs::write(&bad, w.to_bytes()).unwrap();
+    let err = base(AlgorithmKind::VrlSgd, 1).resume_from(&bad).err().unwrap();
+    assert!(err.contains("version"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mismatched_configuration_is_rejected_at_build() {
+    let dir = temp_dir("mismatch");
+    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    // wrong algorithm
+    let err = base(AlgorithmKind::LocalSgd, 1)
+        .resume_from(&snap_path)
+        .unwrap()
+        .build()
+        .err()
+        .unwrap();
+    assert!(err.contains("algorithm"), "{err}");
+    // wrong seed
+    let err = base(AlgorithmKind::VrlSgd, 1)
+        .seed(12)
+        .resume_from(&snap_path)
+        .unwrap()
+        .build()
+        .err()
+        .unwrap();
+    assert!(err.contains("seed"), "{err}");
+    // wrong step budget
+    let err = base(AlgorithmKind::VrlSgd, 1)
+        .steps(61)
+        .resume_from(&snap_path)
+        .unwrap()
+        .build()
+        .err()
+        .unwrap();
+    assert!(err.contains("steps"), "{err}");
+    // wrong learning rate (the whole hyperparameter surface is checked)
+    let err = base(AlgorithmKind::VrlSgd, 1)
+        .lr(0.06)
+        .resume_from(&snap_path)
+        .unwrap()
+        .build()
+        .err()
+        .unwrap();
+    assert!(err.contains("lr"), "{err}");
+    // a different executor is NOT a mismatch: bitwise interchangeable
+    base(AlgorithmKind::VrlSgd, 2).resume_from(&snap_path).unwrap().build().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_preserves_delta_zero_sum_invariant() {
+    // the Δ_i live in the snapshot verbatim; in particular their sum
+    // stays at floating-point-noise level through a save/load cycle
+    let dir = temp_dir("invariant");
+    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    let snap = Snapshot::load(&snap_path).unwrap();
+    let dim = snap.dim;
+    let mut sum = vec![0.0f32; dim];
+    let mut any_nonzero = false;
+    for w in &snap.worker_states {
+        for (s, d) in sum.iter_mut().zip(w.delta.iter()) {
+            *s += d;
+            any_nonzero |= *d != 0.0;
+        }
+    }
+    assert!(any_nonzero, "VRL-SGD Δ_i must be live mid-run");
+    let residual = sum.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    assert!(residual < 1e-4, "Σ Δ residual {residual}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resumed_csv_sink_reproduces_full_stream() {
+    // a streaming sink attached by the resumed process gets the restored
+    // rows replayed, so its CSV matches the uninterrupted run's exactly
+    let dir = temp_dir("sink");
+    std::fs::create_dir_all(&dir).unwrap();
+    let full_csv = dir.join("full.csv");
+    let resumed_csv = dir.join("resumed.csv");
+    let full = base(AlgorithmKind::LocalSgd, 1)
+        .sink(CsvSink::file(full_csv.to_str().unwrap()).unwrap())
+        .run()
+        .unwrap();
+    let snap_path = crash_and_snapshot(AlgorithmKind::LocalSgd, 1, &dir);
+    let resumed = base(AlgorithmKind::LocalSgd, 1)
+        .resume_from(&snap_path)
+        .unwrap()
+        .sink(CsvSink::file(resumed_csv.to_str().unwrap()).unwrap())
+        .run()
+        .unwrap();
+    assert_eq!(resumed.history, full.history);
+    assert_eq!(
+        std::fs::read_to_string(&full_csv).unwrap(),
+        std::fs::read_to_string(&resumed_csv).unwrap()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_at_final_round_yields_finished_run() {
+    // a snapshot taken at the very last round boundary resumes into an
+    // immediately-finished session whose output still matches
+    let full = base(AlgorithmKind::CocodSgd, 1).run().unwrap();
+    let dir = temp_dir("final");
+    let out = base(AlgorithmKind::CocodSgd, 1)
+        .observer(Checkpointer::new(&dir).every(1).keep_last(1))
+        .run()
+        .unwrap();
+    assert_eq!(out.final_params, full.final_params);
+    let snap_path = latest_snapshot(&dir).unwrap().unwrap();
+    let snap = Snapshot::load(&snap_path).unwrap();
+    assert_eq!(snap.step, 60, "last snapshot sits at the step budget");
+    let resumed = base(AlgorithmKind::CocodSgd, 1)
+        .resume_from(&snap_path)
+        .unwrap()
+        .run()
+        .unwrap();
+    // zero further rounds run; CoCoD's pending correction still flushes
+    assert_eq!(resumed.final_params, full.final_params);
+    assert_eq!(resumed.history, full.history);
+    assert_eq!(resumed.comm, full.comm);
+    let _ = std::fs::remove_dir_all(&dir);
+}
