@@ -56,7 +56,9 @@ use std::path::{Path, PathBuf};
 
 /// Current snapshot format version. Bump on any layout change; readers
 /// reject other versions with a clear error instead of misparsing.
-pub const SNAP_VERSION: u32 = 1;
+/// (v2: fabric fingerprint in `meta`, `fabric` stream section, and the
+/// per-round `straggler_wait_s` column in `history`.)
+pub const SNAP_VERSION: u32 = 2;
 
 /// One worker's serialized state.
 #[derive(Debug, Clone, PartialEq)]
@@ -106,6 +108,9 @@ pub struct Snapshot {
     pub comm: CommStats,
     /// Cumulative simulated wall-clock at the boundary.
     pub sim_time: SimTime,
+    /// Fabric straggler-stream position at the boundary, so a resumed
+    /// run replays the identical simulated timeline.
+    pub fabric: crate::fabric::FleetState,
     /// Metric history recorded so far.
     pub history: History,
 }
@@ -135,6 +140,7 @@ impl Snapshot {
             algo_state: state.algorithm.save_state(),
             comm: state.comm,
             sim_time: state.sim_time,
+            fabric: state.fabric,
             history: state.history.clone(),
         }
     }
@@ -199,6 +205,22 @@ impl Snapshot {
             || s.network.bandwidth_gbps.to_bits() != spec.network.bandwidth_gbps.to_bits()
         {
             errs.push("snapshot network spec differs (simulated time would fork)".to_string());
+        }
+        // fabric is compared on its *effective* surface — resolved speed
+        // multipliers, straggler model, priced collective, and (for
+        // two-level only) the effective uplink — so spellings the
+        // timeline cannot distinguish (Spread(0) vs Uniform, an ignored
+        // groups/uplink under a flat topology) don't reject a resume
+        let (fa, fb) = (&s.fabric, &spec.fabric);
+        let fabric_differs = fa.stragglers != fb.stragglers
+            || fa.speeds.multipliers(s.workers) != fb.speeds.multipliers(s.workers)
+            || fa.allreduce_algo() != fb.allreduce_algo()
+            || (fa.topology == crate::fabric::TopologyKind::TwoLevel
+                && fa.uplink_or(&s.network) != fb.uplink_or(&spec.network));
+        if fabric_differs {
+            errs.push(
+                "snapshot fabric spec differs (simulated timeline would fork)".to_string(),
+            );
         }
         if s.dense_metrics != spec.dense_metrics {
             errs.push("snapshot dense_metrics setting differs".to_string());
@@ -275,6 +297,7 @@ impl Snapshot {
         meta.put_u64(self.spec.seed);
         meta.put_f64(self.spec.network.latency_us);
         meta.put_f64(self.spec.network.bandwidth_gbps);
+        put_fabric_spec(&mut meta, &self.spec.fabric);
         meta.put_bool(self.spec.dense_metrics);
         meta.put_usize(self.spec.threads);
         meta.put_usize(self.dim);
@@ -312,7 +335,14 @@ impl Snapshot {
         let mut time = Enc::new();
         time.put_f64(self.sim_time.compute_s);
         time.put_f64(self.sim_time.comm_s);
+        time.put_f64(self.sim_time.wait_s);
         w.section("time", time.into_bytes());
+
+        let mut fab = Enc::new();
+        fab.put_u64(self.fabric.rng_state);
+        fab.put_u64(self.fabric.rng_inc);
+        fab.put_u64(self.fabric.rounds_sampled);
+        w.section("fabric", fab.into_bytes());
 
         let mut h = Enc::new();
         h.put_f64(self.history.initial_loss);
@@ -325,6 +355,7 @@ impl Snapshot {
             h.put_u64(r.comm_rounds);
             h.put_u64(r.comm_bytes);
             h.put_f64(r.sim_time_s);
+            h.put_f64(r.straggler_wait_s);
         }
         h.put_usize(self.history.dense_rows.len());
         for r in &self.history.dense_rows {
@@ -371,6 +402,7 @@ impl Snapshot {
             weight_decay: d.f32()?,
             seed: d.u64()?,
             network: crate::config::NetworkSpec { latency_us: d.f64()?, bandwidth_gbps: d.f64()? },
+            fabric: get_fabric_spec(&mut d)?,
             dense_metrics: d.bool()?,
             threads: d.usize()?,
         };
@@ -411,7 +443,15 @@ impl Snapshot {
         d.finish()?;
 
         let mut d = Dec::new(r.require("time")?);
-        let sim_time = SimTime { compute_s: d.f64()?, comm_s: d.f64()? };
+        let sim_time = SimTime { compute_s: d.f64()?, comm_s: d.f64()?, wait_s: d.f64()? };
+        d.finish()?;
+
+        let mut d = Dec::new(r.require("fabric")?);
+        let fabric = crate::fabric::FleetState {
+            rng_state: d.u64()?,
+            rng_inc: d.u64()?,
+            rounds_sampled: d.u64()?,
+        };
         d.finish()?;
 
         let mut d = Dec::new(r.require("history")?);
@@ -426,6 +466,7 @@ impl Snapshot {
                 comm_rounds: d.u64()?,
                 comm_bytes: d.u64()?,
                 sim_time_s: d.f64()?,
+                straggler_wait_s: d.f64()?,
             });
         }
         let dense = d.usize()?;
@@ -449,6 +490,7 @@ impl Snapshot {
             algo_state,
             comm,
             sim_time,
+            fabric,
             history,
         })
     }
@@ -478,6 +520,73 @@ impl Snapshot {
             std::fs::read(path).map_err(|e| format!("read snapshot {}: {e}", path.display()))?;
         Snapshot::from_bytes(&bytes).map_err(|e| format!("snapshot {}: {e}", path.display()))
     }
+}
+
+/// Encode the fabric fingerprint into the `meta` section. The straggler
+/// model and topology round-trip through their display shorthand
+/// (Rust's f64 `Display` is shortest-round-trip, so the re-parsed spec
+/// compares equal bit for bit).
+fn put_fabric_spec(e: &mut Enc, f: &crate::fabric::FabricSpec) {
+    use crate::fabric::SpeedProfile;
+    match &f.speeds {
+        SpeedProfile::Uniform => e.put_u8(0),
+        SpeedProfile::Spread(spread) => {
+            e.put_u8(1);
+            e.put_f64(*spread);
+        }
+        SpeedProfile::Explicit(m) => {
+            e.put_u8(2);
+            e.put_usize(m.len());
+            for &v in m {
+                e.put_f64(v);
+            }
+        }
+    }
+    e.put_str(&f.stragglers.name());
+    e.put_str(f.topology.name());
+    e.put_usize(f.groups);
+    match &f.uplink {
+        Some(u) => {
+            e.put_bool(true);
+            e.put_f64(u.latency_us);
+            e.put_f64(u.bandwidth_gbps);
+        }
+        None => e.put_bool(false),
+    }
+}
+
+/// Decode the fabric fingerprint written by [`put_fabric_spec`].
+fn get_fabric_spec(d: &mut Dec) -> Result<crate::fabric::FabricSpec, String> {
+    use crate::fabric::{FabricSpec, SpeedProfile, StragglerModel, TopologyKind};
+    let speeds = match d.u8()? {
+        0 => SpeedProfile::Uniform,
+        1 => SpeedProfile::Spread(d.f64()?),
+        2 => {
+            // no pre-allocation from the untrusted count: a corrupted
+            // snapshot must fail the first element read, not abort in
+            // the allocator
+            let n = d.usize()?;
+            let mut m = Vec::new();
+            for _ in 0..n {
+                m.push(d.f64()?);
+            }
+            SpeedProfile::Explicit(m)
+        }
+        tag => return Err(format!("unknown fabric speed-profile tag {tag}")),
+    };
+    let stragglers = StragglerModel::parse(&d.str()?)
+        .map_err(|e| format!("snapshot straggler model: {e}"))?;
+    let topology: TopologyKind = d
+        .str()?
+        .parse()
+        .map_err(|e: String| format!("snapshot topology: {e}"))?;
+    let groups = d.usize()?;
+    let uplink = if d.bool()? {
+        Some(crate::config::NetworkSpec { latency_us: d.f64()?, bandwidth_gbps: d.f64()? })
+    } else {
+        None
+    };
+    Ok(FabricSpec { speeds, stragglers, topology, groups, uplink })
 }
 
 /// File name for the snapshot resuming at `round` (zero-padded so
@@ -654,6 +763,7 @@ mod tests {
             comm_rounds: 1,
             comm_bytes: 48,
             sim_time_s: 0.5,
+            straggler_wait_s: 0.0625,
         });
         let mut rs = RunState {
             spec: &spec,
@@ -661,7 +771,12 @@ mod tests {
             algorithm: algo.as_ref(),
             dim: 3,
             comm: cluster.stats(),
-            sim_time: SimTime { compute_s: 1.25, comm_s: 0.5 },
+            sim_time: SimTime { compute_s: 1.25, comm_s: 0.5, wait_s: 0.25 },
+            fabric: crate::fabric::FleetState {
+                rng_state: 0xDEAD_BEEF,
+                rng_inc: 0x1234_5679,
+                rounds_sampled: 11,
+            },
             history: &history,
             round,
             step: 3,
@@ -727,9 +842,55 @@ mod tests {
             ..good.clone()
         };
         assert!(snap.validate(&bad_net, 3).unwrap_err().contains("network"));
+        // fabric shapes the simulated timeline, so it is fingerprinted too
+        let bad_fabric = TrainSpec {
+            fabric: crate::fabric::FabricSpec {
+                stragglers: crate::fabric::StragglerModel::LogNormal { sigma: 0.5 },
+                ..crate::fabric::FabricSpec::default()
+            },
+            ..good.clone()
+        };
+        assert!(snap.validate(&bad_fabric, 3).unwrap_err().contains("fabric"));
+        // ...but only on the *effective* surface: spellings the timeline
+        // cannot distinguish are not mismatches
+        let same_effect = TrainSpec {
+            fabric: crate::fabric::FabricSpec {
+                speeds: crate::fabric::SpeedProfile::Spread(0.0), // == Uniform
+                groups: 5, // ignored under the flat ring topology
+                uplink: Some(good.network), // ditto
+                ..crate::fabric::FabricSpec::default()
+            },
+            ..good.clone()
+        };
+        snap.validate(&same_effect, 3).unwrap();
         // ...except threads: executors are bitwise interchangeable
         let other_exec = TrainSpec { threads: good.threads + 7, ..good };
         snap.validate(&other_exec, 3).unwrap();
+    }
+
+    #[test]
+    fn fabric_spec_and_stream_round_trip_bitwise() {
+        use crate::fabric::{FabricSpec, SpeedProfile, StragglerModel, TopologyKind};
+        let mut snap = sample_snapshot(AlgorithmKind::VrlSgd, 2);
+        snap.spec.fabric = FabricSpec {
+            speeds: SpeedProfile::Explicit(vec![1.0, 1.0625]),
+            stragglers: StragglerModel::Bernoulli { prob: 0.125, slowdown: 4.5 },
+            topology: TopologyKind::TwoLevel,
+            groups: 2,
+            uplink: Some(crate::config::NetworkSpec {
+                latency_us: 500.0,
+                bandwidth_gbps: 1.0,
+            }),
+        };
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.spec.fabric, snap.spec.fabric);
+        assert_eq!(back.fabric, snap.fabric, "fleet stream position survives");
+        assert_eq!(back, snap);
+        // a non-shortest-representable straggler parameter still
+        // round-trips exactly (f64 Display is shortest-round-trip)
+        snap.spec.fabric.stragglers = StragglerModel::LogNormal { sigma: 0.1 + 0.2 };
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.spec.fabric, snap.spec.fabric);
     }
 
     #[test]
@@ -773,6 +934,7 @@ mod tests {
                 dim: 3,
                 comm: CommStats::default(),
                 sim_time: SimTime::default(),
+                fabric: crate::fabric::FleetState::default(),
                 history: &history,
                 round,
                 step: (round + 1) * 3,
@@ -809,6 +971,7 @@ mod tests {
                 dim: 2,
                 comm: CommStats::default(),
                 sim_time: SimTime::default(),
+                fabric: crate::fabric::FleetState::default(),
                 history: &history,
                 round,
                 step: round + 1,

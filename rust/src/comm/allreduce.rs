@@ -3,8 +3,15 @@
 //! Two things live here: (a) *executable* reference implementations that
 //! actually move data between per-worker buffers the way the real
 //! algorithm would (used by tests to prove the cost model counts what the
-//! data movement does), and (b) closed-form cost formulas used by the
-//! fast path in [`super::Cluster`].
+//! data movement does — they return the [`Movement`] they performed), and
+//! (b) closed-form cost formulas used by the fast path in
+//! [`super::Cluster`].
+//!
+//! Flat topologies (`Ring` / `Naive` / `Tree`) charge every hop against
+//! one [`Network`]; the hierarchical [`AllReduceAlgo::TwoLevel`] charges
+//! intra-group hops against the (fast) local network and the inter-group
+//! ring against a second, typically slower, uplink [`Network`] — see
+//! [`AllReduceAlgo::cost_with`].
 
 use super::Network;
 
@@ -16,27 +23,107 @@ pub enum AllReduceAlgo {
     /// Naive star: gather N−1 messages of M bytes to the leader, then
     /// broadcast N−1 back. Latency-optimal for tiny messages.
     Naive,
+    /// Binomial tree: reduce up + broadcast down, 2·⌈log₂N⌉ serial
+    /// phases of full-M messages. Fewer serial latencies than the ring
+    /// or star for small messages at large N.
+    Tree,
+    /// Two-level hierarchy: ring allreduce inside each of `groups`
+    /// contiguous groups (concurrent, local network), ring allreduce of
+    /// full-M buffers among the group leaders (uplink network), then a
+    /// binomial broadcast back inside each group. `groups == N`
+    /// degenerates to a flat ring over the uplink; `groups == 1` is a
+    /// flat ring plus a redundant broadcast (prefer [`AllReduceAlgo::Ring`]).
+    TwoLevel {
+        /// Number of contiguous worker groups (clamped to `1..=N`).
+        groups: usize,
+    },
 }
 
-/// Cost of one collective.
+/// Cost of one collective under the α–β model.
+///
+/// Units: `messages` counts point-to-point sends (one per hop, however
+/// small the payload); `bytes` is the total payload over **all** links
+/// (not per link, not the critical path); `time_s` is the
+/// **critical-path** wall-clock in seconds — concurrent hops are charged
+/// once, serial hops accumulate.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CollectiveCost {
     /// Total point-to-point messages.
     pub messages: u64,
-    /// Total bytes over all links.
+    /// Total payload bytes summed over all links.
     pub bytes: u64,
     /// Critical-path time, seconds.
     pub time_s: f64,
 }
 
+impl CollectiveCost {
+    /// The free collective (single worker).
+    pub const ZERO: CollectiveCost = CollectiveCost { messages: 0, bytes: 0, time_s: 0.0 };
+}
+
+/// Messages and payload bytes actually moved by one of the executable
+/// reference implementations below. The formula-vs-movement property
+/// tests compare these against [`AllReduceAlgo::cost_with`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Movement {
+    /// Point-to-point transfers performed.
+    pub messages: u64,
+    /// Payload bytes summed over all transfers.
+    pub bytes: u64,
+}
+
+impl Movement {
+    fn send(&mut self, elems: usize) {
+        self.messages += 1;
+        self.bytes += (elems * 4) as u64;
+    }
+
+    fn merge(&mut self, other: Movement) {
+        self.messages += other.messages;
+        self.bytes += other.bytes;
+    }
+}
+
+/// ⌈log₂ n⌉ for n ≥ 1 (0 for n = 1) — hop count of a binomial
+/// tree/broadcast over n nodes. Shared with [`super::Cluster`]'s
+/// broadcast accounting.
+pub(crate) fn ceil_log2(n: u64) -> u32 {
+    debug_assert!(n >= 1);
+    64 - (n - 1).leading_zeros()
+}
+
+/// Contiguous balanced partition: group `j` of `g` owns workers
+/// `[j·n/g, (j+1)·n/g)` (sizes differ by at most one). Shared with
+/// [`super::Cluster`]'s broadcast accounting.
+pub(crate) fn group_bounds(n: usize, g: usize) -> Vec<(usize, usize)> {
+    (0..g).map(|j| (j * n / g, (j + 1) * n / g)).collect()
+}
+
 impl AllReduceAlgo {
-    /// Cost of an allreduce of `msg_bytes` over `n` workers.
+    /// Cost of an allreduce of `msg_bytes` over `n` workers on a single
+    /// flat network (the uplink of [`AllReduceAlgo::TwoLevel`] falls
+    /// back to `net`; use [`AllReduceAlgo::cost_with`] to price a tiered
+    /// fabric).
     pub fn cost(&self, n: usize, msg_bytes: usize, net: &Network) -> CollectiveCost {
+        self.cost_with(n, msg_bytes, net, net)
+    }
+
+    /// Cost of an allreduce of `msg_bytes` over `n` workers, with
+    /// intra-group hops charged against `intra` and the inter-group ring
+    /// of [`AllReduceAlgo::TwoLevel`] against `uplink` (flat topologies
+    /// ignore `uplink`).
+    pub fn cost_with(
+        &self,
+        n: usize,
+        msg_bytes: usize,
+        intra: &Network,
+        uplink: &Network,
+    ) -> CollectiveCost {
         if n <= 1 {
-            return CollectiveCost { messages: 0, bytes: 0, time_s: 0.0 };
+            return CollectiveCost::ZERO;
         }
         let n_u = n as u64;
-        match self {
+        match *self {
             AllReduceAlgo::Ring => {
                 // reduce-scatter + allgather: 2(N-1) steps, each worker
                 // sends one chunk of M/N per step (all links busy in
@@ -46,7 +133,7 @@ impl AllReduceAlgo {
                 CollectiveCost {
                     messages: steps * n_u,
                     bytes: steps * n_u * chunk as u64,
-                    time_s: steps as f64 * net.message_cost(chunk),
+                    time_s: steps as f64 * intra.message_cost(chunk),
                 }
             }
             AllReduceAlgo::Naive => {
@@ -55,8 +142,51 @@ impl AllReduceAlgo {
                 CollectiveCost {
                     messages: msgs,
                     bytes: msgs * msg_bytes as u64,
-                    time_s: msgs as f64 * net.message_cost(msg_bytes),
+                    time_s: msgs as f64 * intra.message_cost(msg_bytes),
                 }
+            }
+            AllReduceAlgo::Tree => {
+                // binomial reduce up then broadcast down: each direction
+                // moves N-1 full-M messages over ⌈log₂N⌉ concurrent
+                // phases (critical path = one message per phase).
+                let msgs = 2 * (n_u - 1);
+                let hops = 2 * ceil_log2(n_u);
+                CollectiveCost {
+                    messages: msgs,
+                    bytes: msgs * msg_bytes as u64,
+                    time_s: hops as f64 * intra.message_cost(msg_bytes),
+                }
+            }
+            AllReduceAlgo::TwoLevel { groups } => {
+                let g = groups.clamp(1, n);
+                let bounds = group_bounds(n, g);
+                let max_s = bounds.iter().map(|(lo, hi)| hi - lo).max().unwrap_or(1);
+                let mut messages = 0u64;
+                let mut bytes = 0u64;
+                // phase 1: intra-group ring allreduce, concurrent across
+                // groups — totals sum over groups, time is the largest
+                // group's ring
+                for &(lo, hi) in &bounds {
+                    let c = AllReduceAlgo::Ring.cost(hi - lo, msg_bytes, intra);
+                    messages += c.messages;
+                    bytes += c.bytes;
+                }
+                let mut time_s = AllReduceAlgo::Ring.cost(max_s, msg_bytes, intra).time_s;
+                // phase 2: ring allreduce of full-M buffers among the g
+                // group leaders over the uplink
+                let c2 = AllReduceAlgo::Ring.cost(g, msg_bytes, uplink);
+                messages += c2.messages;
+                bytes += c2.bytes;
+                time_s += c2.time_s;
+                // phase 3: binomial broadcast from each leader back into
+                // its group, concurrent across groups
+                for &(lo, hi) in &bounds {
+                    let s = (hi - lo) as u64;
+                    messages += s - 1;
+                    bytes += (s - 1) * msg_bytes as u64;
+                }
+                time_s += ceil_log2(max_s as u64) as f64 * intra.message_cost(msg_bytes);
+                CollectiveCost { messages, bytes, time_s }
             }
         }
     }
@@ -65,10 +195,15 @@ impl AllReduceAlgo {
 /// Executable ring allreduce-sum over per-worker buffers (reference
 /// implementation: really performs the reduce-scatter + allgather chunk
 /// schedule). After the call every buffer holds the elementwise sum.
-pub fn ring_allreduce_sum(rows: &mut [Vec<f32>]) {
+/// Returns the movement performed; note the closed-form `Ring` cost
+/// rounds every chunk up to ⌈M/N⌉, so its byte total can slightly exceed
+/// the movement's when `N` does not divide the element count (real rings
+/// pad chunks the same way).
+pub fn ring_allreduce_sum(rows: &mut [Vec<f32>]) -> Movement {
     let n = rows.len();
+    let mut moved = Movement::default();
     if n <= 1 {
-        return;
+        return moved;
     }
     let dim = rows[0].len();
     assert!(rows.iter().all(|r| r.len() == dim));
@@ -101,6 +236,7 @@ pub fn ring_allreduce_sum(rows: &mut [Vec<f32>]) {
             for (bi, &sv) in b[lo..hi].iter_mut().zip(staged.iter()) {
                 *bi += sv;
             }
+            moved.send(hi - lo);
         }
     }
     // after reduce-scatter, worker w owns the full sum of chunk (w+1) % n
@@ -113,8 +249,10 @@ pub fn ring_allreduce_sum(rows: &mut [Vec<f32>]) {
             let (lo, hi) = bounds[chunk];
             let staged: Vec<f32> = rows[src][lo..hi].to_vec();
             rows[dst][lo..hi].copy_from_slice(&staged);
+            moved.send(hi - lo);
         }
     }
+    moved
 }
 
 // NOTE on the emulation above: performing the sends worker-by-worker
@@ -124,21 +262,122 @@ pub fn ring_allreduce_sum(rows: &mut [Vec<f32>]) {
 // single overlapping case src==dst-1 where rust aliasing rules would
 // otherwise bite.
 
-/// Executable naive (gather + broadcast) allreduce-sum.
-pub fn naive_allreduce_sum(rows: &mut [Vec<f32>]) {
+/// Executable naive (gather + broadcast) allreduce-sum: the leader
+/// (worker 0) accumulates every other row, then sends the sum back out —
+/// 2(N−1) full-M messages, exactly what [`AllReduceAlgo::Naive`] charges.
+pub fn naive_allreduce_sum(rows: &mut [Vec<f32>]) -> Movement {
+    let n = rows.len();
+    let mut moved = Movement::default();
+    if n <= 1 {
+        return moved;
+    }
+    let dim = rows[0].len();
+    assert!(rows.iter().all(|r| r.len() == dim));
+    // gather: workers 1..n send their full buffer to the leader, which
+    // accumulates in arrival (worker) order
+    for w in 1..n {
+        let (leader, rest) = rows.split_at_mut(1);
+        crate::tensor::add_assign(&mut leader[0], &rest[w - 1]);
+        moved.send(dim);
+    }
+    // broadcast: the leader sends the sum back to every worker
+    for w in 1..n {
+        let (leader, rest) = rows.split_at_mut(1);
+        rest[w - 1].copy_from_slice(&leader[0]);
+        moved.send(dim);
+    }
+    moved
+}
+
+/// Binomial broadcast of `rows[0]` into every other row: ⌈log₂N⌉
+/// concurrent phases, N−1 full-buffer messages. The broadcast half of
+/// [`tree_allreduce_sum`] and phase 3 of [`two_level_allreduce_sum`].
+fn binomial_broadcast(rows: &mut [Vec<f32>], moved: &mut Movement) {
     let n = rows.len();
     if n <= 1 {
         return;
     }
     let dim = rows[0].len();
-    let mut sum = vec![0.0f32; dim];
-    {
-        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
-        crate::tensor::sum_rows(&mut sum, &refs);
+    let h = ceil_log2(n as u64);
+    // mirror of the binomial reduce schedule, top phase first
+    for s in (0..h).rev() {
+        let half = 1usize << s;
+        let span = half << 1;
+        for i in (0..n).step_by(span) {
+            let dst = i + half;
+            if dst >= n {
+                continue;
+            }
+            let (left, right) = rows.split_at_mut(dst);
+            right[0].copy_from_slice(&left[i]);
+            moved.send(dim);
+        }
     }
-    for r in rows.iter_mut() {
-        r.copy_from_slice(&sum);
+}
+
+/// Executable binomial-tree allreduce-sum: reduce up to worker 0 in
+/// ⌈log₂N⌉ phases, broadcast back down in ⌈log₂N⌉ phases. Each direction
+/// moves N−1 full-M messages — exactly what [`AllReduceAlgo::Tree`]
+/// charges.
+pub fn tree_allreduce_sum(rows: &mut [Vec<f32>]) -> Movement {
+    let n = rows.len();
+    let mut moved = Movement::default();
+    if n <= 1 {
+        return moved;
     }
+    let dim = rows[0].len();
+    assert!(rows.iter().all(|r| r.len() == dim));
+    let h = ceil_log2(n as u64);
+    // reduce: in phase s, worker i with i ≡ 2^s (mod 2^{s+1}) sends its
+    // partial sum to i − 2^s (all sends in a phase are concurrent)
+    for s in 0..h {
+        let half = 1usize << s;
+        let span = half << 1;
+        for i in (0..n).step_by(span) {
+            let src = i + half;
+            if src >= n {
+                continue;
+            }
+            let (left, right) = rows.split_at_mut(src);
+            crate::tensor::add_assign(&mut left[i], &right[0]);
+            moved.send(dim);
+        }
+    }
+    binomial_broadcast(rows, &mut moved);
+    moved
+}
+
+/// Executable two-level hierarchical allreduce-sum over `groups`
+/// contiguous groups: intra-group ring allreduce, ring allreduce among
+/// the group leaders (the uplink traffic), binomial broadcast back into
+/// each group — the data movement [`AllReduceAlgo::TwoLevel`] charges.
+pub fn two_level_allreduce_sum(rows: &mut [Vec<f32>], groups: usize) -> Movement {
+    let n = rows.len();
+    let mut moved = Movement::default();
+    if n <= 1 {
+        return moved;
+    }
+    let dim = rows[0].len();
+    assert!(rows.iter().all(|r| r.len() == dim));
+    let g = groups.clamp(1, n);
+    let bounds = group_bounds(n, g);
+    // phase 1: ring allreduce inside each group (concurrent in reality;
+    // sequential emulation is equivalent because groups are disjoint)
+    for &(lo, hi) in &bounds {
+        moved.merge(ring_allreduce_sum(&mut rows[lo..hi]));
+    }
+    // phase 2: ring allreduce of the group sums among the leaders (the
+    // first worker of each group), over the uplink
+    let mut leaders: Vec<Vec<f32>> = bounds.iter().map(|&(lo, _)| rows[lo].clone()).collect();
+    moved.merge(ring_allreduce_sum(&mut leaders));
+    for (&(lo, _), sum) in bounds.iter().zip(leaders.iter()) {
+        rows[lo].copy_from_slice(sum);
+    }
+    // phase 3: binomial broadcast from each leader back into its group
+    for &(lo, hi) in &bounds {
+        binomial_broadcast(&mut rows[lo..hi], &mut moved);
+    }
+    moved
 }
 
 #[cfg(test)]
@@ -191,6 +430,101 @@ mod tests {
     }
 
     #[test]
+    fn tree_allreduce_matches_sequential_sum() {
+        for n in [2usize, 3, 4, 5, 6, 7, 8, 12, 16] {
+            for dim in [1usize, 5, 33] {
+                let mut rows = random_rows(n, dim, (n * 1000 + dim) as u64);
+                let want = sequential_sum(&rows);
+                tree_allreduce_sum(&mut rows);
+                for (w, r) in rows.iter().enumerate() {
+                    let diff = crate::tensor::max_abs_diff(r, &want);
+                    assert!(diff < 1e-4, "n={n} dim={dim} worker {w}: diff {diff}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_allreduce_matches_sequential_sum() {
+        for n in [2usize, 4, 5, 6, 8, 12] {
+            for groups in [1usize, 2, 3, n] {
+                let mut rows = random_rows(n, 24, (n * 31 + groups) as u64);
+                let want = sequential_sum(&rows);
+                two_level_allreduce_sum(&mut rows, groups);
+                for (w, r) in rows.iter().enumerate() {
+                    let diff = crate::tensor::max_abs_diff(r, &want);
+                    assert!(diff < 1e-4, "n={n} g={groups} worker {w}: diff {diff}");
+                }
+            }
+        }
+    }
+
+    /// The formula-vs-movement contract: the closed-form cost counts
+    /// exactly the messages the executable reference performs, and for
+    /// full-buffer algorithms (Naive/Tree) the bytes too — including the
+    /// non-power-of-two worker counts the binomial schedules special-case.
+    #[test]
+    fn naive_and_tree_formulas_count_the_movement_exactly() {
+        let net = Network { alpha: 1e-5, beta: 1e-9 };
+        for n in [2usize, 3, 5, 6, 7, 9, 12, 13, 16] {
+            for dim in [1usize, 7, 32] {
+                let msg = dim * 4;
+                let mut rows = random_rows(n, dim, (n * 17 + dim) as u64);
+                let moved = naive_allreduce_sum(&mut rows);
+                let cost = AllReduceAlgo::Naive.cost(n, msg, &net);
+                assert_eq!(moved.messages, cost.messages, "naive n={n} dim={dim}");
+                assert_eq!(moved.bytes, cost.bytes, "naive n={n} dim={dim}");
+
+                let mut rows = random_rows(n, dim, (n * 19 + dim) as u64);
+                let moved = tree_allreduce_sum(&mut rows);
+                let cost = AllReduceAlgo::Tree.cost(n, msg, &net);
+                assert_eq!(moved.messages, cost.messages, "tree n={n} dim={dim}");
+                assert_eq!(moved.bytes, cost.bytes, "tree n={n} dim={dim}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_formula_counts_messages_exactly_and_bytes_when_divisible() {
+        let net = Network { alpha: 1e-5, beta: 1e-9 };
+        for n in [2usize, 3, 4, 5, 8] {
+            // divisible dim: bytes match exactly
+            let dim = 6 * n;
+            let mut rows = random_rows(n, dim, n as u64);
+            let moved = ring_allreduce_sum(&mut rows);
+            let cost = AllReduceAlgo::Ring.cost(n, dim * 4, &net);
+            assert_eq!(moved.messages, cost.messages, "ring n={n}");
+            assert_eq!(moved.bytes, cost.bytes, "ring n={n}");
+            // non-divisible dim: formula pads chunks up, never down
+            let dim = 6 * n + 1;
+            let mut rows = random_rows(n, dim, n as u64 + 100);
+            let moved = ring_allreduce_sum(&mut rows);
+            let cost = AllReduceAlgo::Ring.cost(n, dim * 4, &net);
+            assert_eq!(moved.messages, cost.messages, "ring n={n} (ragged)");
+            assert!(cost.bytes >= moved.bytes, "ring n={n}: formula must pad up");
+            // padding slack is at most one element per message
+            assert!(cost.bytes - moved.bytes <= 4 * moved.messages);
+        }
+    }
+
+    #[test]
+    fn two_level_formula_counts_the_movement() {
+        let net = Network { alpha: 1e-5, beta: 1e-9 };
+        for n in [4usize, 6, 8, 12] {
+            for groups in [1usize, 2, 3, n] {
+                // dim divisible by every possible ring size (lcm(1..=12)
+                // overshoots; 2³·3²·5·7·11 covers all sub-ring sizes here)
+                let dim = 27_720;
+                let mut rows = random_rows(n, dim, (n + groups) as u64);
+                let moved = two_level_allreduce_sum(&mut rows, groups);
+                let cost = AllReduceAlgo::TwoLevel { groups }.cost(n, dim * 4, &net);
+                assert_eq!(moved.messages, cost.messages, "two-level n={n} g={groups}");
+                assert_eq!(moved.bytes, cost.bytes, "two-level n={n} g={groups}");
+            }
+        }
+    }
+
+    #[test]
     fn ring_cost_is_bandwidth_optimal_for_large_messages() {
         let net = Network { alpha: 1e-6, beta: 1e-9 };
         // 100 MB over 8 workers: ring beats naive handily
@@ -200,8 +534,61 @@ mod tests {
     }
 
     #[test]
+    fn tree_is_latency_optimal_for_tiny_messages() {
+        // tiny message, fat latency: tree pays 2⌈log₂N⌉ serial latencies
+        // vs 2(N−1) for ring and naive
+        let net = Network { alpha: 1e-3, beta: 1e-9 };
+        let tree = AllReduceAlgo::Tree.cost(16, 64, &net);
+        let ring = AllReduceAlgo::Ring.cost(16, 64, &net);
+        let naive = AllReduceAlgo::Naive.cost(16, 64, &net);
+        assert!(tree.time_s < ring.time_s / 3.0, "{} vs {}", tree.time_s, ring.time_s);
+        assert!(tree.time_s < naive.time_s / 3.0);
+        // same total wire bytes as the star (full-M messages, N−1 each way)
+        assert_eq!(tree.bytes, naive.bytes);
+    }
+
+    #[test]
+    fn two_level_charges_uplink_only_for_the_leader_ring() {
+        let intra = Network { alpha: 1e-6, beta: 1e-10 };
+        let slow = Network { alpha: 1e-3, beta: 1e-7 };
+        let algo = AllReduceAlgo::TwoLevel { groups: 2 };
+        let m = 1 << 20;
+        let tiered = algo.cost_with(8, m, &intra, &slow);
+        let flat_fast = algo.cost_with(8, m, &intra, &intra);
+        let flat_slow = algo.cost_with(8, m, &slow, &slow);
+        // a slow uplink hurts, but far less than running everything slow
+        assert!(tiered.time_s > flat_fast.time_s);
+        assert!(tiered.time_s < flat_slow.time_s);
+        // byte/message totals are topology properties, not network ones
+        assert_eq!(tiered.messages, flat_fast.messages);
+        assert_eq!(tiered.bytes, flat_slow.bytes);
+        // vs a flat ring entirely over the slow network (the fleet with
+        // no fast islands), the hierarchy wins on time
+        let flat_ring_slow = AllReduceAlgo::Ring.cost_with(8, m, &slow, &slow);
+        assert!(
+            tiered.time_s < flat_ring_slow.time_s,
+            "{} vs {}",
+            tiered.time_s,
+            flat_ring_slow.time_s
+        );
+    }
+
+    #[test]
+    fn two_level_degenerate_group_counts() {
+        let net = Network { alpha: 1e-5, beta: 1e-9 };
+        // groups == N: exactly a flat ring over the uplink
+        let up = Network { alpha: 1e-4, beta: 1e-8 };
+        let deg = AllReduceAlgo::TwoLevel { groups: 8 }.cost_with(8, 4096, &net, &up);
+        let ring = AllReduceAlgo::Ring.cost(8, 4096, &up);
+        assert_eq!(deg, ring);
+        // groups out of range are clamped, not a panic
+        let clamped = AllReduceAlgo::TwoLevel { groups: 99 }.cost_with(8, 4096, &net, &up);
+        assert_eq!(clamped, ring);
+    }
+
+    #[test]
     fn latency_dominated_costs_converge() {
-        // Both algorithms pay 2(N−1) serial latencies on the critical
+        // Ring and naive both pay 2(N−1) serial latencies on the critical
         // path; for tiny messages the byte term vanishes and the two
         // models must agree to within a percent.
         let net = Network { alpha: 1e-3, beta: 1e-9 };
@@ -218,12 +605,19 @@ mod tests {
     #[test]
     fn single_worker_costs_nothing() {
         let net = Network { alpha: 1e-3, beta: 1e-9 };
-        for algo in [AllReduceAlgo::Ring, AllReduceAlgo::Naive] {
+        for algo in [
+            AllReduceAlgo::Ring,
+            AllReduceAlgo::Naive,
+            AllReduceAlgo::Tree,
+            AllReduceAlgo::TwoLevel { groups: 1 },
+        ] {
             let c = algo.cost(1, 1024, &net);
-            assert_eq!(c, CollectiveCost { messages: 0, bytes: 0, time_s: 0.0 });
+            assert_eq!(c, CollectiveCost::ZERO);
         }
         let mut rows = vec![vec![1.0f32, 2.0]];
-        ring_allreduce_sum(&mut rows);
+        assert_eq!(ring_allreduce_sum(&mut rows), Movement::default());
+        assert_eq!(tree_allreduce_sum(&mut rows), Movement::default());
+        assert_eq!(two_level_allreduce_sum(&mut rows, 1), Movement::default());
         assert_eq!(rows[0], vec![1.0, 2.0]);
     }
 

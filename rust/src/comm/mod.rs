@@ -9,7 +9,7 @@
 
 pub mod allreduce;
 
-pub use allreduce::AllReduceAlgo;
+pub use allreduce::{AllReduceAlgo, CollectiveCost, Movement};
 
 use crate::config::NetworkSpec;
 
@@ -24,11 +24,35 @@ pub struct Network {
 
 impl Network {
     /// Build from the user-facing spec (µs latency, Gb/s bandwidth).
+    ///
+    /// Total: a spec that passed `NetworkSpec::validate` converts
+    /// exactly; degenerate inputs (zero / negative / non-finite) are
+    /// clamped so `alpha` and `beta` can never come out infinite or NaN
+    /// — config validation rejects such specs up front, this is the
+    /// last line of defense for hand-built ones.
     pub fn from_spec(spec: &NetworkSpec) -> Self {
-        Network {
-            alpha: spec.latency_us * 1e-6,
-            beta: 8.0 / (spec.bandwidth_gbps * 1e9),
-        }
+        // clamp toward the spec's meaning: an infinitely slow (or
+        // garbage) link saturates to the largest finite cost, never to
+        // a free one — degenerate specs come out obviously slow, not
+        // silently optimistic
+        let latency_us = if spec.latency_us.is_nan() {
+            f64::MAX
+        } else {
+            spec.latency_us.clamp(0.0, f64::MAX)
+        };
+        // floor on the effective bandwidth: low enough that no sane spec
+        // ever hits it, high enough that beta (8e291 s/B at the floor)
+        // and realistic message costs stay finite — a dead or subnormal
+        // link saturates slow, not free
+        const MIN_BW_GBPS: f64 = 1e-300;
+        let bandwidth_gbps = if spec.bandwidth_gbps.is_nan() || spec.bandwidth_gbps <= 0.0 {
+            MIN_BW_GBPS
+        } else if spec.bandwidth_gbps.is_infinite() {
+            f64::MAX
+        } else {
+            spec.bandwidth_gbps.max(MIN_BW_GBPS)
+        };
+        Network { alpha: latency_us * 1e-6, beta: 8.0 / (bandwidth_gbps * 1e9) }
     }
 
     /// Cost of one point-to-point message of `bytes`.
@@ -68,16 +92,28 @@ impl CommStats {
 #[derive(Debug, Clone)]
 pub struct Cluster {
     net: Network,
+    /// Inter-group uplink for hierarchical collectives
+    /// ([`AllReduceAlgo::TwoLevel`]); equals `net` unless overridden via
+    /// [`Cluster::with_uplink`]. Flat topologies never consult it.
+    uplink: Network,
     algo: AllReduceAlgo,
     stats: CommStats,
     workers: usize,
 }
 
 impl Cluster {
-    /// New cluster of `workers` nodes.
+    /// New cluster of `workers` nodes over a single flat network.
     pub fn new(workers: usize, spec: &NetworkSpec, algo: AllReduceAlgo) -> Self {
         assert!(workers >= 1);
-        Cluster { net: Network::from_spec(spec), algo, stats: CommStats::default(), workers }
+        let net = Network::from_spec(spec);
+        Cluster { net, uplink: net, algo, stats: CommStats::default(), workers }
+    }
+
+    /// Charge the inter-group ring of [`AllReduceAlgo::TwoLevel`]
+    /// against a separate (typically slower) uplink network.
+    pub fn with_uplink(mut self, spec: &NetworkSpec) -> Self {
+        self.uplink = Network::from_spec(spec);
+        self
     }
 
     /// Number of workers.
@@ -138,12 +174,24 @@ impl Cluster {
             r.copy_from_slice(src);
         }
         let bytes = src.len() * 4;
-        // tree broadcast regardless of the allreduce algorithm:
-        // ceil(log2 N) serial hops, N-1 messages
-        let (msgs, total_bytes, time) = {
-            let n = self.workers as u64;
-            let hops = (64 - (n - 1).leading_zeros().min(63)) as f64;
-            ((n - 1), (n - 1) * bytes as u64, hops * self.net.message_cost(bytes))
+        // tree broadcast: N-1 messages over ceil(log2 N) serial hops
+        // (free for N = 1). Under a two-level topology the inter-group
+        // hops cross the uplink: a leader tree over the g groups at
+        // uplink cost, then the intra-group trees in parallel.
+        let n = self.workers as u64;
+        let (msgs, total_bytes) = ((n - 1), (n - 1) * bytes as u64);
+        let time = match self.algo {
+            AllReduceAlgo::TwoLevel { groups } => {
+                let g = groups.clamp(1, self.workers);
+                let max_s = allreduce::group_bounds(self.workers, g)
+                    .iter()
+                    .map(|(lo, hi)| hi - lo)
+                    .max()
+                    .unwrap_or(1);
+                allreduce::ceil_log2(g as u64) as f64 * self.uplink.message_cost(bytes)
+                    + allreduce::ceil_log2(max_s as u64) as f64 * self.net.message_cost(bytes)
+            }
+            _ => allreduce::ceil_log2(n) as f64 * self.net.message_cost(bytes),
         };
         self.stats.rounds += 1;
         self.stats.messages += msgs;
@@ -162,7 +210,7 @@ impl Cluster {
 
     /// Charge one allreduce of `dim` f32 elements.
     fn charge(&mut self, dim: usize) {
-        let cost = self.algo.cost(self.workers, dim * 4, &self.net);
+        let cost = self.algo.cost_with(self.workers, dim * 4, &self.net, &self.uplink);
         self.stats.rounds += 1;
         self.stats.messages += cost.messages;
         self.stats.bytes += cost.bytes;
@@ -186,6 +234,55 @@ mod tests {
         assert!((net.beta - 8e-9).abs() < 1e-15);
         let c = net.message_cost(1000);
         assert!((c - (1e-4 + 8e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_spec_is_total_on_degenerate_inputs() {
+        // regression: bandwidth <= 0 / non-finite used to yield beta =
+        // inf or NaN and poison every simulated time downstream
+        for bad in [
+            NetworkSpec { latency_us: -5.0, bandwidth_gbps: 0.0 },
+            NetworkSpec { latency_us: f64::NAN, bandwidth_gbps: -1.0 },
+            NetworkSpec { latency_us: f64::INFINITY, bandwidth_gbps: f64::NAN },
+            // subnormal bandwidth: positive and finite, but the naive
+            // 8/(bw·1e9) conversion would overflow to +inf
+            NetworkSpec { latency_us: 50.0, bandwidth_gbps: 1e-320 },
+        ] {
+            let net = Network::from_spec(&bad);
+            assert!(net.alpha.is_finite() && net.alpha >= 0.0, "{bad:?}: alpha {}", net.alpha);
+            assert!(net.beta.is_finite() && net.beta > 0.0, "{bad:?}: beta {}", net.beta);
+            assert!(net.message_cost(1024).is_finite());
+        }
+        // valid specs convert exactly as before
+        let net = Network::from_spec(&spec());
+        assert!((net.beta - 8e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn two_level_cluster_charges_the_uplink() {
+        let slow = NetworkSpec { latency_us: 5000.0, bandwidth_gbps: 0.1 };
+        let algo = AllReduceAlgo::TwoLevel { groups: 2 };
+        let mut flat = Cluster::new(4, &spec(), algo);
+        let mut tiered = Cluster::new(4, &spec(), algo).with_uplink(&slow);
+        let mut rows = vec![vec![1.0f32; 64]; 4];
+        flat.average(&mut rows);
+        let mut rows2 = vec![vec![1.0f32; 64]; 4];
+        tiered.average(&mut rows2);
+        // same data, same mean, same bytes — only the simulated time moves
+        assert_eq!(rows, rows2);
+        assert_eq!(flat.stats().bytes, tiered.stats().bytes);
+        assert_eq!(flat.stats().messages, tiered.stats().messages);
+        assert!(tiered.stats().sim_time_s > flat.stats().sim_time_s);
+
+        // broadcasts (EASGD center distribution) pay the uplink for
+        // their inter-group hop too
+        let t0 = tiered.stats().sim_time_s;
+        let f0 = flat.stats().sim_time_s;
+        let src = vec![1.0f32; 64];
+        flat.broadcast(&src, &mut rows);
+        tiered.broadcast(&src, &mut rows2);
+        assert_eq!(rows, rows2);
+        assert!(tiered.stats().sim_time_s - t0 > flat.stats().sim_time_s - f0);
     }
 
     #[test]

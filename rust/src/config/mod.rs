@@ -219,6 +219,29 @@ impl Default for NetworkSpec {
     }
 }
 
+impl NetworkSpec {
+    /// Validate the link parameters (`ctx` names the link in errors,
+    /// e.g. `"network"` or `"fabric uplink"`). Rejecting non-positive /
+    /// non-finite bandwidth and negative / non-finite latency here keeps
+    /// `comm::Network::from_spec` total: a validated spec can never
+    /// produce an infinite or NaN α/β.
+    pub fn validate(&self, ctx: &str) -> Result<(), String> {
+        if !(self.bandwidth_gbps.is_finite() && self.bandwidth_gbps > 0.0) {
+            return Err(format!(
+                "{ctx} bandwidth_gbps must be finite and > 0, got {}",
+                self.bandwidth_gbps
+            ));
+        }
+        if !(self.latency_us.is_finite() && self.latency_us >= 0.0) {
+            return Err(format!(
+                "{ctx} latency_us must be finite and >= 0, got {}",
+                self.latency_us
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Full specification of one training run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainSpec {
@@ -245,6 +268,11 @@ pub struct TrainSpec {
     pub seed: u64,
     /// Simulated network for the time model.
     pub network: NetworkSpec,
+    /// Simulated cluster fabric: per-worker speed profile, straggler
+    /// process and collective topology (`[fabric]` TOML table). Shapes
+    /// only the simulated-time axis and communication accounting — never
+    /// the trajectory.
+    pub fabric: crate::fabric::FabricSpec,
     /// Record per-step (not just per-sync) metrics — slower, used by the
     /// Appendix-E figures that plot every iteration.
     pub dense_metrics: bool,
@@ -270,6 +298,7 @@ impl Default for TrainSpec {
             weight_decay: 0.0,
             seed: 42,
             network: NetworkSpec::default(),
+            fabric: crate::fabric::FabricSpec::default(),
             dense_metrics: false,
             threads: 0,
         }
@@ -297,6 +326,12 @@ impl TrainSpec {
         }
         if self.easgd_rho < 0.0 || self.easgd_rho > 1.0 {
             errs.push(format!("easgd_rho must be in [0,1], got {}", self.easgd_rho));
+        }
+        if let Err(e) = self.network.validate("network") {
+            errs.push(e);
+        }
+        if let Err(e) = self.fabric.validate(self.workers) {
+            errs.push(e);
         }
         if errs.is_empty() {
             Ok(())
@@ -336,6 +371,7 @@ impl TrainSpec {
                 latency_us: doc.f64_or("spec.latency_us", d.network.latency_us),
                 bandwidth_gbps: doc.f64_or("spec.bandwidth_gbps", d.network.bandwidth_gbps),
             },
+            fabric: crate::fabric::FabricSpec::from_doc(doc)?,
             dense_metrics: doc.bool_or("spec.dense_metrics", d.dense_metrics),
             threads: doc.usize_or("spec.threads", d.threads),
         })
@@ -519,6 +555,95 @@ mod tests {
         assert!(err.contains("workers"));
         assert!(err.contains("period"));
         assert!(err.contains("lr"));
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_network() {
+        // regression: bandwidth_gbps <= 0 / latency_us < 0 used to slip
+        // through validate() and produce beta = inf / NaN sim times
+        let s = TrainSpec {
+            network: NetworkSpec { latency_us: 50.0, bandwidth_gbps: 0.0 },
+            ..TrainSpec::default()
+        };
+        assert!(s.validate().unwrap_err().contains("bandwidth"));
+        let s = TrainSpec {
+            network: NetworkSpec { latency_us: -1.0, bandwidth_gbps: 10.0 },
+            ..TrainSpec::default()
+        };
+        assert!(s.validate().unwrap_err().contains("latency"));
+        for bad in [f64::NAN, f64::INFINITY, -3.0] {
+            let s = TrainSpec {
+                network: NetworkSpec { latency_us: 50.0, bandwidth_gbps: bad },
+                ..TrainSpec::default()
+            };
+            assert!(s.validate().is_err(), "bandwidth {bad} must be rejected");
+        }
+        // and a TOML config carrying one is rejected at load time
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[spec]\n\
+             bandwidth_gbps = 0.0\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_fabric() {
+        use crate::fabric::{FabricSpec, SpeedProfile, TopologyKind};
+        let s = TrainSpec {
+            workers: 4,
+            fabric: FabricSpec {
+                speeds: SpeedProfile::Explicit(vec![1.0, 2.0]),
+                ..FabricSpec::default()
+            },
+            ..TrainSpec::default()
+        };
+        assert!(s.validate().unwrap_err().contains("speeds"));
+        let s = TrainSpec {
+            workers: 4,
+            fabric: FabricSpec {
+                topology: TopologyKind::TwoLevel,
+                groups: 9,
+                ..FabricSpec::default()
+            },
+            ..TrainSpec::default()
+        };
+        assert!(s.validate().unwrap_err().contains("groups"));
+    }
+
+    #[test]
+    fn fabric_table_parses_into_spec() {
+        use crate::fabric::{SpeedProfile, StragglerModel, TopologyKind};
+        let cfg = RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[spec]\nworkers = 4\n\
+             [fabric]\nspeed_spread = 1.0\nstragglers = \"bernoulli:0.1:4\"\n\
+             topology = \"two-level\"\ngroups = 2\nuplink_latency_us = 500.0\n\
+             uplink_bandwidth_gbps = 1.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.spec.fabric.speeds, SpeedProfile::Spread(1.0));
+        assert_eq!(
+            cfg.spec.fabric.stragglers,
+            StragglerModel::Bernoulli { prob: 0.1, slowdown: 4.0 }
+        );
+        assert_eq!(cfg.spec.fabric.topology, TopologyKind::TwoLevel);
+        assert_eq!(cfg.spec.fabric.uplink.unwrap().bandwidth_gbps, 1.0);
+        // absent table stays homogeneous
+        let cfg = RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n",
+        )
+        .unwrap();
+        assert!(cfg.spec.fabric.is_homogeneous());
+        // invalid combinations are config errors, not runtime surprises
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[spec]\nworkers = 2\n\
+             [fabric]\ntopology = \"two-level\"\ngroups = 4\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[fabric]\n\
+             topology = \"two-level\"\nuplink_bandwidth_gbps = 0.0\n"
+        )
+        .is_err());
     }
 
     #[test]

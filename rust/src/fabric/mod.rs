@@ -1,0 +1,277 @@
+//! Heterogeneous cluster simulation: per-worker speed profiles, dynamic
+//! stragglers, and hierarchical collective topologies.
+//!
+//! The paper's headline claim is about *wall-clock* advantage — fewer
+//! synchronization barriers means less time lost to the network. The
+//! seed's time model assumed the setting where that advantage is
+//! weakest: every worker computing at the same speed over one uniform
+//! link. Real fleets have stragglers and tiered networks, and a larger
+//! local period `k` amortizes the slowest worker per barrier. This
+//! module makes that regime simulable:
+//!
+//! * [`Fleet`] — per-worker static speed multipliers
+//!   ([`SpeedProfile`]) plus a seeded dynamic straggler process
+//!   ([`StragglerModel`]), sampled per (round, worker) from a dedicated
+//!   [`crate::rng::Pcg32`] stream. A round's compute time becomes the
+//!   **critical path** `max_i(k · step_s · speed_i · straggler_i)`
+//!   instead of the homogeneous `k · step_s`.
+//! * [`FabricSpec`] — the `[fabric]` TOML table / CLI surface, including
+//!   the collective topology ([`TopologyKind`]): flat ring / naive /
+//!   binomial tree, or a two-level hierarchy charging inter-group
+//!   traffic against a slower uplink (see
+//!   [`crate::comm::AllReduceAlgo::TwoLevel`]).
+//!
+//! **Invariant — fabric never touches parameters.** The fleet's RNG
+//! stream is disjoint from every worker stream, and nothing here feeds
+//! back into the trajectory: enabling any combination of speeds,
+//! stragglers and topologies yields bitwise-identical parameters and
+//! losses to the homogeneous run — only [`crate::sim::SimTime`] and
+//! [`crate::comm::CommStats`] move (proven in `rust/tests/fabric.rs`
+//! for every algorithm under both executors). The stream is part of the
+//! checkpoint snapshot, so resumed runs reproduce the identical
+//! simulated timeline.
+
+mod spec;
+pub mod straggler;
+
+pub use spec::{FabricSpec, SpeedProfile, TopologyKind};
+pub use straggler::StragglerModel;
+
+use crate::rng::Pcg32;
+use crate::sim::TimeModel;
+
+/// Lane used to derive the fleet's dedicated RNG stream from the run's
+/// root generator. Worker streams use lanes `0..N` and initialization
+/// uses `u64::MAX`, so this cannot collide with either.
+pub const FABRIC_STREAM_LANE: u64 = u64::MAX - 1;
+
+/// Timing of one synchronization round across the fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundTiming {
+    /// Critical-path compute seconds: the slowest worker's local-step
+    /// time this round (what the barrier waits for).
+    pub critical_s: f64,
+    /// Mean barrier idle time: critical path minus the mean per-worker
+    /// compute time — the per-round straggler wait recorded in the
+    /// metrics history. Zero on a homogeneous fleet.
+    pub wait_s: f64,
+}
+
+/// A simulated heterogeneous fleet: resolved speed multipliers plus the
+/// dynamic straggler process and its dedicated RNG stream.
+///
+/// Constructed once per run by the session driver; [`Fleet::round_timing`]
+/// is called once per synchronization round, sampling one straggler
+/// factor per worker in worker order (no draws at all when the model is
+/// [`StragglerModel::Off`]) — so the simulated timeline is a pure
+/// function of (seed, spec), independent of executor and resumable via
+/// [`Fleet::state`] / [`Fleet::restore_state`]. The stream position is
+/// not a closed-form function of the round count (log-normal sampling
+/// uses rejection under the hood); always snapshot it, never recompute.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    multipliers: Vec<f64>,
+    stragglers: StragglerModel,
+    rng: Pcg32,
+    rounds_sampled: u64,
+    homogeneous: bool,
+}
+
+impl Fleet {
+    /// Build from a validated spec. `rng` must be the run's dedicated
+    /// fabric stream (`root.split(FABRIC_STREAM_LANE)`).
+    pub fn new(spec: &FabricSpec, workers: usize, rng: Pcg32) -> Fleet {
+        Fleet {
+            multipliers: spec.speeds.multipliers(workers),
+            stragglers: spec.stragglers,
+            rng,
+            rounds_sampled: 0,
+            homogeneous: spec.is_homogeneous(),
+        }
+    }
+
+    /// Number of workers in the fleet.
+    pub fn workers(&self) -> usize {
+        self.multipliers.len()
+    }
+
+    /// True when timing degenerates to the homogeneous seed behaviour
+    /// (`critical = steps × step_s`, zero wait, RNG never advanced).
+    pub fn is_homogeneous(&self) -> bool {
+        self.homogeneous
+    }
+
+    /// Resolved static multipliers (diagnostics / benches).
+    pub fn multipliers(&self) -> &[f64] {
+        &self.multipliers
+    }
+
+    /// Sample this round's timing: `steps` local iterations on every
+    /// worker under `model`, slowed by each worker's static multiplier
+    /// and a fresh straggler draw. The sync barrier costs the maximum.
+    pub fn round_timing(&mut self, steps: usize, model: &TimeModel) -> RoundTiming {
+        let base = steps as f64 * model.step_s;
+        if self.homogeneous {
+            // exact seed behaviour: no draws, no float detours
+            return RoundTiming { critical_s: base, wait_s: 0.0 };
+        }
+        self.rounds_sampled += 1;
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        for &m in &self.multipliers {
+            let t = base * m * self.stragglers.sample(&mut self.rng);
+            if t > max {
+                max = t;
+            }
+            sum += t;
+        }
+        let mean = sum / self.multipliers.len() as f64;
+        RoundTiming { critical_s: max, wait_s: (max - mean).max(0.0) }
+    }
+
+    /// Rounds sampled so far (checkpoint bookkeeping).
+    pub fn rounds_sampled(&self) -> u64 {
+        self.rounds_sampled
+    }
+
+    /// Snapshot the straggler-stream position (checkpoint payload) —
+    /// restored with [`Fleet::restore_state`] so a resumed run
+    /// continues the identical simulated timeline.
+    pub fn state(&self) -> FleetState {
+        FleetState {
+            rng_state: self.rng.state(),
+            rng_inc: self.rng.inc(),
+            rounds_sampled: self.rounds_sampled,
+        }
+    }
+
+    /// Restore from a [`FleetState`] captured by [`Fleet::state`].
+    pub fn restore_state(&mut self, s: &FleetState) {
+        self.rng = Pcg32::restore(s.rng_state, s.rng_inc);
+        self.rounds_sampled = s.rounds_sampled;
+    }
+}
+
+/// Serializable position of a fleet's straggler stream at a round
+/// boundary — what the checkpoint subsystem stores so a resumed run
+/// replays the identical simulated timeline.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetState {
+    /// RNG internal state (see [`crate::rng::Pcg32::state`]).
+    pub rng_state: u64,
+    /// RNG stream increment (see [`crate::rng::Pcg32::inc`]).
+    pub rng_inc: u64,
+    /// Rounds whose straggler factors have been drawn.
+    pub rounds_sampled: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(seed: u64) -> Pcg32 {
+        Pcg32::new(seed, 0x5EED).split(FABRIC_STREAM_LANE)
+    }
+
+    fn hetero_spec() -> FabricSpec {
+        FabricSpec {
+            speeds: SpeedProfile::Spread(1.0),
+            stragglers: StragglerModel::LogNormal { sigma: 0.5 },
+            ..FabricSpec::default()
+        }
+    }
+
+    #[test]
+    fn homogeneous_fleet_matches_charge_steps_bitwise() {
+        let model = TimeModel::fixed(1.25e-3);
+        let mut fleet = Fleet::new(&FabricSpec::default(), 8, stream(42));
+        let before = fleet.state();
+        for steps in [1usize, 7, 20] {
+            let t = fleet.round_timing(steps, &model);
+            assert_eq!(t.critical_s.to_bits(), (steps as f64 * model.step_s).to_bits());
+            assert_eq!(t.wait_s, 0.0);
+        }
+        assert_eq!(fleet.state(), before, "homogeneous fleet must not draw");
+        assert_eq!(fleet.rounds_sampled(), 0);
+    }
+
+    #[test]
+    fn critical_path_dominates_and_wait_is_positive() {
+        let model = TimeModel::fixed(1e-3);
+        let mut fleet = Fleet::new(&hetero_spec(), 8, stream(7));
+        let t = fleet.round_timing(10, &model);
+        // the slowest static multiplier alone already gives 2x base;
+        // stragglers only multiply further (log-normal > 0)
+        assert!(t.critical_s > 10.0 * 1e-3, "critical {}", t.critical_s);
+        assert!(t.wait_s > 0.0);
+        assert!(t.wait_s < t.critical_s);
+        assert_eq!(fleet.rounds_sampled(), 1);
+    }
+
+    #[test]
+    fn timeline_is_deterministic_per_seed() {
+        let model = TimeModel::fixed(2e-4);
+        let mut a = Fleet::new(&hetero_spec(), 4, stream(9));
+        let mut b = Fleet::new(&hetero_spec(), 4, stream(9));
+        for _ in 0..50 {
+            let (ta, tb) = (a.round_timing(5, &model), b.round_timing(5, &model));
+            assert_eq!(ta.critical_s.to_bits(), tb.critical_s.to_bits());
+            assert_eq!(ta.wait_s.to_bits(), tb.wait_s.to_bits());
+        }
+        let mut c = Fleet::new(&hetero_spec(), 4, stream(10));
+        let t = c.round_timing(5, &model);
+        let t0 = Fleet::new(&hetero_spec(), 4, stream(9)).round_timing(5, &model);
+        assert_ne!(t.critical_s.to_bits(), t0.critical_s.to_bits());
+    }
+
+    #[test]
+    fn restore_resumes_the_identical_timeline() {
+        let model = TimeModel::fixed(1e-3);
+        let mut full = Fleet::new(&hetero_spec(), 4, stream(21));
+        let mut timings = Vec::new();
+        for _ in 0..10 {
+            timings.push(full.round_timing(3, &model));
+        }
+        // replay the first 4 rounds, snapshot, restore into a fresh fleet
+        let mut part = Fleet::new(&hetero_spec(), 4, stream(21));
+        for _ in 0..4 {
+            part.round_timing(3, &model);
+        }
+        let boundary = part.state();
+        let mut resumed = Fleet::new(&hetero_spec(), 4, stream(21));
+        resumed.restore_state(&boundary);
+        assert_eq!(resumed.rounds_sampled(), 4);
+        for t in &timings[4..] {
+            let r = resumed.round_timing(3, &model);
+            assert_eq!(r.critical_s.to_bits(), t.critical_s.to_bits());
+            assert_eq!(r.wait_s.to_bits(), t.wait_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn bernoulli_fleet_waits_only_on_hit_rounds() {
+        let spec = FabricSpec {
+            stragglers: StragglerModel::Bernoulli { prob: 0.5, slowdown: 10.0 },
+            ..FabricSpec::default()
+        };
+        let model = TimeModel::fixed(1e-3);
+        let mut fleet = Fleet::new(&spec, 4, stream(3));
+        let mut hit = 0;
+        let mut clean = 0;
+        for _ in 0..200 {
+            let t = fleet.round_timing(1, &model);
+            if t.critical_s > 1e-3 {
+                // at least one worker slowed: the barrier pays 10x
+                hit += 1;
+                assert_eq!(t.critical_s.to_bits(), (1e-3f64 * 10.0).to_bits());
+                // wait is zero only in the rare all-workers-hit round
+                assert!(t.wait_s >= 0.0);
+            } else {
+                clean += 1;
+                assert_eq!(t.critical_s.to_bits(), 1e-3f64.to_bits());
+                assert_eq!(t.wait_s, 0.0);
+            }
+        }
+        assert!(hit > 100 && clean > 2, "hit {hit} clean {clean}");
+    }
+}

@@ -1,0 +1,456 @@
+//! User-facing fabric configuration: the `[fabric]` TOML table and the
+//! `--stragglers` / `--topology` CLI shorthands.
+//!
+//! A [`FabricSpec`] describes the *simulated* cluster fabric — static
+//! per-worker speed profiles, a dynamic straggler process, and the
+//! collective topology (flat ring/naive/tree, or a two-level hierarchy
+//! over a slower uplink). It shapes only the simulated-time axis
+//! ([`crate::sim::SimTime`]) and the communication cost accounting
+//! ([`crate::comm::CommStats`]); the convergence trajectory is provably
+//! independent of it (`rust/tests/fabric.rs`).
+//!
+//! ```toml
+//! [fabric]
+//! # static heterogeneity: explicit multipliers ("1,1,2,4"), or a linear
+//! # ramp 1.0 ..= 1.0 + speed_spread across the workers
+//! speed_spread = 0.5
+//! # dynamic stragglers: "off", "lognormal:<sigma>", "bernoulli:<p>:<x>"
+//! stragglers = "lognormal:0.5"
+//! # collective topology: "ring", "naive", "tree", "two-level"
+//! topology = "two-level"
+//! groups = 2
+//! # the inter-group uplink (two-level only); defaults to the main link
+//! uplink_latency_us = 500.0
+//! uplink_bandwidth_gbps = 1.0
+//! ```
+
+use super::straggler::StragglerModel;
+use crate::comm::AllReduceAlgo;
+use crate::config::NetworkSpec;
+use crate::format::TomlDoc;
+
+/// Static per-worker compute-speed profile (multiplier on the nominal
+/// per-step time; `1.0` = nominal, `2.0` = half speed).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpeedProfile {
+    /// Every worker at nominal speed (the homogeneous seed behaviour).
+    Uniform,
+    /// Linear ramp: worker `i` of `n` runs at `1.0 + spread * i/(n-1)`
+    /// (worker 0 nominal, the last worker `1 + spread`× slower).
+    Spread(f64),
+    /// Explicit per-worker multipliers; must match the worker count.
+    Explicit(Vec<f64>),
+}
+
+impl SpeedProfile {
+    /// Resolve to one multiplier per worker.
+    pub fn multipliers(&self, workers: usize) -> Vec<f64> {
+        match self {
+            SpeedProfile::Uniform => vec![1.0; workers],
+            SpeedProfile::Spread(spread) => (0..workers)
+                .map(|i| {
+                    if workers <= 1 {
+                        1.0
+                    } else {
+                        1.0 + spread * i as f64 / (workers - 1) as f64
+                    }
+                })
+                .collect(),
+            SpeedProfile::Explicit(m) => m.clone(),
+        }
+    }
+
+    /// Validate against a worker count.
+    pub fn validate(&self, workers: usize) -> Result<(), String> {
+        match self {
+            SpeedProfile::Uniform => Ok(()),
+            SpeedProfile::Spread(spread) => {
+                if !(spread.is_finite() && *spread >= 0.0) {
+                    return Err(format!(
+                        "fabric speed_spread must be finite and >= 0, got {spread}"
+                    ));
+                }
+                Ok(())
+            }
+            SpeedProfile::Explicit(m) => {
+                if m.len() != workers {
+                    return Err(format!(
+                        "fabric speeds lists {} multipliers for {workers} workers",
+                        m.len()
+                    ));
+                }
+                if let Some(bad) = m.iter().find(|v| !(v.is_finite() && **v > 0.0)) {
+                    return Err(format!(
+                        "fabric speed multipliers must be finite and > 0, got {bad}"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// True for the homogeneous default.
+    pub fn is_uniform(&self) -> bool {
+        match self {
+            SpeedProfile::Uniform => true,
+            SpeedProfile::Spread(s) => *s == 0.0,
+            SpeedProfile::Explicit(m) => m.iter().all(|&v| v == 1.0),
+        }
+    }
+}
+
+/// Which collective topology the cluster charges for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Flat bandwidth-optimal ring (the seed default).
+    Ring,
+    /// Flat star gather + broadcast.
+    Naive,
+    /// Flat binomial tree (latency-optimal).
+    Tree,
+    /// Two-level hierarchy: intra-group ring, inter-group ring over the
+    /// uplink, intra-group broadcast.
+    TwoLevel,
+}
+
+impl TopologyKind {
+    /// Display name (CLI round-trip).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Ring => "ring",
+            TopologyKind::Naive => "naive",
+            TopologyKind::Tree => "tree",
+            TopologyKind::TwoLevel => "two-level",
+        }
+    }
+}
+
+impl std::str::FromStr for TopologyKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "ring" => Ok(TopologyKind::Ring),
+            "naive" | "star" => Ok(TopologyKind::Naive),
+            "tree" | "binomial" => Ok(TopologyKind::Tree),
+            "two-level" | "twolevel" | "hierarchical" => Ok(TopologyKind::TwoLevel),
+            other => Err(format!("unknown topology '{other}'")),
+        }
+    }
+}
+
+/// Complete fabric configuration. [`FabricSpec::default`] is the exact
+/// seed behaviour: homogeneous workers, no stragglers, flat ring.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricSpec {
+    /// Static per-worker speed profile.
+    pub speeds: SpeedProfile,
+    /// Dynamic straggler process.
+    pub stragglers: StragglerModel,
+    /// Collective topology.
+    pub topology: TopologyKind,
+    /// Number of groups for [`TopologyKind::TwoLevel`] (ignored
+    /// otherwise).
+    pub groups: usize,
+    /// Inter-group uplink for [`TopologyKind::TwoLevel`]; `None` falls
+    /// back to the main network (ignored by flat topologies).
+    pub uplink: Option<NetworkSpec>,
+}
+
+impl Default for FabricSpec {
+    fn default() -> Self {
+        FabricSpec {
+            speeds: SpeedProfile::Uniform,
+            stragglers: StragglerModel::Off,
+            topology: TopologyKind::Ring,
+            groups: 2,
+            uplink: None,
+        }
+    }
+}
+
+impl FabricSpec {
+    /// True when this spec reproduces the homogeneous seed behaviour
+    /// exactly (no fleet state needed, timing is `steps × step_s`).
+    pub fn is_homogeneous(&self) -> bool {
+        self.speeds.is_uniform() && self.stragglers.is_off()
+    }
+
+    /// The allreduce algorithm this topology charges for.
+    pub fn allreduce_algo(&self) -> AllReduceAlgo {
+        match self.topology {
+            TopologyKind::Ring => AllReduceAlgo::Ring,
+            TopologyKind::Naive => AllReduceAlgo::Naive,
+            TopologyKind::Tree => AllReduceAlgo::Tree,
+            TopologyKind::TwoLevel => AllReduceAlgo::TwoLevel { groups: self.groups },
+        }
+    }
+
+    /// The uplink spec the cluster should charge inter-group traffic
+    /// against (falls back to the main network).
+    pub fn uplink_or<'a>(&'a self, main: &'a NetworkSpec) -> &'a NetworkSpec {
+        self.uplink.as_ref().unwrap_or(main)
+    }
+
+    /// Validate against a worker count (see `TrainSpec::validate`).
+    pub fn validate(&self, workers: usize) -> Result<(), String> {
+        self.speeds.validate(workers)?;
+        self.stragglers.validate()?;
+        if self.topology == TopologyKind::TwoLevel
+            && (self.groups == 0 || self.groups > workers.max(1))
+        {
+            return Err(format!(
+                "fabric groups must be in 1..={} for two-level, got {}",
+                workers.max(1),
+                self.groups
+            ));
+        }
+        if let Some(uplink) = &self.uplink {
+            uplink.validate("fabric uplink")?;
+        }
+        Ok(())
+    }
+
+    /// Apply the `--stragglers <model>` CLI shorthand (same grammar as
+    /// the TOML `fabric.stragglers` key, see [`StragglerModel::parse`]).
+    pub fn set_stragglers_flag(&mut self, s: &str) -> Result<(), String> {
+        self.stragglers = StragglerModel::parse(s)?;
+        Ok(())
+    }
+
+    /// Apply the `--topology <name[:groups]>` CLI shorthand, e.g.
+    /// `tree` or `two-level:2`. The flag fully determines the topology:
+    /// overriding to a flat topology also drops any `[fabric]` uplink /
+    /// groups the TOML configured (they are meaningless there, and the
+    /// TOML parser rejects that combination when spelled directly).
+    pub fn set_topology_flag(&mut self, s: &str) -> Result<(), String> {
+        let (name, groups) = match s.split_once(':') {
+            Some((n, g)) => (n, Some(g)),
+            None => (s, None),
+        };
+        self.topology = name.trim().parse()?;
+        if self.topology != TopologyKind::TwoLevel {
+            self.uplink = None;
+            self.groups = FabricSpec::default().groups;
+        }
+        if let Some(g) = groups {
+            if self.topology != TopologyKind::TwoLevel {
+                return Err(format!("topology '{}' takes no group count", name.trim()));
+            }
+            self.groups =
+                g.trim().parse().map_err(|_| format!("bad topology group count '{g}'"))?;
+        }
+        Ok(())
+    }
+
+    /// Parse the `[fabric]` TOML table (absent keys keep the homogeneous
+    /// defaults). Worker-count-dependent checks happen later in
+    /// `TrainSpec::validate`.
+    pub fn from_doc(doc: &TomlDoc) -> Result<FabricSpec, String> {
+        let d = FabricSpec::default();
+        let speeds = match doc.get("fabric.speeds").and_then(|v| v.as_str()) {
+            Some(list) => {
+                let mut m = Vec::new();
+                for part in list.split(',') {
+                    let part = part.trim();
+                    if part.is_empty() {
+                        continue;
+                    }
+                    m.push(
+                        part.parse::<f64>()
+                            .map_err(|_| format!("bad fabric speed multiplier '{part}'"))?,
+                    );
+                }
+                if m.is_empty() {
+                    return Err("fabric.speeds lists no multipliers".into());
+                }
+                SpeedProfile::Explicit(m)
+            }
+            None => match doc.get("fabric.speed_spread").and_then(|v| v.as_f64()) {
+                Some(spread) => SpeedProfile::Spread(spread),
+                None => SpeedProfile::Uniform,
+            },
+        };
+        if doc.get("fabric.speeds").is_some() && doc.get("fabric.speed_spread").is_some() {
+            return Err("fabric.speeds and fabric.speed_spread are mutually exclusive".into());
+        }
+        let stragglers = match doc.get("fabric.stragglers").and_then(|v| v.as_str()) {
+            Some(s) => StragglerModel::parse(s)?,
+            None => StragglerModel::Off,
+        };
+        let topology: TopologyKind = doc.str_or("fabric.topology", "ring").parse()?;
+        let groups = doc.usize_or("fabric.groups", d.groups);
+        let has_uplink = doc.get("fabric.uplink_latency_us").is_some()
+            || doc.get("fabric.uplink_bandwidth_gbps").is_some();
+        if (has_uplink || doc.get("fabric.groups").is_some())
+            && topology != TopologyKind::TwoLevel
+        {
+            return Err(
+                "fabric.groups / fabric.uplink_* need fabric.topology = \"two-level\"".into()
+            );
+        }
+        let uplink = if has_uplink {
+            // a half-specified uplink inherits the missing half from the
+            // effective main network (the documented no-uplink fallback),
+            // not from hardcoded datacenter defaults
+            let main = NetworkSpec::default();
+            Some(NetworkSpec {
+                latency_us: doc.f64_or(
+                    "fabric.uplink_latency_us",
+                    doc.f64_or("spec.latency_us", main.latency_us),
+                ),
+                bandwidth_gbps: doc.f64_or(
+                    "fabric.uplink_bandwidth_gbps",
+                    doc.f64_or("spec.bandwidth_gbps", main.bandwidth_gbps),
+                ),
+            })
+        } else {
+            None
+        };
+        Ok(FabricSpec { speeds, stragglers, topology, groups, uplink })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_homogeneous_seed_behaviour() {
+        let d = FabricSpec::default();
+        assert!(d.is_homogeneous());
+        assert_eq!(d.allreduce_algo(), AllReduceAlgo::Ring);
+        d.validate(8).unwrap();
+        assert_eq!(d.speeds.multipliers(3), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn spread_ramps_linearly() {
+        let p = SpeedProfile::Spread(1.0);
+        assert_eq!(p.multipliers(3), vec![1.0, 1.5, 2.0]);
+        assert_eq!(p.multipliers(1), vec![1.0]);
+        assert!(!p.is_uniform());
+        assert!(SpeedProfile::Spread(0.0).is_uniform());
+    }
+
+    #[test]
+    fn explicit_profile_validates_length_and_range() {
+        let p = SpeedProfile::Explicit(vec![1.0, 2.0]);
+        p.validate(2).unwrap();
+        assert!(p.validate(3).is_err());
+        assert!(SpeedProfile::Explicit(vec![1.0, 0.0]).validate(2).is_err());
+        assert!(SpeedProfile::Explicit(vec![1.0, f64::INFINITY]).validate(2).is_err());
+        assert!(SpeedProfile::Explicit(vec![1.0, 1.0]).is_uniform());
+    }
+
+    #[test]
+    fn topology_kind_round_trips() {
+        for t in
+            [TopologyKind::Ring, TopologyKind::Naive, TopologyKind::Tree, TopologyKind::TwoLevel]
+        {
+            let parsed: TopologyKind = t.name().parse().unwrap();
+            assert_eq!(parsed, t);
+        }
+        assert!("mesh".parse::<TopologyKind>().is_err());
+    }
+
+    #[test]
+    fn two_level_groups_validated_against_workers() {
+        let spec = FabricSpec {
+            topology: TopologyKind::TwoLevel,
+            groups: 4,
+            ..FabricSpec::default()
+        };
+        spec.validate(8).unwrap();
+        assert!(spec.validate(3).is_err(), "more groups than workers");
+        let zero = FabricSpec { groups: 0, ..spec };
+        assert!(zero.validate(8).is_err());
+    }
+
+    #[test]
+    fn cli_flags_apply() {
+        let mut f = FabricSpec::default();
+        f.set_stragglers_flag("bernoulli:0.2:6").unwrap();
+        assert_eq!(f.stragglers, StragglerModel::Bernoulli { prob: 0.2, slowdown: 6.0 });
+        f.set_topology_flag("two-level:4").unwrap();
+        assert_eq!(f.topology, TopologyKind::TwoLevel);
+        assert_eq!(f.groups, 4);
+        f.uplink = Some(NetworkSpec { latency_us: 500.0, bandwidth_gbps: 0.1 });
+        f.set_topology_flag("tree").unwrap();
+        assert_eq!(f.topology, TopologyKind::Tree);
+        // a flat override canonicalizes: the two-level-only knobs go too
+        assert_eq!(f.uplink, None);
+        assert_eq!(f.groups, FabricSpec::default().groups);
+        assert!(f.set_topology_flag("tree:4").is_err(), "flat topologies take no groups");
+        assert!(f.set_topology_flag("two-level:x").is_err());
+        assert!(f.set_stragglers_flag("always").is_err());
+    }
+
+    #[test]
+    fn toml_table_parses() {
+        let doc = TomlDoc::parse(
+            "[fabric]\nspeed_spread = 0.5\nstragglers = \"lognormal:0.25\"\n\
+             topology = \"two-level\"\ngroups = 2\nuplink_latency_us = 500.0\n\
+             uplink_bandwidth_gbps = 1.0\n",
+        )
+        .unwrap();
+        let f = FabricSpec::from_doc(&doc).unwrap();
+        assert_eq!(f.speeds, SpeedProfile::Spread(0.5));
+        assert_eq!(f.stragglers, StragglerModel::LogNormal { sigma: 0.25 });
+        assert_eq!(f.topology, TopologyKind::TwoLevel);
+        assert_eq!(f.groups, 2);
+        let uplink = f.uplink.unwrap();
+        assert_eq!(uplink.latency_us, 500.0);
+        assert_eq!(uplink.bandwidth_gbps, 1.0);
+        assert_eq!(f.allreduce_algo(), AllReduceAlgo::TwoLevel { groups: 2 });
+    }
+
+    #[test]
+    fn half_specified_uplink_inherits_the_main_link() {
+        let doc = TomlDoc::parse(
+            "[spec]\nlatency_us = 80.0\nbandwidth_gbps = 0.5\n[fabric]\n\
+             topology = \"two-level\"\nuplink_latency_us = 500.0\n",
+        )
+        .unwrap();
+        let f = FabricSpec::from_doc(&doc).unwrap();
+        let uplink = f.uplink.unwrap();
+        assert_eq!(uplink.latency_us, 500.0);
+        // missing bandwidth falls back to the main link's, not to the
+        // 10 Gb/s datacenter default
+        assert_eq!(uplink.bandwidth_gbps, 0.5);
+    }
+
+    #[test]
+    fn toml_explicit_speeds_parse() {
+        let doc =
+            TomlDoc::parse("[fabric]\nspeeds = \"1.0, 1.5, 2.0, 4.0\"\n").unwrap();
+        let f = FabricSpec::from_doc(&doc).unwrap();
+        assert_eq!(f.speeds, SpeedProfile::Explicit(vec![1.0, 1.5, 2.0, 4.0]));
+        assert!(!f.is_homogeneous());
+    }
+
+    #[test]
+    fn toml_rejects_conflicts_and_orphans() {
+        // speeds + speed_spread conflict
+        assert!(FabricSpec::from_doc(
+            &TomlDoc::parse("[fabric]\nspeeds = \"1,2\"\nspeed_spread = 0.5\n").unwrap()
+        )
+        .is_err());
+        // uplink keys without two-level
+        assert!(FabricSpec::from_doc(
+            &TomlDoc::parse("[fabric]\nuplink_latency_us = 500.0\n").unwrap()
+        )
+        .is_err());
+        // groups without two-level
+        assert!(
+            FabricSpec::from_doc(&TomlDoc::parse("[fabric]\ngroups = 2\n").unwrap()).is_err()
+        );
+        // bad straggler shorthand
+        assert!(FabricSpec::from_doc(
+            &TomlDoc::parse("[fabric]\nstragglers = \"sometimes\"\n").unwrap()
+        )
+        .is_err());
+        // empty table == defaults
+        let f = FabricSpec::from_doc(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(f, FabricSpec::default());
+    }
+}

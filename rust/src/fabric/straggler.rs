@@ -1,0 +1,230 @@
+//! Straggler processes: per-(round, worker) random slowdown factors.
+//!
+//! Real fleets are not only *statically* heterogeneous (a fixed per-worker
+//! speed profile, see [`super::Fleet`]) but also *dynamically* noisy:
+//! background jobs, GC pauses, thermal throttling and preemptions make a
+//! worker transiently slow for a round. The two classic models:
+//!
+//! * **Log-normal** — every worker's step time is multiplied by
+//!   `exp(σ·Z)`, `Z ~ N(0,1)`, each round. Heavy right tail; the max over
+//!   N workers grows with N, which is exactly the barrier effect Local
+//!   SGD amortizes over k local steps.
+//! * **Bernoulli** — with probability `prob` a worker is hit by a
+//!   discrete `slowdown`× event this round (preemption / failover), else
+//!   it runs at nominal speed. Models rare-but-severe stalls.
+//!
+//! Draws come from the fleet's own dedicated [`crate::rng::Pcg32`]
+//! stream in (round, worker-index) order, so the sampled timeline is a
+//! pure function of (seed, model) — independent of the executor, and
+//! resumable from a checkpoint by restoring the stream (the convergence
+//! trajectory never sees these numbers).
+
+use crate::rng::Pcg32;
+
+/// Which dynamic straggler process to sample (multiplies the static
+/// per-worker speed profile; `1.0` = nominal speed, larger = slower).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StragglerModel {
+    /// No dynamic stragglers: every factor is exactly `1.0` and the
+    /// fleet RNG stream is never advanced.
+    Off,
+    /// Multiplicative log-normal noise `exp(sigma * Z)`, `Z ~ N(0,1)`.
+    LogNormal {
+        /// Log-scale standard deviation σ (0.0 degenerates to `Off`'s
+        /// factors but still draws, keeping the stream position model-
+        /// independent within `LogNormal`).
+        sigma: f64,
+    },
+    /// With probability `prob` the worker runs `slowdown`× slower this
+    /// round, otherwise at nominal speed.
+    Bernoulli {
+        /// Per-round per-worker probability of a slowdown event.
+        prob: f64,
+        /// Multiplier applied when the event fires (>= 1.0).
+        slowdown: f64,
+    },
+}
+
+impl StragglerModel {
+    /// Display name (CSV labels, CLI round-trip).
+    pub fn name(&self) -> String {
+        match self {
+            StragglerModel::Off => "off".into(),
+            StragglerModel::LogNormal { sigma } => format!("lognormal:{sigma}"),
+            StragglerModel::Bernoulli { prob, slowdown } => {
+                format!("bernoulli:{prob}:{slowdown}")
+            }
+        }
+    }
+
+    /// Validate parameter ranges.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            StragglerModel::Off => Ok(()),
+            StragglerModel::LogNormal { sigma } => {
+                if !(sigma.is_finite() && sigma >= 0.0) {
+                    return Err(format!(
+                        "fabric straggler sigma must be finite and >= 0, got {sigma}"
+                    ));
+                }
+                Ok(())
+            }
+            StragglerModel::Bernoulli { prob, slowdown } => {
+                if !(prob.is_finite() && (0.0..=1.0).contains(&prob)) {
+                    return Err(format!(
+                        "fabric straggler prob must be in [0,1], got {prob}"
+                    ));
+                }
+                if !(slowdown.is_finite() && slowdown >= 1.0) {
+                    return Err(format!(
+                        "fabric straggler slowdown must be finite and >= 1, got {slowdown}"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// True when sampling never advances the RNG (all factors are 1.0).
+    pub fn is_off(&self) -> bool {
+        matches!(self, StragglerModel::Off)
+    }
+
+    /// Draw one worker's slowdown factor for the current round. Always
+    /// `>= some positive value`; `1.0` under `Off`.
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        match *self {
+            StragglerModel::Off => 1.0,
+            StragglerModel::LogNormal { sigma } => {
+                let z = rng.next_normal() as f64;
+                (sigma * z).exp()
+            }
+            StragglerModel::Bernoulli { prob, slowdown } => {
+                if rng.next_f64() < prob {
+                    slowdown
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Parse a CLI/TOML shorthand: `off`, `lognormal:<sigma>` (sigma
+    /// defaults to 0.5), or `bernoulli:<prob>:<slowdown>` (defaults
+    /// 0.1:4.0). Validated before returning.
+    pub fn parse(s: &str) -> Result<StragglerModel, String> {
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or("").trim().to_ascii_lowercase();
+        let nums: Vec<&str> = parts.collect();
+        let num = |i: usize, default: f64| -> Result<f64, String> {
+            match nums.get(i) {
+                None => Ok(default),
+                Some(v) => v
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad straggler parameter '{}' in '{s}'", v.trim())),
+            }
+        };
+        let (model, arity) = match kind.as_str() {
+            "off" | "none" => (StragglerModel::Off, 0),
+            "lognormal" | "log-normal" => {
+                (StragglerModel::LogNormal { sigma: num(0, 0.5)? }, 1)
+            }
+            "bernoulli" => (
+                StragglerModel::Bernoulli { prob: num(0, 0.1)?, slowdown: num(1, 4.0)? },
+                2,
+            ),
+            other => return Err(format!("unknown straggler model '{other}'")),
+        };
+        if nums.len() > arity {
+            return Err(format!(
+                "straggler model '{kind}' takes at most {arity} parameter(s), got '{s}'"
+            ));
+        }
+        model.validate()?;
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_never_draws() {
+        let mut a = Pcg32::new(1, 2);
+        let b = a.clone();
+        assert_eq!(StragglerModel::Off.sample(&mut a), 1.0);
+        assert_eq!(a, b, "Off must not advance the stream");
+    }
+
+    #[test]
+    fn lognormal_is_positive_and_centered() {
+        let model = StragglerModel::LogNormal { sigma: 0.5 };
+        let mut rng = Pcg32::new(7, 0);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| model.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| x > 0.0));
+        // median of exp(σZ) is 1.0
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[n / 2];
+        assert!((median - 1.0).abs() < 0.05, "median {median}");
+        // heavy right tail: max well above the median
+        assert!(sorted[n - 1] > 2.0);
+    }
+
+    #[test]
+    fn bernoulli_hits_at_the_configured_rate() {
+        let model = StragglerModel::Bernoulli { prob: 0.25, slowdown: 4.0 };
+        let mut rng = Pcg32::new(9, 1);
+        let n = 40_000;
+        let hits = (0..n).filter(|_| model.sample(&mut rng) == 4.0).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_stream() {
+        let model = StragglerModel::LogNormal { sigma: 1.0 };
+        let mut a = Pcg32::new(3, 5);
+        let mut b = Pcg32::new(3, 5);
+        for _ in 0..100 {
+            assert_eq!(model.sample(&mut a).to_bits(), model.sample(&mut b).to_bits());
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_and_validates() {
+        assert_eq!(StragglerModel::parse("off").unwrap(), StragglerModel::Off);
+        assert_eq!(
+            StragglerModel::parse("lognormal:0.75").unwrap(),
+            StragglerModel::LogNormal { sigma: 0.75 }
+        );
+        assert_eq!(
+            StragglerModel::parse("lognormal").unwrap(),
+            StragglerModel::LogNormal { sigma: 0.5 }
+        );
+        assert_eq!(
+            StragglerModel::parse("bernoulli:0.2:8").unwrap(),
+            StragglerModel::Bernoulli { prob: 0.2, slowdown: 8.0 }
+        );
+        // name() round-trips through parse()
+        for m in [
+            StragglerModel::Off,
+            StragglerModel::LogNormal { sigma: 0.25 },
+            StragglerModel::Bernoulli { prob: 0.05, slowdown: 10.0 },
+        ] {
+            assert_eq!(StragglerModel::parse(&m.name()).unwrap(), m);
+        }
+        assert!(StragglerModel::parse("bogus").is_err());
+        assert!(StragglerModel::parse("lognormal:-1").is_err());
+        assert!(StragglerModel::parse("bernoulli:2.0").is_err());
+        assert!(StragglerModel::parse("bernoulli:0.1:0.5").is_err());
+        assert!(StragglerModel::parse("lognormal:x").is_err());
+        // extra fields are rejected, not silently dropped
+        assert!(StragglerModel::parse("off:9").is_err());
+        assert!(StragglerModel::parse("lognormal:0.5:junk").is_err());
+        assert!(StragglerModel::parse("bernoulli:0.1:4:8").is_err());
+    }
+}

@@ -20,7 +20,11 @@
 //!   state ([`checkpoint::Checkpointer`] observer + `Trainer::resume_from`)
 //!   with bitwise-identical restarts for every algorithm and executor.
 //! * [`comm`] — simulated cluster network with latency/bandwidth cost model,
-//!   allreduce implementations and exact byte/round accounting.
+//!   allreduce implementations (flat ring/star/tree and a two-level
+//!   hierarchy over a slower uplink) and exact byte/round accounting.
+//! * [`fabric`] — heterogeneous fleet simulation: per-worker speed
+//!   profiles, seeded straggler processes and collective topologies that
+//!   drive the simulated-time axis without ever touching the trajectory.
 //! * [`data`] — synthetic datasets matching the paper's three tasks, plus
 //!   iid / label-sharded / Dirichlet partitioners (identical vs
 //!   non-identical case).
@@ -104,6 +108,47 @@
 //!
 //! (The CLI exposes the same thing: `vrl-sgd train --config run.toml
 //! --checkpoint-dir ckpt --checkpoint-every 100`, then `--resume`.)
+//!
+//! The simulated-time axis can model a *heterogeneous* fleet — per-worker
+//! speed profiles, per-round straggler draws, and a two-level collective
+//! over a slow uplink. Every sync barrier then costs the slowest worker's
+//! round (which is what a larger period k amortizes), while the
+//! convergence trajectory stays **bitwise identical** to the homogeneous
+//! run — only `SimTime`/`CommStats` and the per-round
+//! `straggler_wait_s` metric move:
+//!
+//! ```no_run
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
+//! let fabric = FabricSpec {
+//!     // worker i runs up to 1.5x slower than worker 0...
+//!     speeds: SpeedProfile::Spread(0.5),
+//!     // ...plus heavy-tailed per-round slowdowns
+//!     stragglers: StragglerModel::LogNormal { sigma: 0.5 },
+//!     // intra-group ring + inter-group ring over a 1 Gb/s uplink
+//!     topology: TopologyKind::TwoLevel,
+//!     groups: 2,
+//!     uplink: Some(NetworkSpec { latency_us: 500.0, bandwidth_gbps: 1.0 }),
+//! };
+//! let out = Trainer::new(task)
+//!     .algorithm(AlgorithmKind::VrlSgd)
+//!     .partition(Partition::LabelSharded)
+//!     .workers(8)
+//!     .period(20)
+//!     .steps(2000)
+//!     .fabric(fabric)
+//!     .run()
+//!     .unwrap();
+//! println!(
+//!     "simulated {:.2}s ({:.2}s lost at barriers)",
+//!     out.sim_time.total(),
+//!     out.sim_time.wait_s
+//! );
+//! ```
+//!
+//! (CLI: a `[fabric]` TOML table, or `vrl-sgd train --config run.toml
+//! --stragglers lognormal:0.5 --topology two-level:2`.)
 
 pub mod analysis;
 pub mod benchutil;
@@ -114,6 +159,7 @@ pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod experiments;
+pub mod fabric;
 pub mod format;
 pub mod metrics;
 pub mod rng;
@@ -125,7 +171,10 @@ pub mod trainer;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::checkpoint::{Checkpointer, Snapshot};
-    pub use crate::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
+    pub use crate::config::{AlgorithmKind, NetworkSpec, Partition, TaskKind, TrainSpec};
+    pub use crate::fabric::{
+        FabricSpec, Fleet, FleetState, SpeedProfile, StragglerModel, TopologyKind,
+    };
     #[allow(deprecated)]
     pub use crate::coordinator::run_training;
     pub use crate::coordinator::{Algorithm, TrainOutput};

@@ -30,6 +30,8 @@ COMMANDS:
   train --config <file.toml> [--threads <n>]
         [--checkpoint-dir <dir>] [--checkpoint-every <rounds>]
         [--checkpoint-keep <n>] [--resume]
+        [--stragglers <off|lognormal:<sigma>|bernoulli:<p>:<x>>]
+        [--topology <ring|naive|tree|two-level[:groups]>]
                                       run one training job (the optional
                                       [schedule] table maps to lr decay /
                                       stagewise periods; --threads > 1
@@ -42,7 +44,11 @@ COMMANDS:
                                       <dir>/round-XXXXXXXX.snap and
                                       --resume continues from the newest
                                       one, bitwise identical to an
-                                      uninterrupted run)
+                                      uninterrupted run; --stragglers /
+                                      --topology override the [fabric]
+                                      table — they move only the
+                                      simulated clock and communication
+                                      accounting, never the trajectory)
   fig1|fig2|fig5|fig6 [--paper] [--out <csv>]
                                       epoch-loss figures (1/2: paper k;
                                       5: k/2; 6: 2k)
@@ -153,6 +159,15 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
             let config = args.get("config").ok_or("train needs --config")?;
             let mut cfg = RunConfig::load(config)?;
             cfg.spec.threads = args.parse_num("threads", cfg.spec.threads)?;
+            if let Some(s) = args.get("stragglers") {
+                cfg.spec.fabric.set_stragglers_flag(s)?;
+            }
+            if let Some(t) = args.get("topology") {
+                cfg.spec.fabric.set_topology_flag(t)?;
+            }
+            // CLI fabric overrides re-enter validation (worker-count
+            // bounds, uplink sanity) before anything runs
+            cfg.spec.validate()?;
             if let Some(dir) = args.get("checkpoint-dir") {
                 cfg.checkpoint.dir = Some(dir.to_string());
             }
@@ -213,13 +228,15 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
             }
             let out = trainer.run()?;
             println!(
-                "{}: loss {:.6} -> {:.6} in {} rounds ({} bytes, {:.3}s simulated)",
+                "{}: loss {:.6} -> {:.6} in {} rounds ({} bytes, {:.3}s simulated, \
+                 {:.3}s barrier wait)",
                 out.algorithm,
                 out.initial_loss(),
                 out.final_loss(),
                 out.comm.rounds,
                 out.comm.bytes,
-                out.sim_time.total()
+                out.sim_time.total(),
+                out.sim_time.wait_s
             );
             if let Some(path) = cfg.output {
                 write_report(&path, &out.history.sync_csv()).map_err(|e| e.to_string())?;

@@ -10,6 +10,10 @@
 //!   among workers and distance to a reference point. Appendix E
 //!   (Figures 3–4) plots these.
 
+/// Header line shared by `History::sync_csv` and `trainer::CsvSink`.
+pub const SYNC_CSV_HEADER: &str =
+    "round,step,train_loss,worker_variance,comm_rounds,comm_bytes,sim_time_s,straggler_wait_s\n";
+
 /// One record per synchronization round.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SyncRow {
@@ -27,6 +31,30 @@ pub struct SyncRow {
     pub comm_bytes: u64,
     /// Cumulative simulated time (compute + comm), seconds.
     pub sim_time_s: f64,
+    /// This round's barrier idle time on a heterogeneous fleet: the
+    /// critical-path compute time minus the mean per-worker compute time
+    /// (see `fabric::RoundTiming`). Zero on a homogeneous fleet.
+    pub straggler_wait_s: f64,
+}
+
+impl SyncRow {
+    /// One CSV line (with trailing newline) under [`SYNC_CSV_HEADER`] —
+    /// the single format both [`History::sync_csv`] and the streaming
+    /// `trainer::CsvSink` emit, so the byte-for-byte
+    /// resumed-stream-matches-history contract has one format to drift.
+    pub fn csv_line(&self) -> String {
+        format!(
+            "{},{},{:.8e},{:.8e},{},{},{:.6e},{:.6e}\n",
+            self.round,
+            self.step,
+            self.train_loss,
+            self.worker_variance,
+            self.comm_rounds,
+            self.comm_bytes,
+            self.sim_time_s,
+            self.straggler_wait_s
+        )
+    }
 }
 
 /// One record per iteration (dense mode).
@@ -90,14 +118,9 @@ impl History {
 
     /// CSV of the sync rows (header + one line per round).
     pub fn sync_csv(&self) -> String {
-        let mut s =
-            String::from("round,step,train_loss,worker_variance,comm_rounds,comm_bytes,sim_time_s\n");
+        let mut s = String::from(SYNC_CSV_HEADER);
         for r in &self.sync_rows {
-            s.push_str(&format!(
-                "{},{},{:.8e},{:.8e},{},{},{:.6e}\n",
-                r.round, r.step, r.train_loss, r.worker_variance, r.comm_rounds, r.comm_bytes,
-                r.sim_time_s
-            ));
+            s.push_str(&r.csv_line());
         }
         s
     }
@@ -145,6 +168,7 @@ mod tests {
                 comm_rounds: (i + 1) as u64,
                 comm_bytes: 100,
                 sim_time_s: 0.1,
+                straggler_wait_s: 0.01,
             });
         }
         h

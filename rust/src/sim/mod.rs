@@ -36,10 +36,18 @@ impl TimeModel {
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SimTime {
     /// Compute seconds (workers run in parallel: this is per-worker
-    /// critical path, not the sum over workers).
+    /// critical path, not the sum over workers — on a heterogeneous
+    /// [`crate::fabric::Fleet`] every round costs the *slowest* worker's
+    /// time).
     pub compute_s: f64,
     /// Communication seconds (critical path of the collectives).
     pub comm_s: f64,
+    /// Cumulative barrier idle time: per round, critical path minus the
+    /// mean per-worker compute time. A diagnostic for straggler damage —
+    /// already contained in `compute_s`'s critical path, so it does
+    /// **not** contribute to [`SimTime::total`]. Zero on a homogeneous
+    /// fleet.
+    pub wait_s: f64,
 }
 
 impl SimTime {
@@ -48,9 +56,19 @@ impl SimTime {
         self.compute_s + self.comm_s
     }
 
-    /// Charge `steps` local steps under `model`.
+    /// Charge `steps` homogeneous local steps under `model` (no
+    /// stragglers: zero barrier wait). Heterogeneous rounds go through
+    /// [`SimTime::charge_round`] instead.
     pub fn charge_steps(&mut self, steps: usize, model: &TimeModel) {
         self.compute_s += steps as f64 * model.step_s;
+    }
+
+    /// Charge one fleet round: `critical_s` of wall-clock compute (the
+    /// slowest worker) of which `wait_s` was mean barrier idle (see
+    /// [`crate::fabric::RoundTiming`]).
+    pub fn charge_round(&mut self, critical_s: f64, wait_s: f64) {
+        self.compute_s += critical_s;
+        self.wait_s += wait_s;
     }
 }
 
@@ -79,5 +97,16 @@ mod tests {
         t.comm_s += 0.05;
         assert!((t.compute_s - 0.1).abs() < 1e-12);
         assert!((t.total() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn charge_round_tracks_wait_outside_total() {
+        let mut t = SimTime::default();
+        t.charge_round(0.4, 0.1);
+        t.comm_s += 0.05;
+        assert!((t.compute_s - 0.4).abs() < 1e-12);
+        assert!((t.wait_s - 0.1).abs() < 1e-12);
+        // wait is a slice of the critical path, not extra wall-clock
+        assert!((t.total() - 0.45).abs() < 1e-12);
     }
 }

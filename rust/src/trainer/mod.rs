@@ -47,8 +47,9 @@ pub use schedule::{
 };
 
 use crate::checkpoint::Snapshot;
-use crate::comm::{AllReduceAlgo, Cluster};
+use crate::comm::Cluster;
 use crate::config::{AlgorithmKind, NetworkSpec, Partition, TaskKind, TrainSpec};
+use crate::fabric::{FabricSpec, Fleet, FABRIC_STREAM_LANE};
 use crate::coordinator::{make_algorithm, TrainOutput};
 use crate::coordinator::WorkerState;
 use crate::engine::{build_pure_engines, StepEngine};
@@ -186,6 +187,15 @@ impl Trainer {
     /// Simulated network parameters.
     pub fn network(mut self, network: NetworkSpec) -> Self {
         self.spec.network = network;
+        self
+    }
+
+    /// Simulated cluster fabric: per-worker speed profile, straggler
+    /// process and collective topology (see [`crate::fabric`]). Shapes
+    /// only the simulated-time axis and communication accounting — the
+    /// trajectory is bitwise identical to the homogeneous default.
+    pub fn fabric(mut self, fabric: FabricSpec) -> Self {
+        self.spec.fabric = fabric;
         self
     }
 
@@ -433,7 +443,13 @@ impl Session {
             w.corrector = algo.corrector();
             wants_post |= w.corrector.is_some();
         }
-        let mut cluster = Cluster::new(n, &spec.network, AllReduceAlgo::Ring);
+        // the fabric shapes only the cost accounting and the simulated
+        // clock: the collective topology prices each sync, the fleet
+        // prices each round's compute as the slowest worker's critical
+        // path — parameters never see any of it
+        let mut cluster = Cluster::new(n, &spec.network, spec.fabric.allreduce_algo())
+            .with_uplink(spec.fabric.uplink_or(&spec.network));
+        let mut fleet = Fleet::new(&spec.fabric, n, root.split(FABRIC_STREAM_LANE));
         let time_model = TimeModel::from_dims(dim, spec.batch);
         let mut sim_time = SimTime::default();
 
@@ -451,6 +467,7 @@ impl Session {
             algo.restore_state(&snap.algo_state)
                 .map_err(|e| format!("restore algorithm state: {e}"))?;
             cluster.restore_stats(snap.comm);
+            fleet.restore_state(&snap.fabric);
             sim_time = snap.sim_time;
             history = snap.history;
             last_loss = snap.last_loss;
@@ -559,7 +576,11 @@ impl Session {
                 executor.run_round(&mut cells, &ctx);
                 step += p;
             }
-            sim_time.charge_steps(p, &time_model);
+            // round compute cost: the sync barrier waits for the slowest
+            // worker this round (homogeneous fleets reduce to the exact
+            // seed behaviour, steps × step_s with zero wait)
+            let timing = fleet.round_timing(p, &time_model);
+            sim_time.charge_round(timing.critical_s, timing.wait_s);
 
             // consensus gap just before averaging
             let variance = {
@@ -606,6 +627,7 @@ impl Session {
                 comm_rounds: comm.rounds,
                 comm_bytes: comm.bytes,
                 sim_time_s: sim_time.total(),
+                straggler_wait_s: timing.wait_s,
             };
             for s in self.sinks.iter_mut() {
                 s.on_sync_row(&row);
@@ -642,6 +664,7 @@ impl Session {
                     dim,
                     comm,
                     sim_time,
+                    fabric: fleet.state(),
                     history: &history,
                     round,
                     step,

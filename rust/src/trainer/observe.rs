@@ -89,6 +89,10 @@ pub struct RunState<'a> {
     pub comm: CommStats,
     /// Cumulative simulated wall-clock.
     pub sim_time: SimTime,
+    /// Position of the fabric straggler stream
+    /// ([`crate::fabric::Fleet::state`]) — snapshotted so resumed runs
+    /// replay the identical simulated timeline.
+    pub fabric: crate::fabric::FleetState,
     /// History recorded so far (trimmed to the last row under
     /// `Trainer::stream_only`).
     pub history: &'a History,
@@ -291,20 +295,9 @@ impl<W: std::io::Write> MetricSink for CsvSink<W> {
     fn on_sync_row(&mut self, row: &SyncRow) {
         if !self.wrote_header {
             self.wrote_header = true;
-            self.write(
-                "round,step,train_loss,worker_variance,comm_rounds,comm_bytes,sim_time_s\n",
-            );
+            self.write(crate::metrics::SYNC_CSV_HEADER);
         }
-        let line = format!(
-            "{},{},{:.8e},{:.8e},{},{},{:.6e}\n",
-            row.round,
-            row.step,
-            row.train_loss,
-            row.worker_variance,
-            row.comm_rounds,
-            row.comm_bytes,
-            row.sim_time_s
-        );
+        let line = row.csv_line();
         self.write(&line);
     }
 
@@ -399,6 +392,7 @@ mod tests {
             comm_rounds: 1,
             comm_bytes: 100,
             sim_time_s: 0.125,
+            straggler_wait_s: 0.0625,
         };
         let mut buf = Vec::new();
         {

@@ -304,3 +304,94 @@ fn resume_at_final_round_yields_finished_run() {
     assert_eq!(resumed.comm, full.comm);
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// A heterogeneous fleet for the fabric resume drills: static spread,
+/// live straggler stream, two-level topology over a slow uplink.
+fn fabric() -> vrl_sgd::fabric::FabricSpec {
+    use vrl_sgd::fabric::*;
+    FabricSpec {
+        speeds: SpeedProfile::Spread(1.0),
+        stragglers: StragglerModel::LogNormal { sigma: 0.5 },
+        topology: TopologyKind::TwoLevel,
+        groups: 2,
+        uplink: Some(vrl_sgd::config::NetworkSpec { latency_us: 500.0, bandwidth_gbps: 0.1 }),
+    }
+}
+
+#[test]
+fn fabric_resume_reproduces_the_simulated_timeline() {
+    // the fleet's straggler stream rides in the snapshot: an interrupted
+    // fabric run resumes onto the byte-identical simulated timeline (the
+    // history's sim_time_s / straggler_wait_s columns included), under
+    // either executor
+    for threads in [1usize, 2] {
+        let full = base(AlgorithmKind::VrlSgd, threads).fabric(fabric()).run().unwrap();
+        assert!(full.sim_time.wait_s > 0.0, "fabric must be live in this drill");
+        let dir = temp_dir(&format!("fabric_{threads}"));
+        let crashed = catch_unwind(AssertUnwindSafe(|| {
+            base(AlgorithmKind::VrlSgd, threads)
+                .fabric(fabric())
+                .observer(Checkpointer::new(&dir).every(3).keep_last(2))
+                .observer(CrashAt(CRASH_ROUND))
+                .run()
+        }));
+        assert!(crashed.is_err());
+        let snap_path = latest_snapshot(&dir).unwrap().unwrap();
+        let snap = Snapshot::load(&snap_path).unwrap();
+        assert!(snap.fabric.rounds_sampled > 0, "stream position must be live");
+        assert!(snap.sim_time.wait_s > 0.0);
+        let resumed = base(AlgorithmKind::VrlSgd, threads)
+            .fabric(fabric())
+            .resume_from(&snap_path)
+            .unwrap()
+            .run()
+            .unwrap();
+        let tag = format!("{threads} thread(s)");
+        assert_eq!(resumed.final_params, full.final_params, "{tag}");
+        assert_eq!(resumed.history, full.history, "{tag}: history incl. timing columns");
+        assert_eq!(resumed.comm, full.comm, "{tag}");
+        assert_eq!(resumed.sim_time, full.sim_time, "{tag}: simulated clock");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn fabric_mismatch_is_rejected_at_build() {
+    // resuming a fabric run without (or with a different) fabric would
+    // fork the simulated timeline — the fingerprint catches it
+    let dir = temp_dir("fabric_mismatch");
+    let crashed = catch_unwind(AssertUnwindSafe(|| {
+        base(AlgorithmKind::VrlSgd, 1)
+            .fabric(fabric())
+            .observer(Checkpointer::new(&dir).every(3).keep_last(2))
+            .observer(CrashAt(CRASH_ROUND))
+            .run()
+    }));
+    assert!(crashed.is_err());
+    let snap_path = latest_snapshot(&dir).unwrap().unwrap();
+    let err = base(AlgorithmKind::VrlSgd, 1)
+        .resume_from(&snap_path)
+        .unwrap()
+        .build()
+        .err()
+        .unwrap();
+    assert!(err.contains("fabric"), "{err}");
+    let mut other = fabric();
+    other.stragglers = vrl_sgd::fabric::StragglerModel::Off;
+    let err = base(AlgorithmKind::VrlSgd, 1)
+        .fabric(other)
+        .resume_from(&snap_path)
+        .unwrap()
+        .build()
+        .err()
+        .unwrap();
+    assert!(err.contains("fabric"), "{err}");
+    // the matching fabric builds fine
+    base(AlgorithmKind::VrlSgd, 1)
+        .fabric(fabric())
+        .resume_from(&snap_path)
+        .unwrap()
+        .build()
+        .unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,177 @@
+//! Fabric contract: the heterogeneous-cluster simulation moves **only**
+//! the simulated clock and the communication accounting. For every
+//! algorithm and both executors, a run with speed profiles, stragglers
+//! and a hierarchical topology enabled must produce bitwise-identical
+//! parameters and per-round losses/variances to the homogeneous run —
+//! while its `SimTime`/`CommStats` (and the new per-round
+//! `straggler_wait_s` metric) demonstrably differ.
+
+use vrl_sgd::prelude::*;
+
+fn task() -> TaskKind {
+    TaskKind::SoftmaxSynthetic { classes: 4, features: 8, samples_per_worker: 48 }
+}
+
+fn base(algorithm: AlgorithmKind, threads: usize) -> Trainer {
+    Trainer::new(task())
+        .algorithm(algorithm)
+        .workers(4)
+        .period(5)
+        .lr(0.05)
+        .batch(8)
+        .steps(60)
+        .seed(11)
+        .partition(Partition::LabelSharded)
+        .parallelism(threads)
+}
+
+/// The full fabric: 2x static spread, heavy-tailed stragglers, two-level
+/// topology over a 100x-slower uplink.
+fn hetero_fabric() -> FabricSpec {
+    FabricSpec {
+        speeds: SpeedProfile::Spread(1.0),
+        stragglers: StragglerModel::LogNormal { sigma: 0.5 },
+        topology: TopologyKind::TwoLevel,
+        groups: 2,
+        uplink: Some(NetworkSpec { latency_us: 500.0, bandwidth_gbps: 0.1 }),
+    }
+}
+
+/// Everything the trajectory can see must agree bitwise; only the
+/// simulated-time / communication columns may move.
+fn assert_trajectory_identical(tag: &str, a: &TrainOutput, b: &TrainOutput) {
+    assert_eq!(a.final_params, b.final_params, "{tag}: params");
+    assert_eq!(a.delta_residual, b.delta_residual, "{tag}: Σ Δ residual");
+    assert_eq!(a.history.initial_loss.to_bits(), b.history.initial_loss.to_bits(), "{tag}");
+    assert_eq!(a.history.sync_rows.len(), b.history.sync_rows.len(), "{tag}: round count");
+    for (ra, rb) in a.history.sync_rows.iter().zip(b.history.sync_rows.iter()) {
+        let t = format!("{tag} round {}", ra.round);
+        assert_eq!(ra.round, rb.round, "{t}");
+        assert_eq!(ra.step, rb.step, "{t}: step");
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "{t}: loss");
+        assert_eq!(
+            ra.worker_variance.to_bits(),
+            rb.worker_variance.to_bits(),
+            "{t}: variance"
+        );
+        assert_eq!(ra.comm_rounds, rb.comm_rounds, "{t}: collective count");
+    }
+    assert_eq!(a.history.dense_rows, b.history.dense_rows, "{tag}: dense rows");
+}
+
+#[test]
+fn fabric_never_touches_the_trajectory() {
+    for algorithm in AlgorithmKind::ALL {
+        for threads in [1usize, 2] {
+            let homo = base(algorithm, threads).run().unwrap();
+            let fab = base(algorithm, threads).fabric(hetero_fabric()).run().unwrap();
+            let tag = format!("{algorithm:?} x {threads} thread(s)");
+            assert_trajectory_identical(&tag, &homo, &fab);
+
+            // ...and the fabric is demonstrably live: the simulated
+            // clock slows down and barrier wait appears
+            assert!(
+                fab.sim_time.total() > homo.sim_time.total(),
+                "{tag}: {} !> {}",
+                fab.sim_time.total(),
+                homo.sim_time.total()
+            );
+            assert!(fab.sim_time.wait_s > 0.0, "{tag}: no straggler wait recorded");
+            assert_eq!(homo.sim_time.wait_s, 0.0, "{tag}: homogeneous wait must be zero");
+            // same collective count, different per-collective accounting
+            // (two-level moves more messages than the flat ring's chunks)
+            assert_eq!(fab.comm.rounds, homo.comm.rounds, "{tag}");
+            assert_ne!(fab.comm.sim_time_s.to_bits(), homo.comm.sim_time_s.to_bits(), "{tag}");
+        }
+    }
+}
+
+#[test]
+fn fabric_timing_is_identical_across_executors() {
+    // straggler draws happen on the driver thread from a dedicated
+    // stream, so the simulated timeline is executor-independent too
+    let seq = base(AlgorithmKind::VrlSgd, 1).fabric(hetero_fabric()).run().unwrap();
+    let thr = base(AlgorithmKind::VrlSgd, 2).fabric(hetero_fabric()).run().unwrap();
+    assert_eq!(seq.history, thr.history, "sync rows incl. sim/wait columns");
+    assert_eq!(seq.final_params, thr.final_params);
+    assert_eq!(seq.comm, thr.comm);
+    assert_eq!(seq.sim_time, thr.sim_time);
+}
+
+#[test]
+fn straggler_wait_lands_in_the_history() {
+    let fab = base(AlgorithmKind::LocalSgd, 1)
+        .fabric(FabricSpec {
+            stragglers: StragglerModel::LogNormal { sigma: 0.5 },
+            ..FabricSpec::default()
+        })
+        .run()
+        .unwrap();
+    assert!(fab.history.sync_rows.iter().all(|r| r.straggler_wait_s >= 0.0));
+    let waiting = fab.history.sync_rows.iter().filter(|r| r.straggler_wait_s > 0.0).count();
+    assert_eq!(waiting, fab.history.sync_rows.len(), "log-normal waits every round");
+    // cumulative wait in SimTime equals the sum of the per-round column
+    let sum: f64 = fab.history.sync_rows.iter().map(|r| r.straggler_wait_s).sum();
+    assert!((sum - fab.sim_time.wait_s).abs() < 1e-12 * sum.max(1.0));
+
+    let homo = base(AlgorithmKind::LocalSgd, 1).run().unwrap();
+    assert!(homo.history.sync_rows.iter().all(|r| r.straggler_wait_s == 0.0));
+}
+
+#[test]
+fn every_topology_preserves_params_and_moves_accounting() {
+    let mut outputs = Vec::new();
+    for topology in
+        [TopologyKind::Ring, TopologyKind::Naive, TopologyKind::Tree, TopologyKind::TwoLevel]
+    {
+        let fabric = FabricSpec {
+            topology,
+            groups: 2,
+            uplink: (topology == TopologyKind::TwoLevel)
+                .then_some(NetworkSpec { latency_us: 500.0, bandwidth_gbps: 0.1 }),
+            ..FabricSpec::default()
+        };
+        let out = base(AlgorithmKind::VrlSgd, 1).fabric(fabric).run().unwrap();
+        outputs.push((topology, out));
+    }
+    let (_, ring) = &outputs[0];
+    for (topology, out) in &outputs[1..] {
+        let tag = format!("{topology:?}");
+        assert_trajectory_identical(&tag, ring, out);
+        assert_eq!(out.comm.rounds, ring.comm.rounds, "{tag}");
+        // each topology prices the same collectives differently
+        assert_ne!(
+            (out.comm.messages, out.comm.sim_time_s.to_bits()),
+            (ring.comm.messages, ring.comm.sim_time_s.to_bits()),
+            "{tag}: accounting should differ from the flat ring"
+        );
+    }
+}
+
+#[test]
+fn larger_periods_amortize_the_slow_uplink() {
+    // the regime the paper targets: with a slow uplink, k=20 spends far
+    // less simulated time than k=1 for the same iteration budget
+    let run = |period: usize| {
+        base(AlgorithmKind::VrlSgd, 1)
+            .period(period)
+            .fabric(FabricSpec {
+                topology: TopologyKind::TwoLevel,
+                groups: 2,
+                uplink: Some(NetworkSpec { latency_us: 1000.0, bandwidth_gbps: 0.05 }),
+                ..FabricSpec::default()
+            })
+            .run()
+            .unwrap()
+    };
+    let chatty = run(1);
+    let quiet = run(20);
+    assert_eq!(chatty.comm.rounds, 60);
+    assert_eq!(quiet.comm.rounds, 3);
+    assert!(
+        quiet.sim_time.total() < chatty.sim_time.total() / 5.0,
+        "k=20 {}s vs k=1 {}s",
+        quiet.sim_time.total(),
+        chatty.sim_time.total()
+    );
+}
