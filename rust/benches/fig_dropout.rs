@@ -1,0 +1,155 @@
+//! Bench: the partial-participation figure — quality and wall-clock
+//! under worker dropout.
+//!
+//! Sweeps the communication period k against the Bernoulli dropout rate
+//! on a label-sharded fleet and reports each algorithm's final loss,
+//! mean per-round presence, skipped rounds, communication and simulated
+//! wall-clock. This is the regime the fabric's participation model
+//! exists for: plain Local SGD's non-iid penalty is *amplified* by
+//! dropout (absent shards go unrepresented for whole rounds), while
+//! VRL-SGD's per-worker corrections Δ_i keep compensating — the zero-sum
+//! invariant holds across every dropout pattern — so its quality
+//! degrades far more gracefully at the same comm budget.
+//!
+//! Run: `cargo bench --bench fig_dropout [-- --steps <n> --out <csv>]`
+
+use vrl_sgd::benchutil;
+use vrl_sgd::metrics::write_report;
+use vrl_sgd::prelude::*;
+
+struct Cell {
+    algorithm: &'static str,
+    k: usize,
+    drop: f64,
+    final_loss: f64,
+    mean_present: f64,
+    skipped_rounds: u64,
+    sim_time_s: f64,
+    comm_rounds: u64,
+    comm_bytes: u64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flag = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .map(|s| s.as_str())
+    };
+    let steps: usize = flag("--steps").map_or(600, |v| v.parse().expect("--steps"));
+    let out = flag("--out").unwrap_or("reports/fig_dropout.csv");
+
+    let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 128 };
+    let algorithms = [AlgorithmKind::SSgd, AlgorithmKind::LocalSgd, AlgorithmKind::VrlSgd];
+    let periods = [1usize, 5, 20];
+    let drops = [0.0f64, 0.1, 0.3, 0.5];
+
+    println!("=== Dropout figure: k x dropout rate under partial participation ===\n");
+    let mut cells: Vec<Cell> = Vec::new();
+    let timed = benchutil::bench("dropout grid", 0, 1, || {
+        cells.clear();
+        for &drop in &drops {
+            for &k in &periods {
+                for &algorithm in &algorithms {
+                    // S-SGD ignores k (syncs every step): run it once per rate
+                    if algorithm == AlgorithmKind::SSgd && k != periods[0] {
+                        continue;
+                    }
+                    let model = if drop > 0.0 {
+                        ParticipationModel::Bernoulli { drop }
+                    } else {
+                        ParticipationModel::Full
+                    };
+                    let out = Trainer::new(task.clone())
+                        .algorithm(algorithm)
+                        .partition(Partition::LabelSharded)
+                        .workers(8)
+                        .period(k)
+                        .lr(0.05)
+                        .batch(16)
+                        .steps(steps)
+                        .seed(42)
+                        .participation(model)
+                        .run()
+                        .expect("run");
+                    let rounds = out.history.sync_rows.len().max(1);
+                    let mean_present = out
+                        .history
+                        .sync_rows
+                        .iter()
+                        .map(|r| r.present_workers as f64)
+                        .sum::<f64>()
+                        / rounds as f64;
+                    cells.push(Cell {
+                        algorithm: out.algorithm,
+                        k,
+                        drop,
+                        final_loss: out.final_loss(),
+                        mean_present,
+                        skipped_rounds: out.skipped_rounds,
+                        sim_time_s: out.sim_time.total(),
+                        comm_rounds: out.comm.rounds,
+                        comm_bytes: out.comm.bytes,
+                    });
+                }
+            }
+        }
+    });
+
+    let mut csv = String::from(
+        "algorithm,k,dropout,final_loss,mean_present_workers,skipped_rounds,\
+         sim_time_s,comm_rounds,comm_bytes\n",
+    );
+    for c in &cells {
+        csv.push_str(&format!(
+            "{},{},{},{:.8e},{:.4},{},{:.6e},{},{}\n",
+            c.algorithm,
+            c.k,
+            c.drop,
+            c.final_loss,
+            c.mean_present,
+            c.skipped_rounds,
+            c.sim_time_s,
+            c.comm_rounds,
+            c.comm_bytes
+        ));
+    }
+    write_report(out, &csv).expect("write report");
+
+    println!(
+        "{:<14} {:>4} {:>6} {:>12} {:>10} {:>8} {:>12}",
+        "algorithm", "k", "drop", "final_loss", "presence", "skipped", "comm_bytes"
+    );
+    for c in &cells {
+        println!(
+            "{:<14} {:>4} {:>6} {:>12.4} {:>10.2} {:>8} {:>12}",
+            c.algorithm, c.k, c.drop, c.final_loss, c.mean_present, c.skipped_rounds,
+            c.comm_bytes
+        );
+    }
+
+    // headline: at the paper's k=20 under 30% churn, VRL-SGD holds its
+    // non-iid quality edge over Local SGD while paying the same
+    // (dropout-discounted) communication
+    let pick = |name: &str, k: usize, drop: f64| {
+        cells
+            .iter()
+            .find(|c| c.algorithm == name && c.k == k && c.drop == drop)
+            .expect("cell")
+    };
+    let vrl = pick("vrl-sgd", 20, 0.3);
+    let local = pick("local-sgd", 20, 0.3);
+    let vrl_full = pick("vrl-sgd", 20, 0.0);
+    println!(
+        "\ndrop=0.3, k=20: vrl-sgd {:.4} vs local-sgd {:.4} final loss \
+         (full-participation vrl-sgd reference {:.4}); dropout saves \
+         {:.1}% of full-participation comm bytes",
+        vrl.final_loss,
+        local.final_loss,
+        vrl_full.final_loss,
+        100.0 * (1.0 - vrl.comm_bytes as f64 / vrl_full.comm_bytes.max(1) as f64)
+    );
+    benchutil::report(&timed);
+    println!("wrote {out}");
+}

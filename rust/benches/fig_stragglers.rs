@@ -38,6 +38,7 @@ fn fabric(sigma: f64) -> FabricSpec {
         topology: TopologyKind::TwoLevel,
         groups: 2,
         uplink: Some(NetworkSpec { latency_us: 500.0, bandwidth_gbps: 1.0 }),
+        ..FabricSpec::default()
     }
 }
 

@@ -124,8 +124,9 @@ fn main() {
             Cluster::new(n, &vrl_sgd::config::NetworkSpec::default(), AllReduceAlgo::Ring);
         let mut algo = VrlSgd { k: 10, warmup: false };
         let mut round = 0usize;
+        let present: Vec<usize> = (0..n).collect();
         let r = bench(&format!("vrl sync round N={n} P={p}"), 3, 20, || {
-            algo.sync(round, 10, 0.01, &mut workers, &mut cluster);
+            algo.sync(round, 10, 0.01, &mut workers, &present, &mut cluster);
             round += 1;
             std::hint::black_box(&workers);
         });

@@ -57,8 +57,11 @@ use std::path::{Path, PathBuf};
 /// Current snapshot format version. Bump on any layout change; readers
 /// reject other versions with a clear error instead of misparsing.
 /// (v2: fabric fingerprint in `meta`, `fabric` stream section, and the
-/// per-round `straggler_wait_s` column in `history`.)
-pub const SNAP_VERSION: u32 = 2;
+/// per-round `straggler_wait_s` column in `history`. v3: participation
+/// model in the fabric fingerprint, `roster` stream section, CoCoD
+/// pending-member indices in `algo`, and the per-round
+/// `present_workers` / `skipped_rounds` columns in `history`.)
+pub const SNAP_VERSION: u32 = 3;
 
 /// One worker's serialized state.
 #[derive(Debug, Clone, PartialEq)]
@@ -111,6 +114,10 @@ pub struct Snapshot {
     /// Fabric straggler-stream position at the boundary, so a resumed
     /// run replays the identical simulated timeline.
     pub fabric: crate::fabric::FleetState,
+    /// Participation-stream position and skipped-round counter at the
+    /// boundary, so a resumed run replays the identical presence
+    /// pattern — even from mid-outage.
+    pub roster: crate::fabric::RosterState,
     /// Metric history recorded so far.
     pub history: History,
 }
@@ -141,6 +148,7 @@ impl Snapshot {
             comm: state.comm,
             sim_time: state.sim_time,
             fabric: state.fabric,
+            roster: state.participation,
             history: state.history.clone(),
         }
     }
@@ -221,6 +229,17 @@ impl Snapshot {
             errs.push(
                 "snapshot fabric spec differs (simulated timeline would fork)".to_string(),
             );
+        }
+        // participation shapes the trajectory itself, so it is compared
+        // exactly (even spellings with identical presence patterns, like
+        // Full vs Bernoulli{0}, position the roster stream differently)
+        if fa.participation != fb.participation {
+            errs.push(format!(
+                "snapshot participation model '{}' != configured '{}' \
+                 (presence pattern would fork)",
+                fa.participation.name(),
+                fb.participation.name()
+            ));
         }
         if s.dense_metrics != spec.dense_metrics {
             errs.push("snapshot dense_metrics setting differs".to_string());
@@ -344,6 +363,13 @@ impl Snapshot {
         fab.put_u64(self.fabric.rounds_sampled);
         w.section("fabric", fab.into_bytes());
 
+        let mut ros = Enc::new();
+        ros.put_u64(self.roster.rng_state);
+        ros.put_u64(self.roster.rng_inc);
+        ros.put_u64(self.roster.rounds_sampled);
+        ros.put_u64(self.roster.skipped_rounds);
+        w.section("roster", ros.into_bytes());
+
         let mut h = Enc::new();
         h.put_f64(self.history.initial_loss);
         h.put_usize(self.history.sync_rows.len());
@@ -356,6 +382,8 @@ impl Snapshot {
             h.put_u64(r.comm_bytes);
             h.put_f64(r.sim_time_s);
             h.put_f64(r.straggler_wait_s);
+            h.put_usize(r.present_workers);
+            h.put_u64(r.skipped_rounds);
         }
         h.put_usize(self.history.dense_rows.len());
         for r in &self.history.dense_rows {
@@ -420,7 +448,10 @@ impl Snapshot {
                 spec.workers
             ));
         }
-        let mut worker_states = Vec::with_capacity(n);
+        // no pre-allocation from the untrusted count: a crafted snapshot
+        // declaring a huge (self-consistent) worker count must fail the
+        // first entry read, not abort in the allocator
+        let mut worker_states = Vec::new();
         for _ in 0..n {
             let params = d.f32s()?;
             let delta = d.f32s()?;
@@ -454,6 +485,15 @@ impl Snapshot {
         };
         d.finish()?;
 
+        let mut d = Dec::new(r.require("roster")?);
+        let roster = crate::fabric::RosterState {
+            rng_state: d.u64()?,
+            rng_inc: d.u64()?,
+            rounds_sampled: d.u64()?,
+            skipped_rounds: d.u64()?,
+        };
+        d.finish()?;
+
         let mut d = Dec::new(r.require("history")?);
         let mut history = History::new(d.f64()?);
         let rows = d.usize()?;
@@ -467,6 +507,8 @@ impl Snapshot {
                 comm_bytes: d.u64()?,
                 sim_time_s: d.f64()?,
                 straggler_wait_s: d.f64()?,
+                present_workers: d.usize()?,
+                skipped_rounds: d.u64()?,
             });
         }
         let dense = d.usize()?;
@@ -491,6 +533,7 @@ impl Snapshot {
             comm,
             sim_time,
             fabric,
+            roster,
             history,
         })
     }
@@ -553,6 +596,7 @@ fn put_fabric_spec(e: &mut Enc, f: &crate::fabric::FabricSpec) {
         }
         None => e.put_bool(false),
     }
+    e.put_str(&f.participation.name());
 }
 
 /// Decode the fabric fingerprint written by [`put_fabric_spec`].
@@ -586,7 +630,9 @@ fn get_fabric_spec(d: &mut Dec) -> Result<crate::fabric::FabricSpec, String> {
     } else {
         None
     };
-    Ok(FabricSpec { speeds, stragglers, topology, groups, uplink })
+    let participation = crate::fabric::ParticipationModel::parse(&d.str()?)
+        .map_err(|e| format!("snapshot participation model: {e}"))?;
+    Ok(FabricSpec { speeds, stragglers, topology, groups, uplink, participation })
 }
 
 /// File name for the snapshot resuming at `round` (zero-padded so
@@ -753,7 +799,7 @@ mod tests {
             }
         }
         let mut cluster = Cluster::new(2, &spec.network, AllReduceAlgo::Ring);
-        algo.sync(0, 3, 0.1, &mut workers, &mut cluster);
+        algo.sync(0, 3, 0.1, &mut workers, &[0, 1], &mut cluster);
         let mut history = History::new(2.25);
         history.sync_rows.push(SyncRow {
             round: 0,
@@ -764,6 +810,8 @@ mod tests {
             comm_bytes: 48,
             sim_time_s: 0.5,
             straggler_wait_s: 0.0625,
+            present_workers: 2,
+            skipped_rounds: 0,
         });
         let mut rs = RunState {
             spec: &spec,
@@ -776,6 +824,12 @@ mod tests {
                 rng_state: 0xDEAD_BEEF,
                 rng_inc: 0x1234_5679,
                 rounds_sampled: 11,
+            },
+            participation: crate::fabric::RosterState {
+                rng_state: 0xFEED_F00D,
+                rng_inc: 0x0000_0BAD,
+                rounds_sampled: 7,
+                skipped_rounds: 2,
             },
             history: &history,
             round,
@@ -863,6 +917,20 @@ mod tests {
             ..good.clone()
         };
         snap.validate(&same_effect, 3).unwrap();
+        // participation shapes the trajectory: compared exactly, even
+        // spellings whose presence pattern coincides (stream positions
+        // differ)
+        let bernoulli_zero = TrainSpec {
+            fabric: crate::fabric::FabricSpec {
+                participation: crate::fabric::ParticipationModel::Bernoulli { drop: 0.0 },
+                ..crate::fabric::FabricSpec::default()
+            },
+            ..good.clone()
+        };
+        assert!(snap
+            .validate(&bernoulli_zero, 3)
+            .unwrap_err()
+            .contains("participation"));
         // ...except threads: executors are bitwise interchangeable
         let other_exec = TrainSpec { threads: good.threads + 7, ..good };
         snap.validate(&other_exec, 3).unwrap();
@@ -881,10 +949,18 @@ mod tests {
                 latency_us: 500.0,
                 bandwidth_gbps: 1.0,
             }),
+            participation: crate::fabric::ParticipationModel::Bernoulli { drop: 0.25 },
+        };
+        snap.roster = crate::fabric::RosterState {
+            rng_state: 0xABCD_EF01,
+            rng_inc: 0x1357_9BDF,
+            rounds_sampled: 13,
+            skipped_rounds: 3,
         };
         let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
         assert_eq!(back.spec.fabric, snap.spec.fabric);
         assert_eq!(back.fabric, snap.fabric, "fleet stream position survives");
+        assert_eq!(back.roster, snap.roster, "roster stream position survives");
         assert_eq!(back, snap);
         // a non-shortest-representable straggler parameter still
         // round-trips exactly (f64 Display is shortest-round-trip)
@@ -935,6 +1011,7 @@ mod tests {
                 comm: CommStats::default(),
                 sim_time: SimTime::default(),
                 fabric: crate::fabric::FleetState::default(),
+                participation: crate::fabric::RosterState::default(),
                 history: &history,
                 round,
                 step: (round + 1) * 3,
@@ -972,6 +1049,7 @@ mod tests {
                 comm: CommStats::default(),
                 sim_time: SimTime::default(),
                 fabric: crate::fabric::FleetState::default(),
+                participation: crate::fabric::RosterState::default(),
                 history: &history,
                 round,
                 step: round + 1,

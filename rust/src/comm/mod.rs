@@ -162,8 +162,27 @@ impl Cluster {
     /// worker rows (used by S-SGD gradient averaging diagnostics).
     pub fn average_into(&mut self, rows: &[&[f32]], out: &mut [f32]) {
         assert_eq!(rows.len(), self.workers);
+        self.average_among(rows, out);
+    }
+
+    /// Allreduce-mean over a *subset* of the fleet: `rows` are the
+    /// participating workers' buffers (in worker order), and the
+    /// collective is priced for `rows.len()` nodes — absent workers pay
+    /// no communication. With every worker present this is exactly
+    /// [`Cluster::average_into`] (same mean, same accounting, bit for
+    /// bit). A single participant is a free collective, mirroring the
+    /// single-worker fleet.
+    pub fn average_among(&mut self, rows: &[&[f32]], out: &mut [f32]) {
+        debug_assert!(!rows.is_empty() && rows.len() <= self.workers);
         crate::tensor::mean_rows(out, rows);
-        self.charge(out.len());
+        self.charge_among(rows.len(), out.len());
+    }
+
+    /// Charge one allreduce of `dim` f32 elements among `participants`
+    /// nodes without moving data (the partial-participation analogue of
+    /// [`Cluster::charge_allreduce`]).
+    pub fn charge_allreduce_among(&mut self, participants: usize, dim: usize) {
+        self.charge_among(participants, dim);
     }
 
     /// Broadcast `src` to all rows — one round of the cost model's
@@ -208,9 +227,18 @@ impl Cluster {
         self.charge(dim);
     }
 
-    /// Charge one allreduce of `dim` f32 elements.
+    /// Charge one allreduce of `dim` f32 elements over the whole fleet.
     fn charge(&mut self, dim: usize) {
-        let cost = self.algo.cost_with(self.workers, dim * 4, &self.net, &self.uplink);
+        self.charge_among(self.workers, dim);
+    }
+
+    /// Charge one allreduce of `dim` f32 elements among `m` nodes
+    /// (`cost_with(1, ..)` is the free collective, so a lone participant
+    /// still counts a round but moves nothing — same as the
+    /// single-worker fleet).
+    fn charge_among(&mut self, m: usize, dim: usize) {
+        debug_assert!(m >= 1 && m <= self.workers);
+        let cost = self.algo.cost_with(m, dim * 4, &self.net, &self.uplink);
         self.stats.rounds += 1;
         self.stats.messages += cost.messages;
         self.stats.bytes += cost.bytes;
@@ -318,6 +346,43 @@ mod tests {
         cl.reset_stats();
         assert_eq!(cl.stats(), CommStats::default());
         assert!(b2 > 0);
+    }
+
+    #[test]
+    fn average_among_prices_the_present_subset() {
+        // 2-of-4 participation must cost exactly what a 2-worker fleet's
+        // collective costs — and the mean covers only the present rows
+        let mut partial = Cluster::new(4, &spec(), AllReduceAlgo::Ring);
+        let rows: Vec<Vec<f32>> = vec![vec![1.0f32; 8], vec![3.0f32; 8]];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut out = vec![0.0f32; 8];
+        partial.average_among(&refs, &mut out);
+        assert!(out.iter().all(|&v| v == 2.0));
+        let mut two = Cluster::new(2, &spec(), AllReduceAlgo::Ring);
+        let mut out2 = vec![0.0f32; 8];
+        two.average_into(&refs, &mut out2);
+        assert_eq!(partial.stats(), two.stats());
+
+        // full participation is bitwise the old average_into accounting
+        let mut a = Cluster::new(2, &spec(), AllReduceAlgo::Ring);
+        let mut b = Cluster::new(2, &spec(), AllReduceAlgo::Ring);
+        a.average_into(&refs, &mut out);
+        b.average_among(&refs, &mut out2);
+        assert_eq!(a.stats(), b.stats());
+        assert_eq!(out, out2);
+
+        // a lone participant is a free collective (like a 1-worker fleet)
+        let mut solo = Cluster::new(4, &spec(), AllReduceAlgo::Ring);
+        solo.average_among(&refs[..1], &mut out);
+        assert_eq!(out, rows[0]);
+        assert_eq!(solo.stats().rounds, 1);
+        assert_eq!(solo.stats().bytes, 0);
+        assert_eq!(solo.stats().messages, 0);
+
+        // charge_allreduce_among mirrors the same pricing
+        let mut c = Cluster::new(4, &spec(), AllReduceAlgo::Ring);
+        c.charge_allreduce_among(2, 8);
+        assert_eq!(c.stats(), two.stats());
     }
 
     #[test]

@@ -611,6 +611,71 @@ mod tests {
     }
 
     #[test]
+    fn validate_rejects_bad_participation() {
+        use crate::fabric::{FabricSpec, ParticipationModel, TopologyKind};
+        let with = |participation| TrainSpec {
+            workers: 4,
+            fabric: FabricSpec { participation, ..FabricSpec::default() },
+            ..TrainSpec::default()
+        };
+        // dropout probability must live in [0, 1): 1.0 would make every
+        // round empty, negatives and NaN are nonsense
+        for bad in [1.0f64, 1.5, -0.1, f64::NAN] {
+            let s = with(ParticipationModel::Bernoulli { drop: bad });
+            let err = s.validate().unwrap_err();
+            assert!(err.contains("[0, 1)"), "drop {bad}: {err}");
+        }
+        with(ParticipationModel::Bernoulli { drop: 0.0 }).validate().unwrap();
+        with(ParticipationModel::Bernoulli { drop: 0.999 }).validate().unwrap();
+        // round-robin count bounded by the worker count, and nonzero
+        assert!(with(ParticipationModel::RoundRobin { count: 0 }).validate().is_err());
+        assert!(with(ParticipationModel::RoundRobin { count: 5 }).validate().is_err());
+        with(ParticipationModel::RoundRobin { count: 4 }).validate().unwrap();
+        // group outages need the two-level topology they correlate over
+        assert!(with(ParticipationModel::GroupOutage { drop: 0.5 }).validate().is_err());
+        let tiered = TrainSpec {
+            workers: 4,
+            fabric: FabricSpec {
+                participation: ParticipationModel::GroupOutage { drop: 0.5 },
+                topology: TopologyKind::TwoLevel,
+                groups: 2,
+                ..FabricSpec::default()
+            },
+            ..TrainSpec::default()
+        };
+        tiered.validate().unwrap();
+        // ...and the two-level group bounds still apply underneath
+        let s = TrainSpec { workers: 4, ..tiered.clone() };
+        s.validate().unwrap();
+        let bad_groups = TrainSpec {
+            fabric: FabricSpec { groups: 9, ..tiered.fabric.clone() },
+            ..tiered
+        };
+        assert!(bad_groups.validate().unwrap_err().contains("groups"));
+        // a TOML config carrying a bad model is rejected at load time
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[fabric]\n\
+             dropout = \"bernoulli:1.0\"\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[spec]\nworkers = 4\n\
+             [fabric]\nsampler = \"round-robin:9\"\n"
+        )
+        .is_err());
+        // and a valid one round-trips into the spec
+        let cfg = RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[spec]\nworkers = 4\n\
+             [fabric]\ndropout = \"bernoulli:0.25\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.spec.fabric.participation,
+            ParticipationModel::Bernoulli { drop: 0.25 }
+        );
+    }
+
+    #[test]
     fn fabric_table_parses_into_spec() {
         use crate::fabric::{SpeedProfile, StragglerModel, TopologyKind};
         let cfg = RunConfig::from_toml(

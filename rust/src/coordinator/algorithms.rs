@@ -2,13 +2,27 @@
 //! EASGD — each as an implementation of [`Algorithm`].
 //!
 //! The generic training loop (in [`crate::trainer`]) runs, for each round
-//! `r`, `period(r, base)` lockstep local iterations on every worker —
-//! `base` comes from the session's
+//! `r`, `period(r, base)` lockstep local iterations on every
+//! *participating* worker — `base` comes from the session's
 //! [`crate::trainer::PeriodSchedule`] — (each iteration is
 //! `x_i ← x_i − γ(∇f_i(x_i;ξ) − Δ_i)`, with `Δ_i ≡ 0` unless the
-//! algorithm populates it), then calls [`Algorithm::sync`]. Everything
-//! that distinguishes the methods lives in `period`, `sync` and the
-//! per-worker [`StepCorrector`] an algorithm may attach.
+//! algorithm populates it), then calls [`Algorithm::sync`] with the
+//! round's present-worker set. Everything that distinguishes the methods
+//! lives in `period`, `sync` and the per-worker [`StepCorrector`] an
+//! algorithm may attach.
+//!
+//! **Partial participation.** Under a
+//! [`crate::fabric::ParticipationModel`] a round's absent workers take
+//! no steps, pay no communication, and are excluded from averaging.
+//! Every `sync` implementation must stay coherent for an arbitrary
+//! present set: averages run over the present workers only, and
+//! per-worker correction state is *deferred* — an absent worker's Δ_i /
+//! momentum buffer / local model are left untouched until it returns.
+//! For VRL-SGD this is exactly what keeps the paper's Σ_i Δ_i = 0
+//! invariant: the present-set Δ increments `(x̂_S − x_i)/(pγ)` sum to
+//! zero over S by construction, and absent Δ_j are frozen
+//! (`rust/tests/participation.rs` proves it after every sync under
+//! Bernoulli and group-outage dropout).
 //!
 //! The hot loop is data-parallel by construction: all per-step mutable
 //! state is per-worker (`WorkerState`, including its corrector), so the
@@ -86,17 +100,33 @@ pub trait Algorithm: Send {
     /// round 0 (the warm-up step).
     fn period(&self, round: usize, base: usize) -> usize;
 
-    /// Synchronize the workers after `elapsed` local steps were taken in
-    /// this round. `lr` is the learning rate γ used during the round
-    /// (the Δ update of eq. 4 divides by `elapsed · γ`).
+    /// Synchronize the round's participating workers after `elapsed`
+    /// local steps were taken by each of them. `lr` is the learning rate
+    /// γ used during the round (the Δ update of eq. 4 divides by
+    /// `elapsed · γ`). `present` lists the participating worker indices
+    /// in ascending order — every index on a full round; never empty
+    /// (the session driver skips empty rounds, see its empty-round
+    /// policy). Absent workers must be left untouched: excluded from
+    /// averages, charged no communication, their correction state
+    /// deferred until they return.
     fn sync(
         &mut self,
         round: usize,
         elapsed: usize,
         lr: f32,
         workers: &mut [WorkerState],
+        present: &[usize],
         cluster: &mut Cluster,
     );
+
+    /// Called once per *absent* worker at each round's sync barrier,
+    /// just before [`Algorithm::sync`]. Default no-op: the built-in
+    /// algorithms cooperate with dropout by deferral (the absent
+    /// worker's params / Δ / momentum are simply frozen), which needs no
+    /// action here. Override when an algorithm's invariant requires
+    /// explicit bookkeeping on absence (e.g. a decay on stale
+    /// corrections).
+    fn on_absent(&mut self, _round: usize, _worker: &mut WorkerState) {}
 
     /// Fresh per-worker post-step corrector, or `None` when the
     /// algorithm has no per-step hook. Called once per worker at session
@@ -152,7 +182,9 @@ pub fn make_algorithm(spec: &TrainSpec, params0: &[f32]) -> Box<dyn Algorithm> {
         AlgorithmKind::MomentumLocalSgd => {
             Box::new(MomentumLocalSgd::new(spec.period, spec.momentum))
         }
-        AlgorithmKind::CocodSgd => Box::new(CocodSgd::new(spec.period)),
+        AlgorithmKind::CocodSgd => {
+            Box::new(CocodSgd::new(spec.period).with_workers(spec.workers))
+        }
     }
 }
 
@@ -185,9 +217,10 @@ impl Algorithm for SSgd {
         _elapsed: usize,
         _lr: f32,
         workers: &mut [WorkerState],
+        present: &[usize],
         cluster: &mut Cluster,
     ) {
-        average_params(workers, cluster, &mut self.mean);
+        average_params(workers, present, cluster, &mut self.mean);
     }
 }
 
@@ -220,9 +253,10 @@ impl Algorithm for LocalSgd {
         _elapsed: usize,
         _lr: f32,
         workers: &mut [WorkerState],
+        present: &[usize],
         cluster: &mut Cluster,
     ) {
-        average_params(workers, cluster, &mut self.mean);
+        average_params(workers, present, cluster, &mut self.mean);
     }
 }
 
@@ -260,20 +294,25 @@ impl Algorithm for VrlSgd {
         elapsed: usize,
         lr: f32,
         workers: &mut [WorkerState],
+        present: &[usize],
         cluster: &mut Cluster,
     ) {
-        // x̂ = (1/N) Σ x_i — this is the only communicated quantity; the
-        // Δ update below is local arithmetic on (x̂ − x_i).
+        // x̂_S = (1/|S|) Σ_{i∈S} x_i — this is the only communicated
+        // quantity; the Δ update below is local arithmetic on (x̂ − x_i).
         let dim = workers[0].params.len();
-        let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
+        let rows: Vec<&[f32]> = present.iter().map(|&i| workers[i].params.as_slice()).collect();
         let mut mean = vec![0.0f32; dim];
-        cluster.average_into(&rows, &mut mean);
+        cluster.average_among(&rows, &mut mean);
 
-        // Δ_i ← Δ_i + (x̂ − x_i) / (elapsed · γ)   (eq. 4)
-        // x_i ← x̂                                  (Algorithm 1 line 6)
+        // For each present worker (absent Δ_j / x_j are deferred):
+        // Δ_i ← Δ_i + (x̂_S − x_i) / (elapsed · γ)   (eq. 4 over S)
+        // x_i ← x̂_S                                  (Algorithm 1 line 6)
+        // The increments sum to (|S|·x̂_S − Σ_S x_i)/(elapsed·γ) = 0, so
+        // Σ_i Δ_i = 0 survives every dropout pattern.
         // Fused single pass per worker (no bounds checks) — see §Perf log.
         let inv = 1.0 / (elapsed as f32 * lr);
-        for w in workers.iter_mut() {
+        for &i in present {
+            let w = &mut workers[i];
             for ((d, p), &m) in w.delta.iter_mut().zip(w.params.iter_mut()).zip(mean.iter()) {
                 *d += (m - *p) * inv;
                 *p = m;
@@ -311,12 +350,17 @@ impl Algorithm for Easgd {
         _elapsed: usize,
         _lr: f32,
         workers: &mut [WorkerState],
+        present: &[usize],
         cluster: &mut Cluster,
     ) {
+        // Only the present workers exchange with the center, so the
+        // center's pull `ρ Σ_{i∈S} (x_i − x̃)` is naturally weighted by
+        // presence — a round with few participants moves x̃ less.
         let dim = self.center.len();
         let mut center_accum = vec![0.0f32; dim];
         let rho = self.rho;
-        for w in workers.iter_mut() {
+        for &i in present {
+            let w = &mut workers[i];
             for ((p, &c), a) in
                 w.params.iter_mut().zip(self.center.iter()).zip(center_accum.iter_mut())
             {
@@ -326,10 +370,10 @@ impl Algorithm for Easgd {
             }
         }
         crate::tensor::axpy(&mut self.center, self.rho, &center_accum);
-        // Same wire traffic as one model allreduce (paper §6.1 Metrics:
-        // "VRL-SGD and EASGD would have the same communication complexity
-        // under the same period k").
-        cluster.charge_allreduce(dim);
+        // Same wire traffic as one model allreduce among the present
+        // workers (paper §6.1 Metrics: "VRL-SGD and EASGD would have the
+        // same communication complexity under the same period k").
+        cluster.charge_allreduce_among(present.len(), dim);
     }
 
     fn save_state(&self) -> Vec<u8> {
@@ -437,30 +481,43 @@ impl Algorithm for MomentumLocalSgd {
         _elapsed: usize,
         _lr: f32,
         workers: &mut [WorkerState],
+        present: &[usize],
         cluster: &mut Cluster,
     ) {
-        let n = workers.len();
+        let m_count = present.len();
         let dim = workers[0].params.len();
-        // Model average — first half of the round's collective.
+        // Model average over the present workers — first half of the
+        // round's collective. Absent workers keep their local model and
+        // momentum (deferred until they return).
         self.mean.resize(dim, 0.0);
         {
-            let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
+            let rows: Vec<&[f32]> =
+                present.iter().map(|&i| workers[i].params.as_slice()).collect();
             crate::tensor::mean_rows(&mut self.mean, &rows);
         }
-        for w in workers.iter_mut() {
-            w.params.copy_from_slice(&self.mean);
+        for &i in present {
+            workers[i].params.copy_from_slice(&self.mean);
         }
         // Momentum-buffer average — second half. Both rides share one
         // sync barrier, so we charge a single fused allreduce of
-        // [params ‖ momentum]: 2P f32 on the wire (the accounting the
-        // old code promised but never performed — comm_bytes used to
-        // underreport this algorithm by ~2×).
-        let mut states: Vec<&mut Vec<f32>> = workers
-            .iter_mut()
-            .filter_map(|w| w.corrector.as_mut().and_then(|c| c.shared_state()))
-            .filter(|m| !m.is_empty())
-            .collect();
-        if states.len() == n {
+        // [params ‖ momentum]: 2P f32 on the wire among the present
+        // workers (the accounting the old code promised but never
+        // performed — comm_bytes used to underreport this algorithm by
+        // ~2×).
+        let mut pi = 0usize;
+        let mut states: Vec<&mut Vec<f32>> = Vec::with_capacity(m_count);
+        for (i, w) in workers.iter_mut().enumerate() {
+            if pi >= present.len() || present[pi] != i {
+                continue;
+            }
+            pi += 1;
+            if let Some(s) = w.corrector.as_mut().and_then(|c| c.shared_state()) {
+                if !s.is_empty() {
+                    states.push(s);
+                }
+            }
+        }
+        if states.len() == m_count {
             self.mom_mean.resize(dim, 0.0);
             {
                 let rows: Vec<&[f32]> = states.iter().map(|m| m.as_slice()).collect();
@@ -469,11 +526,11 @@ impl Algorithm for MomentumLocalSgd {
             for m in states.iter_mut() {
                 m.copy_from_slice(&self.mom_mean);
             }
-            cluster.charge_allreduce(2 * dim);
+            cluster.charge_allreduce_among(m_count, 2 * dim);
         } else {
             // No momentum state attached (e.g. driven outside the
             // session before any step): only the model moved.
-            cluster.charge_allreduce(dim);
+            cluster.charge_allreduce_among(m_count, dim);
         }
     }
 }
@@ -488,19 +545,40 @@ impl Algorithm for MomentumLocalSgd {
 pub struct CocodSgd {
     /// Communication period k.
     pub k: usize,
-    /// Pending (mean snapshot, per-worker snapshots) from the last sync.
-    pending: Option<(Vec<f32>, Vec<Vec<f32>>)>,
+    /// Fleet size, when known ([`CocodSgd::with_workers`]) — bounds the
+    /// pending-member indices a checkpoint restore will accept.
+    workers: Option<usize>,
+    /// Pending (mean snapshot, participating worker indices, their
+    /// snapshots) from the last sync. Under partial participation only
+    /// the round's present workers snapshot and join the overlapped
+    /// allreduce; its result is applied to exactly those members at the
+    /// next barrier (they received it during the overlap, before any
+    /// later outage), so absent-at-snapshot workers never get a
+    /// correction they took no part in.
+    pending: Option<(Vec<f32>, Vec<usize>, Vec<Vec<f32>>)>,
 }
 
 impl CocodSgd {
     /// New instance.
     pub fn new(k: usize) -> Self {
-        CocodSgd { k, pending: None }
+        CocodSgd { k, workers: None, pending: None }
+    }
+
+    /// Declare the fleet size so `restore_state` can reject
+    /// out-of-range pending-member indices with a clean error instead
+    /// of letting a corrupted (but checksum-valid) snapshot panic or
+    /// silently drop a correction at the next sync. `make_algorithm`
+    /// always sets this; hand-built instances may skip it.
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = Some(n);
+        self
     }
 
     fn apply_pending(&mut self, workers: &mut [WorkerState]) {
-        if let Some((mean, snaps)) = self.pending.take() {
-            for (w, snap) in workers.iter_mut().zip(snaps.iter()) {
+        if let Some((mean, members, snaps)) = self.pending.take() {
+            for (&i, snap) in members.iter().zip(snaps.iter()) {
+                debug_assert!(i < workers.len(), "pending member {i} out of range");
+                let Some(w) = workers.get_mut(i) else { continue };
                 for ((p, &m), &s) in w.params.iter_mut().zip(mean.iter()).zip(snap.iter()) {
                     *p += m - s;
                 }
@@ -524,17 +602,21 @@ impl Algorithm for CocodSgd {
         _elapsed: usize,
         _lr: f32,
         workers: &mut [WorkerState],
+        present: &[usize],
         cluster: &mut Cluster,
     ) {
         // apply the correction from the allreduce launched last period
+        // (to that round's members — see the `pending` field docs)
         self.apply_pending(workers);
-        // snapshot + launch the (simulated) overlapped allreduce
+        // snapshot the present workers + launch the (simulated)
+        // overlapped allreduce among them
         let dim = workers[0].params.len();
-        let snaps: Vec<Vec<f32>> = workers.iter().map(|w| w.params.clone()).collect();
+        let snaps: Vec<Vec<f32>> =
+            present.iter().map(|&i| workers[i].params.clone()).collect();
         let refs: Vec<&[f32]> = snaps.iter().map(|s| s.as_slice()).collect();
         let mut mean = vec![0.0f32; dim];
-        cluster.average_into(&refs, &mut mean);
-        self.pending = Some((mean, snaps));
+        cluster.average_among(&refs, &mut mean);
+        self.pending = Some((mean, present.to_vec(), snaps));
     }
 
     fn finalize(&mut self, workers: &mut [WorkerState], _cluster: &mut Cluster) {
@@ -545,17 +627,18 @@ impl Algorithm for CocodSgd {
     }
 
     fn save_state(&self) -> Vec<u8> {
-        // The pending (mean, snapshots) is genuinely in flight at a round
-        // boundary: dropping it on resume would skip one correction and
-        // silently fork the trajectory.
+        // The pending (mean, members, snapshots) is genuinely in flight
+        // at a round boundary: dropping it on resume would skip one
+        // correction and silently fork the trajectory.
         let mut e = Enc::new();
         match &self.pending {
             None => e.put_bool(false),
-            Some((mean, snaps)) => {
+            Some((mean, members, snaps)) => {
                 e.put_bool(true);
                 e.put_f32s(mean);
                 e.put_usize(snaps.len());
-                for s in snaps {
+                for (&i, s) in members.iter().zip(snaps.iter()) {
+                    e.put_usize(i);
                     e.put_f32s(s);
                 }
             }
@@ -569,8 +652,27 @@ impl Algorithm for CocodSgd {
         self.pending = if has {
             let mean = d.f32s().map_err(|e| format!("cocod mean: {e}"))?;
             let n = d.usize().map_err(|e| format!("cocod snapshot count: {e}"))?;
-            let mut snaps = Vec::with_capacity(n);
+            // no pre-allocation from the untrusted count: a corrupted
+            // payload must fail at the first entry read, not abort in
+            // the allocator
+            let mut members = Vec::new();
+            let mut snaps = Vec::new();
             for i in 0..n {
+                let idx = d.usize().map_err(|e| format!("cocod member {i}: {e}"))?;
+                if let Some(&prev) = members.last() {
+                    if idx <= prev {
+                        return Err(format!(
+                            "cocod members must be strictly increasing ({prev} then {idx})"
+                        ));
+                    }
+                }
+                if let Some(workers) = self.workers {
+                    if idx >= workers {
+                        return Err(format!(
+                            "cocod member {idx} out of range for {workers} workers"
+                        ));
+                    }
+                }
                 let s = d.f32s().map_err(|e| format!("cocod snapshot {i}: {e}"))?;
                 if s.len() != mean.len() {
                     return Err(format!(
@@ -579,9 +681,10 @@ impl Algorithm for CocodSgd {
                         mean.len()
                     ));
                 }
+                members.push(idx);
                 snaps.push(s);
             }
-            Some((mean, snaps))
+            Some((mean, members, snaps))
         } else {
             None
         };
@@ -590,18 +693,24 @@ impl Algorithm for CocodSgd {
     }
 }
 
-/// Shared helper: replace every worker's model with the exact mean,
-/// reducing into the caller's reusable `mean` buffer (no per-sync row
-/// clones — see §Perf log).
-fn average_params(workers: &mut [WorkerState], cluster: &mut Cluster, mean: &mut Vec<f32>) {
+/// Shared helper: replace every *present* worker's model with the exact
+/// mean over the present set, reducing into the caller's reusable `mean`
+/// buffer (no per-sync row clones — see §Perf log). Absent workers keep
+/// their local model.
+fn average_params(
+    workers: &mut [WorkerState],
+    present: &[usize],
+    cluster: &mut Cluster,
+    mean: &mut Vec<f32>,
+) {
     let dim = workers[0].params.len();
     mean.resize(dim, 0.0);
     {
-        let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
-        cluster.average_into(&rows, mean);
+        let rows: Vec<&[f32]> = present.iter().map(|&i| workers[i].params.as_slice()).collect();
+        cluster.average_among(&rows, mean);
     }
-    for w in workers.iter_mut() {
-        w.params.copy_from_slice(mean);
+    for &i in present {
+        workers[i].params.copy_from_slice(mean);
     }
 }
 
@@ -613,6 +722,11 @@ mod tests {
 
     fn cluster(n: usize) -> Cluster {
         Cluster::new(n, &NetworkSpec::default(), AllReduceAlgo::Ring)
+    }
+
+    /// The full present set `0..n` (most drills sync everyone).
+    fn all(n: usize) -> Vec<usize> {
+        (0..n).collect()
     }
 
     fn states(rows: &[Vec<f32>]) -> Vec<WorkerState> {
@@ -631,7 +745,7 @@ mod tests {
     fn local_sgd_sync_averages() {
         let mut ws = states(&[vec![0.0, 2.0], vec![4.0, 6.0]]);
         let mut cl = cluster(2);
-        LocalSgd::new(5).sync(0, 5, 0.1, &mut ws, &mut cl);
+        LocalSgd::new(5).sync(0, 5, 0.1, &mut ws, &all(2), &mut cl);
         assert_eq!(ws[0].params, vec![2.0, 4.0]);
         assert_eq!(ws[1].params, vec![2.0, 4.0]);
         // delta untouched
@@ -643,7 +757,7 @@ mod tests {
         let mut ws = states(&[vec![1.0], vec![3.0]]);
         let mut cl = cluster(2);
         let mut algo = VrlSgd { k: 4, warmup: false };
-        algo.sync(0, 4, 0.5, &mut ws, &mut cl);
+        algo.sync(0, 4, 0.5, &mut ws, &all(2), &mut cl);
         // mean = 2; Δ_0 += (2-1)/(4*0.5) = 0.5 ; Δ_1 += (2-3)/2 = -0.5
         assert_eq!(ws[0].delta, vec![0.5]);
         assert_eq!(ws[1].delta, vec![-0.5]);
@@ -662,7 +776,7 @@ mod tests {
                 w.params[0] += (i as f32 + 1.0) * 0.3;
                 w.params[1] -= (i as f32) * 0.1;
             }
-            algo.sync(r, 3, 0.2, &mut ws, &mut cl);
+            algo.sync(r, 3, 0.2, &mut ws, &all(3), &mut cl);
             for j in 0..2 {
                 let sum: f32 = ws.iter().map(|w| w.delta[j]).sum();
                 assert!(sum.abs() < 1e-5, "Σ Δ[{j}] = {sum} after round {r}");
@@ -693,7 +807,7 @@ mod tests {
         let mut ws = states(&[vec![10.0], vec![-10.0]]);
         let mut cl = cluster(2);
         let mut algo = Easgd { k: 5, rho: 0.25, center: vec![0.0] };
-        algo.sync(0, 5, 0.1, &mut ws, &mut cl);
+        algo.sync(0, 5, 0.1, &mut ws, &all(2), &mut cl);
         // worker 0: 10 - 0.25*10 = 7.5 ; worker 1: -7.5
         assert_eq!(ws[0].params, vec![7.5]);
         assert_eq!(ws[1].params, vec![-7.5]);
@@ -702,7 +816,7 @@ mod tests {
         // asymmetric case moves the center
         let mut ws2 = states(&[vec![8.0], vec![0.0]]);
         algo.center = vec![0.0];
-        algo.sync(1, 5, 0.1, &mut ws2, &mut cl);
+        algo.sync(1, 5, 0.1, &mut ws2, &all(2), &mut cl);
         assert_eq!(algo.center, vec![2.0]);
     }
 
@@ -742,7 +856,7 @@ mod tests {
         seed_momentum(&mut ws[0], &algo, &[1.0, 3.0]);
         seed_momentum(&mut ws[1], &algo, &[3.0, 1.0]);
         let mut cl = cluster(2);
-        algo.sync(0, 4, 0.1, &mut ws, &mut cl);
+        algo.sync(0, 4, 0.1, &mut ws, &all(2), &mut cl);
         assert_eq!(ws[0].params, vec![1.0, 1.0]);
         let m0 = ws[0].corrector.as_mut().unwrap().shared_state().unwrap().clone();
         let m1 = ws[1].corrector.as_mut().unwrap().shared_state().unwrap().clone();
@@ -753,7 +867,7 @@ mod tests {
         let mut lref = LocalSgd::new(4);
         let mut ws_ref = states(&[vec![0.0; 4], vec![2.0; 4]]);
         let mut cl_ref = cluster(2);
-        lref.sync(0, 4, 0.1, &mut ws_ref, &mut cl_ref);
+        lref.sync(0, 4, 0.1, &mut ws_ref, &all(2), &mut cl_ref);
         assert_eq!(cl.stats().rounds, 1);
         assert_eq!(cl.stats().bytes, cl_ref.stats().bytes);
     }
@@ -764,14 +878,14 @@ mod tests {
         let mut ws = states(&[vec![0.0], vec![4.0]]);
         let mut cl = cluster(2);
         // round 0: snapshot {0, 4}, mean 2; no correction yet
-        algo.sync(0, 3, 0.1, &mut ws, &mut cl);
+        algo.sync(0, 3, 0.1, &mut ws, &all(2), &mut cl);
         assert_eq!(ws[0].params, vec![0.0]);
         assert_eq!(ws[1].params, vec![4.0]);
         // workers drift during the next period
         ws[0].params[0] += 1.0; // 1
         ws[1].params[0] += 1.0; // 5
         // round 1: correction x_i += mean_snap − snap_i = ±2
-        algo.sync(1, 3, 0.1, &mut ws, &mut cl);
+        algo.sync(1, 3, 0.1, &mut ws, &all(2), &mut cl);
         assert_eq!(ws[0].params, vec![3.0]);
         assert_eq!(ws[1].params, vec![3.0]);
     }
@@ -781,7 +895,7 @@ mod tests {
         let mut algo = CocodSgd::new(3);
         let mut ws = states(&[vec![0.0], vec![4.0]]);
         let mut cl = cluster(2);
-        algo.sync(0, 3, 0.1, &mut ws, &mut cl);
+        algo.sync(0, 3, 0.1, &mut ws, &all(2), &mut cl);
         let rounds_after_sync = cl.stats().rounds;
         // the run ends here: the flush must apply the in-flight mean
         algo.finalize(&mut ws, &mut cl);
@@ -835,7 +949,7 @@ mod tests {
         let mut a = CocodSgd::new(3);
         let mut ws = states(&[vec![0.0, 1.0], vec![4.0, 5.0]]);
         let mut cl = cluster(2);
-        a.sync(0, 3, 0.1, &mut ws, &mut cl); // leaves a pending correction
+        a.sync(0, 3, 0.1, &mut ws, &all(2), &mut cl); // leaves a pending correction
         let bytes = a.save_state();
         let mut b = CocodSgd::new(3);
         b.restore_state(&bytes).unwrap();
@@ -875,9 +989,220 @@ mod tests {
                 }
             }
             let mut cl = cluster(2);
-            algo.sync(0, 3, 0.1, &mut ws, &mut cl);
+            algo.sync(0, 3, 0.1, &mut ws, &all(2), &mut cl);
             assert_eq!(cl.stats().rounds, 1, "algo {}", algo.name());
             assert!(cl.stats().bytes > 0, "algo {}", algo.name());
+        }
+    }
+
+    #[test]
+    fn partial_sync_averages_present_only() {
+        // workers 0 and 2 participate; worker 1 keeps its local model
+        let mut ws = states(&[vec![0.0, 2.0], vec![100.0, 100.0], vec![4.0, 6.0]]);
+        let mut cl = cluster(3);
+        LocalSgd::new(5).sync(0, 5, 0.1, &mut ws, &[0, 2], &mut cl);
+        assert_eq!(ws[0].params, vec![2.0, 4.0]);
+        assert_eq!(ws[2].params, vec![2.0, 4.0]);
+        assert_eq!(ws[1].params, vec![100.0, 100.0], "absent worker untouched");
+    }
+
+    #[test]
+    fn vrl_partial_sync_preserves_zero_sum_and_defers_absent_delta() {
+        let mut ws = states(&[vec![1.0], vec![9.0], vec![3.0]]);
+        // give the absent worker a live correction to freeze
+        ws[1].delta = vec![0.75];
+        ws[0].delta = vec![-0.75];
+        let mut cl = cluster(3);
+        let mut algo = VrlSgd { k: 4, warmup: false };
+        algo.sync(0, 4, 0.5, &mut ws, &[0, 2], &mut cl);
+        // mean over {1, 3} = 2; increments ±0.5 over the present pair
+        assert_eq!(ws[0].params, vec![2.0]);
+        assert_eq!(ws[2].params, vec![2.0]);
+        assert_eq!(ws[1].params, vec![9.0], "absent model deferred");
+        assert_eq!(ws[1].delta, vec![0.75], "absent Δ deferred");
+        assert_eq!(ws[0].delta, vec![-0.75 + 0.5]);
+        assert_eq!(ws[2].delta, vec![-0.5]);
+        let sum: f32 = ws.iter().map(|w| w.delta[0]).sum();
+        assert!(sum.abs() < 1e-6, "Σ Δ = {sum}");
+    }
+
+    #[test]
+    fn vrl_zero_sum_survives_random_dropout_patterns() {
+        let mut ws = states(&[vec![1.0, -2.0], vec![3.0, 0.5], vec![-1.0, 4.0], vec![0.5, 0.5]]);
+        let mut cl = cluster(4);
+        let mut algo = VrlSgd { k: 3, warmup: false };
+        let patterns: [&[usize]; 6] =
+            [&[0, 1, 2, 3], &[0, 2], &[1, 3], &[2], &[0, 1, 3], &[3]];
+        for (r, present) in patterns.iter().enumerate() {
+            for (i, w) in ws.iter_mut().enumerate() {
+                w.params[0] += (i as f32 + 1.0) * 0.3;
+                w.params[1] -= (i as f32) * 0.1;
+            }
+            algo.sync(r, 3, 0.2, &mut ws, present, &mut cl);
+            for j in 0..2 {
+                let sum: f32 = ws.iter().map(|w| w.delta[j]).sum();
+                assert!(sum.abs() < 1e-5, "Σ Δ[{j}] = {sum} after pattern {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn easgd_center_update_weights_by_presence() {
+        let mut ws = states(&[vec![8.0], vec![-8.0]]);
+        let mut cl = cluster(2);
+        let mut algo = Easgd { k: 5, rho: 0.25, center: vec![0.0] };
+        // only worker 0 present: the center is pulled by it alone
+        algo.sync(0, 5, 0.1, &mut ws, &[0], &mut cl);
+        assert_eq!(ws[0].params, vec![6.0]); // 8 - 0.25*8
+        assert_eq!(ws[1].params, vec![-8.0], "absent worker untouched");
+        assert_eq!(algo.center, vec![2.0]); // 0 + 0.25*8
+    }
+
+    #[test]
+    fn momentum_partial_sync_defers_absent_buffers() {
+        let mut algo = MomentumLocalSgd::new(4, 0.9);
+        let mut ws = states(&[vec![0.0, 0.0], vec![2.0, 2.0], vec![4.0, 4.0]]);
+        seed_momentum(&mut ws[0], &algo, &[1.0, 3.0]);
+        seed_momentum(&mut ws[1], &algo, &[9.0, 9.0]);
+        seed_momentum(&mut ws[2], &algo, &[3.0, 1.0]);
+        let mut cl = cluster(3);
+        algo.sync(0, 4, 0.1, &mut ws, &[0, 2], &mut cl);
+        assert_eq!(ws[0].params, vec![2.0, 2.0]);
+        assert_eq!(ws[2].params, vec![2.0, 2.0]);
+        assert_eq!(ws[1].params, vec![2.0, 2.0], "coincidentally equal but untouched");
+        let m0 = ws[0].corrector.as_mut().unwrap().shared_state().unwrap().clone();
+        let m1 = ws[1].corrector.as_mut().unwrap().shared_state().unwrap().clone();
+        let m2 = ws[2].corrector.as_mut().unwrap().shared_state().unwrap().clone();
+        assert_eq!(m0, vec![2.0, 2.0]);
+        assert_eq!(m2, vec![2.0, 2.0]);
+        assert_eq!(m1, vec![9.0, 9.0], "absent momentum deferred");
+        // the fused collective is priced for the present pair, not the fleet
+        let mut two = cluster(2);
+        two.charge_allreduce_among(2, 4);
+        assert_eq!(cl.stats().bytes, two.stats().bytes);
+    }
+
+    #[test]
+    fn cocod_partial_pending_applies_to_its_members() {
+        let mut algo = CocodSgd::new(3);
+        let mut ws = states(&[vec![0.0], vec![4.0], vec![50.0]]);
+        let mut cl = cluster(3);
+        // round 0: workers 0 and 1 snapshot {0, 4}; worker 2 absent
+        algo.sync(0, 3, 0.1, &mut ws, &[0, 1], &mut cl);
+        // round 1: everyone present; the pending correction lands only on
+        // its members (0 and 1): ±2 toward the snapshot mean
+        algo.sync(1, 3, 0.1, &mut ws, &[0, 1, 2], &mut cl);
+        assert_eq!(ws[0].params, vec![2.0]);
+        assert_eq!(ws[1].params, vec![2.0]);
+        assert_eq!(ws[2].params, vec![50.0], "non-member got no correction");
+        // the new pending covers all three; finalize flushes it
+        algo.finalize(&mut ws, &mut cl);
+        let mean = (2.0 + 2.0 + 50.0) / 3.0;
+        for w in &ws {
+            assert!((w.params[0] - mean).abs() < 1e-5, "{}", w.params[0]);
+        }
+    }
+
+    #[test]
+    fn cocod_members_round_trip_and_reject_corruption() {
+        let mut a = CocodSgd::new(3);
+        let mut ws = states(&[vec![0.0, 1.0], vec![4.0, 5.0], vec![8.0, 9.0]]);
+        let mut cl = cluster(3);
+        a.sync(0, 3, 0.1, &mut ws, &[0, 2], &mut cl);
+        let bytes = a.save_state();
+        let mut b = CocodSgd::new(3);
+        b.restore_state(&bytes).unwrap();
+        assert_eq!(b.pending, a.pending);
+        // non-increasing member lists are rejected
+        let mut e = Enc::new();
+        e.put_bool(true);
+        e.put_f32s(&[1.0]);
+        e.put_usize(2);
+        e.put_usize(1);
+        e.put_f32s(&[1.0]);
+        e.put_usize(1);
+        e.put_f32s(&[1.0]);
+        let err = CocodSgd::new(3).restore_state(&e.into_bytes()).unwrap_err();
+        assert!(err.contains("increasing"), "{err}");
+        // a huge declared count fails at the first missing entry instead
+        // of aborting in the allocator
+        let mut e = Enc::new();
+        e.put_bool(true);
+        e.put_f32s(&[1.0]);
+        e.put_usize(1 << 60);
+        let err = CocodSgd::new(3).restore_state(&e.into_bytes()).unwrap_err();
+        assert!(err.contains("member"), "{err}");
+        // a member index beyond the fleet (a checksum-valid but corrupted
+        // snapshot) is a clean restore error, not a deferred panic or a
+        // silently dropped correction at the next sync
+        let mut e = Enc::new();
+        e.put_bool(true);
+        e.put_f32s(&[1.0]);
+        e.put_usize(1);
+        e.put_usize(1000);
+        e.put_f32s(&[1.0]);
+        let bytes = e.into_bytes();
+        let err = CocodSgd::new(3).with_workers(3).restore_state(&bytes).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        // make_algorithm always arms the bound
+        let spec = TrainSpec {
+            algorithm: AlgorithmKind::CocodSgd,
+            workers: 2,
+            ..TrainSpec::default()
+        };
+        let mut armed = make_algorithm(&spec, &[0.0; 1]);
+        assert!(armed.restore_state(&bytes).unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn on_absent_defaults_to_deferral() {
+        let p0 = vec![0.0f32; 3];
+        let root = Pcg32::new(0, 0);
+        for kind in AlgorithmKind::ALL {
+            let spec = TrainSpec { algorithm: kind, ..TrainSpec::default() };
+            let mut algo = make_algorithm(&spec, &p0);
+            let mut w = WorkerState::new(0, &[1.0, 2.0, 3.0], &root);
+            w.delta = vec![0.5, -0.5, 0.0];
+            let before_params = w.params.clone();
+            let before_delta = w.delta.clone();
+            let before_rng = w.rng.clone();
+            algo.on_absent(3, &mut w);
+            assert_eq!(w.params, before_params, "{kind:?}");
+            assert_eq!(w.delta, before_delta, "{kind:?}");
+            assert_eq!(w.rng, before_rng, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn partial_sync_charges_the_present_count() {
+        // an m-of-N sync must cost what an m-worker fleet's sync costs
+        for kind in AlgorithmKind::ALL {
+            let spec = TrainSpec { algorithm: kind, period: 3, ..TrainSpec::default() };
+            let p0 = vec![0.0f32; 4];
+            let mut algo = make_algorithm(&spec, &p0);
+            let mut ws = states(&[vec![1.0; 4], vec![2.0; 4], vec![3.0; 4], vec![4.0; 4]]);
+            for w in ws.iter_mut() {
+                w.corrector = algo.corrector();
+                if let Some(m) = w.corrector.as_mut().and_then(|c| c.shared_state()) {
+                    m.resize(4, 0.0);
+                }
+            }
+            let mut cl = cluster(4);
+            algo.sync(0, 3, 0.1, &mut ws, &[1, 3], &mut cl);
+            // reference: the same algorithm on a genuine 2-worker fleet
+            let mut algo2 = make_algorithm(&spec, &p0);
+            let mut ws2 = states(&[vec![2.0; 4], vec![4.0; 4]]);
+            for w in ws2.iter_mut() {
+                w.corrector = algo2.corrector();
+                if let Some(m) = w.corrector.as_mut().and_then(|c| c.shared_state()) {
+                    m.resize(4, 0.0);
+                }
+            }
+            let mut cl2 = cluster(2);
+            algo2.sync(0, 3, 0.1, &mut ws2, &all(2), &mut cl2);
+            assert_eq!(cl.stats().bytes, cl2.stats().bytes, "algo {}", algo.name());
+            assert_eq!(cl.stats().messages, cl2.stats().messages, "algo {}", algo.name());
+            assert_eq!(cl.stats().rounds, 1, "algo {}", algo.name());
         }
     }
 }

@@ -63,7 +63,14 @@ pub struct TrainOutput {
     /// `max_j |Σ_i Δ_i[j]|` at the end of the run — the paper's
     /// invariant (§4.1) that the corrections sum to zero; should be at
     /// floating-point-noise level for VRL-SGD and exactly 0 otherwise.
+    /// Holds under partial participation too (absent workers' Δ are
+    /// frozen and present-set increments cancel — see
+    /// [`crate::coordinator::Algorithm::sync`]).
     pub delta_residual: f32,
+    /// Rounds skipped because participation sampling left zero present
+    /// workers (always 0 without a
+    /// [`crate::fabric::ParticipationModel`]).
+    pub skipped_rounds: u64,
 }
 
 impl TrainOutput {

@@ -21,19 +21,35 @@
 //!   traffic against a slower uplink (see
 //!   [`crate::comm::AllReduceAlgo::TwoLevel`]).
 //!
-//! **Invariant — fabric never touches parameters.** The fleet's RNG
-//! stream is disjoint from every worker stream, and nothing here feeds
-//! back into the trajectory: enabling any combination of speeds,
-//! stragglers and topologies yields bitwise-identical parameters and
-//! losses to the homogeneous run — only [`crate::sim::SimTime`] and
+//! A third axis joined in this revision: **partial participation**
+//! ([`participation`]) — workers can miss a round entirely (seeded
+//! Bernoulli churn, correlated group outages over the two-level
+//! topology, or a deterministic round-robin sampler).
+//!
+//! **Invariant — the timing fabric never touches parameters.** The
+//! fleet's RNG stream is disjoint from every worker stream, and the
+//! speed/straggler/topology knobs never feed back into the trajectory:
+//! enabling any combination of them yields bitwise-identical parameters
+//! and losses to the homogeneous run — only [`crate::sim::SimTime`] and
 //! [`crate::comm::CommStats`] move (proven in `rust/tests/fabric.rs`
-//! for every algorithm under both executors). The stream is part of the
-//! checkpoint snapshot, so resumed runs reproduce the identical
-//! simulated timeline.
+//! for every algorithm under both executors). Participation is the one
+//! deliberate exception: absent workers take no local steps, pay no
+//! communication and are excluded from averaging, so the trajectory
+//! *legitimately* changes — but it stays a pure function of (seed,
+//! spec): a [`ParticipationModel::Full`] roster is bitwise identical to
+//! no roster at all, and fixed-seed dropout runs are bitwise
+//! reproducible and checkpoint-resumable (`rust/tests/participation.rs`).
+//! Both the straggler and the presence streams ride in the checkpoint
+//! snapshot, so resumed runs reproduce the identical simulated timeline
+//! and presence pattern.
 
+pub mod participation;
 mod spec;
 pub mod straggler;
 
+pub use participation::{
+    ParticipationModel, Roster, RosterState, PARTICIPATION_STREAM_LANE,
+};
 pub use spec::{FabricSpec, SpeedProfile, TopologyKind};
 pub use straggler::StragglerModel;
 
@@ -107,25 +123,47 @@ impl Fleet {
     }
 
     /// Sample this round's timing: `steps` local iterations on every
-    /// worker under `model`, slowed by each worker's static multiplier
-    /// and a fresh straggler draw. The sync barrier costs the maximum.
-    pub fn round_timing(&mut self, steps: usize, model: &TimeModel) -> RoundTiming {
+    /// *present* worker under `model`, slowed by each worker's static
+    /// multiplier and a fresh straggler draw. The sync barrier costs the
+    /// maximum over the present workers — absent workers are not waited
+    /// on and draw no straggler factor (a full mask reproduces the
+    /// pre-participation behaviour bitwise). Empty rounds never reach
+    /// here (the session driver's empty-round policy charges the nominal
+    /// round length itself).
+    pub fn round_timing(
+        &mut self,
+        steps: usize,
+        model: &TimeModel,
+        present: &[bool],
+    ) -> RoundTiming {
+        debug_assert_eq!(present.len(), self.multipliers.len());
         let base = steps as f64 * model.step_s;
         if self.homogeneous {
-            // exact seed behaviour: no draws, no float detours
+            // exact seed behaviour: no draws, no float detours (any
+            // non-empty present subset of a homogeneous fleet has
+            // critical path = base and zero wait)
             return RoundTiming { critical_s: base, wait_s: 0.0 };
         }
         self.rounds_sampled += 1;
         let mut max = 0.0f64;
         let mut sum = 0.0f64;
-        for &m in &self.multipliers {
+        let mut count = 0usize;
+        for (&m, &here) in self.multipliers.iter().zip(present.iter()) {
+            if !here {
+                continue;
+            }
             let t = base * m * self.stragglers.sample(&mut self.rng);
             if t > max {
                 max = t;
             }
             sum += t;
+            count += 1;
         }
-        let mean = sum / self.multipliers.len() as f64;
+        if count == 0 {
+            // defensive: the driver skips empty rounds before timing them
+            return RoundTiming { critical_s: base, wait_s: 0.0 };
+        }
+        let mean = sum / count as f64;
         RoundTiming { critical_s: max, wait_s: (max - mean).max(0.0) }
     }
 
@@ -181,13 +219,17 @@ mod tests {
         }
     }
 
+    fn all(n: usize) -> Vec<bool> {
+        vec![true; n]
+    }
+
     #[test]
     fn homogeneous_fleet_matches_charge_steps_bitwise() {
         let model = TimeModel::fixed(1.25e-3);
         let mut fleet = Fleet::new(&FabricSpec::default(), 8, stream(42));
         let before = fleet.state();
         for steps in [1usize, 7, 20] {
-            let t = fleet.round_timing(steps, &model);
+            let t = fleet.round_timing(steps, &model, &all(8));
             assert_eq!(t.critical_s.to_bits(), (steps as f64 * model.step_s).to_bits());
             assert_eq!(t.wait_s, 0.0);
         }
@@ -199,7 +241,7 @@ mod tests {
     fn critical_path_dominates_and_wait_is_positive() {
         let model = TimeModel::fixed(1e-3);
         let mut fleet = Fleet::new(&hetero_spec(), 8, stream(7));
-        let t = fleet.round_timing(10, &model);
+        let t = fleet.round_timing(10, &model, &all(8));
         // the slowest static multiplier alone already gives 2x base;
         // stragglers only multiply further (log-normal > 0)
         assert!(t.critical_s > 10.0 * 1e-3, "critical {}", t.critical_s);
@@ -214,13 +256,14 @@ mod tests {
         let mut a = Fleet::new(&hetero_spec(), 4, stream(9));
         let mut b = Fleet::new(&hetero_spec(), 4, stream(9));
         for _ in 0..50 {
-            let (ta, tb) = (a.round_timing(5, &model), b.round_timing(5, &model));
+            let (ta, tb) =
+                (a.round_timing(5, &model, &all(4)), b.round_timing(5, &model, &all(4)));
             assert_eq!(ta.critical_s.to_bits(), tb.critical_s.to_bits());
             assert_eq!(ta.wait_s.to_bits(), tb.wait_s.to_bits());
         }
         let mut c = Fleet::new(&hetero_spec(), 4, stream(10));
-        let t = c.round_timing(5, &model);
-        let t0 = Fleet::new(&hetero_spec(), 4, stream(9)).round_timing(5, &model);
+        let t = c.round_timing(5, &model, &all(4));
+        let t0 = Fleet::new(&hetero_spec(), 4, stream(9)).round_timing(5, &model, &all(4));
         assert_ne!(t.critical_s.to_bits(), t0.critical_s.to_bits());
     }
 
@@ -230,19 +273,19 @@ mod tests {
         let mut full = Fleet::new(&hetero_spec(), 4, stream(21));
         let mut timings = Vec::new();
         for _ in 0..10 {
-            timings.push(full.round_timing(3, &model));
+            timings.push(full.round_timing(3, &model, &all(4)));
         }
         // replay the first 4 rounds, snapshot, restore into a fresh fleet
         let mut part = Fleet::new(&hetero_spec(), 4, stream(21));
         for _ in 0..4 {
-            part.round_timing(3, &model);
+            part.round_timing(3, &model, &all(4));
         }
         let boundary = part.state();
         let mut resumed = Fleet::new(&hetero_spec(), 4, stream(21));
         resumed.restore_state(&boundary);
         assert_eq!(resumed.rounds_sampled(), 4);
         for t in &timings[4..] {
-            let r = resumed.round_timing(3, &model);
+            let r = resumed.round_timing(3, &model, &all(4));
             assert_eq!(r.critical_s.to_bits(), t.critical_s.to_bits());
             assert_eq!(r.wait_s.to_bits(), t.wait_s.to_bits());
         }
@@ -259,7 +302,7 @@ mod tests {
         let mut hit = 0;
         let mut clean = 0;
         for _ in 0..200 {
-            let t = fleet.round_timing(1, &model);
+            let t = fleet.round_timing(1, &model, &all(4));
             if t.critical_s > 1e-3 {
                 // at least one worker slowed: the barrier pays 10x
                 hit += 1;
@@ -273,5 +316,36 @@ mod tests {
             }
         }
         assert!(hit > 100 && clean > 2, "hit {hit} clean {clean}");
+    }
+
+    #[test]
+    fn absent_workers_draw_nothing_and_are_not_waited_on() {
+        let model = TimeModel::fixed(1e-3);
+        // explicit profile: worker 3 is 10x slower than the rest
+        let spec = FabricSpec {
+            speeds: SpeedProfile::Explicit(vec![1.0, 1.0, 1.0, 10.0]),
+            stragglers: StragglerModel::Off,
+            ..FabricSpec::default()
+        };
+        let mut fleet = Fleet::new(&spec, 4, stream(2));
+        let slow_in = fleet.round_timing(5, &model, &all(4));
+        assert_eq!(slow_in.critical_s.to_bits(), (5e-3 * 10.0).to_bits());
+        // with the slow worker absent the barrier no longer waits for it
+        let slow_out = fleet.round_timing(5, &model, &[true, true, true, false]);
+        assert_eq!(slow_out.critical_s.to_bits(), 5e-3f64.to_bits());
+        assert_eq!(slow_out.wait_s, 0.0);
+
+        // with a live straggler stream, a presence-masked round draws
+        // exactly one factor per present worker: two fleets consuming the
+        // same stream stay in lockstep iff their masks agree
+        let spec = hetero_spec();
+        let mut a = Fleet::new(&spec, 4, stream(8));
+        let mut b = Fleet::new(&spec, 4, stream(8));
+        a.round_timing(3, &model, &[true, false, true, false]);
+        b.round_timing(3, &model, &[true, false, true, false]);
+        assert_eq!(a.state(), b.state());
+        let mut c = Fleet::new(&spec, 4, stream(8));
+        c.round_timing(3, &model, &all(4));
+        assert_ne!(a.state().rng_state, c.state().rng_state, "draw counts differ");
     }
 }

@@ -1,0 +1,564 @@
+//! Partial participation: seeded per-(round, worker) presence sampling.
+//!
+//! The paper's linear-speedup guarantee assumes all N workers reach every
+//! synchronization barrier, but real fleets lose workers — devices go
+//! offline for a round (preemption, battery, network partition) and the
+//! standard federated regime (Murata & Suzuki 2021) *samples* a subset of
+//! clients per round by design. This module models both:
+//!
+//! * [`ParticipationModel::Bernoulli`] — every worker independently
+//!   misses a round with probability `drop` (uncorrelated churn);
+//! * [`ParticipationModel::GroupOutage`] — whole contiguous groups (the
+//!   same groups the [`super::TopologyKind::TwoLevel`] collective is
+//!   built over) drop together with probability `drop` per round — a
+//!   rack switch or uplink failure takes out every worker behind it;
+//! * [`ParticipationModel::RoundRobin`] — the deterministic federated
+//!   sampler: exactly `count` workers participate per round, rotating
+//!   through the fleet in worker order (no randomness at all).
+//!
+//! Unlike every other fabric knob, participation **does** change the
+//! convergence trajectory: an absent worker takes no local steps, pays no
+//! communication, and is excluded from the round's averaging — which
+//! requires algorithm cooperation (see
+//! [`crate::coordinator::Algorithm::sync`]'s present-set contract and
+//! [`crate::coordinator::Algorithm::on_absent`]). What stays guaranteed:
+//! the trajectory is a pure function of (seed, spec) — presence draws
+//! come from the [`Roster`]'s own dedicated [`Pcg32`] lane
+//! ([`PARTICIPATION_STREAM_LANE`]), disjoint from the worker data
+//! streams and the straggler stream, sampled once per round in worker
+//! order on the driver thread. So fixed-seed dropout runs are bitwise
+//! reproducible under either executor, resumable from a checkpoint
+//! (the stream position and skipped-round counter ride in
+//! [`RosterState`]), and [`ParticipationModel::Full`] is bitwise
+//! identical to a run with no participation model at all
+//! (`rust/tests/participation.rs`).
+
+use super::spec::FabricSpec;
+use crate::comm::allreduce::group_bounds;
+use crate::rng::Pcg32;
+
+/// Lane used to derive the roster's dedicated RNG stream from the run's
+/// root generator. Worker streams use lanes `0..N`, initialization uses
+/// `u64::MAX` and the fleet straggler stream `u64::MAX - 1`, so this
+/// cannot collide with any of them.
+pub const PARTICIPATION_STREAM_LANE: u64 = u64::MAX - 2;
+
+/// Which workers reach each synchronization round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ParticipationModel {
+    /// Every worker, every round — the exact no-dropout behaviour (no
+    /// draws, the roster stream is never advanced).
+    Full,
+    /// Each worker independently misses the round with probability
+    /// `drop` (one draw per worker per round, in worker order).
+    Bernoulli {
+        /// Per-round per-worker dropout probability, in `[0, 1)` —
+        /// `1.0` is rejected (every round would be empty).
+        drop: f64,
+    },
+    /// Each of the fabric's contiguous [`super::TopologyKind::TwoLevel`]
+    /// groups drops *as a unit* with probability `drop` (one draw per
+    /// group per round, in group order). Requires the two-level
+    /// topology — the outage correlation is over its groups.
+    GroupOutage {
+        /// Per-round per-group outage probability, in `[0, 1)`.
+        drop: f64,
+    },
+    /// Deterministic federated sampler: exactly `count` workers
+    /// participate each round, rotating through the fleet in worker
+    /// order (round r picks workers `(r·count + j) mod N`). Never
+    /// advances the roster stream and can never produce an empty round.
+    RoundRobin {
+        /// Participants per round, in `1..=N`.
+        count: usize,
+    },
+}
+
+impl ParticipationModel {
+    /// Display shorthand (CLI/TOML round-trip, checkpoint fingerprint).
+    pub fn name(&self) -> String {
+        match self {
+            ParticipationModel::Full => "full".into(),
+            ParticipationModel::Bernoulli { drop } => format!("bernoulli:{drop}"),
+            ParticipationModel::GroupOutage { drop } => format!("group:{drop}"),
+            ParticipationModel::RoundRobin { count } => format!("round-robin:{count}"),
+        }
+    }
+
+    /// True for the exact no-dropout behaviour.
+    pub fn is_full(&self) -> bool {
+        matches!(self, ParticipationModel::Full)
+    }
+
+    /// True for the seeded random models (the ones that advance the
+    /// roster stream).
+    pub fn is_random(&self) -> bool {
+        matches!(
+            self,
+            ParticipationModel::Bernoulli { .. } | ParticipationModel::GroupOutage { .. }
+        )
+    }
+
+    /// Validate parameter ranges against a worker count. Dropout
+    /// probabilities live in `[0, 1)`: exactly `1.0` would make every
+    /// round empty and is rejected up front.
+    pub fn validate(&self, workers: usize) -> Result<(), String> {
+        match *self {
+            ParticipationModel::Full => Ok(()),
+            ParticipationModel::Bernoulli { drop } | ParticipationModel::GroupOutage { drop } => {
+                if !(drop.is_finite() && (0.0..1.0).contains(&drop)) {
+                    return Err(format!(
+                        "participation drop probability must be in [0, 1), got {drop} \
+                         (1.0 would make every round empty)"
+                    ));
+                }
+                Ok(())
+            }
+            ParticipationModel::RoundRobin { count } => {
+                if count == 0 || count > workers {
+                    return Err(format!(
+                        "round-robin sampler count must be in 1..={workers}, got {count}"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Parse a CLI/TOML shorthand: `full` (aliases `off`, `all`),
+    /// `bernoulli:<p>` (p defaults to 0.1), `group:<p>` (alias
+    /// `group-outage`; p defaults to 0.5), or `round-robin:<m>` (alias
+    /// `rr`; the count is required). Range-validated before returning
+    /// (worker-count bounds are checked later in `TrainSpec::validate`).
+    pub fn parse(s: &str) -> Result<ParticipationModel, String> {
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or("").trim().to_ascii_lowercase();
+        let nums: Vec<&str> = parts.collect();
+        let num = |i: usize, default: f64| -> Result<f64, String> {
+            match nums.get(i) {
+                None => Ok(default),
+                Some(v) => v
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad participation parameter '{}' in '{s}'", v.trim())),
+            }
+        };
+        let (model, arity) = match kind.as_str() {
+            "full" | "off" | "all" => (ParticipationModel::Full, 0),
+            "bernoulli" => (ParticipationModel::Bernoulli { drop: num(0, 0.1)? }, 1),
+            "group" | "group-outage" => {
+                (ParticipationModel::GroupOutage { drop: num(0, 0.5)? }, 1)
+            }
+            "round-robin" | "rr" => {
+                let count = nums
+                    .first()
+                    .ok_or_else(|| {
+                        format!("round-robin needs a count, e.g. 'round-robin:4' ('{s}')")
+                    })?
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad round-robin count in '{s}'"))?;
+                (ParticipationModel::RoundRobin { count }, 1)
+            }
+            other => return Err(format!("unknown participation model '{other}'")),
+        };
+        if nums.len() > arity {
+            return Err(format!(
+                "participation model '{kind}' takes at most {arity} parameter(s), got '{s}'"
+            ));
+        }
+        // range checks that don't need the worker count (bounds against N
+        // happen in TrainSpec::validate)
+        model.validate(usize::MAX)?;
+        Ok(model)
+    }
+}
+
+/// The per-run presence sampler: the resolved model plus its dedicated
+/// RNG stream and the skipped-round counter.
+///
+/// Constructed once per run by the session driver;
+/// [`Roster::sample_round`] is called once per round *before* any local
+/// step, so the presence pattern is a pure function of (seed, spec,
+/// round index) — independent of the executor, and resumable via
+/// [`Roster::state`] / [`Roster::restore_state`].
+#[derive(Debug, Clone)]
+pub struct Roster {
+    model: ParticipationModel,
+    workers: usize,
+    groups: usize,
+    rng: Pcg32,
+    rounds_sampled: u64,
+    skipped_rounds: u64,
+}
+
+impl Roster {
+    /// Build from a validated spec. `rng` must be the run's dedicated
+    /// participation stream (`root.split(PARTICIPATION_STREAM_LANE)`).
+    pub fn new(spec: &FabricSpec, workers: usize, rng: Pcg32) -> Roster {
+        Roster {
+            model: spec.participation,
+            workers,
+            groups: spec.groups.clamp(1, workers.max(1)),
+            rng,
+            rounds_sampled: 0,
+            skipped_rounds: 0,
+        }
+    }
+
+    /// The resolved model.
+    pub fn model(&self) -> ParticipationModel {
+        self.model
+    }
+
+    /// True when every round is a full round (no sampling at all).
+    pub fn is_full(&self) -> bool {
+        self.model.is_full()
+    }
+
+    /// Sample round `round`'s presence into `mask` (length N) and return
+    /// the participant count. Draw order is fixed — one draw per worker
+    /// (Bernoulli) or per group (GroupOutage) in ascending order;
+    /// `Full`/`RoundRobin` never touch the stream.
+    pub fn sample_round(&mut self, round: usize, mask: &mut [bool]) -> usize {
+        debug_assert_eq!(mask.len(), self.workers);
+        match self.model {
+            ParticipationModel::Full => {
+                mask.fill(true);
+                self.workers
+            }
+            ParticipationModel::Bernoulli { drop } => {
+                self.rounds_sampled += 1;
+                let mut present = 0usize;
+                for slot in mask.iter_mut() {
+                    *slot = self.rng.next_f64() >= drop;
+                    present += *slot as usize;
+                }
+                present
+            }
+            ParticipationModel::GroupOutage { drop } => {
+                self.rounds_sampled += 1;
+                let mut present = 0usize;
+                for (lo, hi) in group_bounds(self.workers, self.groups) {
+                    let up = self.rng.next_f64() >= drop;
+                    for slot in mask[lo..hi].iter_mut() {
+                        *slot = up;
+                    }
+                    if up {
+                        present += hi - lo;
+                    }
+                }
+                present
+            }
+            ParticipationModel::RoundRobin { count } => {
+                mask.fill(false);
+                for j in 0..count {
+                    mask[(round * count + j) % self.workers] = true;
+                }
+                count
+            }
+        }
+    }
+
+    /// Record one empty (skipped) round — see the session driver's
+    /// empty-round policy.
+    pub fn note_skipped(&mut self) {
+        self.skipped_rounds += 1;
+    }
+
+    /// Cumulative empty rounds so far.
+    pub fn skipped_rounds(&self) -> u64 {
+        self.skipped_rounds
+    }
+
+    /// Rounds whose presence was randomly drawn so far.
+    pub fn rounds_sampled(&self) -> u64 {
+        self.rounds_sampled
+    }
+
+    /// Snapshot the stream position and counters (checkpoint payload) —
+    /// restored with [`Roster::restore_state`] so a resumed run replays
+    /// the identical presence pattern.
+    pub fn state(&self) -> RosterState {
+        RosterState {
+            rng_state: self.rng.state(),
+            rng_inc: self.rng.inc(),
+            rounds_sampled: self.rounds_sampled,
+            skipped_rounds: self.skipped_rounds,
+        }
+    }
+
+    /// Restore from a [`RosterState`] captured by [`Roster::state`].
+    pub fn restore_state(&mut self, s: &RosterState) {
+        self.rng = Pcg32::restore(s.rng_state, s.rng_inc);
+        self.rounds_sampled = s.rounds_sampled;
+        self.skipped_rounds = s.skipped_rounds;
+    }
+}
+
+/// Serializable position of a roster's presence stream at a round
+/// boundary — what the checkpoint subsystem stores so a resumed run
+/// replays the identical presence pattern (and continues the
+/// skipped-round counter instead of resetting it).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RosterState {
+    /// RNG internal state (see [`crate::rng::Pcg32::state`]).
+    pub rng_state: u64,
+    /// RNG stream increment (see [`crate::rng::Pcg32::inc`]).
+    pub rng_inc: u64,
+    /// Rounds whose presence has been randomly drawn.
+    pub rounds_sampled: u64,
+    /// Empty rounds skipped so far.
+    pub skipped_rounds: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{TopologyKind, FABRIC_STREAM_LANE};
+    use super::*;
+
+    fn stream(seed: u64) -> Pcg32 {
+        Pcg32::new(seed, 0x5EED).split(PARTICIPATION_STREAM_LANE)
+    }
+
+    fn spec_with(model: ParticipationModel) -> FabricSpec {
+        FabricSpec { participation: model, ..FabricSpec::default() }
+    }
+
+    #[test]
+    fn full_roster_never_draws() {
+        let mut r = Roster::new(&spec_with(ParticipationModel::Full), 4, stream(1));
+        let before = r.state();
+        let mut mask = vec![false; 4];
+        for round in 0..10 {
+            assert_eq!(r.sample_round(round, &mut mask), 4);
+            assert!(mask.iter().all(|&m| m));
+        }
+        assert_eq!(r.state(), before, "Full must not advance the stream");
+        assert_eq!(r.rounds_sampled(), 0);
+    }
+
+    #[test]
+    fn bernoulli_drops_at_the_configured_rate() {
+        let model = ParticipationModel::Bernoulli { drop: 0.25 };
+        let mut r = Roster::new(&spec_with(model), 8, stream(7));
+        let mut mask = vec![false; 8];
+        let rounds = 4000;
+        let mut present = 0usize;
+        for round in 0..rounds {
+            present += r.sample_round(round, &mut mask);
+        }
+        let rate = present as f64 / (rounds * 8) as f64;
+        assert!((rate - 0.75).abs() < 0.02, "presence rate {rate}");
+        assert_eq!(r.rounds_sampled(), rounds as u64);
+    }
+
+    #[test]
+    fn group_outage_drops_whole_groups() {
+        let spec = FabricSpec {
+            participation: ParticipationModel::GroupOutage { drop: 0.5 },
+            topology: TopologyKind::TwoLevel,
+            groups: 2,
+            ..FabricSpec::default()
+        };
+        let mut r = Roster::new(&spec, 4, stream(3));
+        let mut mask = vec![false; 4];
+        let mut counts = std::collections::BTreeSet::new();
+        for round in 0..200 {
+            let m = r.sample_round(round, &mut mask);
+            // groups are {0,1} and {2,3}: presence is group-constant
+            assert_eq!(mask[0], mask[1], "round {round}");
+            assert_eq!(mask[2], mask[3], "round {round}");
+            assert_eq!(m, mask.iter().filter(|&&b| b).count());
+            counts.insert(m);
+        }
+        // with p=0.5 over 200 rounds all three outcomes appear
+        assert_eq!(counts, [0usize, 2, 4].into_iter().collect());
+    }
+
+    #[test]
+    fn round_robin_rotates_deterministically() {
+        let model = ParticipationModel::RoundRobin { count: 1 };
+        let mut r = Roster::new(&spec_with(model), 4, stream(5));
+        let before = r.state();
+        let mut mask = vec![false; 4];
+        let mut seen = vec![0usize; 4];
+        for round in 0..8 {
+            assert_eq!(r.sample_round(round, &mut mask), 1);
+            let i = mask.iter().position(|&b| b).unwrap();
+            assert_eq!(i, round % 4, "rotation order");
+            seen[i] += 1;
+        }
+        assert_eq!(seen, vec![2; 4], "every worker serves equally");
+        assert_eq!(r.state(), before, "round-robin must not draw");
+
+        // count = 3 over 4 workers still rotates through everyone
+        let mut r = Roster::new(
+            &spec_with(ParticipationModel::RoundRobin { count: 3 }),
+            4,
+            stream(5),
+        );
+        let mut hit = vec![false; 4];
+        for round in 0..4 {
+            assert_eq!(r.sample_round(round, &mut mask), 3);
+            for (i, &m) in mask.iter().enumerate() {
+                hit[i] |= m;
+            }
+        }
+        assert!(hit.iter().all(|&h| h));
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed_and_restorable() {
+        let model = ParticipationModel::Bernoulli { drop: 0.4 };
+        let mut a = Roster::new(&spec_with(model), 4, stream(11));
+        let mut b = Roster::new(&spec_with(model), 4, stream(11));
+        let (mut ma, mut mb) = (vec![false; 4], vec![false; 4]);
+        let mut patterns = Vec::new();
+        for round in 0..20 {
+            a.sample_round(round, &mut ma);
+            b.sample_round(round, &mut mb);
+            assert_eq!(ma, mb, "round {round}");
+            patterns.push(ma.clone());
+        }
+        // restore mid-stream: replay 8 rounds, snapshot, resume elsewhere
+        let mut part = Roster::new(&spec_with(model), 4, stream(11));
+        for round in 0..8 {
+            part.sample_round(round, &mut ma);
+        }
+        let boundary = part.state();
+        let mut resumed = Roster::new(&spec_with(model), 4, stream(11));
+        resumed.restore_state(&boundary);
+        for (round, want) in patterns.iter().enumerate().skip(8) {
+            resumed.sample_round(round, &mut ma);
+            assert_eq!(&ma, want, "resumed round {round}");
+        }
+        // a different seed gives a different pattern
+        let mut other = Roster::new(&spec_with(model), 4, stream(12));
+        let mut any_diff = false;
+        for (round, want) in patterns.iter().enumerate() {
+            other.sample_round(round, &mut ma);
+            any_diff |= &ma != want;
+        }
+        assert!(any_diff);
+    }
+
+    #[test]
+    fn skipped_rounds_counter_rides_the_state() {
+        let mut r = Roster::new(
+            &spec_with(ParticipationModel::Bernoulli { drop: 0.5 }),
+            2,
+            stream(1),
+        );
+        r.note_skipped();
+        r.note_skipped();
+        let s = r.state();
+        assert_eq!(s.skipped_rounds, 2);
+        let mut fresh = Roster::new(
+            &spec_with(ParticipationModel::Bernoulli { drop: 0.5 }),
+            2,
+            stream(9),
+        );
+        fresh.restore_state(&s);
+        assert_eq!(fresh.skipped_rounds(), 2);
+    }
+
+    #[test]
+    fn parse_round_trips_and_validates() {
+        assert_eq!(ParticipationModel::parse("full").unwrap(), ParticipationModel::Full);
+        assert_eq!(ParticipationModel::parse("off").unwrap(), ParticipationModel::Full);
+        assert_eq!(
+            ParticipationModel::parse("bernoulli:0.25").unwrap(),
+            ParticipationModel::Bernoulli { drop: 0.25 }
+        );
+        assert_eq!(
+            ParticipationModel::parse("bernoulli").unwrap(),
+            ParticipationModel::Bernoulli { drop: 0.1 }
+        );
+        assert_eq!(
+            ParticipationModel::parse("group:0.3").unwrap(),
+            ParticipationModel::GroupOutage { drop: 0.3 }
+        );
+        assert_eq!(
+            ParticipationModel::parse("round-robin:4").unwrap(),
+            ParticipationModel::RoundRobin { count: 4 }
+        );
+        // name() round-trips through parse()
+        for m in [
+            ParticipationModel::Full,
+            ParticipationModel::Bernoulli { drop: 0.05 },
+            ParticipationModel::GroupOutage { drop: 0.5 },
+            ParticipationModel::RoundRobin { count: 3 },
+        ] {
+            assert_eq!(ParticipationModel::parse(&m.name()).unwrap(), m);
+        }
+        // the [0, 1) probability contract: 1.0 means every round empty
+        assert!(ParticipationModel::parse("bernoulli:1.0").is_err());
+        assert!(ParticipationModel::parse("group:1").is_err());
+        assert!(ParticipationModel::parse("bernoulli:-0.1").is_err());
+        assert!(ParticipationModel::parse("bernoulli:nan").is_err());
+        assert!(ParticipationModel::parse("round-robin").is_err(), "count is required");
+        assert!(ParticipationModel::parse("round-robin:0").is_err());
+        assert!(ParticipationModel::parse("bogus").is_err());
+        // extra fields are rejected, not silently dropped
+        assert!(ParticipationModel::parse("full:1").is_err());
+        assert!(ParticipationModel::parse("bernoulli:0.1:2").is_err());
+    }
+
+    #[test]
+    fn validate_bounds_round_robin_against_workers() {
+        ParticipationModel::RoundRobin { count: 4 }.validate(4).unwrap();
+        assert!(ParticipationModel::RoundRobin { count: 5 }.validate(4).is_err());
+        assert!(ParticipationModel::RoundRobin { count: 0 }.validate(4).is_err());
+        ParticipationModel::Bernoulli { drop: 0.0 }.validate(4).unwrap();
+        assert!(ParticipationModel::Bernoulli { drop: 1.0 }.validate(4).is_err());
+    }
+
+    #[test]
+    fn dedicated_lane_is_disjoint_from_every_other_stream() {
+        // the roster stream must never collide with worker data streams
+        // (lanes 0..N), the init stream (u64::MAX) or the fleet
+        // straggler stream (u64::MAX - 1)
+        let root = Pcg32::new(42, 0x5EED);
+        let roster = root.split(PARTICIPATION_STREAM_LANE);
+        let mut seen = std::collections::HashSet::new();
+        assert!(seen.insert((roster.state(), roster.inc())));
+        for lane in (0..1024).chain([u64::MAX, FABRIC_STREAM_LANE]) {
+            let s = root.split(lane);
+            assert!(
+                seen.insert((s.state(), s.inc())),
+                "lane {lane} collides with another stream"
+            );
+        }
+        // and the outputs decorrelate from the nearest neighbours
+        let mut a = root.split(PARTICIPATION_STREAM_LANE);
+        let mut b = root.split(FABRIC_STREAM_LANE);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "{same} collisions in 64 draws");
+    }
+
+    #[test]
+    fn statistical_presence_matches_spec() {
+        // 10k-draw empirical mean/variance of the Bernoulli presence
+        // indicator against the closed form: mean = 1 - p,
+        // var = p(1 - p)
+        let drop = 0.3f64;
+        let mut r = Roster::new(
+            &spec_with(ParticipationModel::Bernoulli { drop }),
+            1,
+            stream(17),
+        );
+        let mut mask = vec![false; 1];
+        let n = 10_000;
+        let xs: Vec<f64> = (0..n)
+            .map(|round| {
+                r.sample_round(round, &mut mask);
+                mask[0] as u8 as f64
+            })
+            .collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 0.7).abs() < 0.02, "mean {mean}");
+        assert!((var - 0.21).abs() < 0.02, "var {var}");
+    }
+}

@@ -1,13 +1,18 @@
 //! User-facing fabric configuration: the `[fabric]` TOML table and the
-//! `--stragglers` / `--topology` CLI shorthands.
+//! `--stragglers` / `--topology` / `--dropout` / `--sampler` CLI
+//! shorthands.
 //!
 //! A [`FabricSpec`] describes the *simulated* cluster fabric — static
-//! per-worker speed profiles, a dynamic straggler process, and the
+//! per-worker speed profiles, a dynamic straggler process, the
 //! collective topology (flat ring/naive/tree, or a two-level hierarchy
-//! over a slower uplink). It shapes only the simulated-time axis
+//! over a slower uplink), and the per-round participation model. The
+//! timing knobs shape only the simulated-time axis
 //! ([`crate::sim::SimTime`]) and the communication cost accounting
 //! ([`crate::comm::CommStats`]); the convergence trajectory is provably
-//! independent of it (`rust/tests/fabric.rs`).
+//! independent of them (`rust/tests/fabric.rs`). Participation is the
+//! deliberate exception — absent workers skip the round entirely, so
+//! the trajectory changes, but stays a seeded pure function of the spec
+//! (`rust/tests/participation.rs`).
 //!
 //! ```toml
 //! [fabric]
@@ -22,8 +27,15 @@
 //! # the inter-group uplink (two-level only); defaults to the main link
 //! uplink_latency_us = 500.0
 //! uplink_bandwidth_gbps = 1.0
+//! # seeded worker dropout: "off", "bernoulli:<p>", "group:<p>"
+//! # (group outages need topology = "two-level"); mutually exclusive
+//! # with the deterministic sampler key below
+//! dropout = "bernoulli:0.2"
+//! # deterministic federated sampler: "all" or "round-robin:<m>"
+//! # sampler = "round-robin:4"
 //! ```
 
+use super::participation::ParticipationModel;
 use super::straggler::StragglerModel;
 use crate::comm::AllReduceAlgo;
 use crate::config::NetworkSpec;
@@ -154,6 +166,10 @@ pub struct FabricSpec {
     /// Inter-group uplink for [`TopologyKind::TwoLevel`]; `None` falls
     /// back to the main network (ignored by flat topologies).
     pub uplink: Option<NetworkSpec>,
+    /// Per-round worker participation (dropout / federated sampling).
+    /// Unlike every other fabric knob this changes the trajectory — see
+    /// [`crate::fabric::participation`].
+    pub participation: ParticipationModel,
 }
 
 impl Default for FabricSpec {
@@ -164,6 +180,7 @@ impl Default for FabricSpec {
             topology: TopologyKind::Ring,
             groups: 2,
             uplink: None,
+            participation: ParticipationModel::Full,
         }
     }
 }
@@ -207,6 +224,16 @@ impl FabricSpec {
         if let Some(uplink) = &self.uplink {
             uplink.validate("fabric uplink")?;
         }
+        self.participation.validate(workers)?;
+        if matches!(self.participation, ParticipationModel::GroupOutage { .. })
+            && self.topology != TopologyKind::TwoLevel
+        {
+            return Err(
+                "group-outage dropout needs fabric.topology = \"two-level\" \
+                 (outages are correlated over its groups)"
+                    .into(),
+            );
+        }
         Ok(())
     }
 
@@ -214,6 +241,35 @@ impl FabricSpec {
     /// the TOML `fabric.stragglers` key, see [`StragglerModel::parse`]).
     pub fn set_stragglers_flag(&mut self, s: &str) -> Result<(), String> {
         self.stragglers = StragglerModel::parse(s)?;
+        Ok(())
+    }
+
+    /// Apply the `--dropout <model>` CLI shorthand (same grammar as the
+    /// TOML `fabric.dropout` key): `off`, `bernoulli:<p>` or `group:<p>`.
+    /// The deterministic round-robin sampler goes through
+    /// [`FabricSpec::set_sampler_flag`] instead.
+    pub fn set_dropout_flag(&mut self, s: &str) -> Result<(), String> {
+        let model = ParticipationModel::parse(s)?;
+        if matches!(model, ParticipationModel::RoundRobin { .. }) {
+            return Err(format!(
+                "'{s}' is a deterministic sampler — use --sampler / fabric.sampler for it"
+            ));
+        }
+        self.participation = model;
+        Ok(())
+    }
+
+    /// Apply the `--sampler <spec>` CLI shorthand (same grammar as the
+    /// TOML `fabric.sampler` key): `all` or `round-robin:<m>`. Random
+    /// dropout goes through [`FabricSpec::set_dropout_flag`] instead.
+    pub fn set_sampler_flag(&mut self, s: &str) -> Result<(), String> {
+        let model = ParticipationModel::parse(s)?;
+        if model.is_random() {
+            return Err(format!(
+                "'{s}' is a random dropout model — use --dropout / fabric.dropout for it"
+            ));
+        }
+        self.participation = model;
         Ok(())
     }
 
@@ -306,7 +362,37 @@ impl FabricSpec {
         } else {
             None
         };
-        Ok(FabricSpec { speeds, stragglers, topology, groups, uplink })
+        let dropout = doc.get("fabric.dropout").and_then(|v| v.as_str());
+        let sampler = doc.get("fabric.sampler").and_then(|v| v.as_str());
+        let participation = match (dropout, sampler) {
+            (Some(_), Some(_)) => {
+                return Err(
+                    "fabric.dropout and fabric.sampler are mutually exclusive".into()
+                );
+            }
+            (Some(s), None) => {
+                let m = ParticipationModel::parse(s)?;
+                if matches!(m, ParticipationModel::RoundRobin { .. }) {
+                    return Err(format!(
+                        "fabric.dropout = \"{s}\" is a deterministic sampler — \
+                         spell it as fabric.sampler"
+                    ));
+                }
+                m
+            }
+            (None, Some(s)) => {
+                let m = ParticipationModel::parse(s)?;
+                if m.is_random() {
+                    return Err(format!(
+                        "fabric.sampler = \"{s}\" is a random dropout model — \
+                         spell it as fabric.dropout"
+                    ));
+                }
+                m
+            }
+            (None, None) => ParticipationModel::Full,
+        };
+        Ok(FabricSpec { speeds, stragglers, topology, groups, uplink, participation })
     }
 }
 
@@ -452,5 +538,93 @@ mod tests {
         // empty table == defaults
         let f = FabricSpec::from_doc(&TomlDoc::parse("").unwrap()).unwrap();
         assert_eq!(f, FabricSpec::default());
+    }
+
+    #[test]
+    fn toml_participation_keys_parse() {
+        let f = FabricSpec::from_doc(
+            &TomlDoc::parse("[fabric]\ndropout = \"bernoulli:0.2\"\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(f.participation, ParticipationModel::Bernoulli { drop: 0.2 });
+        let f = FabricSpec::from_doc(
+            &TomlDoc::parse(
+                "[fabric]\ntopology = \"two-level\"\ngroups = 2\ndropout = \"group:0.4\"\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(f.participation, ParticipationModel::GroupOutage { drop: 0.4 });
+        let f = FabricSpec::from_doc(
+            &TomlDoc::parse("[fabric]\nsampler = \"round-robin:3\"\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(f.participation, ParticipationModel::RoundRobin { count: 3 });
+        // absent keys keep everyone participating
+        let f = FabricSpec::from_doc(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(f.participation, ParticipationModel::Full);
+    }
+
+    #[test]
+    fn toml_participation_rejects_conflicts_and_family_mixups() {
+        // dropout + sampler together
+        assert!(FabricSpec::from_doc(
+            &TomlDoc::parse(
+                "[fabric]\ndropout = \"bernoulli:0.2\"\nsampler = \"round-robin:2\"\n"
+            )
+            .unwrap()
+        )
+        .is_err());
+        // a sampler spelled under dropout (and vice versa)
+        assert!(FabricSpec::from_doc(
+            &TomlDoc::parse("[fabric]\ndropout = \"round-robin:2\"\n").unwrap()
+        )
+        .is_err());
+        assert!(FabricSpec::from_doc(
+            &TomlDoc::parse("[fabric]\nsampler = \"bernoulli:0.2\"\n").unwrap()
+        )
+        .is_err());
+        // out-of-range probability is a parse error, not a runtime surprise
+        assert!(FabricSpec::from_doc(
+            &TomlDoc::parse("[fabric]\ndropout = \"bernoulli:1.0\"\n").unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn participation_cli_flags_apply_and_validate() {
+        let mut f = FabricSpec::default();
+        f.set_dropout_flag("bernoulli:0.3").unwrap();
+        assert_eq!(f.participation, ParticipationModel::Bernoulli { drop: 0.3 });
+        f.set_sampler_flag("round-robin:2").unwrap();
+        assert_eq!(f.participation, ParticipationModel::RoundRobin { count: 2 });
+        f.set_dropout_flag("off").unwrap();
+        assert_eq!(f.participation, ParticipationModel::Full);
+        assert!(f.set_dropout_flag("round-robin:2").is_err(), "wrong family");
+        assert!(f.set_sampler_flag("group:0.5").is_err(), "wrong family");
+        assert!(f.set_dropout_flag("bernoulli:2.0").is_err());
+    }
+
+    #[test]
+    fn group_outage_requires_the_two_level_topology() {
+        let flat = FabricSpec {
+            participation: ParticipationModel::GroupOutage { drop: 0.3 },
+            ..FabricSpec::default()
+        };
+        let err = flat.validate(4).unwrap_err();
+        assert!(err.contains("two-level"), "{err}");
+        let tiered = FabricSpec {
+            participation: ParticipationModel::GroupOutage { drop: 0.3 },
+            topology: TopologyKind::TwoLevel,
+            groups: 2,
+            ..FabricSpec::default()
+        };
+        tiered.validate(4).unwrap();
+        // round-robin count is bounded by the worker count
+        let rr = FabricSpec {
+            participation: ParticipationModel::RoundRobin { count: 5 },
+            ..FabricSpec::default()
+        };
+        assert!(rr.validate(4).is_err());
     }
 }

@@ -195,6 +195,41 @@ mod tests {
     }
 
     #[test]
+    fn lognormal_moments_match_the_closed_form() {
+        // X = exp(σZ) has mean exp(σ²/2) and variance
+        // (exp(σ²) − 1)·exp(σ²); the empirical moments over 20k seeded
+        // draws must land within a few standard errors of those values
+        let sigma = 0.5f64;
+        let model = StragglerModel::LogNormal { sigma };
+        let mut rng = Pcg32::new(31, 2);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| model.sample(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let want_mean = (sigma * sigma / 2.0).exp(); // ≈ 1.1331
+        let want_var = ((sigma * sigma).exp() - 1.0) * (sigma * sigma).exp(); // ≈ 0.3647
+        assert!((mean - want_mean).abs() < 0.03, "mean {mean} vs {want_mean}");
+        assert!((var - want_var).abs() < 0.05, "var {var} vs {want_var}");
+    }
+
+    #[test]
+    fn bernoulli_moments_match_the_closed_form() {
+        // X = 1 + (s−1)·B(p) has mean 1 + p(s−1) and variance
+        // p(1−p)(s−1)²
+        let (p, s) = (0.2f64, 5.0f64);
+        let model = StragglerModel::Bernoulli { prob: p, slowdown: s };
+        let mut rng = Pcg32::new(17, 4);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| model.sample(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let want_mean = 1.0 + p * (s - 1.0); // 1.8
+        let want_var = p * (1.0 - p) * (s - 1.0) * (s - 1.0); // 2.56
+        assert!((mean - want_mean).abs() < 0.06, "mean {mean} vs {want_mean}");
+        assert!((var - want_var).abs() < 0.15, "var {var} vs {want_var}");
+    }
+
+    #[test]
     fn parse_round_trips_and_validates() {
         assert_eq!(StragglerModel::parse("off").unwrap(), StragglerModel::Off);
         assert_eq!(

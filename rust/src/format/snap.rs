@@ -102,7 +102,10 @@ impl SnapReader {
         let mut d = Dec::new(&body[4..]);
         let version = d.u32()?;
         let count = d.u32()? as usize;
-        let mut sections = Vec::with_capacity(count);
+        // no pre-allocation from the untrusted count: a crafted container
+        // declaring u32::MAX sections (behind a valid checksum) must fail
+        // the first section read, not abort in the allocator
+        let mut sections = Vec::new();
         for _ in 0..count {
             let name_len = d.u8()? as usize;
             let name = std::str::from_utf8(d.bytes_raw(name_len)?)
@@ -415,6 +418,22 @@ mod tests {
         e.put_u64(1 << 40);
         let b = e.into_bytes();
         assert!(Dec::new(&b).f32s().unwrap_err().contains("exceeds"));
+    }
+
+    #[test]
+    fn huge_declared_section_count_is_rejected_cleanly() {
+        // a crafted container declaring u32::MAX sections behind a
+        // *valid* checksum must fail the first (missing) section read,
+        // not abort allocating a section table — regression for the
+        // `Vec::with_capacity(count)` it used to do
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&u32::MAX.to_le_bytes()); // section count
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        let err = SnapReader::from_bytes(&out).unwrap_err();
+        assert!(err.contains("unexpected end"), "{err}");
     }
 
     #[test]

@@ -24,7 +24,10 @@
 //!   hierarchy over a slower uplink) and exact byte/round accounting.
 //! * [`fabric`] — heterogeneous fleet simulation: per-worker speed
 //!   profiles, seeded straggler processes and collective topologies that
-//!   drive the simulated-time axis without ever touching the trajectory.
+//!   drive the simulated-time axis without ever touching the trajectory,
+//!   plus seeded partial participation (worker dropout / federated
+//!   sampling) — the one fabric knob that *does* change the trajectory,
+//!   deterministically per seed.
 //! * [`data`] — synthetic datasets matching the paper's three tasks, plus
 //!   iid / label-sharded / Dirichlet partitioners (identical vs
 //!   non-identical case).
@@ -149,6 +152,43 @@
 //!
 //! (CLI: a `[fabric]` TOML table, or `vrl-sgd train --config run.toml
 //! --stragglers lognormal:0.5 --topology two-level:2`.)
+//!
+//! Real fleets also *lose* workers: with a participation model, a
+//! round's absent workers take no local steps, pay no communication and
+//! are excluded from the averaging — the standard federated
+//! partial-participation regime. This is the one fabric knob that
+//! legitimately changes the trajectory, and it stays a seeded pure
+//! function of the spec: fixed-seed dropout runs are bitwise
+//! reproducible, checkpoint-resumable mid-outage, and
+//! `ParticipationModel::Full` is bitwise identical to no model at all
+//! (`rust/tests/participation.rs`). The algorithms cooperate — VRL-SGD's
+//! Σ_i Δ_i = 0 invariant holds across every dropout pattern:
+//!
+//! ```no_run
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
+//! let out = Trainer::new(task)
+//!     .algorithm(AlgorithmKind::VrlSgd)
+//!     .partition(Partition::LabelSharded)
+//!     .workers(8)
+//!     .period(20)
+//!     .steps(2000)
+//!     // every worker independently misses ~20% of rounds
+//!     .participation(ParticipationModel::Bernoulli { drop: 0.2 })
+//!     .run()
+//!     .unwrap();
+//! let mean_present = out.history.sync_rows.iter().map(|r| r.present_workers).sum::<usize>()
+//!     as f64 / out.history.sync_rows.len() as f64;
+//! println!(
+//!     "mean presence {mean_present:.2}/8, {} empty rounds skipped",
+//!     out.skipped_rounds
+//! );
+//! ```
+//!
+//! (CLI: `--dropout bernoulli:0.2`, `--dropout group:0.3` with a
+//! two-level topology, or the deterministic `--sampler round-robin:4`;
+//! TOML: `fabric.dropout` / `fabric.sampler` keys.)
 
 pub mod analysis;
 pub mod benchutil;
@@ -173,7 +213,8 @@ pub mod prelude {
     pub use crate::checkpoint::{Checkpointer, Snapshot};
     pub use crate::config::{AlgorithmKind, NetworkSpec, Partition, TaskKind, TrainSpec};
     pub use crate::fabric::{
-        FabricSpec, Fleet, FleetState, SpeedProfile, StragglerModel, TopologyKind,
+        FabricSpec, Fleet, FleetState, ParticipationModel, Roster, RosterState,
+        SpeedProfile, StragglerModel, TopologyKind,
     };
     #[allow(deprecated)]
     pub use crate::coordinator::run_training;

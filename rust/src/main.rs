@@ -32,6 +32,8 @@ COMMANDS:
         [--checkpoint-keep <n>] [--resume]
         [--stragglers <off|lognormal:<sigma>|bernoulli:<p>:<x>>]
         [--topology <ring|naive|tree|two-level[:groups]>]
+        [--dropout <off|bernoulli:<p>|group:<p>>]
+        [--sampler <all|round-robin:<m>>]
                                       run one training job (the optional
                                       [schedule] table maps to lr decay /
                                       stagewise periods; --threads > 1
@@ -48,7 +50,13 @@ COMMANDS:
                                       --topology override the [fabric]
                                       table — they move only the
                                       simulated clock and communication
-                                      accounting, never the trajectory)
+                                      accounting, never the trajectory;
+                                      --dropout / --sampler override the
+                                      fabric participation keys: absent
+                                      workers skip whole rounds, so the
+                                      trajectory changes — but stays a
+                                      seeded, reproducible function of
+                                      the spec)
   fig1|fig2|fig5|fig6 [--paper] [--out <csv>]
                                       epoch-loss figures (1/2: paper k;
                                       5: k/2; 6: 2k)
@@ -165,8 +173,18 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
             if let Some(t) = args.get("topology") {
                 cfg.spec.fabric.set_topology_flag(t)?;
             }
+            if args.has("dropout") && args.has("sampler") {
+                return Err("--dropout and --sampler are mutually exclusive".into());
+            }
+            if let Some(d) = args.get("dropout") {
+                cfg.spec.fabric.set_dropout_flag(d)?;
+            }
+            if let Some(s) = args.get("sampler") {
+                cfg.spec.fabric.set_sampler_flag(s)?;
+            }
             // CLI fabric overrides re-enter validation (worker-count
-            // bounds, uplink sanity) before anything runs
+            // bounds, uplink sanity, participation ranges) before
+            // anything runs
             cfg.spec.validate()?;
             if let Some(dir) = args.get("checkpoint-dir") {
                 cfg.checkpoint.dir = Some(dir.to_string());
@@ -229,14 +247,15 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
             let out = trainer.run()?;
             println!(
                 "{}: loss {:.6} -> {:.6} in {} rounds ({} bytes, {:.3}s simulated, \
-                 {:.3}s barrier wait)",
+                 {:.3}s barrier wait, {} empty round(s) skipped)",
                 out.algorithm,
                 out.initial_loss(),
                 out.final_loss(),
                 out.comm.rounds,
                 out.comm.bytes,
                 out.sim_time.total(),
-                out.sim_time.wait_s
+                out.sim_time.wait_s,
+                out.skipped_rounds
             );
             if let Some(path) = cfg.output {
                 write_report(&path, &out.history.sync_csv()).map_err(|e| e.to_string())?;

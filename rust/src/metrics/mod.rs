@@ -11,8 +11,8 @@
 //!   (Figures 3–4) plots these.
 
 /// Header line shared by `History::sync_csv` and `trainer::CsvSink`.
-pub const SYNC_CSV_HEADER: &str =
-    "round,step,train_loss,worker_variance,comm_rounds,comm_bytes,sim_time_s,straggler_wait_s\n";
+pub const SYNC_CSV_HEADER: &str = "round,step,train_loss,worker_variance,comm_rounds,\
+     comm_bytes,sim_time_s,straggler_wait_s,present_workers,skipped_rounds\n";
 
 /// One record per synchronization round.
 #[derive(Debug, Clone, PartialEq)]
@@ -35,6 +35,13 @@ pub struct SyncRow {
     /// critical-path compute time minus the mean per-worker compute time
     /// (see `fabric::RoundTiming`). Zero on a homogeneous fleet.
     pub straggler_wait_s: f64,
+    /// Workers that participated in this round (took local steps and
+    /// joined the sync). Equals the fleet size without a participation
+    /// model; `0` marks a skipped (empty) round.
+    pub present_workers: usize,
+    /// Cumulative rounds skipped because sampling left zero participants
+    /// (see the session driver's empty-round policy).
+    pub skipped_rounds: u64,
 }
 
 impl SyncRow {
@@ -44,7 +51,7 @@ impl SyncRow {
     /// resumed-stream-matches-history contract has one format to drift.
     pub fn csv_line(&self) -> String {
         format!(
-            "{},{},{:.8e},{:.8e},{},{},{:.6e},{:.6e}\n",
+            "{},{},{:.8e},{:.8e},{},{},{:.6e},{:.6e},{},{}\n",
             self.round,
             self.step,
             self.train_loss,
@@ -52,7 +59,9 @@ impl SyncRow {
             self.comm_rounds,
             self.comm_bytes,
             self.sim_time_s,
-            self.straggler_wait_s
+            self.straggler_wait_s,
+            self.present_workers,
+            self.skipped_rounds
         )
     }
 }
@@ -169,6 +178,8 @@ mod tests {
                 comm_bytes: 100,
                 sim_time_s: 0.1,
                 straggler_wait_s: 0.01,
+                present_workers: 4,
+                skipped_rounds: 0,
             });
         }
         h

@@ -119,19 +119,27 @@ pub(crate) struct WorkerCell<'a> {
     pub losses: &'a mut Vec<f64>,
 }
 
-/// Zip the session's parallel vectors into per-worker cells.
+/// Zip the session's parallel vectors into per-worker cells, keeping
+/// only the workers `mask` marks present — a round's absent workers get
+/// no cell and therefore take no local steps (their params, Δ, RNG
+/// stream and corrector state are untouched). A full mask reproduces the
+/// pre-participation behaviour exactly.
 pub(crate) fn make_cells<'a>(
     workers: &'a mut [WorkerState],
     engines: &'a mut [Box<dyn StepEngine>],
     befores: &'a mut [Vec<f32>],
     losses: &'a mut [Vec<f64>],
+    mask: &[bool],
 ) -> Vec<WorkerCell<'a>> {
+    debug_assert_eq!(mask.len(), workers.len());
     workers
         .iter_mut()
         .zip(engines.iter_mut())
         .zip(befores.iter_mut())
         .zip(losses.iter_mut())
-        .map(|(((state, engine), before), losses)| WorkerCell {
+        .zip(mask.iter())
+        .filter(|(_, &present)| present)
+        .map(|((((state, engine), before), losses), _)| WorkerCell {
             state,
             engine: engine.as_mut(),
             before,

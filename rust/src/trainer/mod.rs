@@ -49,7 +49,10 @@ pub use schedule::{
 use crate::checkpoint::Snapshot;
 use crate::comm::Cluster;
 use crate::config::{AlgorithmKind, NetworkSpec, Partition, TaskKind, TrainSpec};
-use crate::fabric::{FabricSpec, Fleet, FABRIC_STREAM_LANE};
+use crate::fabric::{
+    FabricSpec, Fleet, ParticipationModel, Roster, FABRIC_STREAM_LANE,
+    PARTICIPATION_STREAM_LANE,
+};
 use crate::coordinator::{make_algorithm, TrainOutput};
 use crate::coordinator::WorkerState;
 use crate::engine::{build_pure_engines, StepEngine};
@@ -191,11 +194,23 @@ impl Trainer {
     }
 
     /// Simulated cluster fabric: per-worker speed profile, straggler
-    /// process and collective topology (see [`crate::fabric`]). Shapes
-    /// only the simulated-time axis and communication accounting — the
-    /// trajectory is bitwise identical to the homogeneous default.
+    /// process, collective topology and participation model (see
+    /// [`crate::fabric`]). The timing knobs shape only the
+    /// simulated-time axis and communication accounting — the trajectory
+    /// is bitwise identical to the homogeneous default; the
+    /// participation model is the deliberate exception (absent workers
+    /// skip rounds, so the trajectory changes — deterministically per
+    /// seed).
     pub fn fabric(mut self, fabric: FabricSpec) -> Self {
         self.spec.fabric = fabric;
+        self
+    }
+
+    /// Per-round worker participation (dropout / federated sampling) —
+    /// shorthand for setting [`FabricSpec::participation`] alone. See
+    /// [`crate::fabric::ParticipationModel`].
+    pub fn participation(mut self, model: ParticipationModel) -> Self {
+        self.spec.fabric.participation = model;
         self
     }
 
@@ -418,8 +433,14 @@ impl Session {
 
     /// Drive the run to completion (or early stop). The loop is the
     /// paper's synchronous model: for each round, `k` lockstep local
-    /// iterations on every worker (driven by the configured
-    /// [`Executor`]), then `Algorithm::sync`, then metrics.
+    /// iterations on every *participating* worker (driven by the
+    /// configured [`Executor`]), then `Algorithm::sync` over the present
+    /// set, then metrics. Without a participation model every round is a
+    /// full round — the exact pre-participation behaviour, bit for bit.
+    /// A round whose sampled present set is empty is skipped
+    /// deterministically: nobody steps, no collective runs, the
+    /// simulated clock still pays the nominal round length, and the
+    /// `skipped_rounds` counter (and metric column) records it.
     pub fn run(mut self) -> Result<TrainOutput, String> {
         let spec = &self.spec;
         let n = spec.workers;
@@ -450,6 +471,10 @@ impl Session {
         let mut cluster = Cluster::new(n, &spec.network, spec.fabric.allreduce_algo())
             .with_uplink(spec.fabric.uplink_or(&spec.network));
         let mut fleet = Fleet::new(&spec.fabric, n, root.split(FABRIC_STREAM_LANE));
+        // participation draws come from their own lane, sampled once per
+        // round on the driver thread — presence is a pure function of
+        // (seed, spec, round), independent of the executor
+        let mut roster = Roster::new(&spec.fabric, n, root.split(PARTICIPATION_STREAM_LANE));
         let time_model = TimeModel::from_dims(dim, spec.batch);
         let mut sim_time = SimTime::default();
 
@@ -468,6 +493,7 @@ impl Session {
                 .map_err(|e| format!("restore algorithm state: {e}"))?;
             cluster.restore_stats(snap.comm);
             fleet.restore_state(&snap.fabric);
+            roster.restore_state(&snap.roster);
             sim_time = snap.sim_time;
             history = snap.history;
             last_loss = snap.last_loss;
@@ -509,6 +535,9 @@ impl Session {
         let mut befores: Vec<Vec<f32>> =
             vec![vec![0.0f32; if wants_post { dim } else { 0 }]; n];
         let mut step_losses: Vec<Vec<f64>> = vec![Vec::new(); n];
+        // per-round presence (all-true without a participation model)
+        let mut mask = vec![true; n];
+        let mut present_idx: Vec<usize> = (0..n).collect();
 
         while step < spec.steps {
             let lr = self.lr_schedule.lr(round, step);
@@ -516,9 +545,25 @@ impl Session {
             // clamp is safe: the loop guard keeps steps − step ≥ 1
             let p = algo.period(round, base).clamp(1, spec.steps - step);
 
-            // local iterations: one worker-parallel shot per round, or
-            // stepwise when dense metrics watch every iteration
-            if spec.dense_metrics {
+            // who reaches this round: sampled before any step, so an
+            // absent worker takes no local iterations at all
+            let m = roster.sample_round(round, &mut mask);
+            if !roster.is_full() {
+                present_idx.clear();
+                present_idx.extend((0..n).filter(|&i| mask[i]));
+            }
+            // empty-round policy: when sampling leaves zero participants
+            // the round is skipped deterministically — nobody steps, no
+            // collective runs (comm counters hold still), but the
+            // coordinator's barrier still times the round out at the
+            // nominal homogeneous round length, and the skip is counted
+            let skipped = m == 0;
+            if skipped {
+                roster.note_skipped();
+                step += p;
+            } else if spec.dense_metrics {
+                // local iterations, stepwise: dense metrics watch every
+                // iteration
                 let ctx = StepCtx {
                     steps: 1,
                     lr,
@@ -535,13 +580,19 @@ impl Session {
                             engines.as_mut_slice(),
                             &mut befores,
                             &mut step_losses,
+                            &mask,
                         );
                         executor.run_round(&mut cells, &ctx);
                     }
                     step += 1;
-                    // reduce losses in worker order: bitwise-stable sum
-                    let loss_acc: f64 =
-                        step_losses.iter().map(|l| l.first().copied().unwrap_or(0.0)).sum();
+                    // reduce the participating workers' losses in worker
+                    // order: bitwise-stable sum
+                    let loss_acc: f64 = step_losses
+                        .iter()
+                        .zip(mask.iter())
+                        .filter(|(_, &present)| present)
+                        .map(|(l, _)| l.first().copied().unwrap_or(0.0))
+                        .sum();
                     let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
                     let var = tensor::worker_variance(&rows);
                     tensor::mean_rows(&mut mean_buf, &rows);
@@ -549,7 +600,7 @@ impl Session {
                         self.target.as_ref().map(|t| tensor::dist2_sq(&mean_buf, t));
                     let row = DenseRow {
                         step,
-                        mean_loss: loss_acc / n as f64,
+                        mean_loss: loss_acc / m as f64,
                         worker_variance: var,
                         dist_sq_to_target: dist,
                     };
@@ -561,6 +612,7 @@ impl Session {
                     }
                 }
             } else {
+                // local iterations: one worker-parallel shot per round
                 let ctx = StepCtx {
                     steps: p,
                     lr,
@@ -572,23 +624,45 @@ impl Session {
                     engines.as_mut_slice(),
                     &mut befores,
                     &mut step_losses,
+                    &mask,
                 );
                 executor.run_round(&mut cells, &ctx);
                 step += p;
             }
             // round compute cost: the sync barrier waits for the slowest
-            // worker this round (homogeneous fleets reduce to the exact
-            // seed behaviour, steps × step_s with zero wait)
-            let timing = fleet.round_timing(p, &time_model);
+            // *present* worker this round (homogeneous fleets reduce to
+            // the exact seed behaviour, steps × step_s with zero wait);
+            // a skipped round costs the nominal round length with no
+            // straggler draws
+            let timing = if skipped {
+                crate::fabric::RoundTiming {
+                    critical_s: p as f64 * time_model.step_s,
+                    wait_s: 0.0,
+                }
+            } else {
+                fleet.round_timing(p, &time_model, &mask)
+            };
             sim_time.charge_round(timing.critical_s, timing.wait_s);
 
-            // consensus gap just before averaging
+            // consensus gap just before averaging (over the whole fleet —
+            // absent workers' drift is part of the consensus state)
             let variance = {
                 let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
                 tensor::worker_variance(&rows)
             };
 
-            algo.sync(round, p, lr, &mut workers, &mut cluster);
+            if !skipped {
+                // algorithm cooperation: absent workers are announced,
+                // then the sync runs over the present set only
+                if m < n {
+                    for (i, w) in workers.iter_mut().enumerate() {
+                        if !mask[i] {
+                            algo.on_absent(round, w);
+                        }
+                    }
+                }
+                algo.sync(round, p, lr, &mut workers, &present_idx, &mut cluster);
+            }
             let comm = cluster.stats();
             sim_time.comm_s = comm.sim_time_s;
 
@@ -598,6 +672,7 @@ impl Session {
                 period: p,
                 lr,
                 worker_variance: variance,
+                present_workers: m,
                 comm,
             };
             for o in self.observers.iter_mut() {
@@ -628,6 +703,8 @@ impl Session {
                 comm_bytes: comm.bytes,
                 sim_time_s: sim_time.total(),
                 straggler_wait_s: timing.wait_s,
+                present_workers: m,
+                skipped_rounds: roster.skipped_rounds(),
             };
             for s in self.sinks.iter_mut() {
                 s.on_sync_row(&row);
@@ -647,6 +724,7 @@ impl Session {
                 train_loss,
                 evaluated,
                 worker_variance: variance,
+                present_workers: m,
                 comm,
                 sim_time,
             };
@@ -665,6 +743,7 @@ impl Session {
                     comm,
                     sim_time,
                     fabric: fleet.state(),
+                    participation: roster.state(),
                     history: &history,
                     round,
                     step,
@@ -705,6 +784,7 @@ impl Session {
             final_params: mean_buf,
             algorithm: algo.name(),
             delta_residual,
+            skipped_rounds: roster.skipped_rounds(),
         })
     }
 }

@@ -38,6 +38,9 @@ pub struct SyncInfo {
     pub lr: f32,
     /// Consensus gap `(1/N) Σ ‖x_i − x̂‖²` measured *before* the sync.
     pub worker_variance: f64,
+    /// Workers that participated in this round (`0` on a skipped empty
+    /// round, where no collective actually ran).
+    pub present_workers: usize,
     /// Cumulative communication counters after the sync.
     pub comm: CommStats,
 }
@@ -62,6 +65,9 @@ pub struct RoundInfo {
     pub evaluated: bool,
     /// Consensus gap before the sync.
     pub worker_variance: f64,
+    /// Workers that participated in this round (`0` on a skipped empty
+    /// round).
+    pub present_workers: usize,
     /// Cumulative communication counters.
     pub comm: CommStats,
     /// Cumulative simulated wall-clock.
@@ -93,6 +99,10 @@ pub struct RunState<'a> {
     /// ([`crate::fabric::Fleet::state`]) — snapshotted so resumed runs
     /// replay the identical simulated timeline.
     pub fabric: crate::fabric::FleetState,
+    /// Position of the participation stream and skipped-round counter
+    /// ([`crate::fabric::Roster::state`]) — snapshotted so resumed runs
+    /// replay the identical presence pattern.
+    pub participation: crate::fabric::RosterState,
     /// History recorded so far (trimmed to the last row under
     /// `Trainer::stream_only`).
     pub history: &'a History,
@@ -322,6 +332,7 @@ mod tests {
             train_loss: loss,
             evaluated,
             worker_variance: 0.5 * (round + 1) as f64,
+            present_workers: 4,
             comm: CommStats::default(),
             sim_time: SimTime::default(),
         }
@@ -364,6 +375,7 @@ mod tests {
             period: 10,
             lr: 0.1,
             worker_variance: 2.0,
+            present_workers: 4,
             comm: CommStats::default(),
         });
         obs.on_sync(&SyncInfo {
@@ -372,6 +384,7 @@ mod tests {
             period: 10,
             lr: 0.1,
             worker_variance: 1.0,
+            present_workers: 4,
             comm: CommStats::default(),
         });
         obs.on_round_end(&info(1, 0.25, true));
@@ -393,6 +406,8 @@ mod tests {
             comm_bytes: 100,
             sim_time_s: 0.125,
             straggler_wait_s: 0.0625,
+            present_workers: 2,
+            skipped_rounds: 0,
         };
         let mut buf = Vec::new();
         {
@@ -420,6 +435,7 @@ mod tests {
                 period: 10,
                 lr: 0.05,
                 worker_variance: 0.0,
+                present_workers: 4,
                 comm: CommStats::default(),
             });
         }

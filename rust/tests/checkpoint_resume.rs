@@ -7,62 +7,22 @@
 //! the state a killed process leaves behind: the last atomic snapshot on
 //! disk, nothing else). Corrupted / truncated / version-mismatched
 //! snapshots must be rejected with a clear error.
+//!
+//! Built on the shared `tests/common` harness (crash injection + bitwise
+//! comparators); the seeded snapshot fuzz loop lives in
+//! `tests/snap_fuzz.rs`, and the dropout-resume drills in
+//! `tests/participation.rs`.
 
+mod common;
+
+use common::{crash_and_snapshot, temp_dir, CRASH_ROUND};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::path::{Path, PathBuf};
 use vrl_sgd::checkpoint::{latest_snapshot, Checkpointer, Snapshot};
 use vrl_sgd::format::snap::SnapWriter;
 use vrl_sgd::prelude::*;
 
-const CRASH_ROUND: usize = 7;
-
-fn task() -> TaskKind {
-    TaskKind::SoftmaxSynthetic { classes: 4, features: 8, samples_per_worker: 48 }
-}
-
 fn base(algorithm: AlgorithmKind, threads: usize) -> Trainer {
-    Trainer::new(task())
-        .algorithm(algorithm)
-        .workers(4)
-        .period(5)
-        .lr(0.05)
-        .batch(8)
-        .steps(60)
-        .seed(11)
-        .partition(Partition::LabelSharded)
-        .parallelism(threads)
-}
-
-fn temp_dir(tag: &str) -> PathBuf {
-    let d = std::env::temp_dir().join(format!("vrl_resume_{tag}_{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&d);
-    d
-}
-
-/// Crash injection: panics at the end of `self.0`, mid-run.
-struct CrashAt(usize);
-
-impl RoundObserver for CrashAt {
-    fn on_round_end(&mut self, info: &RoundInfo) {
-        if info.round == self.0 {
-            panic!("injected crash at round {}", info.round);
-        }
-    }
-}
-
-/// Run with checkpointing, crash at `CRASH_ROUND`, return the newest
-/// snapshot left on disk.
-fn crash_and_snapshot(algorithm: AlgorithmKind, threads: usize, dir: &Path) -> PathBuf {
-    let crashed = catch_unwind(AssertUnwindSafe(|| {
-        base(algorithm, threads)
-            .observer(Checkpointer::new(dir).every(3).keep_last(2))
-            .observer(CrashAt(CRASH_ROUND))
-            .run()
-    }));
-    assert!(crashed.is_err(), "{algorithm:?}: the injected crash must abort the run");
-    latest_snapshot(dir)
-        .unwrap()
-        .unwrap_or_else(|| panic!("{algorithm:?}: no snapshot survived the crash"))
+    common::trainer(algorithm, threads, 11, 60)
 }
 
 #[test]
@@ -70,20 +30,15 @@ fn resume_is_bitwise_identical_for_all_algorithms_and_executors() {
     for algorithm in AlgorithmKind::ALL {
         for threads in [1usize, 2] {
             let full = base(algorithm, threads).run().unwrap();
-            let dir = temp_dir(&format!("{}_{threads}", algorithm.name()));
-            let snap_path = crash_and_snapshot(algorithm, threads, &dir);
+            let dir = temp_dir(&format!("resume_{}_{threads}", algorithm.name()));
+            let snap_path = crash_and_snapshot(|| base(algorithm, threads), &dir);
             let resumed = base(algorithm, threads)
                 .resume_from(&snap_path)
                 .unwrap()
                 .run()
                 .unwrap();
             let tag = format!("{algorithm:?} x {threads} thread(s)");
-            assert_eq!(resumed.final_params, full.final_params, "{tag}: params");
-            assert_eq!(resumed.history, full.history, "{tag}: history");
-            assert_eq!(resumed.comm, full.comm, "{tag}: comm counters");
-            assert_eq!(resumed.sim_time, full.sim_time, "{tag}: simulated time");
-            assert_eq!(resumed.delta_residual, full.delta_residual, "{tag}: Σ Δ residual");
-            assert_eq!(resumed.algorithm, full.algorithm, "{tag}: name");
+            common::assert_identical(&resumed, &full, &tag);
             let _ = std::fs::remove_dir_all(&dir);
         }
     }
@@ -96,7 +51,7 @@ fn threaded_resume_of_sequential_checkpoint_is_identical() {
     // versa) with the same bits
     let full = base(AlgorithmKind::VrlSgd, 1).run().unwrap();
     let dir = temp_dir("cross_exec");
-    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    let snap_path = crash_and_snapshot(|| base(AlgorithmKind::VrlSgd, 1), &dir);
     let resumed =
         base(AlgorithmKind::VrlSgd, 2).resume_from(&snap_path).unwrap().run().unwrap();
     assert_eq!(resumed.final_params, full.final_params);
@@ -111,7 +66,7 @@ fn comm_and_sim_time_continue_across_the_boundary() {
     // the boundary values, and boundary + post-boundary tail == final.
     let full = base(AlgorithmKind::VrlSgd, 1).run().unwrap();
     let dir = temp_dir("counters");
-    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    let snap_path = crash_and_snapshot(|| base(AlgorithmKind::VrlSgd, 1), &dir);
     let snap = Snapshot::load(&snap_path).unwrap();
     assert!(snap.comm.rounds > 0 && snap.comm.bytes > 0, "boundary counters are live");
     assert!(snap.sim_time.total() > 0.0);
@@ -145,7 +100,7 @@ fn comm_and_sim_time_continue_across_the_boundary() {
 #[test]
 fn corrupted_snapshot_is_rejected() {
     let dir = temp_dir("corrupt");
-    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    let snap_path = crash_and_snapshot(|| base(AlgorithmKind::VrlSgd, 1), &dir);
     let mut bytes = std::fs::read(&snap_path).unwrap();
     let mid = bytes.len() / 2;
     bytes[mid] ^= 0x08;
@@ -159,7 +114,7 @@ fn corrupted_snapshot_is_rejected() {
 #[test]
 fn truncated_snapshot_is_rejected() {
     let dir = temp_dir("truncate");
-    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    let snap_path = crash_and_snapshot(|| base(AlgorithmKind::VrlSgd, 1), &dir);
     let bytes = std::fs::read(&snap_path).unwrap();
     for cut in [7usize, bytes.len() / 3, bytes.len() - 2] {
         let bad = dir.join("round-88888888.snap");
@@ -189,7 +144,7 @@ fn version_mismatched_snapshot_is_rejected() {
 #[test]
 fn mismatched_configuration_is_rejected_at_build() {
     let dir = temp_dir("mismatch");
-    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    let snap_path = crash_and_snapshot(|| base(AlgorithmKind::VrlSgd, 1), &dir);
     // wrong algorithm
     let err = base(AlgorithmKind::LocalSgd, 1)
         .resume_from(&snap_path)
@@ -235,7 +190,7 @@ fn snapshot_preserves_delta_zero_sum_invariant() {
     // the Δ_i live in the snapshot verbatim; in particular their sum
     // stays at floating-point-noise level through a save/load cycle
     let dir = temp_dir("invariant");
-    let snap_path = crash_and_snapshot(AlgorithmKind::VrlSgd, 1, &dir);
+    let snap_path = crash_and_snapshot(|| base(AlgorithmKind::VrlSgd, 1), &dir);
     let snap = Snapshot::load(&snap_path).unwrap();
     let dim = snap.dim;
     let mut sum = vec![0.0f32; dim];
@@ -264,7 +219,7 @@ fn resumed_csv_sink_reproduces_full_stream() {
         .sink(CsvSink::file(full_csv.to_str().unwrap()).unwrap())
         .run()
         .unwrap();
-    let snap_path = crash_and_snapshot(AlgorithmKind::LocalSgd, 1, &dir);
+    let snap_path = crash_and_snapshot(|| base(AlgorithmKind::LocalSgd, 1), &dir);
     let resumed = base(AlgorithmKind::LocalSgd, 1)
         .resume_from(&snap_path)
         .unwrap()
@@ -305,19 +260,6 @@ fn resume_at_final_round_yields_finished_run() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
-/// A heterogeneous fleet for the fabric resume drills: static spread,
-/// live straggler stream, two-level topology over a slow uplink.
-fn fabric() -> vrl_sgd::fabric::FabricSpec {
-    use vrl_sgd::fabric::*;
-    FabricSpec {
-        speeds: SpeedProfile::Spread(1.0),
-        stragglers: StragglerModel::LogNormal { sigma: 0.5 },
-        topology: TopologyKind::TwoLevel,
-        groups: 2,
-        uplink: Some(vrl_sgd::config::NetworkSpec { latency_us: 500.0, bandwidth_gbps: 0.1 }),
-    }
-}
-
 #[test]
 fn fabric_resume_reproduces_the_simulated_timeline() {
     // the fleet's straggler stream rides in the snapshot: an interrupted
@@ -325,32 +267,24 @@ fn fabric_resume_reproduces_the_simulated_timeline() {
     // history's sim_time_s / straggler_wait_s columns included), under
     // either executor
     for threads in [1usize, 2] {
-        let full = base(AlgorithmKind::VrlSgd, threads).fabric(fabric()).run().unwrap();
+        let full =
+            base(AlgorithmKind::VrlSgd, threads).fabric(common::hetero_fabric()).run().unwrap();
         assert!(full.sim_time.wait_s > 0.0, "fabric must be live in this drill");
         let dir = temp_dir(&format!("fabric_{threads}"));
-        let crashed = catch_unwind(AssertUnwindSafe(|| {
-            base(AlgorithmKind::VrlSgd, threads)
-                .fabric(fabric())
-                .observer(Checkpointer::new(&dir).every(3).keep_last(2))
-                .observer(CrashAt(CRASH_ROUND))
-                .run()
-        }));
-        assert!(crashed.is_err());
-        let snap_path = latest_snapshot(&dir).unwrap().unwrap();
+        let snap_path = crash_and_snapshot(
+            || base(AlgorithmKind::VrlSgd, threads).fabric(common::hetero_fabric()),
+            &dir,
+        );
         let snap = Snapshot::load(&snap_path).unwrap();
         assert!(snap.fabric.rounds_sampled > 0, "stream position must be live");
         assert!(snap.sim_time.wait_s > 0.0);
         let resumed = base(AlgorithmKind::VrlSgd, threads)
-            .fabric(fabric())
+            .fabric(common::hetero_fabric())
             .resume_from(&snap_path)
             .unwrap()
             .run()
             .unwrap();
-        let tag = format!("{threads} thread(s)");
-        assert_eq!(resumed.final_params, full.final_params, "{tag}");
-        assert_eq!(resumed.history, full.history, "{tag}: history incl. timing columns");
-        assert_eq!(resumed.comm, full.comm, "{tag}");
-        assert_eq!(resumed.sim_time, full.sim_time, "{tag}: simulated clock");
+        common::assert_identical(&resumed, &full, &format!("{threads} thread(s)"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }
@@ -362,9 +296,9 @@ fn fabric_mismatch_is_rejected_at_build() {
     let dir = temp_dir("fabric_mismatch");
     let crashed = catch_unwind(AssertUnwindSafe(|| {
         base(AlgorithmKind::VrlSgd, 1)
-            .fabric(fabric())
+            .fabric(common::hetero_fabric())
             .observer(Checkpointer::new(&dir).every(3).keep_last(2))
-            .observer(CrashAt(CRASH_ROUND))
+            .observer(common::CrashAt(CRASH_ROUND))
             .run()
     }));
     assert!(crashed.is_err());
@@ -376,7 +310,7 @@ fn fabric_mismatch_is_rejected_at_build() {
         .err()
         .unwrap();
     assert!(err.contains("fabric"), "{err}");
-    let mut other = fabric();
+    let mut other = common::hetero_fabric();
     other.stragglers = vrl_sgd::fabric::StragglerModel::Off;
     let err = base(AlgorithmKind::VrlSgd, 1)
         .fabric(other)
@@ -388,7 +322,7 @@ fn fabric_mismatch_is_rejected_at_build() {
     assert!(err.contains("fabric"), "{err}");
     // the matching fabric builds fine
     base(AlgorithmKind::VrlSgd, 1)
-        .fabric(fabric())
+        .fabric(common::hetero_fabric())
         .resume_from(&snap_path)
         .unwrap()
         .build()

@@ -1,0 +1,169 @@
+//! Shared equivalence-test harness for the integration suites.
+//!
+//! Every bitwise-equivalence drill in this repo has the same skeleton:
+//! build two trainers that are supposed to be indistinguishable, run
+//! both, and compare every observable surface of their `TrainOutput`s
+//! bit for bit. That skeleton used to be duplicated (with drift) across
+//! `trainer_api.rs`, `parallel_exec.rs`, `checkpoint_resume.rs` and
+//! `fabric.rs`; it lives here now, and `participation.rs` builds its new
+//! guarantees on the same pieces:
+//!
+//! * [`spec`] / [`trainer`] — the standard 4-worker label-sharded
+//!   softmax run, parameterized by algorithm / executor / seed / budget;
+//! * [`assert_identical`] — the *full* bitwise comparator (history incl.
+//!   every metric column, comm counters, final params, Δ residual,
+//!   simulated time, skipped rounds);
+//! * [`assert_trajectory_identical`] — the trajectory-only comparator
+//!   (params, per-round losses/variances/steps, collective counts) for
+//!   drills where the simulated-time axis is *expected* to move;
+//! * [`assert_runs_identical`] — the run-pair builder: construct both
+//!   sides, run, compare;
+//! * [`CrashAt`] / [`crash_and_snapshot`] — crash injection for the
+//!   checkpoint/resume drills (a panicking observer caught with
+//!   `catch_unwind` leaves exactly what a killed process leaves: the
+//!   last atomic snapshot on disk).
+//!
+//! Each suite compiles this module separately (`mod common;`), so not
+//! every helper is used by every binary — hence the file-level
+//! `allow(dead_code)`.
+
+#![allow(dead_code)]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use vrl_sgd::checkpoint::{latest_snapshot, Checkpointer};
+use vrl_sgd::coordinator::TrainOutput;
+use vrl_sgd::prelude::*;
+
+/// Round the crash-injection observer panics at (mid-run for the
+/// standard 60-step / k=5 budget: 12 rounds, snapshots every 3).
+pub const CRASH_ROUND: usize = 7;
+
+/// The standard small softmax task every suite trains.
+pub fn softmax_task() -> TaskKind {
+    TaskKind::SoftmaxSynthetic { classes: 4, features: 8, samples_per_worker: 48 }
+}
+
+/// The standard spec: 4 workers, k = 5, γ = 0.05, batch 8, EASGD ρ
+/// sized for 4 workers; `seed` and `steps` vary per suite.
+pub fn spec(algorithm: AlgorithmKind, seed: u64, steps: usize) -> TrainSpec {
+    TrainSpec {
+        algorithm,
+        workers: 4,
+        period: 5,
+        lr: 0.05,
+        batch: 8,
+        steps,
+        seed,
+        easgd_rho: 0.9 / 4.0,
+        ..TrainSpec::default()
+    }
+}
+
+/// The standard trainer over [`spec`]: label-sharded partition, explicit
+/// executor choice.
+pub fn trainer(algorithm: AlgorithmKind, threads: usize, seed: u64, steps: usize) -> Trainer {
+    Trainer::new(softmax_task())
+        .spec(spec(algorithm, seed, steps))
+        .partition(Partition::LabelSharded)
+        .parallelism(threads)
+}
+
+/// Full bitwise comparator: every observable surface of the two outputs
+/// must agree exactly.
+pub fn assert_identical(a: &TrainOutput, b: &TrainOutput, ctx: &str) {
+    assert_eq!(a.history, b.history, "{ctx}: history differs");
+    assert_eq!(a.comm, b.comm, "{ctx}: comm counters differ");
+    assert_eq!(a.final_params, b.final_params, "{ctx}: final params differ");
+    assert_eq!(a.delta_residual, b.delta_residual, "{ctx}: delta residual differs");
+    assert_eq!(a.algorithm, b.algorithm, "{ctx}: algorithm name differs");
+    assert_eq!(a.sim_time, b.sim_time, "{ctx}: simulated time differs");
+    assert_eq!(a.skipped_rounds, b.skipped_rounds, "{ctx}: skipped rounds differ");
+}
+
+/// Run-pair builder: construct both sides, run them, compare bitwise.
+pub fn assert_runs_identical(
+    ctx: &str,
+    mk_a: impl FnOnce() -> Trainer,
+    mk_b: impl FnOnce() -> Trainer,
+) {
+    let a = mk_a().run().unwrap_or_else(|e| panic!("{ctx}: left run failed: {e}"));
+    let b = mk_b().run().unwrap_or_else(|e| panic!("{ctx}: right run failed: {e}"));
+    assert_identical(&a, &b, ctx);
+}
+
+/// Trajectory-only comparator: everything the *optimization* can see
+/// must agree bitwise (params, per-round losses/variances/steps,
+/// collective counts, dense rows) while the simulated-time /
+/// byte-accounting columns are allowed to differ — the contract of the
+/// timing-only fabric knobs.
+pub fn assert_trajectory_identical(tag: &str, a: &TrainOutput, b: &TrainOutput) {
+    assert_eq!(a.final_params, b.final_params, "{tag}: params");
+    assert_eq!(a.delta_residual, b.delta_residual, "{tag}: Σ Δ residual");
+    assert_eq!(a.history.initial_loss.to_bits(), b.history.initial_loss.to_bits(), "{tag}");
+    assert_eq!(a.history.sync_rows.len(), b.history.sync_rows.len(), "{tag}: round count");
+    for (ra, rb) in a.history.sync_rows.iter().zip(b.history.sync_rows.iter()) {
+        let t = format!("{tag} round {}", ra.round);
+        assert_eq!(ra.round, rb.round, "{t}");
+        assert_eq!(ra.step, rb.step, "{t}: step");
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "{t}: loss");
+        assert_eq!(
+            ra.worker_variance.to_bits(),
+            rb.worker_variance.to_bits(),
+            "{t}: variance"
+        );
+        assert_eq!(ra.comm_rounds, rb.comm_rounds, "{t}: collective count");
+        assert_eq!(ra.present_workers, rb.present_workers, "{t}: present workers");
+        assert_eq!(ra.skipped_rounds, rb.skipped_rounds, "{t}: skipped rounds");
+    }
+    assert_eq!(a.history.dense_rows, b.history.dense_rows, "{tag}: dense rows");
+}
+
+/// The full heterogeneous fabric the fabric/checkpoint drills enable:
+/// 2x static spread, heavy-tailed stragglers, two-level topology over a
+/// 100x-slower uplink.
+pub fn hetero_fabric() -> FabricSpec {
+    FabricSpec {
+        speeds: SpeedProfile::Spread(1.0),
+        stragglers: StragglerModel::LogNormal { sigma: 0.5 },
+        topology: TopologyKind::TwoLevel,
+        groups: 2,
+        uplink: Some(NetworkSpec { latency_us: 500.0, bandwidth_gbps: 0.1 }),
+        ..FabricSpec::default()
+    }
+}
+
+/// Per-test scratch directory (removed and recreated empty).
+pub fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("vrl_common_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Crash injection: panics at the end of round `self.0`, mid-run.
+pub struct CrashAt(pub usize);
+
+impl RoundObserver for CrashAt {
+    fn on_round_end(&mut self, info: &RoundInfo) {
+        if info.round == self.0 {
+            panic!("injected crash at round {}", info.round);
+        }
+    }
+}
+
+/// Run `mk()` with checkpointing (every 3 rounds, keep 2), crash at
+/// [`CRASH_ROUND`], and return the newest snapshot left on disk —
+/// exactly the state a killed process leaves behind.
+pub fn crash_and_snapshot(mk: impl FnOnce() -> Trainer, dir: &Path) -> PathBuf {
+    let trainer = mk();
+    let crashed = catch_unwind(AssertUnwindSafe(|| {
+        trainer
+            .observer(Checkpointer::new(dir).every(3).keep_last(2))
+            .observer(CrashAt(CRASH_ROUND))
+            .run()
+    }));
+    assert!(crashed.is_err(), "the injected crash must abort the run");
+    latest_snapshot(dir)
+        .unwrap()
+        .unwrap_or_else(|| panic!("no snapshot survived the crash in {}", dir.display()))
+}

@@ -1,62 +1,23 @@
-//! Fabric contract: the heterogeneous-cluster simulation moves **only**
-//! the simulated clock and the communication accounting. For every
-//! algorithm and both executors, a run with speed profiles, stragglers
-//! and a hierarchical topology enabled must produce bitwise-identical
-//! parameters and per-round losses/variances to the homogeneous run —
-//! while its `SimTime`/`CommStats` (and the new per-round
-//! `straggler_wait_s` metric) demonstrably differ.
+//! Fabric contract: the heterogeneous-cluster *timing* simulation moves
+//! **only** the simulated clock and the communication accounting. For
+//! every algorithm and both executors, a run with speed profiles,
+//! stragglers and a hierarchical topology enabled must produce
+//! bitwise-identical parameters and per-round losses/variances to the
+//! homogeneous run — while its `SimTime`/`CommStats` (and the per-round
+//! `straggler_wait_s` metric) demonstrably differ. (The participation
+//! knob is the deliberate exception and has its own contract —
+//! `tests/participation.rs`.)
+//!
+//! Built on the shared `tests/common` harness (run builders + bitwise
+//! comparators).
 
+mod common;
+
+use common::{assert_trajectory_identical, hetero_fabric};
 use vrl_sgd::prelude::*;
 
-fn task() -> TaskKind {
-    TaskKind::SoftmaxSynthetic { classes: 4, features: 8, samples_per_worker: 48 }
-}
-
 fn base(algorithm: AlgorithmKind, threads: usize) -> Trainer {
-    Trainer::new(task())
-        .algorithm(algorithm)
-        .workers(4)
-        .period(5)
-        .lr(0.05)
-        .batch(8)
-        .steps(60)
-        .seed(11)
-        .partition(Partition::LabelSharded)
-        .parallelism(threads)
-}
-
-/// The full fabric: 2x static spread, heavy-tailed stragglers, two-level
-/// topology over a 100x-slower uplink.
-fn hetero_fabric() -> FabricSpec {
-    FabricSpec {
-        speeds: SpeedProfile::Spread(1.0),
-        stragglers: StragglerModel::LogNormal { sigma: 0.5 },
-        topology: TopologyKind::TwoLevel,
-        groups: 2,
-        uplink: Some(NetworkSpec { latency_us: 500.0, bandwidth_gbps: 0.1 }),
-    }
-}
-
-/// Everything the trajectory can see must agree bitwise; only the
-/// simulated-time / communication columns may move.
-fn assert_trajectory_identical(tag: &str, a: &TrainOutput, b: &TrainOutput) {
-    assert_eq!(a.final_params, b.final_params, "{tag}: params");
-    assert_eq!(a.delta_residual, b.delta_residual, "{tag}: Σ Δ residual");
-    assert_eq!(a.history.initial_loss.to_bits(), b.history.initial_loss.to_bits(), "{tag}");
-    assert_eq!(a.history.sync_rows.len(), b.history.sync_rows.len(), "{tag}: round count");
-    for (ra, rb) in a.history.sync_rows.iter().zip(b.history.sync_rows.iter()) {
-        let t = format!("{tag} round {}", ra.round);
-        assert_eq!(ra.round, rb.round, "{t}");
-        assert_eq!(ra.step, rb.step, "{t}: step");
-        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "{t}: loss");
-        assert_eq!(
-            ra.worker_variance.to_bits(),
-            rb.worker_variance.to_bits(),
-            "{t}: variance"
-        );
-        assert_eq!(ra.comm_rounds, rb.comm_rounds, "{t}: collective count");
-    }
-    assert_eq!(a.history.dense_rows, b.history.dense_rows, "{tag}: dense rows");
+    common::trainer(algorithm, threads, 11, 60)
 }
 
 #[test]

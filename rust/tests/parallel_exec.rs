@@ -11,45 +11,20 @@
 //!   correction (the `Algorithm::finalize` flush);
 //! * an attached early-stop policy forces fresh loss evaluation, so the
 //!   stop round is independent of `eval_every`.
+//!
+//! Built on the shared `tests/common` harness (run builders + bitwise
+//! comparators).
 
-use vrl_sgd::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
+mod common;
+
+use common::{assert_identical, softmax_task, spec};
+use vrl_sgd::config::{AlgorithmKind, Partition, TrainSpec};
 use vrl_sgd::coordinator::TrainOutput;
 use vrl_sgd::prelude::Trainer;
 use vrl_sgd::trainer::StopAtLoss;
 
-fn softmax_task() -> TaskKind {
-    TaskKind::SoftmaxSynthetic { classes: 4, features: 8, samples_per_worker: 48 }
-}
-
-fn spec_for(algorithm: AlgorithmKind) -> TrainSpec {
-    TrainSpec {
-        algorithm,
-        workers: 4,
-        period: 5,
-        lr: 0.05,
-        batch: 8,
-        steps: 60,
-        seed: 23,
-        easgd_rho: 0.9 / 4.0,
-        ..TrainSpec::default()
-    }
-}
-
 fn run_with(algorithm: AlgorithmKind, threads: usize) -> TrainOutput {
-    Trainer::new(softmax_task())
-        .spec(spec_for(algorithm))
-        .partition(Partition::LabelSharded)
-        .parallelism(threads)
-        .run()
-        .unwrap()
-}
-
-fn assert_identical(a: &TrainOutput, b: &TrainOutput, ctx: &str) {
-    assert_eq!(a.history, b.history, "{ctx}: history differs");
-    assert_eq!(a.comm, b.comm, "{ctx}: comm counters differ");
-    assert_eq!(a.final_params, b.final_params, "{ctx}: final params differ");
-    assert_eq!(a.delta_residual, b.delta_residual, "{ctx}: delta residual differs");
-    assert_eq!(a.sim_time, b.sim_time, "{ctx}: simulated time differs");
+    common::trainer(algorithm, threads, 23, 60).run().unwrap()
 }
 
 /// Acceptance criterion: bitwise sequential-vs-threaded equivalence for
@@ -74,9 +49,8 @@ fn threaded_executor_is_bitwise_identical_for_all_algorithms() {
 #[test]
 fn spec_threads_knob_is_bitwise_identical() {
     let seq = run_with(AlgorithmKind::VrlSgd, 1);
-    let spec = TrainSpec { threads: 3, ..spec_for(AlgorithmKind::VrlSgd) };
     let via_spec = Trainer::new(softmax_task())
-        .spec(spec)
+        .spec(TrainSpec { threads: 3, ..spec(AlgorithmKind::VrlSgd, 23, 60) })
         .partition(Partition::LabelSharded)
         .run()
         .unwrap();
@@ -88,7 +62,10 @@ fn spec_threads_knob_is_bitwise_identical() {
 #[test]
 fn dense_metrics_stay_identical_under_threaded_request() {
     let mk = |threads: usize| {
-        let spec = TrainSpec { dense_metrics: true, ..spec_for(AlgorithmKind::MomentumLocalSgd) };
+        let spec = TrainSpec {
+            dense_metrics: true,
+            ..spec(AlgorithmKind::MomentumLocalSgd, 23, 60)
+        };
         Trainer::new(softmax_task())
             .spec(spec)
             .partition(Partition::LabelSharded)
@@ -123,7 +100,7 @@ fn momentum_comm_bytes_are_double_local_sgd() {
 #[test]
 fn cocod_final_model_includes_last_correction() {
     let mk = |algorithm| {
-        let spec = TrainSpec { steps: 40, period: 40, ..spec_for(algorithm) };
+        let spec = TrainSpec { steps: 40, period: 40, ..spec(algorithm, 23, 40) };
         Trainer::new(softmax_task())
             .spec(spec)
             .partition(Partition::LabelSharded)
@@ -153,9 +130,7 @@ fn early_stop_round_is_independent_of_eval_every() {
     let rows = &full.history.sync_rows;
     let threshold = rows[rows.len() / 2].train_loss;
     let stopped_rounds = |eval_every: usize| {
-        let out = Trainer::new(softmax_task())
-            .spec(spec_for(AlgorithmKind::VrlSgd))
-            .partition(Partition::LabelSharded)
+        let out = common::trainer(AlgorithmKind::VrlSgd, 1, 23, 60)
             .eval_every(eval_every)
             .early_stop(StopAtLoss(threshold))
             .run()

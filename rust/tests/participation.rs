@@ -1,0 +1,373 @@
+//! Partial-participation contract (`fabric::participation`), proven on
+//! the shared `tests/common` harness:
+//!
+//! * **Full ≡ no model** — a `ParticipationModel::Full` roster (and the
+//!   degenerate spellings whose presence pattern is all-present:
+//!   `Bernoulli { drop: 0 }`, `RoundRobin { count: N }`) is **bitwise
+//!   identical** to a run with no participation model, for all seven
+//!   algorithms under both executors.
+//! * **Seeded & executor-independent** — fixed-seed dropout runs are
+//!   bitwise reproducible, identical under sequential and threaded
+//!   executors, and fork when the seed changes.
+//! * **Resumable mid-outage** — an interrupted dropout run resumes from
+//!   its last snapshot bitwise identically to the uninterrupted run
+//!   (presence stream, skipped-round counter and metric columns
+//!   included), for all seven algorithms under both executors.
+//! * **Algorithm coherence** — VRL-SGD's Σ_i Δ_i = 0 invariant holds
+//!   after *every* sync under Bernoulli and group-outage dropout
+//!   (absent Δ are deferred, present increments cancel).
+//! * **Empty-round policy** — a round sampled empty is skipped
+//!   deterministically: no steps, no collective, the simulated clock
+//!   still pays the nominal round length, and `skipped_rounds` counts it.
+
+mod common;
+
+use common::{assert_identical, assert_runs_identical, crash_and_snapshot, temp_dir};
+use std::cell::RefCell;
+use std::rc::Rc;
+use vrl_sgd::checkpoint::Snapshot;
+use vrl_sgd::prelude::*;
+
+const WORKERS: usize = 4;
+
+fn base(algorithm: AlgorithmKind, threads: usize) -> Trainer {
+    common::trainer(algorithm, threads, 11, 60)
+}
+
+/// A two-level fabric for the group-outage drills (outages correlate
+/// over the collective's groups, so the topology is required).
+fn group_outage_fabric(drop: f64) -> FabricSpec {
+    FabricSpec {
+        topology: TopologyKind::TwoLevel,
+        groups: 2,
+        participation: ParticipationModel::GroupOutage { drop },
+        ..FabricSpec::default()
+    }
+}
+
+/// Acceptance criterion: participation = 1.0 is bitwise identical to
+/// running with no participation model at all — for every algorithm,
+/// both executors, and every all-present spelling of the model.
+#[test]
+fn full_participation_is_bitwise_identical_to_no_model() {
+    for algorithm in AlgorithmKind::ALL {
+        for threads in [1usize, 2] {
+            let baseline = base(algorithm, threads).run().unwrap();
+            for model in [
+                ParticipationModel::Full,
+                ParticipationModel::Bernoulli { drop: 0.0 },
+                ParticipationModel::RoundRobin { count: WORKERS },
+            ] {
+                let with = base(algorithm, threads).participation(model).run().unwrap();
+                let tag =
+                    format!("{algorithm:?} x {threads} thread(s) x {}", model.name());
+                assert_identical(&baseline, &with, &tag);
+                assert_eq!(with.skipped_rounds, 0, "{tag}");
+                assert!(
+                    with.history.sync_rows.iter().all(|r| r.present_workers == WORKERS),
+                    "{tag}: every round must be full"
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance criterion: a fixed seed makes dropout runs bitwise
+/// reproducible and executor-independent; a different seed forks the
+/// presence pattern.
+#[test]
+fn seeded_dropout_is_reproducible_and_executor_independent() {
+    let model = ParticipationModel::Bernoulli { drop: 0.35 };
+    for algorithm in AlgorithmKind::ALL {
+        assert_runs_identical(
+            &format!("{algorithm:?} repeat"),
+            || base(algorithm, 1).participation(model),
+            || base(algorithm, 1).participation(model),
+        );
+        assert_runs_identical(
+            &format!("{algorithm:?} seq-vs-threaded"),
+            || base(algorithm, 1).participation(model),
+            || base(algorithm, 2).participation(model),
+        );
+    }
+    // a different seed draws a different presence pattern
+    let a = base(AlgorithmKind::VrlSgd, 1).participation(model).run().unwrap();
+    let b = base(AlgorithmKind::VrlSgd, 1).seed(12).participation(model).run().unwrap();
+    let presence = |out: &vrl_sgd::coordinator::TrainOutput| {
+        out.history.sync_rows.iter().map(|r| r.present_workers).collect::<Vec<_>>()
+    };
+    assert_ne!(presence(&a), presence(&b), "seed must shape the presence pattern");
+}
+
+/// Dropout is live: rounds lose workers, the trajectory legitimately
+/// departs from the full-participation baseline, and absent workers pay
+/// no communication.
+#[test]
+fn dropout_changes_trajectory_and_saves_comm() {
+    let baseline = base(AlgorithmKind::VrlSgd, 1).run().unwrap();
+    let dropped = base(AlgorithmKind::VrlSgd, 1)
+        .participation(ParticipationModel::Bernoulli { drop: 0.35 })
+        .run()
+        .unwrap();
+    assert_eq!(dropped.history.sync_rows.len(), baseline.history.sync_rows.len());
+    assert!(
+        dropped.history.sync_rows.iter().any(|r| r.present_workers < WORKERS),
+        "some round must lose a worker at drop = 0.35"
+    );
+    assert!(dropped.history.sync_rows.iter().all(|r| r.present_workers <= WORKERS));
+    assert_ne!(
+        dropped.final_params, baseline.final_params,
+        "absent rounds must change the trajectory"
+    );
+    // absent workers pay no comm: the ring over m < N participants moves
+    // strictly fewer bytes than the full fleet's
+    assert!(
+        dropped.comm.bytes < baseline.comm.bytes,
+        "dropout comm {} !< full comm {}",
+        dropped.comm.bytes,
+        baseline.comm.bytes
+    );
+    assert!(dropped.final_loss().is_finite());
+}
+
+/// Group outages take out whole two-level groups at once: the present
+/// count is always a union of group sizes.
+#[test]
+fn group_outages_drop_whole_groups_end_to_end() {
+    let out = base(AlgorithmKind::VrlSgd, 1)
+        .fabric(group_outage_fabric(0.5))
+        .run()
+        .unwrap();
+    // 4 workers in 2 contiguous groups: presence ∈ {0, 2, 4} only
+    for r in &out.history.sync_rows {
+        assert!(
+            matches!(r.present_workers, 0 | 2 | 4),
+            "round {}: present {} is not a union of groups",
+            r.round,
+            r.present_workers
+        );
+    }
+    assert!(
+        out.history.sync_rows.iter().any(|r| r.present_workers < 4),
+        "p = 0.5 over 12 rounds must produce at least one outage"
+    );
+    // reproducible like every other seeded model
+    assert_runs_identical(
+        "group outage repeat",
+        || base(AlgorithmKind::VrlSgd, 1).fabric(group_outage_fabric(0.5)),
+        || base(AlgorithmKind::VrlSgd, 1).fabric(group_outage_fabric(0.5)),
+    );
+}
+
+/// The deterministic round-robin sampler: exactly m participants per
+/// round, no RNG involved, never an empty round.
+#[test]
+fn round_robin_sampler_end_to_end() {
+    let out = base(AlgorithmKind::VrlSgd, 1)
+        .participation(ParticipationModel::RoundRobin { count: 2 })
+        .run()
+        .unwrap();
+    assert!(out.history.sync_rows.iter().all(|r| r.present_workers == 2));
+    assert_eq!(out.skipped_rounds, 0);
+    assert!(out.final_loss() < out.initial_loss(), "rotating halves still descend");
+    let rr = ParticipationModel::RoundRobin { count: 2 };
+    assert_runs_identical(
+        "round-robin repeat",
+        || base(AlgorithmKind::VrlSgd, 1).participation(rr),
+        || base(AlgorithmKind::VrlSgd, 2).participation(rr),
+    );
+}
+
+/// Observer that records, after every sync, the residual of the paper's
+/// Σ_i Δ_i = 0 invariant plus whether any correction is live.
+struct DeltaProbe {
+    residuals: Rc<RefCell<Vec<f32>>>,
+    any_live: Rc<RefCell<bool>>,
+}
+
+impl RoundObserver for DeltaProbe {
+    fn on_state(&mut self, state: &mut RunState<'_>) {
+        let mut sum = vec![0.0f32; state.dim];
+        let mut live = false;
+        for w in state.workers.iter() {
+            for (s, &d) in sum.iter_mut().zip(w.delta.iter()) {
+                *s += d;
+                live |= d != 0.0;
+            }
+        }
+        let residual = sum.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        self.residuals.borrow_mut().push(residual);
+        *self.any_live.borrow_mut() |= live;
+    }
+}
+
+/// Acceptance criterion: VRL-SGD's zero-sum invariant holds after every
+/// sync under Bernoulli and group-outage dropout — absent Δ are frozen,
+/// present-set increments cancel.
+#[test]
+fn vrl_delta_zero_sum_holds_after_every_sync_under_dropout() {
+    let cases: Vec<(&str, Box<dyn Fn(Trainer) -> Trainer>)> = vec![
+        (
+            "bernoulli:0.4",
+            Box::new(|t: Trainer| {
+                t.participation(ParticipationModel::Bernoulli { drop: 0.4 })
+            }),
+        ),
+        ("group:0.5", Box::new(|t: Trainer| t.fabric(group_outage_fabric(0.5)))),
+    ];
+    for algorithm in [AlgorithmKind::VrlSgd, AlgorithmKind::VrlSgdWarmup] {
+        for (tag, configure) in &cases {
+            let residuals = Rc::new(RefCell::new(Vec::new()));
+            let any_live = Rc::new(RefCell::new(false));
+            let probe =
+                DeltaProbe { residuals: residuals.clone(), any_live: any_live.clone() };
+            let out = configure(base(algorithm, 1)).observer(probe).run().unwrap();
+            let residuals = residuals.borrow();
+            assert_eq!(residuals.len(), out.history.sync_rows.len(), "{algorithm:?} {tag}");
+            for (round, &r) in residuals.iter().enumerate() {
+                assert!(
+                    r < 2e-3,
+                    "{algorithm:?} {tag}: Σ Δ residual {r} after round {round}"
+                );
+            }
+            assert!(*any_live.borrow(), "{algorithm:?} {tag}: Δ corrections must be live");
+            assert!(out.delta_residual < 2e-3, "{algorithm:?} {tag}: final residual");
+        }
+    }
+}
+
+/// Empty-round policy: when sampling leaves zero participants the round
+/// is skipped deterministically — counted, clock advanced, no division
+/// by zero, no collective.
+#[test]
+fn empty_rounds_are_skipped_deterministically() {
+    let mk = || {
+        base(AlgorithmKind::LocalSgd, 1)
+            .participation(ParticipationModel::Bernoulli { drop: 0.9 })
+    };
+    let out = mk().run().unwrap();
+    // 12 rounds at P(empty) = 0.9^4 ≈ 0.66: skips are certain for this seed
+    assert!(out.skipped_rounds > 0, "drop = 0.9 must skip rounds");
+    let empty_rows: Vec<_> =
+        out.history.sync_rows.iter().filter(|r| r.present_workers == 0).collect();
+    assert_eq!(empty_rows.len() as u64, out.skipped_rounds);
+    assert_eq!(
+        out.history.sync_rows.last().unwrap().skipped_rounds,
+        out.skipped_rounds,
+        "the cumulative column ends at the total"
+    );
+    // rounds still advance the schedule and the clock, but not the comm
+    assert_eq!(out.history.sync_rows.len(), 12);
+    let mut prev_comm = 0u64;
+    let mut prev_time = 0.0f64;
+    for r in &out.history.sync_rows {
+        if r.present_workers == 0 {
+            assert_eq!(r.comm_rounds, prev_comm, "round {}: no collective", r.round);
+        } else {
+            assert_eq!(r.comm_rounds, prev_comm + 1, "round {}", r.round);
+        }
+        assert!(r.sim_time_s > prev_time, "round {}: clock must advance", r.round);
+        assert!(r.train_loss.is_finite(), "round {}", r.round);
+        prev_comm = r.comm_rounds;
+        prev_time = r.sim_time_s;
+    }
+    // deterministically skipped: the whole output is reproducible
+    let again = mk().run().unwrap();
+    assert_identical(&out, &again, "empty-round determinism");
+}
+
+/// Acceptance criterion: fixed-seed dropout runs resume bitwise
+/// identically from a mid-outage checkpoint — all seven algorithms,
+/// both executors.
+#[test]
+fn dropout_resumes_bitwise_identically_from_mid_outage_checkpoint() {
+    let model = ParticipationModel::Bernoulli { drop: 0.35 };
+    for algorithm in AlgorithmKind::ALL {
+        for threads in [1usize, 2] {
+            let tag = format!("{algorithm:?} x {threads} thread(s)");
+            let full = base(algorithm, threads).participation(model).run().unwrap();
+            assert!(
+                full.history.sync_rows.iter().any(|r| r.present_workers < WORKERS),
+                "{tag}: the drill needs live dropout"
+            );
+            let dir = temp_dir(&format!("dropout_{}_{threads}", algorithm.name()));
+            let snap_path =
+                crash_and_snapshot(|| base(algorithm, threads).participation(model), &dir);
+            let snap = Snapshot::load(&snap_path).unwrap();
+            // the snapshot really sits mid-outage-pattern: presence was
+            // drawn, and some pre-boundary round lost workers
+            assert!(snap.roster.rounds_sampled > 0, "{tag}: roster stream must be live");
+            assert!(
+                snap.history.sync_rows.iter().any(|r| r.present_workers < WORKERS),
+                "{tag}: boundary history shows no outage"
+            );
+            let resumed = base(algorithm, threads)
+                .participation(model)
+                .resume_from(&snap_path)
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_identical(&resumed, &full, &tag);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+/// Resuming under a different participation model is rejected at build
+/// time — the presence pattern would silently fork.
+#[test]
+fn participation_mismatch_is_rejected_on_resume() {
+    let model = ParticipationModel::Bernoulli { drop: 0.35 };
+    let dir = temp_dir("participation_mismatch");
+    let snap_path =
+        crash_and_snapshot(|| base(AlgorithmKind::VrlSgd, 1).participation(model), &dir);
+    // dropping the model entirely
+    let err = base(AlgorithmKind::VrlSgd, 1)
+        .resume_from(&snap_path)
+        .unwrap()
+        .build()
+        .err()
+        .unwrap();
+    assert!(err.contains("participation"), "{err}");
+    // a different drop probability
+    let err = base(AlgorithmKind::VrlSgd, 1)
+        .participation(ParticipationModel::Bernoulli { drop: 0.4 })
+        .resume_from(&snap_path)
+        .unwrap()
+        .build()
+        .err()
+        .unwrap();
+    assert!(err.contains("participation"), "{err}");
+    // the matching model builds fine
+    base(AlgorithmKind::VrlSgd, 1)
+        .participation(model)
+        .resume_from(&snap_path)
+        .unwrap()
+        .build()
+        .unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The new metric columns are part of the CSV surface (streaming sink
+/// and buffered history agree — the resume drill above already proves
+/// byte-equality of resumed streams).
+#[test]
+fn presence_columns_land_in_the_csv() {
+    let out = base(AlgorithmKind::LocalSgd, 1)
+        .participation(ParticipationModel::Bernoulli { drop: 0.5 })
+        .run()
+        .unwrap();
+    let csv = out.history.sync_csv();
+    let mut lines = csv.lines();
+    let header = lines.next().unwrap();
+    assert!(
+        header.ends_with("straggler_wait_s,present_workers,skipped_rounds"),
+        "{header}"
+    );
+    for (line, row) in lines.zip(out.history.sync_rows.iter()) {
+        let fields: Vec<&str> = line.split(',').collect();
+        assert_eq!(fields.len(), 10, "{line}");
+        assert_eq!(fields[8], row.present_workers.to_string());
+        assert_eq!(fields[9], row.skipped_rounds.to_string());
+    }
+}

@@ -2,11 +2,17 @@
 //! shim equivalence (the deprecated free functions must be bitwise
 //! indistinguishable from the builder path), schedules end to end, and
 //! the paper's Σ Δ = 0 invariant with observers/schedules attached.
+//!
+//! Built on the shared `tests/common` harness (run builders + bitwise
+//! comparators).
 
 #![allow(deprecated)] // exercising the shims is the point
 
+mod common;
+
+use common::{assert_identical, softmax_task};
 use vrl_sgd::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
-use vrl_sgd::coordinator::{run_training, run_with_engines, RunOptions, TrainOutput};
+use vrl_sgd::coordinator::{run_training, run_with_engines, RunOptions};
 use vrl_sgd::engine::build_pure_engines;
 use vrl_sgd::prelude::Trainer;
 use vrl_sgd::trainer::{
@@ -14,31 +20,8 @@ use vrl_sgd::trainer::{
     StopAtLoss,
 };
 
-fn softmax_task() -> TaskKind {
-    TaskKind::SoftmaxSynthetic { classes: 5, features: 12, samples_per_worker: 48 }
-}
-
 fn spec_for(algorithm: AlgorithmKind) -> TrainSpec {
-    TrainSpec {
-        algorithm,
-        workers: 4,
-        period: 5,
-        lr: 0.05,
-        batch: 8,
-        steps: 80,
-        seed: 23,
-        easgd_rho: 0.9 / 4.0,
-        ..TrainSpec::default()
-    }
-}
-
-fn assert_identical(a: &TrainOutput, b: &TrainOutput, ctx: &str) {
-    assert_eq!(a.history, b.history, "{ctx}: history differs");
-    assert_eq!(a.comm, b.comm, "{ctx}: comm counters differ");
-    assert_eq!(a.final_params, b.final_params, "{ctx}: final params differ");
-    assert_eq!(a.delta_residual, b.delta_residual, "{ctx}: delta residual differs");
-    assert_eq!(a.algorithm, b.algorithm, "{ctx}: algorithm name differs");
-    assert_eq!(a.sim_time, b.sim_time, "{ctx}: simulated time differs");
+    common::spec(algorithm, 23, 80)
 }
 
 /// Acceptance criterion: for a fixed seed, the deprecated `run_training`
