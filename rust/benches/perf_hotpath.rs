@@ -9,9 +9,14 @@
 //!   * sequential vs threaded round executor (8-worker softmax rounds)
 //!   * XLA artifact step latency (when artifacts are present)
 //!
-//! Run: `cargo bench --bench perf_hotpath`
+//! Run: `cargo bench --bench perf_hotpath [-- --json <path>]`
+//!
+//! Besides the human-readable table, every case lands in a
+//! machine-readable `BENCH_hotpath.json` (default `reports/`, override
+//! with `--json`) that nightly CI uploads so per-case ns/op and
+//! throughput can be diffed across runs.
 
-use vrl_sgd::benchutil::{bench, report, report_throughput};
+use vrl_sgd::benchutil::{bench, report, report_throughput, JsonReport};
 use vrl_sgd::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
 use vrl_sgd::engine::build_pure_engines;
 use vrl_sgd::prelude::Trainer;
@@ -19,6 +24,14 @@ use vrl_sgd::rng::Pcg32;
 use vrl_sgd::tensor;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map_or("reports/BENCH_hotpath.json", |s| s.as_str());
+    let mut json = JsonReport::new();
+
     println!("=== L3 hot-path microbenches ===\n");
     let mut rng = Pcg32::new(1, 1);
 
@@ -35,6 +48,7 @@ fn main() {
             std::hint::black_box(&x);
         });
         report_throughput(&r, (p * 16) as f64 / 1e9, "GB");
+        json.push_throughput(&r, (p * 16) as f64 / 1e9, "GB");
     }
     println!();
 
@@ -54,6 +68,7 @@ fn main() {
             std::hint::black_box(&out);
         });
         report_throughput(&r, (n * p * 4) as f64 / 1e9, "GB read");
+        json.push_throughput(&r, (n * p * 4) as f64 / 1e9, "GB read");
     }
     println!();
 
@@ -73,6 +88,7 @@ fn main() {
             std::hint::black_box(&rows);
         });
         report(&r);
+        json.push(&r);
     }
     println!();
 
@@ -104,6 +120,7 @@ fn main() {
             std::hint::black_box(l);
         });
         report(&r);
+        json.push(&r);
     }
     println!();
 
@@ -131,6 +148,7 @@ fn main() {
             std::hint::black_box(&workers);
         });
         report_throughput(&r, (n * p * 4) as f64 / 1e9, "GB");
+        json.push_throughput(&r, (n * p * 4) as f64 / 1e9, "GB");
     }
     println!();
 
@@ -166,12 +184,14 @@ fn main() {
             std::hint::black_box(train(1));
         });
         report(&seq);
+        json.push(&seq);
         let mut baseline = None;
         for threads in [2usize, 4, 8] {
             let r = bench(&format!("train 8-worker softmax t={threads}"), 1, 5, || {
                 std::hint::black_box(train(threads));
             });
             report(&r);
+            json.push(&r);
             if threads == 4 {
                 baseline = Some(seq.median_s / r.median_s);
             }
@@ -215,8 +235,12 @@ fn main() {
                 std::hint::black_box(l);
             });
             report(&r);
+            json.push(&r);
         }
     } else {
         println!("(xla step benches skipped: run `make artifacts` first)");
     }
+
+    json.write(json_path).expect("write json report");
+    println!("\nwrote {json_path} ({} cases)", json.len());
 }

@@ -85,6 +85,87 @@ pub fn report_throughput(r: &BenchResult, items: f64, unit: &str) {
     );
 }
 
+/// Machine-readable collector for `BENCH_*.json` artifacts: every case's
+/// per-op nanoseconds (median/min/max, iteration count) plus the
+/// throughput column where one was reported. Zero-dep JSON emission, so
+/// nightly CI can diff hot-path regressions across runs.
+#[derive(Debug, Clone, Default)]
+pub struct JsonReport {
+    entries: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl JsonReport {
+    /// Empty report.
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    /// Record a plain timing case.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.entries.push(format!(
+            "{{\"name\": \"{}\", \"ns_per_op\": {:.1}, \"min_ns\": {:.1}, \
+             \"max_ns\": {:.1}, \"iters\": {}}}",
+            json_escape(&r.name),
+            r.median_s * 1e9,
+            r.min_s * 1e9,
+            r.max_s * 1e9,
+            r.iters
+        ));
+    }
+
+    /// Record a case with a throughput column (`items` per iteration in
+    /// the given `unit`), matching [`report_throughput`].
+    pub fn push_throughput(&mut self, r: &BenchResult, items: f64, unit: &str) {
+        self.entries.push(format!(
+            "{{\"name\": \"{}\", \"ns_per_op\": {:.1}, \"min_ns\": {:.1}, \
+             \"max_ns\": {:.1}, \"iters\": {}, \"throughput_per_s\": {:.6e}, \
+             \"throughput_unit\": \"{}\"}}",
+            json_escape(&r.name),
+            r.median_s * 1e9,
+            r.min_s * 1e9,
+            r.max_s * 1e9,
+            r.iters,
+            r.throughput(items),
+            json_escape(unit)
+        ));
+    }
+
+    /// Number of cases recorded so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The JSON array (one object per case, newline-separated for
+    /// readable diffs).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str("  ");
+            s.push_str(e);
+            if i + 1 < self.entries.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("]\n");
+        s
+    }
+
+    /// Write the array to `path`, creating parent directories.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        crate::metrics::write_report(path, &self.to_json())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -60,8 +60,11 @@ use std::path::{Path, PathBuf};
 /// per-round `straggler_wait_s` column in `history`. v3: participation
 /// model in the fabric fingerprint, `roster` stream section, CoCoD
 /// pending-member indices in `algo`, and the per-round
-/// `present_workers` / `skipped_rounds` columns in `history`.)
-pub const SNAP_VERSION: u32 = 3;
+/// `present_workers` / `skipped_rounds` columns in `history`. v4:
+/// compression fingerprint in `meta`, per-worker error-feedback
+/// residuals in `workers`, `wire_bytes` in `comm`, and the per-round
+/// `compressed_bytes` / `compression_ratio` columns in `history`.)
+pub const SNAP_VERSION: u32 = 4;
 
 /// One worker's serialized state.
 #[derive(Debug, Clone, PartialEq)]
@@ -76,6 +79,9 @@ pub struct WorkerSnap {
     pub rng_inc: u64,
     /// The corrector's shareable buffer (momentum), when one is attached.
     pub corrector: Option<Vec<f32>>,
+    /// Error-feedback residual from lossy transport compression; empty
+    /// unless a lossy compressor is configured (see [`crate::compress`]).
+    pub residual: Vec<f32>,
 }
 
 /// A complete, self-validating snapshot of a run at a round boundary.
@@ -135,6 +141,7 @@ impl Snapshot {
                 rng_state: w.rng.state(),
                 rng_inc: w.rng.inc(),
                 corrector: w.corrector.as_mut().and_then(|c| c.shared_state()).cloned(),
+                residual: w.residual.clone(),
             })
             .collect();
         Snapshot {
@@ -241,6 +248,16 @@ impl Snapshot {
                 fb.participation.name()
             ));
         }
+        // lossy compression shapes the trajectory (and carries residual
+        // state), so the compressor spec is compared exactly
+        if s.compress != spec.compress {
+            errs.push(format!(
+                "snapshot compress spec '{}' != configured '{}' \
+                 (transported params would fork)",
+                s.compress.spec_str(),
+                spec.compress.spec_str()
+            ));
+        }
         if s.dense_metrics != spec.dense_metrics {
             errs.push("snapshot dense_metrics setting differs".to_string());
         }
@@ -275,8 +292,16 @@ impl Snapshot {
             if s.params.len() != self.dim || s.delta.len() != self.dim {
                 return Err(format!("worker {i}: snapshot vectors disagree with dim {}", self.dim));
             }
+            if !s.residual.is_empty() && s.residual.len() != self.dim {
+                return Err(format!(
+                    "worker {i}: snapshot residual disagrees with dim {}",
+                    self.dim
+                ));
+            }
             w.params.copy_from_slice(&s.params);
             w.delta.copy_from_slice(&s.delta);
+            w.residual.clear();
+            w.residual.extend_from_slice(&s.residual);
             w.rng = crate::rng::Pcg32::restore(s.rng_state, s.rng_inc);
             match (&mut w.corrector, &s.corrector) {
                 (Some(c), Some(m)) => {
@@ -317,6 +342,9 @@ impl Snapshot {
         meta.put_f64(self.spec.network.latency_us);
         meta.put_f64(self.spec.network.bandwidth_gbps);
         put_fabric_spec(&mut meta, &self.spec.fabric);
+        // compressor fingerprint via its round-trippable spec string
+        // (f64 `Display` is shortest-round-trip, like the fabric models)
+        meta.put_str(&self.spec.compress.spec_str());
         meta.put_bool(self.spec.dense_metrics);
         meta.put_usize(self.spec.threads);
         meta.put_usize(self.dim);
@@ -339,6 +367,7 @@ impl Snapshot {
                 }
                 None => ws.put_bool(false),
             }
+            ws.put_f32s(&s.residual);
         }
         w.section("workers", ws.into_bytes());
 
@@ -347,6 +376,7 @@ impl Snapshot {
         let mut comm = Enc::new();
         comm.put_u64(self.comm.rounds);
         comm.put_u64(self.comm.bytes);
+        comm.put_u64(self.comm.wire_bytes);
         comm.put_u64(self.comm.messages);
         comm.put_f64(self.comm.sim_time_s);
         w.section("comm", comm.into_bytes());
@@ -384,6 +414,8 @@ impl Snapshot {
             h.put_f64(r.straggler_wait_s);
             h.put_usize(r.present_workers);
             h.put_u64(r.skipped_rounds);
+            h.put_u64(r.compressed_bytes);
+            h.put_f64(r.compression_ratio);
         }
         h.put_usize(self.history.dense_rows.len());
         for r in &self.history.dense_rows {
@@ -431,6 +463,8 @@ impl Snapshot {
             seed: d.u64()?,
             network: crate::config::NetworkSpec { latency_us: d.f64()?, bandwidth_gbps: d.f64()? },
             fabric: get_fabric_spec(&mut d)?,
+            compress: crate::compress::CompressorKind::parse(&d.str()?)
+                .map_err(|e| format!("snapshot names an unknown compressor: {e}"))?,
             dense_metrics: d.bool()?,
             threads: d.usize()?,
         };
@@ -458,7 +492,9 @@ impl Snapshot {
             let rng_state = d.u64()?;
             let rng_inc = d.u64()?;
             let corrector = if d.bool()? { Some(d.f32s()?) } else { None };
-            worker_states.push(WorkerSnap { params, delta, rng_state, rng_inc, corrector });
+            let residual = d.f32s()?;
+            worker_states
+                .push(WorkerSnap { params, delta, rng_state, rng_inc, corrector, residual });
         }
         d.finish()?;
 
@@ -468,6 +504,7 @@ impl Snapshot {
         let comm = CommStats {
             rounds: d.u64()?,
             bytes: d.u64()?,
+            wire_bytes: d.u64()?,
             messages: d.u64()?,
             sim_time_s: d.f64()?,
         };
@@ -509,6 +546,8 @@ impl Snapshot {
                 straggler_wait_s: d.f64()?,
                 present_workers: d.usize()?,
                 skipped_rounds: d.u64()?,
+                compressed_bytes: d.u64()?,
+                compression_ratio: d.f64()?,
             });
         }
         let dense = d.usize()?;
@@ -812,6 +851,8 @@ mod tests {
             straggler_wait_s: 0.0625,
             present_workers: 2,
             skipped_rounds: 0,
+            compressed_bytes: 48,
+            compression_ratio: 1.0,
         });
         let mut rs = RunState {
             spec: &spec,
@@ -931,6 +972,19 @@ mod tests {
             .validate(&bernoulli_zero, 3)
             .unwrap_err()
             .contains("participation"));
+        // the compressor spec shapes the transported params (and the
+        // residual state a resume must restore), so it is exact too —
+        // even lossless Identity vs Off, whose trajectories coincide
+        let bad_compress = TrainSpec {
+            compress: crate::compress::CompressorKind::TopK { fraction: 0.05 },
+            ..good.clone()
+        };
+        assert!(snap.validate(&bad_compress, 3).unwrap_err().contains("compress"));
+        let identity = TrainSpec {
+            compress: crate::compress::CompressorKind::Identity,
+            ..good.clone()
+        };
+        assert!(snap.validate(&identity, 3).unwrap_err().contains("compress"));
         // ...except threads: executors are bitwise interchangeable
         let other_exec = TrainSpec { threads: good.threads + 7, ..good };
         snap.validate(&other_exec, 3).unwrap();
@@ -967,6 +1021,33 @@ mod tests {
         snap.spec.fabric.stragglers = StragglerModel::LogNormal { sigma: 0.1 + 0.2 };
         let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
         assert_eq!(back.spec.fabric, snap.spec.fabric);
+    }
+
+    #[test]
+    fn compress_spec_and_residuals_round_trip_bitwise() {
+        use crate::compress::CompressorKind;
+        let mut snap = sample_snapshot(AlgorithmKind::VrlSgd, 2);
+        // awkward (non-shortest-representable) fraction + wire counters
+        snap.spec.compress = CompressorKind::TopK { fraction: 0.1 + 0.2 };
+        snap.comm.wire_bytes = 17;
+        for (i, ws) in snap.worker_states.iter_mut().enumerate() {
+            ws.residual = vec![0.125 * i as f32, -3.5, f32::MIN_POSITIVE];
+        }
+        snap.history.sync_rows[0].compressed_bytes = 17;
+        snap.history.sync_rows[0].compression_ratio = 48.0 / 17.0;
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.spec.compress, snap.spec.compress);
+        assert_eq!(back, snap);
+        for kind in [
+            CompressorKind::Identity,
+            CompressorKind::Sign,
+            CompressorKind::Int8 { range: None },
+            CompressorKind::Int8 { range: Some(0.75) },
+        ] {
+            snap.spec.compress = kind;
+            let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+            assert_eq!(back.spec.compress, kind);
+        }
     }
 
     #[test]

@@ -62,15 +62,31 @@ impl Network {
 }
 
 /// Exact communication counters for one training run.
+///
+/// **Logical vs wire bytes.** [`CommStats::bytes`] counts the
+/// *logical* payload — the full-precision f32 buffers the collective
+/// semantically moves, which is what the paper's communication
+/// complexity results are stated over and what keeps runs comparable
+/// across compressors. [`CommStats::wire_bytes`] counts what the
+/// configured [`crate::compress::Compressor`] actually puts on the
+/// links — top-k's value+index pairs, sign-SGD's packed bits + scale,
+/// int8's bytes + quantization table — priced through the same
+/// per-topology message schedules. Without compression (or with the
+/// identity compressor) the two are equal; the simulated time always
+/// follows the wire cost.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CommStats {
     /// Number of synchronization rounds (collectives issued).
     pub rounds: u64,
-    /// Total bytes moved across all links.
+    /// Total logical (uncompressed f32) bytes over all links.
     pub bytes: u64,
+    /// Total bytes actually transmitted after compression (== `bytes`
+    /// when no lossy compressor is configured).
+    pub wire_bytes: u64,
     /// Total point-to-point messages.
     pub messages: u64,
-    /// Simulated communication time, seconds (critical-path).
+    /// Simulated communication time, seconds (critical-path, priced on
+    /// the wire payload).
     pub sim_time_s: f64,
 }
 
@@ -79,8 +95,19 @@ impl CommStats {
     pub fn merge(&mut self, other: &CommStats) {
         self.rounds += other.rounds;
         self.bytes += other.bytes;
+        self.wire_bytes += other.wire_bytes;
         self.messages += other.messages;
         self.sim_time_s += other.sim_time_s;
+    }
+
+    /// Logical-to-wire compression ratio so far (1.0 when nothing was
+    /// compressed — or nothing was sent).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.wire_bytes == self.bytes || self.wire_bytes == 0 {
+            1.0
+        } else {
+            self.bytes as f64 / self.wire_bytes as f64
+        }
     }
 }
 
@@ -99,6 +126,9 @@ pub struct Cluster {
     algo: AllReduceAlgo,
     stats: CommStats,
     workers: usize,
+    /// Wire-pricing scheme (see [`CommStats`]); the payload transform
+    /// itself happens in the session driver before the collective.
+    compression: crate::compress::CompressorKind,
 }
 
 impl Cluster {
@@ -106,7 +136,14 @@ impl Cluster {
     pub fn new(workers: usize, spec: &NetworkSpec, algo: AllReduceAlgo) -> Self {
         assert!(workers >= 1);
         let net = Network::from_spec(spec);
-        Cluster { net, uplink: net, algo, stats: CommStats::default(), workers }
+        Cluster {
+            net,
+            uplink: net,
+            algo,
+            stats: CommStats::default(),
+            workers,
+            compression: crate::compress::CompressorKind::Off,
+        }
     }
 
     /// Charge the inter-group ring of [`AllReduceAlgo::TwoLevel`]
@@ -114,6 +151,20 @@ impl Cluster {
     pub fn with_uplink(mut self, spec: &NetworkSpec) -> Self {
         self.uplink = Network::from_spec(spec);
         self
+    }
+
+    /// Price collectives for `kind`'s wire payload: `CommStats.bytes`
+    /// stays logical, `CommStats.wire_bytes` and the simulated time
+    /// follow the compressed payload through the same per-topology
+    /// message schedule. `Off`/`Identity` price wire == logical, bitwise.
+    pub fn with_compression(mut self, kind: crate::compress::CompressorKind) -> Self {
+        self.compression = kind;
+        self
+    }
+
+    /// The configured wire-pricing scheme.
+    pub fn compression(&self) -> crate::compress::CompressorKind {
+        self.compression
     }
 
     /// Number of workers.
@@ -215,6 +266,10 @@ impl Cluster {
         self.stats.rounds += 1;
         self.stats.messages += msgs;
         self.stats.bytes += total_bytes;
+        // broadcasts are control-plane distribution (EASGD center,
+        // initialization), not worker transmissions — they stay
+        // uncompressed, so wire == logical here by design
+        self.stats.wire_bytes += total_bytes;
         self.stats.sim_time_s += time;
     }
 
@@ -236,13 +291,26 @@ impl Cluster {
     /// (`cost_with(1, ..)` is the free collective, so a lone participant
     /// still counts a round but moves nothing — same as the
     /// single-worker fleet).
+    ///
+    /// Priced twice when a compressor is configured: once for the
+    /// logical f32 payload (`stats.bytes`) and once for the compressed
+    /// wire payload (`stats.wire_bytes` + simulated time). The message
+    /// *count* of every cost model is byte-independent, so it is charged
+    /// from the logical schedule.
     fn charge_among(&mut self, m: usize, dim: usize) {
         debug_assert!(m >= 1 && m <= self.workers);
         let cost = self.algo.cost_with(m, dim * 4, &self.net, &self.uplink);
+        let wire_msg = self.compression.wire_payload_bytes(dim);
+        let wire = if wire_msg == dim * 4 {
+            cost
+        } else {
+            self.algo.cost_with(m, wire_msg, &self.net, &self.uplink)
+        };
         self.stats.rounds += 1;
         self.stats.messages += cost.messages;
         self.stats.bytes += cost.bytes;
-        self.stats.sim_time_s += cost.time_s;
+        self.stats.wire_bytes += wire.bytes;
+        self.stats.sim_time_s += wire.time_s;
     }
 }
 
@@ -398,9 +466,72 @@ mod tests {
 
     #[test]
     fn merge_stats() {
-        let mut a = CommStats { rounds: 1, bytes: 10, messages: 2, sim_time_s: 0.5 };
-        let b = CommStats { rounds: 2, bytes: 30, messages: 4, sim_time_s: 1.0 };
+        let mut a =
+            CommStats { rounds: 1, bytes: 10, wire_bytes: 6, messages: 2, sim_time_s: 0.5 };
+        let b = CommStats { rounds: 2, bytes: 30, wire_bytes: 14, messages: 4, sim_time_s: 1.0 };
         a.merge(&b);
-        assert_eq!(a, CommStats { rounds: 3, bytes: 40, messages: 6, sim_time_s: 1.5 });
+        assert_eq!(
+            a,
+            CommStats { rounds: 3, bytes: 40, wire_bytes: 20, messages: 6, sim_time_s: 1.5 }
+        );
+        assert!((a.compression_ratio() - 2.0).abs() < 1e-12);
+        assert_eq!(CommStats::default().compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn uncompressed_wire_equals_logical() {
+        use crate::compress::CompressorKind;
+        for kind in [CompressorKind::Off, CompressorKind::Identity] {
+            let mut cl = Cluster::new(4, &spec(), AllReduceAlgo::Ring).with_compression(kind);
+            let mut rows = vec![vec![1.0f32; 64]; 4];
+            cl.average(&mut rows);
+            let s = cl.stats();
+            assert_eq!(s.wire_bytes, s.bytes, "{kind:?}");
+            assert_eq!(s.compression_ratio(), 1.0);
+        }
+        // Identity prices bitwise like Off — every counter
+        let mut off = Cluster::new(4, &spec(), AllReduceAlgo::TwoLevel { groups: 2 });
+        let mut id = Cluster::new(4, &spec(), AllReduceAlgo::TwoLevel { groups: 2 })
+            .with_compression(CompressorKind::Identity);
+        off.charge_allreduce(1000);
+        id.charge_allreduce(1000);
+        assert_eq!(off.stats(), id.stats());
+    }
+
+    #[test]
+    fn lossy_compressors_price_strictly_fewer_wire_bytes() {
+        use crate::compress::CompressorKind;
+        let dim = 4096;
+        for algo in [
+            AllReduceAlgo::Ring,
+            AllReduceAlgo::Naive,
+            AllReduceAlgo::Tree,
+            AllReduceAlgo::TwoLevel { groups: 2 },
+        ] {
+            for kind in [
+                CompressorKind::TopK { fraction: 0.05 },
+                CompressorKind::Sign,
+                CompressorKind::Int8 { range: None },
+            ] {
+                let mut base = Cluster::new(8, &spec(), algo);
+                let mut comp = Cluster::new(8, &spec(), algo).with_compression(kind);
+                base.charge_allreduce(dim);
+                comp.charge_allreduce(dim);
+                let (b, c) = (base.stats(), comp.stats());
+                // logical axis and message schedule are untouched...
+                assert_eq!(c.bytes, b.bytes, "{algo:?}/{kind:?}");
+                assert_eq!(c.messages, b.messages, "{algo:?}/{kind:?}");
+                // ...while the wire axis and simulated time shrink
+                assert!(c.wire_bytes < c.bytes, "{algo:?}/{kind:?}");
+                assert!(c.sim_time_s < b.sim_time_s, "{algo:?}/{kind:?}");
+                assert!(c.compression_ratio() > 1.0, "{algo:?}/{kind:?}");
+            }
+        }
+        // honesty: dense-ish top-k pays the index overhead on the wire
+        let mut comp = Cluster::new(8, &spec(), AllReduceAlgo::Ring)
+            .with_compression(CompressorKind::TopK { fraction: 1.0 });
+        comp.charge_allreduce(dim);
+        assert!(comp.stats().wire_bytes > comp.stats().bytes);
+        assert!(comp.stats().compression_ratio() < 1.0);
     }
 }

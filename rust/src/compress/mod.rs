@@ -1,0 +1,765 @@
+//! Pluggable gradient/parameter compression on the synchronization path,
+//! with error feedback and honest wire-byte accounting.
+//!
+//! The paper's contribution is fewer synchronization *rounds*; this
+//! module opens the orthogonal axis — fewer *bytes per round* — so the
+//! figures can plot genuine accuracy-vs-wire-bytes frontiers. A
+//! [`Compressor`] sits between the workers' local models and the
+//! collective: before every sync, each **present** worker's transmit
+//! buffer is replaced by what the far side of a lossy link would
+//! reconstruct (compress → decompress simulated in one in-place step),
+//! and the untransmitted remainder is kept in a per-worker
+//! **error-feedback residual** (`WorkerState::residual`) that is added
+//! back before the next transmission — the standard EF-SGD construction
+//! (Seide et al. 2014; Karimireddy et al. 2019), which is what makes
+//! biased compressors like sign-SGD and top-k converge at all.
+//!
+//! Four implementations of the trait:
+//!
+//! * [`Identity`] — transmits exactly, **bitwise-equal to an
+//!   uncompressed run** (the staging proof: it rides the whole
+//!   compression path and must be indistinguishable, verified via the
+//!   `tests/common/` harness in `rust/tests/compress.rs`);
+//! * [`TopK`] — magnitude sparsification: the `ceil(fraction · P)`
+//!   largest-|value| coordinates travel as (f32 value, u32 index) pairs;
+//! * [`SignSgd`] — 1-bit sign per coordinate, packed, plus one f32
+//!   per-tensor scale (the mean absolute value);
+//! * [`Int8`] — uniform 8-bit quantization over `[-range, range]` (range
+//!   measured per transmission, or clipped via `int8:<range>`), one byte
+//!   per coordinate plus the quantization table.
+//!
+//! **Honest accounting.** [`crate::comm::CommStats`] splits *logical*
+//! bytes (the full-precision f32 payload the collective semantically
+//! moves — what the paper's round-complexity axis counts) from *wire*
+//! bytes (what the configured compressor actually puts on the links,
+//! including top-k's index overhead, sign-SGD's scale word and int8's
+//! table). Each compressor prices a closed-form per-node payload
+//! ([`CompressorKind::wire_payload_bytes`]) which the per-topology cost
+//! models (Naive/Ring/Tree/TwoLevel) then multiply through their real
+//! message schedules — so simulated time follows the *wire* cost while
+//! the logical counters stay comparable across compressors. Note the
+//! honesty cuts both ways: `top-k` with a fraction above ~0.5 costs
+//! *more* wire bytes than no compression at all (8 bytes per kept
+//! coordinate vs 4 per dense one).
+//!
+//! **Invariants.** Residuals belong to workers, not rounds: an absent
+//! worker under partial participation transmits nothing, so its residual
+//! is frozen untouched until it returns. VRL-SGD's Σ_i Δ_i = 0
+//! bookkeeping survives because the Δ update runs on the *transported*
+//! parameters (the mean of the decompressed transmissions is still the
+//! exact mean of what every present worker holds after the sync).
+//! Residuals are captured in snapshot format v4, so lossy runs resume
+//! bitwise (`rust/tests/compress.rs`).
+//!
+//! Surface: `TrainSpec::compress` / a `[compress]` TOML table /
+//! `--compress` CLI flag / `Trainer::compression`, with the per-round
+//! cumulative `compressed_bytes` and `compression_ratio` columns in
+//! [`crate::metrics::SyncRow`] and the CSV sinks.
+
+use crate::config::AlgorithmKind;
+use crate::format::toml_lite::TomlDoc;
+
+/// The configured compression scheme — the `Copy` config-surface enum
+/// ([`TrainSpec::compress`](crate::config::TrainSpec), `[compress]`
+/// table, `--compress` flag). [`CompressorKind::build`] instantiates the
+/// matching [`Compressor`]; the comm layer keeps the kind itself for
+/// closed-form wire pricing.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum CompressorKind {
+    /// No compression stage at all (the seed behavior; wire == logical).
+    #[default]
+    Off,
+    /// Full-precision transmission through the compression stage —
+    /// bitwise-equal to [`CompressorKind::Off`] by contract.
+    Identity,
+    /// Top-k magnitude sparsification; `fraction` ∈ (0, 1] of the
+    /// coordinates travel per transmission.
+    TopK {
+        /// Fraction of coordinates kept (k = max(1, ceil(fraction · P))).
+        fraction: f64,
+    },
+    /// 1-bit sign compression with a per-tensor mean-|value| scale.
+    Sign,
+    /// Uniform 8-bit quantization; `range` clips the representable
+    /// interval, `None` measures max-|value| per transmission.
+    Int8 {
+        /// Optional fixed clip range (must be finite and positive).
+        range: Option<f64>,
+    },
+}
+
+impl CompressorKind {
+    /// Short scheme name (stable; used in CSV headers and errors).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressorKind::Off => "none",
+            CompressorKind::Identity => "identity",
+            CompressorKind::TopK { .. } => "top-k",
+            CompressorKind::Sign => "sign",
+            CompressorKind::Int8 { .. } => "int8",
+        }
+    }
+
+    /// Round-trippable spelling (`parse(spec_str()) == self`); f64
+    /// `Display` is shortest-round-trip, so the fingerprint in snapshot
+    /// `meta` sections survives bitwise.
+    pub fn spec_str(&self) -> String {
+        match self {
+            CompressorKind::Off => "none".into(),
+            CompressorKind::Identity => "identity".into(),
+            CompressorKind::TopK { fraction } => format!("top-k:{fraction}"),
+            CompressorKind::Sign => "sign".into(),
+            CompressorKind::Int8 { range: None } => "int8".into(),
+            CompressorKind::Int8 { range: Some(r) } => format!("int8:{r}"),
+        }
+    }
+
+    /// Parse the CLI / snapshot spelling:
+    /// `none | identity | top-k:<fraction> | sign | int8[:<range>]`.
+    pub fn parse(s: &str) -> Result<CompressorKind, String> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h.trim(), Some(a.trim())),
+            None => (s.trim(), None),
+        };
+        let num = |what: &str| -> Result<f64, String> {
+            let a = arg.ok_or_else(|| format!("'{head}' needs {what}, e.g. '{head}:0.05'"))?;
+            a.parse::<f64>().map_err(|_| format!("bad {what} '{a}' in compressor '{s}'"))
+        };
+        match head {
+            "none" | "off" => Ok(CompressorKind::Off),
+            "identity" => Ok(CompressorKind::Identity),
+            "top-k" | "topk" => Ok(CompressorKind::TopK { fraction: num("a kept fraction")? }),
+            "sign" | "sign-sgd" => Ok(CompressorKind::Sign),
+            "int8" => Ok(CompressorKind::Int8 {
+                range: match arg {
+                    Some(_) => Some(num("a clip range")?),
+                    None => None,
+                },
+            }),
+            other => Err(format!(
+                "unknown compressor '{other}' (expected none | identity | \
+                 top-k:<fraction> | sign | int8[:<range>])"
+            )),
+        }
+    }
+
+    /// Parse the `[compress]` TOML table (`kind`, `fraction`,
+    /// `int8_range`). Absent table ⇒ [`CompressorKind::Off`]; orphan or
+    /// mismatched sub-keys are configuration errors, matching the
+    /// `[fabric]` / `[checkpoint]` table style.
+    pub fn from_doc(doc: &TomlDoc) -> Result<CompressorKind, String> {
+        let kind = doc.get("compress.kind").and_then(|v| v.as_str());
+        let fraction = doc.get("compress.fraction").and_then(|v| v.as_f64());
+        let range = doc.get("compress.int8_range").and_then(|v| v.as_f64());
+        let Some(kind) = kind else {
+            if doc.get("compress.fraction").is_some() || doc.get("compress.int8_range").is_some()
+            {
+                return Err(
+                    "compress.fraction / compress.int8_range need compress.kind".into()
+                );
+            }
+            return Ok(CompressorKind::Off);
+        };
+        let built = match kind {
+            "none" | "off" => CompressorKind::Off,
+            "identity" => CompressorKind::Identity,
+            "top-k" | "topk" => CompressorKind::TopK {
+                fraction: fraction
+                    .ok_or("compress.kind = \"top-k\" needs compress.fraction")?,
+            },
+            "sign" | "sign-sgd" => CompressorKind::Sign,
+            "int8" => CompressorKind::Int8 { range },
+            other => {
+                return Err(format!(
+                    "unknown compress.kind \"{other}\" (expected none | identity | \
+                     top-k | sign | int8)"
+                ))
+            }
+        };
+        if fraction.is_some() && !matches!(built, CompressorKind::TopK { .. }) {
+            return Err(format!(
+                "compress.fraction only applies to compress.kind = \"top-k\" (got \"{kind}\")"
+            ));
+        }
+        if range.is_some() && !matches!(built, CompressorKind::Int8 { .. }) {
+            return Err(format!(
+                "compress.int8_range only applies to compress.kind = \"int8\" (got \"{kind}\")"
+            ));
+        }
+        Ok(built)
+    }
+
+    /// Whether this scheme loses information in transit (and therefore
+    /// needs the error-feedback residual machinery).
+    pub fn is_lossy(&self) -> bool {
+        matches!(
+            self,
+            CompressorKind::TopK { .. } | CompressorKind::Sign | CompressorKind::Int8 { .. }
+        )
+    }
+
+    /// Closed-form per-node wire payload for one transmission of `dim`
+    /// f32 coordinates — the `msg_bytes` the per-topology collective
+    /// cost models multiply through their message schedules:
+    ///
+    /// * `none` / `identity`: `4·P` (dense f32, same as logical);
+    /// * `top-k`: `8·k` — an (f32 value, u32 index) pair per kept
+    ///   coordinate;
+    /// * `sign`: `⌈P/8⌉ + 4` — one packed sign bit per coordinate plus
+    ///   the f32 scale;
+    /// * `int8`: `P + 8` — one byte per coordinate plus the
+    ///   quantization table (f32 range + reserved word).
+    pub fn wire_payload_bytes(&self, dim: usize) -> usize {
+        match self {
+            CompressorKind::Off | CompressorKind::Identity => dim * 4,
+            CompressorKind::TopK { fraction } => 8 * top_k_count(*fraction, dim),
+            CompressorKind::Sign => dim.div_ceil(8) + 4,
+            CompressorKind::Int8 { .. } => dim + 8,
+        }
+    }
+
+    /// Instantiate the matching [`Compressor`]; `None` for
+    /// [`CompressorKind::Off`] (no compression stage at all).
+    pub fn build(&self) -> Option<Box<dyn Compressor>> {
+        match *self {
+            CompressorKind::Off => None,
+            CompressorKind::Identity => Some(Box::new(Identity)),
+            CompressorKind::TopK { fraction } => Some(Box::new(TopK { fraction })),
+            CompressorKind::Sign => Some(Box::new(SignSgd)),
+            CompressorKind::Int8 { range } => Some(Box::new(Int8 { range })),
+        }
+    }
+
+    /// Spec validation, collected into `errs` (the `TrainSpec::validate`
+    /// style): parameter ranges plus compressor × algorithm
+    /// compatibility. Lossy schemes are rejected for algorithms whose
+    /// sync is not plain parameter averaging — EASGD's elastic exchange
+    /// keeps an uncompressed center and momentum Local SGD fuses a
+    /// `[params ‖ momentum]` collective — where a params-only transform
+    /// would make the wire accounting dishonest.
+    pub fn validate(&self, algorithm: AlgorithmKind, errs: &mut Vec<String>) {
+        match self {
+            CompressorKind::TopK { fraction } => {
+                if !fraction.is_finite() || *fraction <= 0.0 || *fraction > 1.0 {
+                    errs.push(format!(
+                        "compress top-k fraction must be in (0, 1], got {fraction}"
+                    ));
+                }
+            }
+            CompressorKind::Int8 { range: Some(r) } => {
+                if !r.is_finite() || *r <= 0.0 {
+                    errs.push(format!(
+                        "compress int8 range must be finite and positive, got {r}"
+                    ));
+                }
+            }
+            _ => {}
+        }
+        if self.is_lossy()
+            && matches!(algorithm, AlgorithmKind::Easgd | AlgorithmKind::MomentumLocalSgd)
+        {
+            errs.push(format!(
+                "lossy compressor '{}' is incompatible with algorithm '{}' \
+                 (its sync is not plain parameter averaging; use 'identity' or 'none')",
+                self.name(),
+                algorithm.name()
+            ));
+        }
+    }
+}
+
+/// Number of coordinates top-k keeps for a `dim`-element buffer.
+pub fn top_k_count(fraction: f64, dim: usize) -> usize {
+    if dim == 0 {
+        return 0;
+    }
+    ((fraction * dim as f64).ceil() as usize).clamp(1, dim)
+}
+
+/// One lossy (or losslessly staged) transmission scheme.
+///
+/// [`Compressor::transmit`] models a full compress → send → decompress
+/// hop in one in-place step with error feedback: on entry `v` is the
+/// worker's buffer and `residual` holds the error left by the previous
+/// transmission; on exit `v` is what the receiver reconstructs and
+/// `residual` the new untransmitted remainder, so
+/// `v_out + residual_out == v_in + residual_in` coordinate-wise (exact
+/// in f32 for every scheme here, since the residual is computed as the
+/// literal subtraction). Deterministic: a pure function of its inputs,
+/// which is what keeps seeded lossy runs bitwise reproducible.
+pub trait Compressor {
+    /// Scheme name (matches [`CompressorKind::name`]).
+    fn name(&self) -> &'static str;
+    /// Whether the transmission loses information (needs residuals).
+    fn is_lossy(&self) -> bool;
+    /// Per-node wire payload for `dim` coordinates (see
+    /// [`CompressorKind::wire_payload_bytes`]).
+    fn wire_bytes(&self, dim: usize) -> usize;
+    /// Error-feedback transmission, in place (see trait docs). Lossless
+    /// schemes must leave both buffers untouched — bitwise.
+    fn transmit(&self, v: &mut [f32], residual: &mut [f32]);
+}
+
+/// Full-precision staging: transmits exactly, touches nothing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+    fn is_lossy(&self) -> bool {
+        false
+    }
+    fn wire_bytes(&self, dim: usize) -> usize {
+        CompressorKind::Identity.wire_payload_bytes(dim)
+    }
+    fn transmit(&self, _v: &mut [f32], _residual: &mut [f32]) {
+        // the whole point: the staged path is bitwise the unstaged one
+    }
+}
+
+/// Magnitude top-k sparsification (value + index payload).
+#[derive(Debug, Clone, Copy)]
+pub struct TopK {
+    /// Fraction of coordinates kept per transmission.
+    pub fraction: f64,
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "top-k"
+    }
+    fn is_lossy(&self) -> bool {
+        true
+    }
+    fn wire_bytes(&self, dim: usize) -> usize {
+        CompressorKind::TopK { fraction: self.fraction }.wire_payload_bytes(dim)
+    }
+    fn transmit(&self, v: &mut [f32], residual: &mut [f32]) {
+        let dim = v.len();
+        debug_assert_eq!(residual.len(), dim);
+        for (c, r) in v.iter_mut().zip(residual.iter_mut()) {
+            *c += *r;
+        }
+        let k = top_k_count(self.fraction, dim);
+        if k >= dim {
+            // everything travels: lossless this round, residual drains
+            residual.fill(0.0);
+            return;
+        }
+        // deterministic selection: |value| descending, index ascending on
+        // ties (total_cmp gives a total order even over NaN/-0.0)
+        let mut idx: Vec<u32> = (0..dim as u32).collect();
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            v[b as usize]
+                .abs()
+                .total_cmp(&v[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        let mut kept = vec![false; dim];
+        for &i in &idx[..k] {
+            kept[i as usize] = true;
+        }
+        for i in 0..dim {
+            if kept[i] {
+                residual[i] = 0.0;
+            } else {
+                residual[i] = v[i];
+                v[i] = 0.0;
+            }
+        }
+    }
+}
+
+/// 1-bit sign compression with a per-tensor mean-|value| scale.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SignSgd;
+
+impl Compressor for SignSgd {
+    fn name(&self) -> &'static str {
+        "sign"
+    }
+    fn is_lossy(&self) -> bool {
+        true
+    }
+    fn wire_bytes(&self, dim: usize) -> usize {
+        CompressorKind::Sign.wire_payload_bytes(dim)
+    }
+    fn transmit(&self, v: &mut [f32], residual: &mut [f32]) {
+        debug_assert_eq!(residual.len(), v.len());
+        for (c, r) in v.iter_mut().zip(residual.iter_mut()) {
+            *c += *r;
+        }
+        // f64 accumulation, one fixed order: deterministic scale
+        let sum_abs: f64 = v.iter().map(|c| c.abs() as f64).sum();
+        let scale = (sum_abs / v.len().max(1) as f64) as f32;
+        for (c, r) in v.iter_mut().zip(residual.iter_mut()) {
+            let sent = if *c >= 0.0 { scale } else { -scale };
+            *r = *c - sent;
+            *c = sent;
+        }
+    }
+}
+
+/// Uniform 8-bit quantization over `[-range, range]`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Int8 {
+    /// Fixed clip range; `None` measures max-|value| per transmission.
+    pub range: Option<f64>,
+}
+
+impl Compressor for Int8 {
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+    fn is_lossy(&self) -> bool {
+        true
+    }
+    fn wire_bytes(&self, dim: usize) -> usize {
+        CompressorKind::Int8 { range: self.range }.wire_payload_bytes(dim)
+    }
+    fn transmit(&self, v: &mut [f32], residual: &mut [f32]) {
+        debug_assert_eq!(residual.len(), v.len());
+        for (c, r) in v.iter_mut().zip(residual.iter_mut()) {
+            *c += *r;
+        }
+        let range = match self.range {
+            Some(r) => r as f32,
+            None => v.iter().fold(0.0f32, |m, c| m.max(c.abs())),
+        };
+        if !range.is_finite() || range <= 0.0 {
+            // all-zero (or degenerate) buffer: transmit zeros, keep the
+            // whole thing as residual
+            for (c, r) in v.iter_mut().zip(residual.iter_mut()) {
+                *r = *c;
+                *c = 0.0;
+            }
+            return;
+        }
+        for (c, r) in v.iter_mut().zip(residual.iter_mut()) {
+            let q = (*c / range * 127.0).round().clamp(-127.0, 127.0);
+            let sent = q / 127.0 * range;
+            *r = *c - sent;
+            *c = sent;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn noisy(dim: usize, seed: u64) -> Vec<f32> {
+        let mut v = vec![0.0f32; dim];
+        Pcg32::new(seed, 17).fill_normal(&mut v, 1.0);
+        v
+    }
+
+    /// EF mass conservation: v_out + r_out == v_in + r_in coordinate-wise
+    /// (exact — the residual is the literal f32 subtraction).
+    fn assert_mass_conserved(c: &dyn Compressor, dim: usize, seed: u64) {
+        let mut v = noisy(dim, seed);
+        let mut r = noisy(dim, seed ^ 0xFF);
+        // scale residuals down so they look like accumulated error
+        for x in r.iter_mut() {
+            *x *= 0.1;
+        }
+        let before: Vec<f32> = v.iter().zip(r.iter()).map(|(a, b)| a + b).collect();
+        c.transmit(&mut v, &mut r);
+        for i in 0..dim {
+            // v_out = before - r_out exactly, so before - r_out - v_out == 0
+            // up to the one rounding of the final re-addition
+            let back = v[i] + r[i];
+            assert!(
+                (back - before[i]).abs() <= before[i].abs() * 1e-6 + 1e-6,
+                "{}: coord {i}: {} + {} != {}",
+                c.name(),
+                v[i],
+                r[i],
+                before[i]
+            );
+        }
+    }
+
+    #[test]
+    fn identity_touches_nothing() {
+        let c = Identity;
+        let v0 = noisy(64, 1);
+        let r0 = noisy(64, 2);
+        let (mut v, mut r) = (v0.clone(), r0.clone());
+        c.transmit(&mut v, &mut r);
+        assert_eq!(v, v0);
+        assert_eq!(r, r0);
+        assert!(!c.is_lossy());
+        assert_eq!(c.wire_bytes(64), 256);
+    }
+
+    #[test]
+    fn top_k_keeps_exactly_k_and_conserves_mass() {
+        let c = TopK { fraction: 0.25 };
+        let mut v = noisy(64, 3);
+        let mut r = vec![0.0f32; 64];
+        let orig = v.clone();
+        c.transmit(&mut v, &mut r);
+        let nz = v.iter().filter(|x| **x != 0.0).count();
+        assert_eq!(nz, 16, "k = ceil(0.25 * 64)");
+        // kept coordinates travel exactly; dropped ones land in residual
+        for i in 0..64 {
+            if v[i] != 0.0 {
+                assert_eq!(v[i], orig[i]);
+                assert_eq!(r[i], 0.0);
+            } else {
+                assert_eq!(r[i], orig[i]);
+            }
+        }
+        // the kept set is the k largest magnitudes
+        let min_kept = v.iter().filter(|x| **x != 0.0).map(|x| x.abs()).fold(f32::MAX, f32::min);
+        let max_dropped = r.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+        assert!(min_kept >= max_dropped);
+        assert_mass_conserved(&c, 97, 4);
+    }
+
+    #[test]
+    fn top_k_count_edges() {
+        assert_eq!(top_k_count(0.01, 10), 1, "ceil with floor at 1");
+        assert_eq!(top_k_count(1.0, 10), 10);
+        assert_eq!(top_k_count(0.5, 7), 4);
+        assert_eq!(top_k_count(0.5, 0), 0);
+        // fraction 1.0 is lossless: residual drains completely
+        let c = TopK { fraction: 1.0 };
+        let mut v = noisy(16, 5);
+        let mut r = noisy(16, 6);
+        let expect: Vec<f32> = v.iter().zip(r.iter()).map(|(a, b)| a + b).collect();
+        c.transmit(&mut v, &mut r);
+        assert_eq!(v, expect);
+        assert!(r.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn sign_sends_scaled_signs() {
+        let c = SignSgd;
+        let mut v = noisy(128, 7);
+        let mut r = vec![0.0f32; 128];
+        let orig = v.clone();
+        c.transmit(&mut v, &mut r);
+        let scale = v[0].abs();
+        assert!(scale > 0.0);
+        for i in 0..128 {
+            assert_eq!(v[i].abs(), scale, "every coordinate is ±scale");
+            assert_eq!(v[i] >= 0.0, orig[i] >= 0.0, "sign preserved");
+        }
+        assert_mass_conserved(&c, 128, 8);
+    }
+
+    #[test]
+    fn int8_roundtrip_error_is_bounded() {
+        let c = Int8 { range: None };
+        let mut v = noisy(256, 9);
+        let mut r = vec![0.0f32; 256];
+        let orig = v.clone();
+        let range = orig.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        c.transmit(&mut v, &mut r);
+        // quantization error per coordinate ≤ half a step
+        let half_step = range / 127.0 / 2.0 + 1e-6;
+        for i in 0..256 {
+            assert!((v[i] - orig[i]).abs() <= half_step, "coord {i}");
+            assert!(r[i].abs() <= half_step);
+        }
+        assert_mass_conserved(&c, 256, 10);
+        // clipped variant saturates out-of-range values
+        let c = Int8 { range: Some(0.5) };
+        let mut v = vec![2.0f32, -3.0, 0.1];
+        let mut r = vec![0.0f32; 3];
+        c.transmit(&mut v, &mut r);
+        assert_eq!(v[0], 0.5);
+        assert_eq!(v[1], -0.5);
+        assert!((v[2] - 0.1).abs() <= 0.5 / 127.0);
+    }
+
+    #[test]
+    fn int8_degenerate_zero_buffer() {
+        let c = Int8 { range: None };
+        let mut v = vec![0.0f32; 8];
+        let mut r = vec![0.0f32; 8];
+        c.transmit(&mut v, &mut r);
+        assert!(v.iter().all(|x| *x == 0.0));
+        assert!(r.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn error_feedback_retransmits_lost_mass() {
+        // a constant buffer under top-k: dropped coordinates accumulate
+        // in the residual and travel on a later round
+        let c = TopK { fraction: 0.25 };
+        let mut v = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut r = vec![0.0f32; 4];
+        c.transmit(&mut v, &mut r); // sends coordinate 3 only
+        assert_eq!(v, vec![0.0, 0.0, 0.0, 4.0]);
+        assert_eq!(r, vec![1.0, 2.0, 3.0, 0.0]);
+        // next round the worker writes fresh values; the residual rides
+        let mut v2 = vec![1.0f32, 2.0, 3.0, 0.0];
+        c.transmit(&mut v2, &mut r);
+        // c = [2, 4, 6, 0] → keeps coordinate 2
+        assert_eq!(v2, vec![0.0, 0.0, 6.0, 0.0]);
+        assert_eq!(r, vec![2.0, 4.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn transmit_is_deterministic() {
+        for kind in [
+            CompressorKind::TopK { fraction: 0.1 },
+            CompressorKind::Sign,
+            CompressorKind::Int8 { range: None },
+        ] {
+            let c = kind.build().unwrap();
+            let mut v1 = noisy(200, 21);
+            let mut r1 = noisy(200, 22);
+            let (mut v2, mut r2) = (v1.clone(), r1.clone());
+            c.transmit(&mut v1, &mut r1);
+            c.transmit(&mut v2, &mut r2);
+            assert_eq!(v1, v2, "{}", c.name());
+            assert_eq!(r1, r2, "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn top_k_breaks_magnitude_ties_by_index() {
+        let c = TopK { fraction: 0.5 };
+        let mut v = vec![1.0f32, -1.0, 1.0, -1.0];
+        let mut r = vec![0.0f32; 4];
+        c.transmit(&mut v, &mut r);
+        assert_eq!(v, vec![1.0, -1.0, 0.0, 0.0], "lowest indices win ties");
+    }
+
+    #[test]
+    fn wire_payload_closed_forms() {
+        let dim = 1000;
+        assert_eq!(CompressorKind::Off.wire_payload_bytes(dim), 4000);
+        assert_eq!(CompressorKind::Identity.wire_payload_bytes(dim), 4000);
+        assert_eq!(
+            CompressorKind::TopK { fraction: 0.01 }.wire_payload_bytes(dim),
+            80,
+            "10 kept coords x (f32 + u32)"
+        );
+        assert_eq!(CompressorKind::Sign.wire_payload_bytes(dim), 129, "125 packed bytes + scale");
+        assert_eq!(CompressorKind::Int8 { range: None }.wire_payload_bytes(dim), 1008);
+        // honesty: a fraction above 0.5 costs more wire than dense f32
+        assert!(CompressorKind::TopK { fraction: 0.9 }.wire_payload_bytes(dim) > 4000);
+        // trait impls agree with the closed forms
+        for kind in [
+            CompressorKind::Identity,
+            CompressorKind::TopK { fraction: 0.01 },
+            CompressorKind::Sign,
+            CompressorKind::Int8 { range: Some(1.0) },
+        ] {
+            let c = kind.build().unwrap();
+            assert_eq!(c.wire_bytes(dim), kind.wire_payload_bytes(dim), "{}", c.name());
+            assert_eq!(c.is_lossy(), kind.is_lossy());
+            assert_eq!(c.name(), kind.name());
+        }
+        assert!(CompressorKind::Off.build().is_none());
+    }
+
+    #[test]
+    fn parse_round_trips_every_spelling() {
+        for kind in [
+            CompressorKind::Off,
+            CompressorKind::Identity,
+            CompressorKind::TopK { fraction: 0.05 },
+            CompressorKind::TopK { fraction: 0.1 + 0.2 }, // non-shortest f64
+            CompressorKind::Sign,
+            CompressorKind::Int8 { range: None },
+            CompressorKind::Int8 { range: Some(2.5) },
+        ] {
+            let s = kind.spec_str();
+            assert_eq!(CompressorKind::parse(&s).unwrap(), kind, "{s}");
+        }
+        assert_eq!(CompressorKind::parse("off").unwrap(), CompressorKind::Off);
+        assert_eq!(
+            CompressorKind::parse("topk:0.5").unwrap(),
+            CompressorKind::TopK { fraction: 0.5 }
+        );
+        assert_eq!(CompressorKind::parse("sign-sgd").unwrap(), CompressorKind::Sign);
+        assert!(CompressorKind::parse("top-k").is_err(), "fraction required");
+        assert!(CompressorKind::parse("top-k:x").is_err());
+        assert!(CompressorKind::parse("gzip").is_err());
+    }
+
+    #[test]
+    fn from_doc_parses_and_rejects_orphans() {
+        let doc = |s: &str| TomlDoc::parse(s).unwrap();
+        assert_eq!(CompressorKind::from_doc(&doc("")).unwrap(), CompressorKind::Off);
+        assert_eq!(
+            CompressorKind::from_doc(&doc("[compress]\nkind = \"top-k\"\nfraction = 0.05\n"))
+                .unwrap(),
+            CompressorKind::TopK { fraction: 0.05 }
+        );
+        assert_eq!(
+            CompressorKind::from_doc(&doc("[compress]\nkind = \"int8\"\nint8_range = 4.0\n"))
+                .unwrap(),
+            CompressorKind::Int8 { range: Some(4.0) }
+        );
+        assert_eq!(
+            CompressorKind::from_doc(&doc("[compress]\nkind = \"sign\"\n")).unwrap(),
+            CompressorKind::Sign
+        );
+        // orphan / mismatched sub-keys are config errors, not silence
+        assert!(CompressorKind::from_doc(&doc("[compress]\nfraction = 0.05\n")).is_err());
+        assert!(CompressorKind::from_doc(&doc("[compress]\nkind = \"top-k\"\n")).is_err());
+        assert!(CompressorKind::from_doc(
+            &doc("[compress]\nkind = \"sign\"\nfraction = 0.05\n")
+        )
+        .is_err());
+        assert!(CompressorKind::from_doc(
+            &doc("[compress]\nkind = \"top-k\"\nfraction = 0.05\nint8_range = 1.0\n")
+        )
+        .is_err());
+        assert!(CompressorKind::from_doc(&doc("[compress]\nkind = \"gzip\"\n")).is_err());
+    }
+
+    #[test]
+    fn validate_ranges_and_compatibility() {
+        let errs_for = |kind: CompressorKind, algo: AlgorithmKind| {
+            let mut errs = Vec::new();
+            kind.validate(algo, &mut errs);
+            errs
+        };
+        assert!(errs_for(CompressorKind::TopK { fraction: 0.5 }, AlgorithmKind::VrlSgd)
+            .is_empty());
+        for bad in [0.0, -0.1, 1.5, f64::NAN, f64::INFINITY] {
+            assert!(
+                !errs_for(CompressorKind::TopK { fraction: bad }, AlgorithmKind::VrlSgd)
+                    .is_empty(),
+                "{bad}"
+            );
+        }
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(
+                !errs_for(CompressorKind::Int8 { range: Some(bad) }, AlgorithmKind::VrlSgd)
+                    .is_empty(),
+                "{bad}"
+            );
+        }
+        assert!(errs_for(CompressorKind::Int8 { range: None }, AlgorithmKind::VrlSgd)
+            .is_empty());
+        // lossy × {easgd, mom-local-sgd} is rejected; identity is fine
+        for algo in [AlgorithmKind::Easgd, AlgorithmKind::MomentumLocalSgd] {
+            assert!(!errs_for(CompressorKind::Sign, algo).is_empty());
+            assert!(!errs_for(CompressorKind::TopK { fraction: 0.1 }, algo).is_empty());
+            assert!(!errs_for(CompressorKind::Int8 { range: None }, algo).is_empty());
+            assert!(errs_for(CompressorKind::Identity, algo).is_empty());
+            assert!(errs_for(CompressorKind::Off, algo).is_empty());
+        }
+        for algo in [
+            AlgorithmKind::SSgd,
+            AlgorithmKind::LocalSgd,
+            AlgorithmKind::VrlSgd,
+            AlgorithmKind::VrlSgdWarmup,
+            AlgorithmKind::CocodSgd,
+        ] {
+            assert!(errs_for(CompressorKind::Sign, algo).is_empty(), "{algo:?}");
+        }
+    }
+}

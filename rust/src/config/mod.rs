@@ -273,6 +273,12 @@ pub struct TrainSpec {
     /// only the simulated-time axis and communication accounting — never
     /// the trajectory.
     pub fabric: crate::fabric::FabricSpec,
+    /// Gradient/parameter compression on the sync path (`[compress]`
+    /// TOML table / `--compress` flag). `Off` by default; lossy schemes
+    /// change the trajectory (deterministically per seed) and shrink
+    /// `CommStats::wire_bytes`, while `Identity` is bitwise-equal to
+    /// `Off`. See [`crate::compress`].
+    pub compress: crate::compress::CompressorKind,
     /// Record per-step (not just per-sync) metrics — slower, used by the
     /// Appendix-E figures that plot every iteration.
     pub dense_metrics: bool,
@@ -299,6 +305,7 @@ impl Default for TrainSpec {
             seed: 42,
             network: NetworkSpec::default(),
             fabric: crate::fabric::FabricSpec::default(),
+            compress: crate::compress::CompressorKind::Off,
             dense_metrics: false,
             threads: 0,
         }
@@ -333,6 +340,7 @@ impl TrainSpec {
         if let Err(e) = self.fabric.validate(self.workers) {
             errs.push(e);
         }
+        self.compress.validate(self.algorithm, &mut errs);
         if errs.is_empty() {
             Ok(())
         } else {
@@ -372,6 +380,7 @@ impl TrainSpec {
                 bandwidth_gbps: doc.f64_or("spec.bandwidth_gbps", d.network.bandwidth_gbps),
             },
             fabric: crate::fabric::FabricSpec::from_doc(doc)?,
+            compress: crate::compress::CompressorKind::from_doc(doc)?,
             dense_metrics: doc.bool_or("spec.dense_metrics", d.dense_metrics),
             threads: doc.usize_or("spec.threads", d.threads),
         })
@@ -673,6 +682,59 @@ mod tests {
             cfg.spec.fabric.participation,
             ParticipationModel::Bernoulli { drop: 0.25 }
         );
+    }
+
+    #[test]
+    fn validate_rejects_bad_compression() {
+        use crate::compress::CompressorKind;
+        let with = |compress, algorithm| TrainSpec { compress, algorithm, ..TrainSpec::default() };
+        // top-k fraction must live in (0, 1]
+        for bad in [0.0f64, -0.5, 1.01, f64::NAN, f64::INFINITY] {
+            let err = with(CompressorKind::TopK { fraction: bad }, AlgorithmKind::VrlSgd)
+                .validate()
+                .unwrap_err();
+            assert!(err.contains("(0, 1]"), "fraction {bad}: {err}");
+        }
+        with(CompressorKind::TopK { fraction: 1.0 }, AlgorithmKind::VrlSgd).validate().unwrap();
+        // an explicit int8 clip range must be finite and positive
+        for bad in [0.0f64, -2.0, f64::NAN, f64::INFINITY] {
+            let err = with(CompressorKind::Int8 { range: Some(bad) }, AlgorithmKind::VrlSgd)
+                .validate()
+                .unwrap_err();
+            assert!(err.contains("finite and positive"), "range {bad}: {err}");
+        }
+        with(CompressorKind::Int8 { range: None }, AlgorithmKind::VrlSgd).validate().unwrap();
+        // lossy schemes are incompatible with the non-plain-averaging
+        // syncs (EASGD's elastic exchange, momentum's fused collective)
+        for algo in [AlgorithmKind::Easgd, AlgorithmKind::MomentumLocalSgd] {
+            let err = with(CompressorKind::Sign, algo).validate().unwrap_err();
+            assert!(err.contains("incompatible"), "{algo:?}: {err}");
+            with(CompressorKind::Identity, algo).validate().unwrap();
+        }
+        // a TOML config carrying a bad table is rejected at load time
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[compress]\n\
+             kind = \"top-k\"\nfraction = 1.5\n"
+        )
+        .is_err());
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[spec]\n\
+             algorithm = \"easgd\"\n[compress]\nkind = \"sign\"\n"
+        )
+        .is_err());
+        // orphan sub-keys are config errors, matching the fabric style
+        assert!(RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[compress]\n\
+             fraction = 0.1\n"
+        )
+        .is_err());
+        // and a valid table round-trips into the spec
+        let cfg = RunConfig::from_toml(
+            "partition = \"identical\"\n[task]\nkind = \"quadratic\"\n[compress]\n\
+             kind = \"top-k\"\nfraction = 0.05\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.spec.compress, CompressorKind::TopK { fraction: 0.05 });
     }
 
     #[test]

@@ -75,6 +75,12 @@ pub struct WorkerState {
     /// Post-step hook state (momentum buffer etc.), attached by the
     /// session from [`Algorithm::corrector`]; `None` for most algorithms.
     pub corrector: Option<Box<dyn StepCorrector>>,
+    /// Error-feedback residual of the configured lossy
+    /// [`crate::compress::Compressor`]: the mass the last transmission
+    /// dropped, re-added before the next one. Empty (len 0) unless a
+    /// lossy compressor is active; frozen while the worker is absent
+    /// under partial participation; captured in snapshot format v4.
+    pub residual: Vec<f32>,
 }
 
 impl WorkerState {
@@ -85,6 +91,7 @@ impl WorkerState {
             delta: vec![0.0; params0.len()],
             rng: root.split(i as u64),
             corrector: None,
+            residual: Vec::new(),
         }
     }
 }

@@ -22,6 +22,11 @@
 //! * [`comm`] — simulated cluster network with latency/bandwidth cost model,
 //!   allreduce implementations (flat ring/star/tree and a two-level
 //!   hierarchy over a slower uplink) and exact byte/round accounting.
+//! * [`compress`] — pluggable gradient compression on the sync path:
+//!   identity / top-k / sign-SGD / int8 behind one
+//!   [`compress::Compressor`] trait, per-worker error-feedback
+//!   residuals (frozen for absent workers, checkpointed in snap v4) and
+//!   an honest logical-vs-wire byte split in [`comm::CommStats`].
 //! * [`fabric`] — heterogeneous fleet simulation: per-worker speed
 //!   profiles, seeded straggler processes and collective topologies that
 //!   drive the simulated-time axis without ever touching the trajectory,
@@ -133,6 +138,7 @@
 //!     topology: TopologyKind::TwoLevel,
 //!     groups: 2,
 //!     uplink: Some(NetworkSpec { latency_us: 500.0, bandwidth_gbps: 1.0 }),
+//!     ..FabricSpec::default()
 //! };
 //! let out = Trainer::new(task)
 //!     .algorithm(AlgorithmKind::VrlSgd)
@@ -189,11 +195,54 @@
 //! (CLI: `--dropout bernoulli:0.2`, `--dropout group:0.3` with a
 //! two-level topology, or the deterministic `--sampler round-robin:4`;
 //! TOML: `fabric.dropout` / `fabric.sampler` keys.)
+//!
+//! When the wire itself is the bottleneck, a [`compress`] scheme rides
+//! the sync path: each present worker's transported parameters pass
+//! through a [`compress::Compressor`] (top-k sparsification, 1-bit
+//! sign-SGD, int8 quantization) with a per-worker **error-feedback
+//! residual** — the untransmitted remainder is carried into the next
+//! round instead of dropped, so VRL-SGD's Σ_i Δ_i = 0 bookkeeping
+//! survives lossy transport. Accounting stays honest:
+//! `CommStats::bytes` keeps counting the paper's *logical* f32 volume
+//! while `CommStats::wire_bytes` prices what the compressor actually
+//! moved (`CompressorKind::Identity` is bitwise identical to no
+//! compressor at all; lossy runs are seeded-reproducible and
+//! checkpoint/resume bitwise via the v4 snapshot's residual sections —
+//! `rust/tests/compress.rs`):
+//!
+//! ```no_run
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
+//! let out = Trainer::new(task)
+//!     .algorithm(AlgorithmKind::VrlSgd)
+//!     .partition(Partition::LabelSharded)
+//!     .workers(8)
+//!     .period(20)
+//!     .steps(2000)
+//!     // move ~5% of the coordinates per sync; the rest accumulates
+//!     // in the error-feedback residual
+//!     .compression(CompressorKind::TopK { fraction: 0.05 })
+//!     .run()
+//!     .unwrap();
+//! println!(
+//!     "{} logical bytes, {} on the wire ({:.1}x less traffic)",
+//!     out.comm.bytes,
+//!     out.comm.wire_bytes,
+//!     out.comm.compression_ratio()
+//! );
+//! ```
+//!
+//! (CLI: `--compress top-k:0.05`, `--compress sign`, `--compress
+//! int8`; TOML: a `[compress]` table with `kind` / `fraction` /
+//! `int8_range` keys. `benches/fig_compress.rs` sweeps the
+//! accuracy-vs-wire-bytes frontier.)
 
 pub mod analysis;
 pub mod benchutil;
 pub mod checkpoint;
 pub mod comm;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -211,6 +260,7 @@ pub mod trainer;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::checkpoint::{Checkpointer, Snapshot};
+    pub use crate::compress::{Compressor, CompressorKind};
     pub use crate::config::{AlgorithmKind, NetworkSpec, Partition, TaskKind, TrainSpec};
     pub use crate::fabric::{
         FabricSpec, Fleet, FleetState, ParticipationModel, Roster, RosterState,

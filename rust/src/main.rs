@@ -34,6 +34,7 @@ COMMANDS:
         [--topology <ring|naive|tree|two-level[:groups]>]
         [--dropout <off|bernoulli:<p>|group:<p>>]
         [--sampler <all|round-robin:<m>>]
+        [--compress <none|identity|top-k:<fraction>|sign|int8[:<range>]>]
                                       run one training job (the optional
                                       [schedule] table maps to lr decay /
                                       stagewise periods; --threads > 1
@@ -56,7 +57,11 @@ COMMANDS:
                                       workers skip whole rounds, so the
                                       trajectory changes — but stays a
                                       seeded, reproducible function of
-                                      the spec)
+                                      the spec; --compress overrides the
+                                      [compress] table: lossy schemes
+                                      ride an error-feedback residual
+                                      and report honest wire bytes next
+                                      to the logical counters)
   fig1|fig2|fig5|fig6 [--paper] [--out <csv>]
                                       epoch-loss figures (1/2: paper k;
                                       5: k/2; 6: 2k)
@@ -182,6 +187,9 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
             if let Some(s) = args.get("sampler") {
                 cfg.spec.fabric.set_sampler_flag(s)?;
             }
+            if let Some(c) = args.get("compress") {
+                cfg.spec.compress = vrl_sgd::compress::CompressorKind::parse(c)?;
+            }
             // CLI fabric overrides re-enter validation (worker-count
             // bounds, uplink sanity, participation ranges) before
             // anything runs
@@ -246,13 +254,16 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
             }
             let out = trainer.run()?;
             println!(
-                "{}: loss {:.6} -> {:.6} in {} rounds ({} bytes, {:.3}s simulated, \
-                 {:.3}s barrier wait, {} empty round(s) skipped)",
+                "{}: loss {:.6} -> {:.6} in {} rounds ({} bytes, {} on the wire \
+                 [{:.2}x], {:.3}s simulated, {:.3}s barrier wait, {} empty round(s) \
+                 skipped)",
                 out.algorithm,
                 out.initial_loss(),
                 out.final_loss(),
                 out.comm.rounds,
                 out.comm.bytes,
+                out.comm.wire_bytes,
+                out.comm.compression_ratio(),
                 out.sim_time.total(),
                 out.sim_time.wait_s,
                 out.skipped_rounds

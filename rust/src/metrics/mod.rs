@@ -12,7 +12,8 @@
 
 /// Header line shared by `History::sync_csv` and `trainer::CsvSink`.
 pub const SYNC_CSV_HEADER: &str = "round,step,train_loss,worker_variance,comm_rounds,\
-     comm_bytes,sim_time_s,straggler_wait_s,present_workers,skipped_rounds\n";
+     comm_bytes,sim_time_s,straggler_wait_s,present_workers,skipped_rounds,\
+     compressed_bytes,compression_ratio\n";
 
 /// One record per synchronization round.
 #[derive(Debug, Clone, PartialEq)]
@@ -42,6 +43,13 @@ pub struct SyncRow {
     /// Cumulative rounds skipped because sampling left zero participants
     /// (see the session driver's empty-round policy).
     pub skipped_rounds: u64,
+    /// Cumulative bytes actually transmitted after compression
+    /// (`CommStats::wire_bytes`); equals `comm_bytes` when no lossy
+    /// compressor is configured.
+    pub compressed_bytes: u64,
+    /// Cumulative logical-to-wire ratio (`comm_bytes /
+    /// compressed_bytes`; exactly 1.0 when they agree).
+    pub compression_ratio: f64,
 }
 
 impl SyncRow {
@@ -51,7 +59,7 @@ impl SyncRow {
     /// resumed-stream-matches-history contract has one format to drift.
     pub fn csv_line(&self) -> String {
         format!(
-            "{},{},{:.8e},{:.8e},{},{},{:.6e},{:.6e},{},{}\n",
+            "{},{},{:.8e},{:.8e},{},{},{:.6e},{:.6e},{},{},{},{:.6}\n",
             self.round,
             self.step,
             self.train_loss,
@@ -61,7 +69,9 @@ impl SyncRow {
             self.sim_time_s,
             self.straggler_wait_s,
             self.present_workers,
-            self.skipped_rounds
+            self.skipped_rounds,
+            self.compressed_bytes,
+            self.compression_ratio
         )
     }
 }
@@ -180,6 +190,8 @@ mod tests {
                 straggler_wait_s: 0.01,
                 present_workers: 4,
                 skipped_rounds: 0,
+                compressed_bytes: 100,
+                compression_ratio: 1.0,
             });
         }
         h

@@ -214,6 +214,17 @@ impl Trainer {
         self
     }
 
+    /// Gradient compression on the sync path (see [`crate::compress`]).
+    /// `Identity` is bitwise identical to `Off`; lossy kinds (`TopK`,
+    /// `Sign`, `Int8`) transform each present worker's transported
+    /// params through an error-feedback residual right before the
+    /// collective, and `CommStats`/`SyncRow` split logical vs wire
+    /// bytes honestly per topology.
+    pub fn compression(mut self, kind: crate::compress::CompressorKind) -> Self {
+        self.spec.compress = kind;
+        self
+    }
+
     /// Record per-iteration dense metrics (Appendix-E style).
     pub fn dense_metrics(mut self, on: bool) -> Self {
         self.spec.dense_metrics = on;
@@ -469,7 +480,18 @@ impl Session {
         // prices each round's compute as the slowest worker's critical
         // path — parameters never see any of it
         let mut cluster = Cluster::new(n, &spec.network, spec.fabric.allreduce_algo())
-            .with_uplink(spec.fabric.uplink_or(&spec.network));
+            .with_uplink(spec.fabric.uplink_or(&spec.network))
+            .with_compression(spec.compress);
+        // transport compression: lossy kinds carry a per-worker
+        // error-feedback residual (restored from the snapshot on
+        // resume); `Identity`/`Off` allocate nothing and transform
+        // nothing, keeping those runs bitwise identical to the seed
+        let compressor = spec.compress.build();
+        if spec.compress.is_lossy() {
+            for w in workers.iter_mut() {
+                w.residual = vec![0.0f32; dim];
+            }
+        }
         let mut fleet = Fleet::new(&spec.fabric, n, root.split(FABRIC_STREAM_LANE));
         // participation draws come from their own lane, sampled once per
         // round on the driver thread — presence is a pure function of
@@ -661,6 +683,19 @@ impl Session {
                         }
                     }
                 }
+                // error-feedback transport: each present worker's
+                // transmission is compensated by its residual, then
+                // compressed/decompressed in place, so what the sync
+                // averages is exactly what the wire carried; the lost
+                // mass lands back in the residual for the next round.
+                // Absent workers transmit nothing — their residuals
+                // stay frozen, like the rest of their state.
+                if let Some(c) = compressor.as_deref() {
+                    for &i in &present_idx {
+                        let w = &mut workers[i];
+                        c.transmit(&mut w.params, &mut w.residual);
+                    }
+                }
                 algo.sync(round, p, lr, &mut workers, &present_idx, &mut cluster);
             }
             let comm = cluster.stats();
@@ -705,6 +740,8 @@ impl Session {
                 straggler_wait_s: timing.wait_s,
                 present_workers: m,
                 skipped_rounds: roster.skipped_rounds(),
+                compressed_bytes: comm.wire_bytes,
+                compression_ratio: comm.compression_ratio(),
             };
             for s in self.sinks.iter_mut() {
                 s.on_sync_row(&row);

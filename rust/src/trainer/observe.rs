@@ -408,6 +408,8 @@ mod tests {
             straggler_wait_s: 0.0625,
             present_workers: 2,
             skipped_rounds: 0,
+            compressed_bytes: 100,
+            compression_ratio: 1.0,
         };
         let mut buf = Vec::new();
         {

@@ -85,6 +85,7 @@ fn comm_and_sim_time_continue_across_the_boundary() {
     let tail = vrl_sgd::comm::CommStats {
         rounds: resumed.comm.rounds - snap.comm.rounds,
         bytes: resumed.comm.bytes - snap.comm.bytes,
+        wire_bytes: resumed.comm.wire_bytes - snap.comm.wire_bytes,
         messages: resumed.comm.messages - snap.comm.messages,
         sim_time_s: resumed.comm.sim_time_s - snap.comm.sim_time_s,
     };
@@ -92,6 +93,7 @@ fn comm_and_sim_time_continue_across_the_boundary() {
     merged.merge(&tail);
     assert_eq!(merged.rounds, full.comm.rounds);
     assert_eq!(merged.bytes, full.comm.bytes);
+    assert_eq!(merged.wire_bytes, full.comm.wire_bytes);
     assert_eq!(merged.messages, full.comm.messages);
     assert!((merged.sim_time_s - full.comm.sim_time_s).abs() < 1e-12);
     let _ = std::fs::remove_dir_all(&dir);

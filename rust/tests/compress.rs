@@ -1,0 +1,333 @@
+//! Compression-subsystem contract (`compress`), proven on the shared
+//! `tests/common` harness:
+//!
+//! * **Identity ≡ Off** — staging a full-precision `Identity` compressor
+//!   through the sync path is **bitwise identical** to no compressor at
+//!   all, for all seven algorithms under both executors (history incl.
+//!   the new byte columns, comm counters, final params, simulated time).
+//! * **Seeded & executor-independent** — fixed-seed lossy runs (top-k,
+//!   sign, int8) are bitwise reproducible and identical under the
+//!   sequential and threaded executors.
+//! * **Resumable** — an interrupted lossy dropout run resumes from its
+//!   mid-run snapshot (format v4: error-feedback residuals, wire
+//!   counters) bitwise identically to the uninterrupted run, across
+//!   executors.
+//! * **Algorithm coherence** — VRL-SGD's Σ_i Δ_i = 0 invariant survives
+//!   lossy transport with dropout (the Δ update runs on the transported
+//!   params), and absent workers' residuals stay frozen.
+//! * **Honest accounting** — every lossy compressor reports strictly
+//!   fewer wire bytes than logical bytes; lossless spellings report
+//!   exactly equal counters; the CSV carries the cumulative
+//!   `compressed_bytes` / `compression_ratio` columns.
+
+mod common;
+
+use common::{assert_identical, crash_and_snapshot, temp_dir};
+use std::cell::RefCell;
+use std::rc::Rc;
+use vrl_sgd::checkpoint::Snapshot;
+use vrl_sgd::compress::CompressorKind;
+use vrl_sgd::metrics::SYNC_CSV_HEADER;
+use vrl_sgd::prelude::*;
+
+fn base(algorithm: AlgorithmKind, threads: usize) -> Trainer {
+    common::trainer(algorithm, threads, 13, 60)
+}
+
+const LOSSY: [CompressorKind; 3] = [
+    CompressorKind::TopK { fraction: 0.25 },
+    CompressorKind::Sign,
+    CompressorKind::Int8 { range: None },
+];
+
+/// Algorithms lossy transport is compatible with (plain-averaging syncs;
+/// EASGD and momentum Local SGD are rejected by `TrainSpec::validate`).
+const LOSSY_ALGOS: [AlgorithmKind; 2] = [AlgorithmKind::VrlSgd, AlgorithmKind::LocalSgd];
+
+/// The staging proof: `Identity` rides the entire compression path (the
+/// residual hook, the comm pricing split, the CSV columns) and must be
+/// indistinguishable — bitwise — from a compressor-less run, for every
+/// algorithm under both executors.
+#[test]
+fn identity_is_bitwise_equal_to_off_for_every_algorithm_and_executor() {
+    for algorithm in AlgorithmKind::ALL {
+        for threads in [1usize, 4] {
+            common::assert_runs_identical(
+                &format!("{algorithm:?}/threads={threads}"),
+                || base(algorithm, threads),
+                || base(algorithm, threads).compression(CompressorKind::Identity),
+            );
+        }
+    }
+}
+
+/// Fixed-seed lossy runs are pure functions of the spec: run-to-run
+/// bitwise reproducible, and the threaded executor reproduces the
+/// sequential trajectory exactly (the error-feedback transform runs on
+/// the driver thread either way).
+#[test]
+fn lossy_runs_are_bitwise_reproducible_and_executor_independent() {
+    for algorithm in LOSSY_ALGOS {
+        for kind in LOSSY {
+            let tag = format!("{algorithm:?}/{}", kind.spec_str());
+            common::assert_runs_identical(
+                &format!("{tag}/repeat"),
+                || base(algorithm, 1).compression(kind),
+                || base(algorithm, 1).compression(kind),
+            );
+            common::assert_runs_identical(
+                &format!("{tag}/executors"),
+                || base(algorithm, 1).compression(kind),
+                || base(algorithm, 4).compression(kind),
+            );
+        }
+    }
+}
+
+/// Different compressors fork the trajectory (sanity: the lossy path is
+/// actually live, not silently bypassed).
+#[test]
+fn lossy_compression_changes_the_trajectory() {
+    let off = base(AlgorithmKind::VrlSgd, 1).run().unwrap();
+    for kind in LOSSY {
+        let lossy = base(AlgorithmKind::VrlSgd, 1).compression(kind).run().unwrap();
+        assert_ne!(
+            lossy.final_params,
+            off.final_params,
+            "{}: transport loss must perturb the trajectory",
+            kind.spec_str()
+        );
+        assert!(lossy.final_loss().is_finite());
+    }
+}
+
+/// Interrupted lossy dropout runs resume bitwise from their last
+/// snapshot: format v4 carries the error-feedback residuals and wire
+/// counters, and the resumed executor may differ from the crashed one.
+#[test]
+fn lossy_dropout_runs_resume_bitwise_from_mid_run_snapshots() {
+    for algorithm in LOSSY_ALGOS {
+        for kind in [CompressorKind::TopK { fraction: 0.25 }, CompressorKind::Sign] {
+            let mk = |threads: usize| {
+                move || {
+                    base(algorithm, threads)
+                        .compression(kind)
+                        .participation(ParticipationModel::Bernoulli { drop: 0.3 })
+                }
+            };
+            let tag = format!("{algorithm:?}/{}", kind.spec_str());
+            let full = mk(1)().run().unwrap();
+            let dir = temp_dir(&format!("compress_{algorithm:?}_{}", kind.name()));
+            let snap_path = crash_and_snapshot(mk(1), &dir);
+            let snap = Snapshot::load(&snap_path).unwrap();
+            assert_eq!(snap.spec.compress, kind, "{tag}: fingerprint survives");
+            assert!(
+                snap.worker_states.iter().all(|w| w.residual.len() == snap.dim),
+                "{tag}: residuals snapshotted at full dim"
+            );
+            for threads in [1usize, 4] {
+                let resumed =
+                    mk(threads)().resume_from(&snap_path).unwrap().run().unwrap();
+                assert_identical(&resumed, &full, &format!("{tag}/resume t={threads}"));
+            }
+            // a mismatched compressor spec is rejected at build time
+            let err = base(algorithm, 1)
+                .compression(CompressorKind::Int8 { range: None })
+                .participation(ParticipationModel::Bernoulli { drop: 0.3 })
+                .resume_from(&snap_path)
+                .unwrap()
+                .build()
+                .err()
+                .unwrap();
+            assert!(err.contains("compress"), "{tag}: {err}");
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+/// Observer recording Σ_i Δ_i residuals and per-worker EF residual
+/// snapshots after every sync.
+struct CompressProbe {
+    delta_residuals: Rc<RefCell<Vec<f32>>>,
+    ef_residuals: Rc<RefCell<Vec<Vec<Vec<f32>>>>>,
+}
+
+impl RoundObserver for CompressProbe {
+    fn on_state(&mut self, state: &mut RunState<'_>) {
+        let mut sum = vec![0.0f32; state.dim];
+        for w in state.workers.iter() {
+            for (s, &d) in sum.iter_mut().zip(w.delta.iter()) {
+                *s += d;
+            }
+        }
+        self.delta_residuals
+            .borrow_mut()
+            .push(sum.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+        self.ef_residuals
+            .borrow_mut()
+            .push(state.workers.iter().map(|w| w.residual.clone()).collect());
+    }
+}
+
+/// VRL-SGD's zero-sum invariant survives lossy transport under dropout:
+/// the Δ update runs on the *transported* params, so the mean of the
+/// decompressed transmissions is exactly what every present worker holds
+/// after the sync. Residuals stay finite throughout.
+#[test]
+fn vrl_delta_zero_sum_survives_lossy_transport_with_dropout() {
+    for kind in LOSSY {
+        let delta_residuals = Rc::new(RefCell::new(Vec::new()));
+        let ef_residuals = Rc::new(RefCell::new(Vec::new()));
+        let probe = CompressProbe {
+            delta_residuals: delta_residuals.clone(),
+            ef_residuals: ef_residuals.clone(),
+        };
+        let out = base(AlgorithmKind::VrlSgd, 1)
+            .compression(kind)
+            .participation(ParticipationModel::Bernoulli { drop: 0.4 })
+            .observer(probe)
+            .run()
+            .unwrap();
+        let tag = kind.spec_str();
+        let deltas = delta_residuals.borrow();
+        assert_eq!(deltas.len(), out.history.sync_rows.len(), "{tag}");
+        for (round, &r) in deltas.iter().enumerate() {
+            assert!(r < 2e-3, "{tag}: Σ Δ residual {r} after round {round}");
+        }
+        assert!(out.delta_residual < 2e-3, "{tag}: final residual");
+        let efs = ef_residuals.borrow();
+        let mut any_nonzero = false;
+        for (round, per_worker) in efs.iter().enumerate() {
+            for (i, r) in per_worker.iter().enumerate() {
+                assert!(
+                    r.iter().all(|x| x.is_finite()),
+                    "{tag}: worker {i} residual not finite after round {round}"
+                );
+                any_nonzero |= r.iter().any(|x| *x != 0.0);
+            }
+        }
+        assert!(any_nonzero, "{tag}: error feedback must actually accumulate");
+    }
+}
+
+/// Absent workers transmit nothing, so their error-feedback residuals
+/// are frozen between appearances — proven with the deterministic
+/// round-robin sampler, where round r's present set is exactly
+/// `{(r·m + j) mod N : j < m}`.
+#[test]
+fn absent_workers_residuals_are_frozen() {
+    const N: usize = 4;
+    const M: usize = 2;
+    let delta_residuals = Rc::new(RefCell::new(Vec::new()));
+    let ef_residuals = Rc::new(RefCell::new(Vec::new()));
+    let probe = CompressProbe {
+        delta_residuals: delta_residuals.clone(),
+        ef_residuals: ef_residuals.clone(),
+    };
+    base(AlgorithmKind::VrlSgd, 1)
+        .compression(CompressorKind::TopK { fraction: 0.25 })
+        .participation(ParticipationModel::RoundRobin { count: M })
+        .observer(probe)
+        .run()
+        .unwrap();
+    let efs = ef_residuals.borrow();
+    assert!(efs.len() >= 2, "needs at least two rounds to compare");
+    let mut frozen_checked = 0;
+    for (prev, (round, cur)) in efs.iter().zip(efs.iter().enumerate().skip(1)) {
+        let present: Vec<usize> = (0..M).map(|j| (round * M + j) % N).collect();
+        for w in 0..N {
+            if !present.contains(&w) {
+                assert_eq!(
+                    prev[w], cur[w],
+                    "worker {w} absent in round {round} but its residual moved"
+                );
+                frozen_checked += 1;
+            }
+        }
+    }
+    assert!(frozen_checked > 0, "the drill must actually exercise absences");
+}
+
+/// Honest accounting end to end: lossless spellings report wire ==
+/// logical bytes; every lossy compressor reports strictly fewer (at
+/// these fractions), with the CSV's cumulative columns agreeing with the
+/// run's final counters.
+#[test]
+fn wire_byte_accounting_is_honest_end_to_end() {
+    for kind in [CompressorKind::Off, CompressorKind::Identity] {
+        let out = base(AlgorithmKind::VrlSgd, 1).compression(kind).run().unwrap();
+        assert_eq!(out.comm.wire_bytes, out.comm.bytes, "{}", kind.spec_str());
+        assert_eq!(out.comm.compression_ratio(), 1.0);
+        let last = out.history.sync_rows.last().unwrap();
+        assert_eq!(last.compressed_bytes, out.comm.bytes);
+        assert_eq!(last.compression_ratio, 1.0);
+    }
+    for kind in [CompressorKind::TopK { fraction: 0.05 }, CompressorKind::Sign] {
+        let out = base(AlgorithmKind::VrlSgd, 1).compression(kind).run().unwrap();
+        let tag = kind.spec_str();
+        assert!(out.comm.wire_bytes > 0, "{tag}");
+        assert!(
+            out.comm.wire_bytes < out.comm.bytes,
+            "{tag}: wire {} !< logical {}",
+            out.comm.wire_bytes,
+            out.comm.bytes
+        );
+        assert!(out.comm.compression_ratio() > 1.0, "{tag}");
+        let last = out.history.sync_rows.last().unwrap();
+        assert_eq!(last.compressed_bytes, out.comm.wire_bytes, "{tag}: CSV column");
+        // per-round wire counters are monotone (cumulative)
+        let mut prev = 0;
+        for row in &out.history.sync_rows {
+            assert!(row.compressed_bytes >= prev, "{tag}: cumulative column");
+            prev = row.compressed_bytes;
+        }
+    }
+    // int8 spends ~1 byte/coordinate + table: fewer than dense f32
+    let out = base(AlgorithmKind::VrlSgd, 1)
+        .compression(CompressorKind::Int8 { range: None })
+        .run()
+        .unwrap();
+    assert!(out.comm.wire_bytes < out.comm.bytes, "int8");
+    // honesty cuts both ways: a dense top-k fraction costs MORE wire
+    let out = base(AlgorithmKind::VrlSgd, 1)
+        .compression(CompressorKind::TopK { fraction: 1.0 })
+        .run()
+        .unwrap();
+    assert!(out.comm.wire_bytes > out.comm.bytes, "top-k:1 overhead");
+    assert!(out.comm.compression_ratio() < 1.0);
+}
+
+/// The CSV surface carries the new columns in both emission paths.
+#[test]
+fn csv_carries_the_compression_columns() {
+    assert!(SYNC_CSV_HEADER.contains("compressed_bytes"));
+    assert!(SYNC_CSV_HEADER.trim_end().ends_with("compression_ratio"));
+    let out = base(AlgorithmKind::LocalSgd, 1)
+        .compression(CompressorKind::Sign)
+        .run()
+        .unwrap();
+    let csv = out.history.sync_csv();
+    let header_cols = csv.lines().next().unwrap().split(',').count();
+    for line in csv.lines().skip(1) {
+        assert_eq!(line.split(',').count(), header_cols, "ragged CSV row: {line}");
+    }
+}
+
+/// Lossy × non-averaging algorithms is a configuration error, surfaced
+/// through the builder exactly like the TOML/CLI path.
+#[test]
+fn lossy_compression_is_rejected_for_incompatible_algorithms() {
+    for algorithm in [AlgorithmKind::Easgd, AlgorithmKind::MomentumLocalSgd] {
+        let err = base(algorithm, 1)
+            .compression(CompressorKind::Sign)
+            .run()
+            .err()
+            .unwrap();
+        assert!(err.contains("incompatible"), "{algorithm:?}: {err}");
+        // identity stays fine: the staging path itself is algorithm-neutral
+        base(algorithm, 1)
+            .compression(CompressorKind::Identity)
+            .run()
+            .unwrap();
+    }
+}

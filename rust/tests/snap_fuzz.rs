@@ -130,3 +130,66 @@ fn resealed_length_field_corruption_errors_cleanly() {
         }
     }
 }
+
+/// One real snapshot of a *lossy compressed* dropout run, so the format
+/// v4 additions (error-feedback residual vectors, the compress
+/// fingerprint string in `meta`, wire counters) sit in the fuzzed bytes.
+fn valid_compressed_snapshot_bytes(tag: &str) -> Vec<u8> {
+    let dir = common::temp_dir(tag);
+    common::trainer(AlgorithmKind::VrlSgd, 1, 11, 30)
+        .compression(vrl_sgd::compress::CompressorKind::TopK { fraction: 0.25 })
+        .participation(ParticipationModel::Bernoulli { drop: 0.3 })
+        .observer(Checkpointer::new(&dir).every(2).keep_last(1))
+        .run()
+        .unwrap();
+    let path = latest_snapshot(&dir).unwrap().expect("a snapshot was written");
+    let bytes = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    bytes
+}
+
+#[test]
+fn v4_residual_sections_survive_the_same_fuzz() {
+    let good = valid_compressed_snapshot_bytes("fuzz_compress");
+    let baseline = Snapshot::from_bytes(&good).unwrap();
+    assert_eq!(
+        baseline.spec.compress,
+        vrl_sgd::compress::CompressorKind::TopK { fraction: 0.25 },
+        "the fingerprint is in the fuzzed file"
+    );
+    assert!(
+        baseline.worker_states.iter().all(|w| w.residual.len() == baseline.dim),
+        "residual payloads are in the fuzzed file"
+    );
+
+    let mut rng = Pcg32::new(0xC0_44E5, 0x5EED);
+    let n = good.len();
+    // raw flips: the checksum gate rejects every one
+    for i in 0..100 {
+        let mut bytes = good.clone();
+        let pos = rng.below(n as u32) as usize;
+        bytes[pos] ^= 1u8 << rng.below(8);
+        assert!(Snapshot::from_bytes(&bytes).is_err(), "flip {i} at {pos}");
+    }
+    // truncations: clean errors only
+    for i in 0..60 {
+        let cut = rng.below(n as u32) as usize;
+        let err = Snapshot::from_bytes(&good[..cut])
+            .err()
+            .unwrap_or_else(|| panic!("truncation {i} at {cut} parsed as valid"));
+        assert!(err.contains("truncated") || err.contains("checksum"), "cut {cut}: {err}");
+    }
+    // resealed flips: structural parser must stay calm over residual
+    // lengths, the fingerprint string and the new history columns
+    let mut reached_ok = 0usize;
+    for i in 0..100 {
+        let mut bytes = good.clone();
+        let pos = rng.below((n - 8) as u32) as usize;
+        bytes[pos] ^= 1u8 << rng.below(8);
+        match Snapshot::from_bytes(&reseal(bytes)) {
+            Ok(_) => reached_ok += 1,
+            Err(e) => assert!(!e.is_empty(), "flip {i} at {pos}"),
+        }
+    }
+    assert!(reached_ok > 0, "the structural layer must be exercised");
+}
