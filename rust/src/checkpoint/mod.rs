@@ -63,8 +63,12 @@ use std::path::{Path, PathBuf};
 /// `present_workers` / `skipped_rounds` columns in `history`. v4:
 /// compression fingerprint in `meta`, per-worker error-feedback
 /// residuals in `workers`, `wire_bytes` in `comm`, and the per-round
-/// `compressed_bytes` / `compression_ratio` columns in `history`.)
-pub const SNAP_VERSION: u32 = 4;
+/// `compressed_bytes` / `compression_ratio` columns in `history`. v5:
+/// coordinator fingerprint in `meta`, the `coord` section — phase,
+/// epoch counters, membership ledger and churn-stream position, so
+/// elastic runs resume bitwise from any phase — and the per-round
+/// `phase` / `epoch` / `active_members` columns in `history`.)
+pub const SNAP_VERSION: u32 = 5;
 
 /// One worker's serialized state.
 #[derive(Debug, Clone, PartialEq)]
@@ -124,6 +128,11 @@ pub struct Snapshot {
     /// boundary, so a resumed run replays the identical presence
     /// pattern — even from mid-outage.
     pub roster: crate::fabric::RosterState,
+    /// Coordinator phase-machine state at the boundary — phase, epoch
+    /// counters, membership ledger and churn-stream position — so an
+    /// elastic run resumes bitwise from any phase. Static runs carry
+    /// [`crate::trainer::CoordState::initial`].
+    pub coord: crate::trainer::CoordState,
     /// Metric history recorded so far.
     pub history: History,
 }
@@ -156,6 +165,7 @@ impl Snapshot {
             sim_time: state.sim_time,
             fabric: state.fabric,
             roster: state.participation,
+            coord: state.coord.clone(),
             history: state.history.clone(),
         }
     }
@@ -258,6 +268,21 @@ impl Snapshot {
                 spec.compress.spec_str()
             ));
         }
+        // the coordinator spec shapes the membership timeline (quorum
+        // gates, churn stream, phase lengths), so it is compared exactly;
+        // a static run and a default-coordinator run share a trajectory
+        // but position no extra streams, so even those spellings differ
+        let show = |c: &Option<crate::trainer::CoordinatorSpec>| {
+            c.as_ref().map(|c| c.spec_str()).unwrap_or_else(|| "static".to_string())
+        };
+        if s.coordinator != spec.coordinator {
+            errs.push(format!(
+                "snapshot coordinator spec '{}' != configured '{}' \
+                 (membership timeline would fork)",
+                show(&s.coordinator),
+                show(&spec.coordinator)
+            ));
+        }
         if s.dense_metrics != spec.dense_metrics {
             errs.push("snapshot dense_metrics setting differs".to_string());
         }
@@ -268,6 +293,13 @@ impl Snapshot {
             errs.push(format!(
                 "snapshot carries {} worker states for {} workers",
                 self.worker_states.len(),
+                s.workers
+            ));
+        }
+        if self.coord.membership.len() != s.workers {
+            errs.push(format!(
+                "snapshot membership ledger has {} entries for {} workers",
+                self.coord.membership.len(),
                 s.workers
             ));
         }
@@ -345,6 +377,7 @@ impl Snapshot {
         // compressor fingerprint via its round-trippable spec string
         // (f64 `Display` is shortest-round-trip, like the fabric models)
         meta.put_str(&self.spec.compress.spec_str());
+        put_coordinator_spec(&mut meta, &self.spec.coordinator);
         meta.put_bool(self.spec.dense_metrics);
         meta.put_usize(self.spec.threads);
         meta.put_usize(self.dim);
@@ -400,6 +433,21 @@ impl Snapshot {
         ros.put_u64(self.roster.skipped_rounds);
         w.section("roster", ros.into_bytes());
 
+        let mut co = Enc::new();
+        co.put_str(self.coord.phase.name());
+        co.put_usize(self.coord.epoch);
+        co.put_usize(self.coord.rounds_this_epoch);
+        co.put_usize(self.coord.warmup_left);
+        co.put_usize(self.coord.cooldown_left);
+        co.put_usize(self.coord.membership.len());
+        for &alive in &self.coord.membership {
+            co.put_bool(alive);
+        }
+        co.put_u64(self.coord.churn.rng_state);
+        co.put_u64(self.coord.churn.rng_inc);
+        co.put_u64(self.coord.churn.rounds_sampled);
+        w.section("coord", co.into_bytes());
+
         let mut h = Enc::new();
         h.put_f64(self.history.initial_loss);
         h.put_usize(self.history.sync_rows.len());
@@ -416,6 +464,9 @@ impl Snapshot {
             h.put_u64(r.skipped_rounds);
             h.put_u64(r.compressed_bytes);
             h.put_f64(r.compression_ratio);
+            h.put_str(r.phase);
+            h.put_usize(r.epoch);
+            h.put_usize(r.active_members);
         }
         h.put_usize(self.history.dense_rows.len());
         for r in &self.history.dense_rows {
@@ -465,6 +516,7 @@ impl Snapshot {
             fabric: get_fabric_spec(&mut d)?,
             compress: crate::compress::CompressorKind::parse(&d.str()?)
                 .map_err(|e| format!("snapshot names an unknown compressor: {e}"))?,
+            coordinator: get_coordinator_spec(&mut d)?,
             dense_metrics: d.bool()?,
             threads: d.usize()?,
         };
@@ -531,6 +583,35 @@ impl Snapshot {
         };
         d.finish()?;
 
+        let mut d = Dec::new(r.require("coord")?);
+        let phase = crate::trainer::Phase::parse(&d.str()?)
+            .map_err(|e| format!("snapshot names an unknown phase: {e}"))?;
+        let epoch = d.usize()?;
+        let rounds_this_epoch = d.usize()?;
+        let warmup_left = d.usize()?;
+        let cooldown_left = d.usize()?;
+        let members = d.usize()?;
+        // no pre-allocation from the untrusted count (see workers above)
+        let mut membership = Vec::new();
+        for _ in 0..members {
+            membership.push(d.bool()?);
+        }
+        let churn = crate::fabric::ChurnState {
+            rng_state: d.u64()?,
+            rng_inc: d.u64()?,
+            rounds_sampled: d.u64()?,
+        };
+        let coord = crate::trainer::CoordState {
+            phase,
+            epoch,
+            rounds_this_epoch,
+            warmup_left,
+            cooldown_left,
+            membership,
+            churn,
+        };
+        d.finish()?;
+
         let mut d = Dec::new(r.require("history")?);
         let mut history = History::new(d.f64()?);
         let rows = d.usize()?;
@@ -548,6 +629,11 @@ impl Snapshot {
                 skipped_rounds: d.u64()?,
                 compressed_bytes: d.u64()?,
                 compression_ratio: d.f64()?,
+                phase: crate::trainer::Phase::parse(&d.str()?)
+                    .map_err(|e| format!("snapshot history names an unknown phase: {e}"))?
+                    .name(),
+                epoch: d.usize()?,
+                active_members: d.usize()?,
             });
         }
         let dense = d.usize()?;
@@ -573,6 +659,7 @@ impl Snapshot {
             sim_time,
             fabric,
             roster,
+            coord,
             history,
         })
     }
@@ -672,6 +759,58 @@ fn get_fabric_spec(d: &mut Dec) -> Result<crate::fabric::FabricSpec, String> {
     let participation = crate::fabric::ParticipationModel::parse(&d.str()?)
         .map_err(|e| format!("snapshot participation model: {e}"))?;
     Ok(FabricSpec { speeds, stragglers, topology, groups, uplink, participation })
+}
+
+/// Encode the coordinator fingerprint: a presence bool, then each
+/// quorum/phase-length knob, the churn model via its round-trippable
+/// spec string, and the optional bootstrap directory.
+fn put_coordinator_spec(e: &mut Enc, c: &Option<crate::trainer::CoordinatorSpec>) {
+    let c = match c {
+        Some(c) => {
+            e.put_bool(true);
+            c
+        }
+        None => {
+            e.put_bool(false);
+            return;
+        }
+    };
+    e.put_usize(c.min_clients);
+    e.put_usize(c.init_min_clients);
+    e.put_usize(c.warmup_rounds);
+    e.put_usize(c.cooldown_rounds);
+    e.put_usize(c.rounds_per_epoch);
+    e.put_usize(c.initial_members);
+    e.put_usize(c.stall_rounds);
+    e.put_str(&c.churn.spec_str());
+    match &c.bootstrap_dir {
+        Some(dir) => {
+            e.put_bool(true);
+            e.put_str(dir);
+        }
+        None => e.put_bool(false),
+    }
+}
+
+/// Decode the coordinator fingerprint written by [`put_coordinator_spec`].
+fn get_coordinator_spec(
+    d: &mut Dec,
+) -> Result<Option<crate::trainer::CoordinatorSpec>, String> {
+    if !d.bool()? {
+        return Ok(None);
+    }
+    Ok(Some(crate::trainer::CoordinatorSpec {
+        min_clients: d.usize()?,
+        init_min_clients: d.usize()?,
+        warmup_rounds: d.usize()?,
+        cooldown_rounds: d.usize()?,
+        rounds_per_epoch: d.usize()?,
+        initial_members: d.usize()?,
+        stall_rounds: d.usize()?,
+        churn: crate::fabric::ChurnModel::parse(&d.str()?)
+            .map_err(|e| format!("snapshot churn model: {e}"))?,
+        bootstrap_dir: if d.bool()? { Some(d.str()?) } else { None },
+    }))
 }
 
 /// File name for the snapshot resuming at `round` (zero-padded so
@@ -853,6 +992,9 @@ mod tests {
             skipped_rounds: 0,
             compressed_bytes: 48,
             compression_ratio: 1.0,
+            phase: "train",
+            epoch: 0,
+            active_members: 2,
         });
         let mut rs = RunState {
             spec: &spec,
@@ -872,6 +1014,7 @@ mod tests {
                 rounds_sampled: 7,
                 skipped_rounds: 2,
             },
+            coord: crate::trainer::CoordState::initial(2),
             history: &history,
             round,
             step: 3,
@@ -985,6 +1128,14 @@ mod tests {
             ..good.clone()
         };
         assert!(snap.validate(&identity, 3).unwrap_err().contains("compress"));
+        // the coordinator spec shapes the membership timeline: compared
+        // exactly, even the static vs default-coordinator spellings whose
+        // trajectories coincide (the elastic path samples a churn stream)
+        let elastic = TrainSpec {
+            coordinator: Some(crate::trainer::CoordinatorSpec::default()),
+            ..good.clone()
+        };
+        assert!(snap.validate(&elastic, 3).unwrap_err().contains("coordinator"));
         // ...except threads: executors are bitwise interchangeable
         let other_exec = TrainSpec { threads: good.threads + 7, ..good };
         snap.validate(&other_exec, 3).unwrap();
@@ -1051,6 +1202,50 @@ mod tests {
     }
 
     #[test]
+    fn coordinator_spec_and_coord_state_round_trip_bitwise() {
+        let mut snap = sample_snapshot(AlgorithmKind::VrlSgd, 2);
+        snap.spec.coordinator = Some(crate::trainer::CoordinatorSpec {
+            min_clients: 2,
+            init_min_clients: 2,
+            warmup_rounds: 1,
+            cooldown_rounds: 3,
+            rounds_per_epoch: 10,
+            initial_members: 2,
+            // awkward (non-shortest-representable) rates still round-trip
+            churn: crate::fabric::ChurnModel::parse("random:0.30000000000000004:0.125")
+                .unwrap(),
+            bootstrap_dir: Some("ckpt/boot".to_string()),
+            stall_rounds: 50,
+        });
+        snap.coord = crate::trainer::CoordState {
+            phase: crate::trainer::Phase::Cooldown,
+            epoch: 3,
+            rounds_this_epoch: 10,
+            warmup_left: 0,
+            cooldown_left: 2,
+            membership: vec![true, false],
+            churn: crate::fabric::ChurnState {
+                rng_state: 0x0DD_B175,
+                rng_inc: 0xBEEF_CAFE,
+                rounds_sampled: 17,
+            },
+        };
+        snap.history.sync_rows[0].phase = "cooldown";
+        snap.history.sync_rows[0].epoch = 3;
+        snap.history.sync_rows[0].active_members = 1;
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.spec.coordinator, snap.spec.coordinator);
+        assert_eq!(back.coord, snap.coord, "phase-machine state survives");
+        assert_eq!(back, snap);
+        // every phase name survives the wire
+        for phase in crate::trainer::Phase::ALL {
+            snap.coord.phase = phase;
+            let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+            assert_eq!(back.coord.phase, phase, "{phase:?}");
+        }
+    }
+
+    #[test]
     fn write_is_atomic_and_latest_picks_newest() {
         let dir = temp_dir("atomic");
         assert_eq!(latest_snapshot(&dir).unwrap(), None, "missing dir is not an error");
@@ -1093,6 +1288,7 @@ mod tests {
                 sim_time: SimTime::default(),
                 fabric: crate::fabric::FleetState::default(),
                 participation: crate::fabric::RosterState::default(),
+                coord: crate::trainer::CoordState::initial(2),
                 history: &history,
                 round,
                 step: (round + 1) * 3,
@@ -1131,6 +1327,7 @@ mod tests {
                 sim_time: SimTime::default(),
                 fabric: crate::fabric::FleetState::default(),
                 participation: crate::fabric::RosterState::default(),
+                coord: crate::trainer::CoordState::initial(1),
                 history: &history,
                 round,
                 step: round + 1,

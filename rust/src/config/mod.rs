@@ -288,6 +288,11 @@ pub struct TrainSpec {
     /// environment variable, then sequential. See
     /// `trainer::Trainer::parallelism`.
     pub threads: usize,
+    /// Elastic coordination (`[coordinator]` TOML table): quorum rules,
+    /// epoch phases and mid-run membership churn — see
+    /// [`crate::trainer::coordinator`]. `None` (the default) takes the
+    /// static path, bitwise identical to the pre-coordinator driver.
+    pub coordinator: Option<crate::trainer::CoordinatorSpec>,
 }
 
 impl Default for TrainSpec {
@@ -308,6 +313,7 @@ impl Default for TrainSpec {
             compress: crate::compress::CompressorKind::Off,
             dense_metrics: false,
             threads: 0,
+            coordinator: None,
         }
     }
 }
@@ -341,6 +347,11 @@ impl TrainSpec {
             errs.push(e);
         }
         self.compress.validate(self.algorithm, &mut errs);
+        if let Some(c) = &self.coordinator {
+            if let Err(e) = c.validate(self.workers) {
+                errs.push(e);
+            }
+        }
         if errs.is_empty() {
             Ok(())
         } else {
@@ -383,6 +394,7 @@ impl TrainSpec {
             compress: crate::compress::CompressorKind::from_doc(doc)?,
             dense_metrics: doc.bool_or("spec.dense_metrics", d.dense_metrics),
             threads: doc.usize_or("spec.threads", d.threads),
+            coordinator: crate::trainer::CoordinatorSpec::from_doc(doc)?,
         })
     }
 }

@@ -135,6 +135,24 @@ pub trait Algorithm: Send {
     /// corrections).
     fn on_absent(&mut self, _round: usize, _worker: &mut WorkerState) {}
 
+    /// Called when the elastic coordinator admits `worker` to the fleet
+    /// (mid-run join), after its parameters were bootstrapped from the
+    /// newest snapshot and its residual zeroed, before it takes any
+    /// step. Default no-op: the built-in algorithms need nothing —
+    /// crucially, the joiner's Δ is left untouched (zero for a fresh
+    /// worker, frozen for a rejoiner), which preserves Σᵢ Δᵢ = 0
+    /// unconditionally. Override for algorithm-private admission
+    /// bookkeeping.
+    fn on_join(&mut self, _round: usize, _worker: &mut WorkerState) {}
+
+    /// Called when the elastic coordinator retires `worker` from the
+    /// fleet (mid-run leave), before the round runs. Default no-op: the
+    /// built-ins cooperate by deferral — the departed worker's params /
+    /// Δ / momentum freeze in place until a possible rejoin, exactly
+    /// like a dropped-out worker's. Override when departure must
+    /// actively release algorithm-private state.
+    fn on_leave(&mut self, _round: usize, _worker: &mut WorkerState) {}
+
     /// Fresh per-worker post-step corrector, or `None` when the
     /// algorithm has no per-step hook. Called once per worker at session
     /// start; the trainer then snapshots pre-step params each iteration
@@ -1174,6 +1192,28 @@ mod tests {
             let before_delta = w.delta.clone();
             let before_rng = w.rng.clone();
             algo.on_absent(3, &mut w);
+            assert_eq!(w.params, before_params, "{kind:?}");
+            assert_eq!(w.delta, before_delta, "{kind:?}");
+            assert_eq!(w.rng, before_rng, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn on_join_and_on_leave_default_to_deferral() {
+        // the elastic hooks mirror on_absent: every built-in leaves the
+        // worker untouched, so Σ_i Δ_i = 0 survives churn by freezing
+        let p0 = vec![0.0f32; 3];
+        let root = Pcg32::new(0, 0);
+        for kind in AlgorithmKind::ALL {
+            let spec = TrainSpec { algorithm: kind, ..TrainSpec::default() };
+            let mut algo = make_algorithm(&spec, &p0);
+            let mut w = WorkerState::new(0, &[1.0, 2.0, 3.0], &root);
+            w.delta = vec![0.5, -0.5, 0.0];
+            let before_params = w.params.clone();
+            let before_delta = w.delta.clone();
+            let before_rng = w.rng.clone();
+            algo.on_leave(4, &mut w);
+            algo.on_join(9, &mut w);
             assert_eq!(w.params, before_params, "{kind:?}");
             assert_eq!(w.delta, before_delta, "{kind:?}");
             assert_eq!(w.rng, before_rng, "{kind:?}");

@@ -1,11 +1,9 @@
 //! The training coordinator — the paper's system contribution.
 //!
 //! The generic driver lives in [`crate::trainer`] ([`crate::trainer::Trainer`]
-//! builder → [`crate::trainer::Session`]); this module keeps the algorithm
-//! implementations, the [`TrainOutput`] report, and thin **deprecated**
-//! shims for the seed's two free functions ([`run_training`] /
-//! [`run_with_engines`]), which delegate to the builder and produce
-//! bit-identical output (verified by `tests/trainer_api.rs`).
+//! builder → [`crate::trainer::Session`] → the phase-machine driver in
+//! `trainer::coordinator`); this module keeps the algorithm
+//! implementations and the [`TrainOutput`] report.
 //!
 //! The loop the driver runs is the paper's synchronous model:
 //!
@@ -26,26 +24,8 @@ pub mod algorithms;
 pub use algorithms::{make_algorithm, Algorithm, MomentumCorrector, StepCorrector, WorkerState};
 
 use crate::comm::CommStats;
-use crate::config::{Partition, TaskKind, TrainSpec};
-use crate::engine::StepEngine;
 use crate::metrics::History;
 use crate::sim::SimTime;
-use crate::trainer::Trainer;
-
-/// Extra knobs for a run that are not part of the algorithm spec.
-#[deprecated(
-    since = "0.2.0",
-    note = "use the trainer::Trainer builder (`.target(..)` / `.eval_every(..)`)"
-)]
-#[derive(Debug, Clone, Default)]
-pub struct RunOptions {
-    /// Reference point for dense-mode distance tracking (Appendix E plots
-    /// `‖x̂ − x*‖²`).
-    pub target: Option<Vec<f32>>,
-    /// Evaluate the full train loss only every `eval_every` sync rounds
-    /// (1 = every round). 0 is treated as 1.
-    pub eval_every: usize,
-}
 
 /// Everything a finished run reports.
 #[derive(Debug, Clone)]
@@ -90,52 +70,12 @@ impl TrainOutput {
     }
 }
 
-/// Run a pure-rust task end to end.
-///
-/// Deprecated shim over [`crate::trainer::Trainer`]; kept for downstream
-/// compatibility. Artifact tasks must go through
-/// `runtime::build_xla_engines` + [`run_with_engines`] (or
-/// `Trainer::from_engines`).
-#[deprecated(
-    since = "0.2.0",
-    note = "use trainer::Trainer::new(task).spec(spec).partition(partition).run()"
-)]
-pub fn run_training(
-    spec: &TrainSpec,
-    task: &TaskKind,
-    partition: Partition,
-) -> Result<TrainOutput, String> {
-    Trainer::new(task.clone()).spec(spec.clone()).partition(partition).run()
-}
-
-/// Run with explicit per-worker engines (one per worker).
-///
-/// Deprecated shim over [`crate::trainer::Trainer::from_engines`]; kept
-/// for downstream compatibility.
-#[deprecated(
-    since = "0.2.0",
-    note = "use trainer::Trainer::from_engines(engines).spec(spec).run()"
-)]
-#[allow(deprecated)]
-pub fn run_with_engines(
-    spec: &TrainSpec,
-    engines: Vec<Box<dyn StepEngine>>,
-    opts: &RunOptions,
-) -> Result<TrainOutput, String> {
-    let mut t = Trainer::from_engines(engines)
-        .spec(spec.clone())
-        .eval_every(opts.eval_every);
-    if let Some(target) = &opts.target {
-        t = t.target(target.clone());
-    }
-    t.run()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::AlgorithmKind;
+    use crate::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
     use crate::engine::build_pure_engines;
+    use crate::trainer::Trainer;
 
     fn base_spec(algorithm: AlgorithmKind) -> TrainSpec {
         TrainSpec {
@@ -320,18 +260,5 @@ mod tests {
         let last = out.history.sync_rows.last().unwrap();
         assert_eq!(last.step, 23);
         assert_eq!(out.history.sync_rows.len(), 3); // 10 + 10 + 3
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_run() {
-        let spec = TrainSpec { steps: 40, ..base_spec(AlgorithmKind::VrlSgd) };
-        let out = run_training(&spec, &softmax_task(), Partition::LabelSharded).unwrap();
-        assert!(out.final_loss().is_finite());
-        let (engines, _) =
-            build_pure_engines(&softmax_task(), Partition::LabelSharded, &spec).unwrap();
-        let out2 = run_with_engines(&spec, engines, &RunOptions::default()).unwrap();
-        assert_eq!(out.final_params, out2.final_params);
-        assert_eq!(out.history, out2.history);
     }
 }

@@ -1,0 +1,428 @@
+//! Membership churn: seeded join/leave processes over the fleet.
+//!
+//! Partial participation ([`super::participation`]) models workers that
+//! *miss a round*; churn models workers that *enter and exit the fleet*
+//! mid-run — the federated reality the elastic coordinator
+//! (`trainer::coordinator`) drives. The two compose: the membership
+//! ledger gates which workers can even be sampled for a round, and the
+//! participation model then samples presence among the active members.
+//!
+//! Determinism contract (same as every other fabric stream): churn draws
+//! come from their own dedicated [`Pcg32`] lane ([`CHURN_STREAM_LANE`]),
+//! disjoint from the worker data streams, the straggler stream and the
+//! presence stream. [`Churn::sample_round`] draws exactly one uniform per
+//! worker per round for [`ChurnModel::Random`] — *regardless* of each
+//! worker's current membership — so the stream position is a pure
+//! function of (seed, rounds sampled), never of the membership history.
+//! [`ChurnModel::Off`] and [`ChurnModel::Plan`] never touch the stream.
+//! The position rides in [`ChurnState`] inside the checkpoint's
+//! coordinator section, so resumed runs replay the identical arrival /
+//! departure pattern.
+
+use crate::rng::Pcg32;
+
+/// Lane used to derive the churn stream from the run's root generator.
+/// Worker streams use lanes `0..N`, initialization `u64::MAX`, the fleet
+/// straggler stream `u64::MAX - 1` and the participation stream
+/// `u64::MAX - 2`, so this cannot collide with any of them.
+pub const CHURN_STREAM_LANE: u64 = u64::MAX - 3;
+
+/// One scripted membership change (see [`ChurnModel::Plan`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChurnEvent {
+    /// Round index the change lands at (applied before that round runs).
+    pub round: usize,
+    /// Worker indices admitted this round (no-ops when already active).
+    pub joins: Vec<usize>,
+    /// Worker indices retired this round (no-ops when already inactive).
+    pub leaves: Vec<usize>,
+}
+
+/// How workers join and leave the fleet between rounds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnModel {
+    /// Static membership — the exact no-churn behaviour (no draws, the
+    /// churn stream is never advanced).
+    Off,
+    /// Seeded memoryless churn: each round, every *inactive* worker
+    /// joins with probability `join` and every *active* worker leaves
+    /// with probability `leave` (one draw per worker per round, in
+    /// worker order, independent of membership).
+    Random {
+        /// Per-round re-admission probability for an inactive worker.
+        join: f64,
+        /// Per-round departure probability for an active worker.
+        leave: f64,
+    },
+    /// Scripted membership changes at fixed round indices — the
+    /// deterministic drill the tests and examples use.
+    Plan(Vec<ChurnEvent>),
+}
+
+impl ChurnModel {
+    /// True for the static-membership behaviour.
+    pub fn is_off(&self) -> bool {
+        matches!(self, ChurnModel::Off)
+    }
+
+    /// Display shorthand (CLI/TOML round-trip, checkpoint fingerprint):
+    /// `off`, `random:<join>:<leave>`, or
+    /// `plan:<round>:+i+j-k;<round>:...`.
+    pub fn spec_str(&self) -> String {
+        match self {
+            ChurnModel::Off => "off".into(),
+            ChurnModel::Random { join, leave } => format!("random:{join}:{leave}"),
+            ChurnModel::Plan(events) => {
+                let mut s = String::from("plan:");
+                for (n, e) in events.iter().enumerate() {
+                    if n > 0 {
+                        s.push(';');
+                    }
+                    s.push_str(&e.round.to_string());
+                    s.push(':');
+                    for j in &e.joins {
+                        s.push('+');
+                        s.push_str(&j.to_string());
+                    }
+                    for l in &e.leaves {
+                        s.push('-');
+                        s.push_str(&l.to_string());
+                    }
+                }
+                s
+            }
+        }
+    }
+
+    /// Parse the [`ChurnModel::spec_str`] shorthand.
+    pub fn parse(s: &str) -> Result<ChurnModel, String> {
+        let s = s.trim();
+        let lower = s.to_ascii_lowercase();
+        if lower == "off" || lower == "none" {
+            return Ok(ChurnModel::Off);
+        }
+        if let Some(rest) = lower.strip_prefix("random:") {
+            let (j, l) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("random churn wants random:<join>:<leave>, got '{s}'"))?;
+            let join: f64 =
+                j.trim().parse().map_err(|_| format!("bad churn join probability '{j}'"))?;
+            let leave: f64 =
+                l.trim().parse().map_err(|_| format!("bad churn leave probability '{l}'"))?;
+            let model = ChurnModel::Random { join, leave };
+            model.validate(usize::MAX)?;
+            return Ok(model);
+        }
+        if let Some(rest) = lower.strip_prefix("plan:") {
+            let mut events = Vec::new();
+            for part in rest.split(';') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let (r, ops) = part.split_once(':').ok_or_else(|| {
+                    format!("plan event wants <round>:+i-j..., got '{part}' in '{s}'")
+                })?;
+                let round: usize =
+                    r.trim().parse().map_err(|_| format!("bad plan round '{r}' in '{s}'"))?;
+                let mut joins = Vec::new();
+                let mut leaves = Vec::new();
+                let mut chars = ops.trim().chars().peekable();
+                while let Some(sign) = chars.next() {
+                    let mut num = String::new();
+                    while let Some(d) = chars.peek().filter(|c| c.is_ascii_digit()) {
+                        num.push(*d);
+                        chars.next();
+                    }
+                    let idx: usize = num
+                        .parse()
+                        .map_err(|_| format!("plan op '{sign}{num}' needs a worker index"))?;
+                    match sign {
+                        '+' => joins.push(idx),
+                        '-' => leaves.push(idx),
+                        other => {
+                            return Err(format!("plan op must start with + or -, got '{other}'"))
+                        }
+                    }
+                }
+                events.push(ChurnEvent { round, joins, leaves });
+            }
+            if events.is_empty() {
+                return Err(format!("empty churn plan '{s}'"));
+            }
+            return Ok(ChurnModel::Plan(events));
+        }
+        Err(format!("unknown churn model '{s}' (want off | random:<j>:<l> | plan:...)"))
+    }
+
+    /// Validate parameter ranges against a worker count.
+    pub fn validate(&self, workers: usize) -> Result<(), String> {
+        match self {
+            ChurnModel::Off => Ok(()),
+            ChurnModel::Random { join, leave } => {
+                for (name, p) in [("join", *join), ("leave", *leave)] {
+                    if !(p.is_finite() && (0.0..=1.0).contains(&p)) {
+                        return Err(format!(
+                            "churn {name} probability must be in [0, 1], got {p}"
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            ChurnModel::Plan(events) => {
+                for e in events {
+                    for &i in e.joins.iter().chain(e.leaves.iter()) {
+                        if i >= workers {
+                            return Err(format!(
+                                "churn plan round {} names worker {i}, fleet has {workers}",
+                                e.round
+                            ));
+                        }
+                    }
+                    if let Some(&dup) = e.joins.iter().find(|i| e.leaves.contains(i)) {
+                        return Err(format!(
+                            "churn plan round {} both joins and leaves worker {dup}",
+                            e.round
+                        ));
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// The membership changes one round produces.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChurnDelta {
+    /// Workers admitted this round (were inactive, now joining).
+    pub joins: Vec<usize>,
+    /// Workers retired this round (were active, now leaving).
+    pub leaves: Vec<usize>,
+}
+
+impl ChurnDelta {
+    /// True when the round changes nothing.
+    pub fn is_empty(&self) -> bool {
+        self.joins.is_empty() && self.leaves.is_empty()
+    }
+}
+
+/// The per-run churn process: the resolved model plus its dedicated RNG
+/// stream. Constructed once per run by the elastic driver;
+/// [`Churn::sample_round`] is called once per round on the driver
+/// thread, so the arrival/departure pattern is a pure function of
+/// (seed, spec, round), independent of the executor, and resumable via
+/// [`Churn::state`] / [`Churn::restore_state`].
+#[derive(Debug, Clone)]
+pub struct Churn {
+    model: ChurnModel,
+    workers: usize,
+    rng: Pcg32,
+    rounds_sampled: u64,
+}
+
+impl Churn {
+    /// Build from a validated model. `rng` must be the run's dedicated
+    /// churn stream (`root.split(CHURN_STREAM_LANE)`).
+    pub fn new(model: ChurnModel, workers: usize, rng: Pcg32) -> Churn {
+        Churn { model, workers, rng, rounds_sampled: 0 }
+    }
+
+    /// The resolved model.
+    pub fn model(&self) -> &ChurnModel {
+        &self.model
+    }
+
+    /// Sample round `round`'s membership changes given the current
+    /// ledger. [`ChurnModel::Random`] draws exactly one uniform per
+    /// worker in worker order, active or not — the stream position never
+    /// depends on membership; `Off`/`Plan` never draw.
+    pub fn sample_round(&mut self, round: usize, active: &[bool]) -> ChurnDelta {
+        debug_assert_eq!(active.len(), self.workers);
+        let mut delta = ChurnDelta::default();
+        match &self.model {
+            ChurnModel::Off => {}
+            ChurnModel::Random { join, leave } => {
+                self.rounds_sampled += 1;
+                for (i, &on) in active.iter().enumerate() {
+                    let u = self.rng.next_f64();
+                    if on {
+                        if u < *leave {
+                            delta.leaves.push(i);
+                        }
+                    } else if u < *join {
+                        delta.joins.push(i);
+                    }
+                }
+            }
+            ChurnModel::Plan(events) => {
+                for e in events.iter().filter(|e| e.round == round) {
+                    delta.joins.extend(e.joins.iter().copied().filter(|&i| !active[i]));
+                    delta.leaves.extend(e.leaves.iter().copied().filter(|&i| active[i]));
+                }
+            }
+        }
+        delta
+    }
+
+    /// Rounds whose churn was randomly drawn so far.
+    pub fn rounds_sampled(&self) -> u64 {
+        self.rounds_sampled
+    }
+
+    /// Snapshot the stream position (checkpoint payload) — restored with
+    /// [`Churn::restore_state`] so a resumed run replays the identical
+    /// arrival/departure pattern.
+    pub fn state(&self) -> ChurnState {
+        ChurnState {
+            rng_state: self.rng.state(),
+            rng_inc: self.rng.inc(),
+            rounds_sampled: self.rounds_sampled,
+        }
+    }
+
+    /// Restore from a [`ChurnState`] captured by [`Churn::state`].
+    pub fn restore_state(&mut self, s: &ChurnState) {
+        self.rng = Pcg32::restore(s.rng_state, s.rng_inc);
+        self.rounds_sampled = s.rounds_sampled;
+    }
+}
+
+/// Serializable position of a churn stream at a round boundary — rides
+/// in the checkpoint's coordinator section so a resumed run replays the
+/// identical membership timeline.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChurnState {
+    /// RNG internal state (see [`crate::rng::Pcg32::state`]).
+    pub rng_state: u64,
+    /// RNG stream increment (see [`crate::rng::Pcg32::inc`]).
+    pub rng_inc: u64,
+    /// Rounds whose churn has been randomly drawn.
+    pub rounds_sampled: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(seed: u64) -> Pcg32 {
+        Pcg32::new(seed, 0x5EED).split(CHURN_STREAM_LANE)
+    }
+
+    #[test]
+    fn off_never_draws_or_changes_membership() {
+        let mut c = Churn::new(ChurnModel::Off, 4, stream(1));
+        let before = c.state();
+        for round in 0..10 {
+            assert!(c.sample_round(round, &[true, true, false, true]).is_empty());
+        }
+        assert_eq!(c.state(), before, "Off must not advance the stream");
+    }
+
+    #[test]
+    fn random_churn_is_deterministic_and_restorable() {
+        let model = ChurnModel::Random { join: 0.3, leave: 0.2 };
+        let mut a = Churn::new(model.clone(), 4, stream(7));
+        let mut b = Churn::new(model.clone(), 4, stream(7));
+        let mut active = vec![true, false, true, false];
+        let mut deltas = Vec::new();
+        for round in 0..30 {
+            let da = a.sample_round(round, &active);
+            let db = b.sample_round(round, &active);
+            assert_eq!(da, db, "round {round}");
+            for &j in &da.joins {
+                active[j] = true;
+            }
+            for &l in &da.leaves {
+                active[l] = false;
+            }
+            deltas.push((da, active.clone()));
+        }
+        // restore mid-stream: replay 12 rounds, snapshot, resume
+        let mut part = Churn::new(model.clone(), 4, stream(7));
+        let mut act = vec![true, false, true, false];
+        for (round, (_, after)) in deltas.iter().enumerate().take(12) {
+            part.sample_round(round, &act);
+            act = after.clone();
+        }
+        let boundary = part.state();
+        assert_eq!(boundary.rounds_sampled, 12);
+        let mut resumed = Churn::new(model, 4, stream(99));
+        resumed.restore_state(&boundary);
+        for (round, (want, after)) in deltas.iter().enumerate().skip(12) {
+            let got = resumed.sample_round(round, &act);
+            assert_eq!(&got, want, "resumed round {round}");
+            act = after.clone();
+        }
+    }
+
+    #[test]
+    fn random_draw_count_is_independent_of_membership() {
+        // two churns consuming the same stream against different ledgers
+        // must stay in lockstep: one draw per worker per round, always
+        let model = ChurnModel::Random { join: 0.5, leave: 0.5 };
+        let mut a = Churn::new(model.clone(), 4, stream(3));
+        let mut b = Churn::new(model, 4, stream(3));
+        for round in 0..20 {
+            a.sample_round(round, &[true; 4]);
+            b.sample_round(round, &[false; 4]);
+            assert_eq!(a.state().rng_state, b.state().rng_state, "round {round}");
+        }
+    }
+
+    #[test]
+    fn plan_fires_at_its_rounds_only() {
+        let model = ChurnModel::Plan(vec![
+            ChurnEvent { round: 2, joins: vec![3], leaves: vec![0] },
+            ChurnEvent { round: 5, joins: vec![0], leaves: vec![] },
+        ]);
+        let mut c = Churn::new(model, 4, stream(1));
+        let before = c.state();
+        let active = vec![true, true, true, false];
+        assert!(c.sample_round(0, &active).is_empty());
+        let d = c.sample_round(2, &active);
+        assert_eq!(d, ChurnDelta { joins: vec![3], leaves: vec![0] });
+        // joins of already-active / leaves of already-inactive are no-ops
+        let d = c.sample_round(5, &[true, true, true, true]);
+        assert!(d.is_empty());
+        let d = c.sample_round(5, &[false, true, true, true]);
+        assert_eq!(d, ChurnDelta { joins: vec![0], leaves: vec![] });
+        assert_eq!(c.state(), before, "Plan must not advance the stream");
+    }
+
+    #[test]
+    fn spec_str_round_trips_through_parse() {
+        for m in [
+            ChurnModel::Off,
+            ChurnModel::Random { join: 0.05, leave: 0.02 },
+            ChurnModel::Plan(vec![
+                ChurnEvent { round: 24, joins: vec![4, 5], leaves: vec![] },
+                ChurnEvent { round: 30, joins: vec![], leaves: vec![0, 1, 2] },
+                ChurnEvent { round: 34, joins: vec![0], leaves: vec![3] },
+            ]),
+        ] {
+            assert_eq!(ChurnModel::parse(&m.spec_str()).unwrap(), m, "{}", m.spec_str());
+        }
+        assert!(ChurnModel::parse("random:0.5").is_err(), "needs both probabilities");
+        assert!(ChurnModel::parse("random:1.5:0.1").is_err());
+        assert!(ChurnModel::parse("random:nan:0.1").is_err());
+        assert!(ChurnModel::parse("plan:").is_err());
+        assert!(ChurnModel::parse("plan:x:+1").is_err());
+        assert!(ChurnModel::parse("plan:3:*1").is_err());
+        assert!(ChurnModel::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn validate_bounds_plan_against_workers() {
+        let plan =
+            ChurnModel::Plan(vec![ChurnEvent { round: 1, joins: vec![9], leaves: vec![] }]);
+        assert!(plan.validate(4).is_err());
+        plan.validate(10).unwrap();
+        let clash =
+            ChurnModel::Plan(vec![ChurnEvent { round: 1, joins: vec![2], leaves: vec![2] }]);
+        assert!(clash.validate(4).is_err());
+        ChurnModel::Random { join: 1.0, leave: 0.0 }.validate(4).unwrap();
+        assert!(ChurnModel::Random { join: -0.1, leave: 0.0 }.validate(4).is_err());
+    }
+}

@@ -24,7 +24,11 @@
 //! A third axis joined in this revision: **partial participation**
 //! ([`participation`]) — workers can miss a round entirely (seeded
 //! Bernoulli churn, correlated group outages over the two-level
-//! topology, or a deterministic round-robin sampler).
+//! topology, or a deterministic round-robin sampler). A fourth rides on
+//! it: **membership churn** ([`churn`]) — workers join and leave the
+//! fleet between rounds under the elastic coordinator
+//! (`trainer::coordinator`), with the [`Roster`]'s membership ledger
+//! gating which workers participation sampling can even pick.
 //!
 //! **Invariant — the timing fabric never touches parameters.** The
 //! fleet's RNG stream is disjoint from every worker stream, and the
@@ -43,10 +47,12 @@
 //! snapshot, so resumed runs reproduce the identical simulated timeline
 //! and presence pattern.
 
+pub mod churn;
 pub mod participation;
 mod spec;
 pub mod straggler;
 
+pub use churn::{Churn, ChurnDelta, ChurnEvent, ChurnModel, ChurnState, CHURN_STREAM_LANE};
 pub use participation::{
     ParticipationModel, Roster, RosterState, PARTICIPATION_STREAM_LANE,
 };
@@ -127,9 +133,14 @@ impl Fleet {
     /// multiplier and a fresh straggler draw. The sync barrier costs the
     /// maximum over the present workers — absent workers are not waited
     /// on and draw no straggler factor (a full mask reproduces the
-    /// pre-participation behaviour bitwise). Empty rounds never reach
-    /// here (the session driver's empty-round policy charges the nominal
-    /// round length itself).
+    /// pre-participation behaviour bitwise). An **empty** mask is the
+    /// skipped / starved / idle round: nobody computes, so the
+    /// coordinator's barrier times the round out at the nominal
+    /// homogeneous round length and the whole length is idle wait — no
+    /// straggler draws, no `rounds_sampled` increment (the fleet state
+    /// is bitwise untouched). This is the one code path every
+    /// empty-round policy (skip, starvation, warmup/cooldown idling)
+    /// charges through.
     pub fn round_timing(
         &mut self,
         steps: usize,
@@ -138,6 +149,9 @@ impl Fleet {
     ) -> RoundTiming {
         debug_assert_eq!(present.len(), self.multipliers.len());
         let base = steps as f64 * model.step_s;
+        if !present.iter().any(|&p| p) {
+            return RoundTiming { critical_s: base, wait_s: base };
+        }
         if self.homogeneous {
             // exact seed behaviour: no draws, no float detours (any
             // non-empty present subset of a homogeneous fleet has
@@ -158,10 +172,6 @@ impl Fleet {
             }
             sum += t;
             count += 1;
-        }
-        if count == 0 {
-            // defensive: the driver skips empty rounds before timing them
-            return RoundTiming { critical_s: base, wait_s: 0.0 };
         }
         let mean = sum / count as f64;
         RoundTiming { critical_s: max, wait_s: (max - mean).max(0.0) }
@@ -316,6 +326,23 @@ mod tests {
             }
         }
         assert!(hit > 100 && clean > 2, "hit {hit} clean {clean}");
+    }
+
+    #[test]
+    fn empty_mask_charges_the_nominal_round_as_pure_wait() {
+        // the unified empty-round path: skipped / starved / idle rounds
+        // cost the homogeneous round length, all of it barrier wait,
+        // with zero draws — on heterogeneous fleets too
+        let model = TimeModel::fixed(1e-3);
+        for spec in [FabricSpec::default(), hetero_spec()] {
+            let mut fleet = Fleet::new(&spec, 4, stream(6));
+            let before = fleet.state();
+            let t = fleet.round_timing(5, &model, &[false; 4]);
+            assert_eq!(t.critical_s.to_bits(), 5e-3f64.to_bits());
+            assert_eq!(t.wait_s.to_bits(), 5e-3f64.to_bits());
+            assert_eq!(fleet.state(), before, "empty rounds must not draw");
+            assert_eq!(fleet.rounds_sampled(), 0);
+        }
     }
 
     #[test]

@@ -190,6 +190,12 @@ pub struct Roster {
     rng: Pcg32,
     rounds_sampled: u64,
     skipped_rounds: u64,
+    /// Membership ledger (all-true without churn): an inactive worker is
+    /// never present, whatever the participation model samples. Mutated
+    /// only by the elastic coordinator via [`Roster::set_active`] /
+    /// [`Roster::set_membership`]; it does **not** ride in
+    /// [`RosterState`] — the checkpoint's coordinator section owns it.
+    active: Vec<bool>,
 }
 
 impl Roster {
@@ -203,6 +209,7 @@ impl Roster {
             rng,
             rounds_sampled: 0,
             skipped_rounds: 0,
+            active: vec![true; workers],
         }
     }
 
@@ -211,18 +218,44 @@ impl Roster {
         self.model
     }
 
-    /// True when every round is a full round (no sampling at all).
+    /// True when every round is a full round (no sampling at all and
+    /// every worker an active member).
     pub fn is_full(&self) -> bool {
-        self.model.is_full()
+        self.model.is_full() && self.active.iter().all(|&a| a)
+    }
+
+    /// Admit or retire one worker (the elastic coordinator's membership
+    /// hook). Never touches the presence stream.
+    pub fn set_active(&mut self, worker: usize, active: bool) {
+        self.active[worker] = active;
+    }
+
+    /// Replace the whole membership ledger (checkpoint restore).
+    pub fn set_membership(&mut self, ledger: &[bool]) {
+        debug_assert_eq!(ledger.len(), self.workers);
+        self.active.copy_from_slice(ledger);
+    }
+
+    /// The membership ledger (all-true without churn).
+    pub fn active(&self) -> &[bool] {
+        &self.active
+    }
+
+    /// Workers currently admitted to the fleet.
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
     }
 
     /// Sample round `round`'s presence into `mask` (length N) and return
     /// the participant count. Draw order is fixed — one draw per worker
     /// (Bernoulli) or per group (GroupOutage) in ascending order;
-    /// `Full`/`RoundRobin` never touch the stream.
+    /// `Full`/`RoundRobin` never touch the stream. The membership ledger
+    /// is applied *after* the draws (an inactive worker is never
+    /// present), so the stream position stays a pure function of (seed,
+    /// round) regardless of the membership history.
     pub fn sample_round(&mut self, round: usize, mask: &mut [bool]) -> usize {
         debug_assert_eq!(mask.len(), self.workers);
-        match self.model {
+        let mut present = match self.model {
             ParticipationModel::Full => {
                 mask.fill(true);
                 self.workers
@@ -257,7 +290,15 @@ impl Roster {
                 }
                 count
             }
+        };
+        if self.active.iter().any(|&a| !a) {
+            present = 0;
+            for (slot, &a) in mask.iter_mut().zip(self.active.iter()) {
+                *slot &= a;
+                present += *slot as usize;
+            }
         }
+        present
     }
 
     /// Record one empty (skipped) round — see the session driver's
@@ -517,13 +558,14 @@ mod tests {
     #[test]
     fn dedicated_lane_is_disjoint_from_every_other_stream() {
         // the roster stream must never collide with worker data streams
-        // (lanes 0..N), the init stream (u64::MAX) or the fleet
-        // straggler stream (u64::MAX - 1)
+        // (lanes 0..N), the init stream (u64::MAX), the fleet straggler
+        // stream (u64::MAX - 1) or the churn stream (u64::MAX - 3)
         let root = Pcg32::new(42, 0x5EED);
         let roster = root.split(PARTICIPATION_STREAM_LANE);
         let mut seen = std::collections::HashSet::new();
         assert!(seen.insert((roster.state(), roster.inc())));
-        for lane in (0..1024).chain([u64::MAX, FABRIC_STREAM_LANE]) {
+        for lane in (0..1024).chain([u64::MAX, FABRIC_STREAM_LANE, super::super::CHURN_STREAM_LANE])
+        {
             let s = root.split(lane);
             assert!(
                 seen.insert((s.state(), s.inc())),
@@ -535,6 +577,41 @@ mod tests {
         let mut b = root.split(FABRIC_STREAM_LANE);
         let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
         assert!(same < 4, "{same} collisions in 64 draws");
+    }
+
+    #[test]
+    fn membership_ledger_gates_presence_without_touching_the_stream() {
+        // inactive workers are never present, whatever the model samples
+        let mut r = Roster::new(&spec_with(ParticipationModel::Full), 4, stream(2));
+        assert!(r.is_full());
+        r.set_active(1, false);
+        assert!(!r.is_full());
+        assert_eq!(r.active_count(), 3);
+        let before = r.state();
+        let mut mask = vec![false; 4];
+        assert_eq!(r.sample_round(0, &mut mask), 3);
+        assert_eq!(mask, vec![true, false, true, true]);
+        assert_eq!(r.state(), before, "membership must not advance the stream");
+        // readmission restores the full-roster fast path
+        r.set_active(1, true);
+        assert!(r.is_full());
+        assert_eq!(r.sample_round(1, &mut mask), 4);
+
+        // random models draw the same count whatever the ledger says:
+        // two rosters on the same stream stay in lockstep even when one
+        // has retired members
+        let model = ParticipationModel::Bernoulli { drop: 0.4 };
+        let mut a = Roster::new(&spec_with(model), 4, stream(13));
+        let mut b = Roster::new(&spec_with(model), 4, stream(13));
+        b.set_membership(&[true, false, false, true]);
+        let (mut ma, mut mb) = (vec![false; 4], vec![false; 4]);
+        for round in 0..20 {
+            let pa = a.sample_round(round, &mut ma);
+            let pb = b.sample_round(round, &mut mb);
+            assert_eq!(a.state(), b.state(), "round {round}: stream positions diverged");
+            assert!(!mb[1] && !mb[2], "round {round}: inactive workers present");
+            assert!(pb <= pa, "round {round}");
+        }
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //!   [`trainer::PeriodSchedule`]), a round executor
 //!   ([`trainer::Executor`]), observers, early stopping and streaming
 //!   metric sinks into a [`trainer::Session`] that drives any
-//!   [`engine::StepEngine`].
+//!   [`engine::StepEngine`]. Runs are driven by an explicit epoch
+//!   **phase machine** (`trainer::coordinator`); a
+//!   [`trainer::CoordinatorSpec`] makes it *elastic* — quorum gates,
+//!   warm-up/cool-down phases and mid-run membership churn with
+//!   snapshot-bootstrapped late joiners.
 //! * [`coordinator`] — the paper's contribution: `S-SGD`, `Local SGD`,
 //!   `VRL-SGD` (+ warm-up variant), `EASGD`, momentum Local SGD and
 //!   CoCoD-SGD behind one [`coordinator::Algorithm`] trait.
@@ -31,7 +35,8 @@
 //!   profiles, seeded straggler processes and collective topologies that
 //!   drive the simulated-time axis without ever touching the trajectory,
 //!   plus seeded partial participation (worker dropout / federated
-//!   sampling) — the one fabric knob that *does* change the trajectory,
+//!   sampling) and seeded membership churn ([`fabric::ChurnModel`]) —
+//!   the fabric knobs that *do* change the trajectory,
 //!   deterministically per seed.
 //! * [`data`] — synthetic datasets matching the paper's three tasks, plus
 //!   iid / label-sharded / Dirichlet partitioners (identical vs
@@ -237,6 +242,57 @@
 //! int8`; TOML: a `[compress]` table with `kind` / `fraction` /
 //! `int8_range` keys. `benches/fig_compress.rs` sweeps the
 //! accuracy-vs-wire-bytes frontier.)
+//!
+//! Finally, real federated fleets are *elastic*: workers enter and exit
+//! the fleet mid-run, not just miss rounds. A
+//! [`trainer::CoordinatorSpec`] switches the driver into its elastic
+//! mode — an explicit phase machine (`WaitingForMembers → Warmup →
+//! RoundTrain → Cooldown`, see `trainer::coordinator`) gates training
+//! rounds on a quorum of active members, a seeded
+//! [`fabric::ChurnModel`] admits and retires workers between rounds,
+//! and late joiners bootstrap their model from the newest
+//! [`checkpoint`] snapshot (falling back to the live consensus) with
+//! their Δ correction untouched, so VRL-SGD's Σ_i Δ_i = 0 invariant
+//! survives every join and leave. Elastic runs stay seeded-reproducible
+//! and resume bitwise from any phase; the default spec with a full
+//! fleet is bitwise identical to the static path
+//! (`rust/tests/elastic.rs`):
+//!
+//! ```no_run
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
+//! let coord = CoordinatorSpec {
+//!     // commit a round only when ≥3 of the 8 slots are active...
+//!     min_clients: 3,
+//!     // ...starting as soon as the first 4 arrive
+//!     initial_members: 4,
+//!     init_min_clients: 4,
+//!     warmup_rounds: 2,
+//!     // each round, inactive slots join w.p. 5%, active ones leave w.p. 2%
+//!     churn: ChurnModel::parse("random:0.05:0.02").unwrap(),
+//!     // late joiners bootstrap from the newest snapshot in ckpt/
+//!     bootstrap_dir: Some("ckpt".into()),
+//!     ..CoordinatorSpec::default()
+//! };
+//! let out = Trainer::new(task)
+//!     .algorithm(AlgorithmKind::VrlSgd)
+//!     .partition(Partition::LabelSharded)
+//!     .workers(8)
+//!     .period(20)
+//!     .steps(2000)
+//!     .observer(vrl_sgd::checkpoint::Checkpointer::new("ckpt").every(10))
+//!     .coordinator(coord)
+//!     .run()
+//!     .unwrap();
+//! for r in out.history.sync_rows.iter().take(5) {
+//!     println!("round {}: {} [epoch {}] {} active", r.round, r.phase, r.epoch, r.active_members);
+//! }
+//! ```
+//!
+//! (CLI: `--min-clients 3 --churn random:0.05:0.02`; TOML: a
+//! `[coordinator]` table with `min_clients` / `warmup_rounds` /
+//! `churn` / `bootstrap_dir` / ... keys.)
 
 pub mod analysis;
 pub mod benchutil;
@@ -262,19 +318,18 @@ pub mod prelude {
     pub use crate::checkpoint::{Checkpointer, Snapshot};
     pub use crate::compress::{Compressor, CompressorKind};
     pub use crate::config::{AlgorithmKind, NetworkSpec, Partition, TaskKind, TrainSpec};
-    pub use crate::fabric::{
-        FabricSpec, Fleet, FleetState, ParticipationModel, Roster, RosterState,
-        SpeedProfile, StragglerModel, TopologyKind,
-    };
-    #[allow(deprecated)]
-    pub use crate::coordinator::run_training;
     pub use crate::coordinator::{Algorithm, TrainOutput};
     pub use crate::data::Dataset;
     pub use crate::engine::StepEngine;
+    pub use crate::fabric::{
+        ChurnModel, FabricSpec, Fleet, FleetState, ParticipationModel, Roster, RosterState,
+        SpeedProfile, StragglerModel, TopologyKind,
+    };
     pub use crate::metrics::History;
     pub use crate::trainer::{
-        ConsensusTracker, ConstLr, ConstPeriod, CosineLr, CsvSink, EarlyStop, Executor,
-        FnObserver, LrSchedule, MetricSink, Patience, PeriodSchedule, RoundInfo, RoundObserver,
-        RunState, Session, StagewisePeriod, StepDecayLr, StopAtLoss, SyncInfo, Trainer,
+        ConsensusTracker, ConstLr, ConstPeriod, CoordState, CoordinatorSpec, CosineLr, CsvSink,
+        EarlyStop, Executor, FnObserver, LrSchedule, MetricSink, Patience, PeriodSchedule, Phase,
+        RoundInfo, RoundObserver, RunState, Session, StagewisePeriod, StepDecayLr, StopAtLoss,
+        SyncInfo, Trainer,
     };
 }

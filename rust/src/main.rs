@@ -35,6 +35,7 @@ COMMANDS:
         [--dropout <off|bernoulli:<p>|group:<p>>]
         [--sampler <all|round-robin:<m>>]
         [--compress <none|identity|top-k:<fraction>|sign|int8[:<range>]>]
+        [--min-clients <n>] [--churn <off|random:<j>:<l>|plan:...>]
                                       run one training job (the optional
                                       [schedule] table maps to lr decay /
                                       stagewise periods; --threads > 1
@@ -61,7 +62,15 @@ COMMANDS:
                                       [compress] table: lossy schemes
                                       ride an error-feedback residual
                                       and report honest wire bytes next
-                                      to the logical counters)
+                                      to the logical counters;
+                                      --min-clients / --churn override
+                                      the [coordinator] table and switch
+                                      the run to the elastic phase
+                                      machine: rounds commit only with a
+                                      quorum of active members, and the
+                                      churn model admits/retires workers
+                                      between rounds — seeded and
+                                      bitwise-resumable)
   fig1|fig2|fig5|fig6 [--paper] [--out <csv>]
                                       epoch-loss figures (1/2: paper k;
                                       5: k/2; 6: 2k)
@@ -189,6 +198,13 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
             }
             if let Some(c) = args.get("compress") {
                 cfg.spec.compress = vrl_sgd::compress::CompressorKind::parse(c)?;
+            }
+            if args.has("min-clients") || args.has("churn") {
+                let coord = cfg.spec.coordinator.get_or_insert_with(Default::default);
+                coord.min_clients = args.parse_num("min-clients", coord.min_clients)?;
+                if let Some(c) = args.get("churn") {
+                    coord.churn = vrl_sgd::fabric::ChurnModel::parse(c)?;
+                }
             }
             // CLI fabric overrides re-enter validation (worker-count
             // bounds, uplink sanity, participation ranges) before

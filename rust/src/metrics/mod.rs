@@ -13,7 +13,7 @@
 /// Header line shared by `History::sync_csv` and `trainer::CsvSink`.
 pub const SYNC_CSV_HEADER: &str = "round,step,train_loss,worker_variance,comm_rounds,\
      comm_bytes,sim_time_s,straggler_wait_s,present_workers,skipped_rounds,\
-     compressed_bytes,compression_ratio\n";
+     compressed_bytes,compression_ratio,phase,epoch,active_members\n";
 
 /// One record per synchronization round.
 #[derive(Debug, Clone, PartialEq)]
@@ -50,6 +50,18 @@ pub struct SyncRow {
     /// Cumulative logical-to-wire ratio (`comm_bytes /
     /// compressed_bytes`; exactly 1.0 when they agree).
     pub compression_ratio: f64,
+    /// Coordinator phase this row was recorded in (`"train"` on the
+    /// static path; elastic runs also emit `"waiting"` / `"warmup"` /
+    /// `"cooldown"` rows — see `trainer::coordinator::Phase`).
+    pub phase: &'static str,
+    /// Coordinator epoch counter (0 on the static path; elastic runs
+    /// increment it at each Cooldown → WaitingForMembers wrap).
+    pub epoch: usize,
+    /// Workers currently admitted to the fleet (the membership ledger's
+    /// popcount). Equals the worker count without churn; differs from
+    /// `present_workers`, which additionally reflects per-round
+    /// participation sampling.
+    pub active_members: usize,
 }
 
 impl SyncRow {
@@ -59,7 +71,7 @@ impl SyncRow {
     /// resumed-stream-matches-history contract has one format to drift.
     pub fn csv_line(&self) -> String {
         format!(
-            "{},{},{:.8e},{:.8e},{},{},{:.6e},{:.6e},{},{},{},{:.6}\n",
+            "{},{},{:.8e},{:.8e},{},{},{:.6e},{:.6e},{},{},{},{:.6},{},{},{}\n",
             self.round,
             self.step,
             self.train_loss,
@@ -71,7 +83,10 @@ impl SyncRow {
             self.present_workers,
             self.skipped_rounds,
             self.compressed_bytes,
-            self.compression_ratio
+            self.compression_ratio,
+            self.phase,
+            self.epoch,
+            self.active_members
         )
     }
 }
@@ -192,6 +207,9 @@ mod tests {
                 skipped_rounds: 0,
                 compressed_bytes: 100,
                 compression_ratio: 1.0,
+                phase: "train",
+                epoch: 0,
+                active_members: 4,
             });
         }
         h

@@ -1,0 +1,1411 @@
+//! The elastic epoch coordinator — the driver behind [`Session::run`].
+//!
+//! [`Trainer::build`](super::Trainer::build) resolves a [`Session`];
+//! this module consumes it. The former `Session::run` monolith is split
+//! into a [`Driver`] whose round loop is an explicit [`Phase`] state
+//! machine, so membership can change *mid-run* — workers join and leave
+//! between rounds under a seeded [`ChurnModel`] — instead of merely
+//! dropping out per round as the participation model allows:
+//!
+//! ```text
+//!                quorum               warmup
+//!                reached             complete
+//!  WaitingForMembers ────▶ Warmup ───────────▶ RoundTrain ◀──┐
+//!     ▲  │                  │  ▲                │  │  │       │ round
+//!     │  │ still            └──┘                │  │  └───────┘ committed
+//!     │  │ waiting       warmup tick            │  │
+//!     │  │                       epoch complete │  │ starved
+//!     │  ▼                                      ▼  ▼ (< min_clients)
+//!     │  cooldown complete ────────────────  Cooldown ◀──┐
+//!     └──── (epoch += 1) ───────────────────    │        │ cooldown
+//!                                               └────────┘ tick
+//!
+//!  any phase ──[out of steps / early stop]──▶ Finished
+//! ```
+//!
+//! One driver, two gaits:
+//!
+//! * **Static** (no [`CoordinatorSpec`] configured): the machine opens
+//!   in `RoundTrain` and never leaves it. The loop body is the exact
+//!   operation sequence of the pre-split `Session::run` — same RNG
+//!   stream layout (the churn lane is carved with a non-mutating
+//!   `split`), same reduction order — so the trajectory is **bitwise
+//!   identical** to the monolith for every algorithm and executor
+//!   (`tests/elastic.rs` proves it).
+//! * **Elastic** ([`Trainer::coordinator`](super::Trainer::coordinator)
+//!   or a `[coordinator]` TOML table): each tick first applies the
+//!   churn process to the membership ledger, then settles zero-length
+//!   phases, then either trains a round (quorum permitting) or idles
+//!   one nominal round length. Late joiners bootstrap their parameters
+//!   from the newest checkpoint in `bootstrap_dir` (falling back to the
+//!   live fleet consensus); their Δ correction is deliberately left
+//!   untouched — a fresh joiner's Δ is zero and a rejoiner's was frozen
+//!   at departure, so Σᵢ Δᵢ = 0 survives churn unconditionally.
+//!
+//! ```no_run
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::SoftmaxSynthetic { classes: 4, features: 8, samples_per_worker: 64 };
+//! let coord = CoordinatorSpec {
+//!     min_clients: 3,
+//!     initial_members: 4,
+//!     churn: ChurnModel::parse("random:0.05:0.02").unwrap(),
+//!     ..CoordinatorSpec::default()
+//! };
+//! let out = Trainer::new(task)
+//!     .algorithm(AlgorithmKind::VrlSgd)
+//!     .workers(8)
+//!     .steps(500)
+//!     .coordinator(coord)
+//!     .run()
+//!     .unwrap();
+//! assert!(out.final_loss().is_finite());
+//! ```
+//!
+//! Phase, epoch counter and the membership ledger ride in snap v5
+//! checkpoints, so a run can resume bitwise from *any* phase — the
+//! `churn_smoke` CI job kills a churning run mid-epoch and diffs the
+//! resumed CSV against the uninterrupted one.
+
+use super::exec::{make_cells, StepCtx};
+use super::{global_loss, Executor, RoundInfo, RunState, Session, SyncInfo};
+use crate::checkpoint::{latest_snapshot, Snapshot};
+use crate::comm::Cluster;
+use crate::compress::Compressor;
+use crate::coordinator::{make_algorithm, Algorithm, TrainOutput, WorkerState};
+use crate::fabric::{
+    Churn, ChurnDelta, ChurnModel, ChurnState, Fleet, Roster, RoundTiming, CHURN_STREAM_LANE,
+    FABRIC_STREAM_LANE, PARTICIPATION_STREAM_LANE,
+};
+use crate::format::toml_lite::TomlDoc;
+use crate::metrics::{DenseRow, History, SyncRow};
+use crate::rng::Pcg32;
+use crate::sim::{SimTime, TimeModel};
+use crate::tensor;
+
+/// Coordinator phase (see the module-level diagram). The static path
+/// stays in [`Phase::RoundTrain`] for the whole run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Blocked below quorum; idles until enough members are admitted.
+    WaitingForMembers,
+    /// Quorum reached; idles `warmup_rounds` ticks before training.
+    Warmup,
+    /// The training phase: local steps + sync per the paper's model.
+    RoundTrain,
+    /// Epoch boundary (or starvation) wind-down of `cooldown_rounds`.
+    Cooldown,
+    /// Terminal: the step budget is spent or an early stop fired.
+    Finished,
+}
+
+impl Phase {
+    /// Every phase, in diagram order (drives the transition-table
+    /// property test).
+    pub const ALL: [Phase; 5] = [
+        Phase::WaitingForMembers,
+        Phase::Warmup,
+        Phase::RoundTrain,
+        Phase::Cooldown,
+        Phase::Finished,
+    ];
+
+    /// Stable lowercase label — the `phase` CSV column and the snap v5
+    /// encoding.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::WaitingForMembers => "waiting",
+            Phase::Warmup => "warmup",
+            Phase::RoundTrain => "train",
+            Phase::Cooldown => "cooldown",
+            Phase::Finished => "finished",
+        }
+    }
+
+    /// Inverse of [`Phase::name`].
+    pub fn parse(s: &str) -> Result<Phase, String> {
+        match s {
+            "waiting" => Ok(Phase::WaitingForMembers),
+            "warmup" => Ok(Phase::Warmup),
+            "train" => Ok(Phase::RoundTrain),
+            "cooldown" => Ok(Phase::Cooldown),
+            "finished" => Ok(Phase::Finished),
+            other => Err(format!(
+                "unknown phase \"{other}\" (expected waiting | warmup | train | \
+                 cooldown | finished)"
+            )),
+        }
+    }
+}
+
+/// Everything that can drive a phase transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// Active membership reached the (initial or steady-state) quorum.
+    QuorumReached,
+    /// An idle tick passed while still below quorum.
+    StillWaiting,
+    /// An idle warmup tick passed with warmup rounds remaining.
+    WarmupTick,
+    /// The warmup budget is spent.
+    WarmupComplete,
+    /// A training round committed its sync.
+    RoundCommitted,
+    /// The epoch's round budget (`rounds_per_epoch`) is spent.
+    EpochComplete,
+    /// The round's present set fell below `min_clients`.
+    Starved,
+    /// An idle cooldown tick passed with cooldown rounds remaining.
+    CooldownTick,
+    /// The cooldown budget is spent.
+    CooldownComplete,
+    /// The step budget ran out (or an early stop fired).
+    OutOfSteps,
+}
+
+impl Event {
+    /// Every event (drives the transition-table property test).
+    pub const ALL: [Event; 10] = [
+        Event::QuorumReached,
+        Event::StillWaiting,
+        Event::WarmupTick,
+        Event::WarmupComplete,
+        Event::RoundCommitted,
+        Event::EpochComplete,
+        Event::Starved,
+        Event::CooldownTick,
+        Event::CooldownComplete,
+        Event::OutOfSteps,
+    ];
+}
+
+/// The complete transition table: `Some(successor)` for a legal
+/// `(phase, event)` pair, `None` otherwise. Pure — the single source of
+/// truth both the [`Driver`] and the property test consult.
+pub fn next_phase(phase: Phase, event: Event) -> Option<Phase> {
+    use Event::*;
+    use Phase::*;
+    match (phase, event) {
+        // the step budget (or an early stop) ends the run from anywhere
+        (_, OutOfSteps) if phase != Finished => Some(Finished),
+        (WaitingForMembers, QuorumReached) => Some(Warmup),
+        (WaitingForMembers, StillWaiting) => Some(WaitingForMembers),
+        (Warmup, WarmupTick) => Some(Warmup),
+        (Warmup, WarmupComplete) => Some(RoundTrain),
+        (RoundTrain, RoundCommitted) => Some(RoundTrain),
+        (RoundTrain, EpochComplete) => Some(Cooldown),
+        (RoundTrain, Starved) => Some(Cooldown),
+        (Cooldown, CooldownTick) => Some(Cooldown),
+        (Cooldown, CooldownComplete) => Some(WaitingForMembers),
+        _ => None,
+    }
+}
+
+/// The coordinator's mutable state at a round boundary — everything a
+/// resumed run needs to re-enter the state machine where it left off.
+/// Rides in [`RunState`] and the snap v5 `coord` section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoordState {
+    /// Current phase.
+    pub phase: Phase,
+    /// Epoch counter (bumped at each Cooldown → WaitingForMembers wrap).
+    pub epoch: usize,
+    /// Committed training rounds since this epoch's RoundTrain entry.
+    pub rounds_this_epoch: usize,
+    /// Idle warmup ticks still owed before training starts.
+    pub warmup_left: usize,
+    /// Idle cooldown ticks still owed before the next epoch.
+    pub cooldown_left: usize,
+    /// The membership ledger: `membership[i]` is whether worker `i` is
+    /// currently admitted to the fleet.
+    pub membership: Vec<bool>,
+    /// The churn stream's position (restored on resume so the membership
+    /// timeline replays identically).
+    pub churn: ChurnState,
+}
+
+impl CoordState {
+    /// The static path's state: training from round 0 with the full
+    /// fleet admitted and a pristine churn stream.
+    pub fn initial(workers: usize) -> CoordState {
+        CoordState {
+            phase: Phase::RoundTrain,
+            epoch: 0,
+            rounds_this_epoch: 0,
+            warmup_left: 0,
+            cooldown_left: 0,
+            membership: vec![true; workers],
+            churn: ChurnState::default(),
+        }
+    }
+
+    /// Popcount of the membership ledger.
+    pub fn active_members(&self) -> usize {
+        self.membership.iter().filter(|&&a| a).count()
+    }
+}
+
+/// Elastic-run policy: quorum rules, phase lengths and the churn
+/// process. Absent (the default), the driver takes the static path —
+/// bitwise identical to the pre-split monolith.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoordinatorSpec {
+    /// Steady-state quorum: a training round commits only when at least
+    /// this many workers are present; below it the round starves and
+    /// the machine cools down to WaitingForMembers.
+    pub min_clients: usize,
+    /// Quorum for the *first* epoch (0 ⇒ same as `min_clients`) — lets
+    /// a run demand a fuller fleet at launch than it tolerates later.
+    pub init_min_clients: usize,
+    /// Idle ticks between quorum and the first training round of an
+    /// epoch.
+    pub warmup_rounds: usize,
+    /// Idle ticks between an epoch's end (or starvation) and the next
+    /// WaitingForMembers.
+    pub cooldown_rounds: usize,
+    /// Committed training rounds per epoch (0 ⇒ unbounded: no epoch
+    /// wraps, the machine trains until the step budget runs out).
+    pub rounds_per_epoch: usize,
+    /// Workers admitted at launch, in index order (0 ⇒ all of them);
+    /// the rest sit inactive until the churn process admits them.
+    pub initial_members: usize,
+    /// The membership process (see [`ChurnModel`]).
+    pub churn: ChurnModel,
+    /// Checkpoint directory late joiners bootstrap their parameters
+    /// from (the newest `.snap`'s active-member consensus); `None`
+    /// falls back to the live fleet's consensus.
+    pub bootstrap_dir: Option<String>,
+    /// Consecutive idle (non-training) ticks tolerated before the run
+    /// aborts with a stall error instead of spinning forever.
+    pub stall_rounds: usize,
+}
+
+impl Default for CoordinatorSpec {
+    fn default() -> CoordinatorSpec {
+        CoordinatorSpec {
+            min_clients: 1,
+            init_min_clients: 0,
+            warmup_rounds: 0,
+            cooldown_rounds: 0,
+            rounds_per_epoch: 0,
+            initial_members: 0,
+            churn: ChurnModel::Off,
+            bootstrap_dir: None,
+            stall_rounds: 1000,
+        }
+    }
+}
+
+impl CoordinatorSpec {
+    /// Range checks against the fleet size, plus a reachability check:
+    /// a fleet that opens under quorum and can never grow would wait
+    /// forever, so it is rejected up front instead of tripping the
+    /// stall guard at run time.
+    pub fn validate(&self, workers: usize) -> Result<(), String> {
+        let mut errs: Vec<String> = Vec::new();
+        if self.min_clients == 0 || self.min_clients > workers {
+            errs.push(format!(
+                "coordinator.min_clients must be in 1..={workers} (got {})",
+                self.min_clients
+            ));
+        }
+        if self.init_min_clients > workers {
+            errs.push(format!(
+                "coordinator.init_min_clients must be <= workers {workers} (got {})",
+                self.init_min_clients
+            ));
+        }
+        if self.initial_members > workers {
+            errs.push(format!(
+                "coordinator.initial_members must be <= workers {workers} (got {})",
+                self.initial_members
+            ));
+        }
+        if self.stall_rounds == 0 {
+            errs.push("coordinator.stall_rounds must be >= 1".to_string());
+        }
+        if let Err(e) = self.churn.validate(workers) {
+            errs.push(e);
+        }
+        let members = if self.initial_members == 0 { workers } else { self.initial_members };
+        let quorum =
+            if self.init_min_clients == 0 { self.min_clients } else { self.init_min_clients };
+        if self.churn.is_off() && members < quorum {
+            errs.push(format!(
+                "coordinator: initial_members {members} is below the initial quorum \
+                 {quorum} with churn off — the run would wait forever"
+            ));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    /// Canonical one-line fingerprint (the snapshot spec check's error
+    /// text; the fields themselves are encoded field-wise).
+    pub fn spec_str(&self) -> String {
+        format!(
+            "min={};init={};warmup={};cooldown={};epoch={};members={};stall={};churn={};bootstrap={}",
+            self.min_clients,
+            self.init_min_clients,
+            self.warmup_rounds,
+            self.cooldown_rounds,
+            self.rounds_per_epoch,
+            self.initial_members,
+            self.stall_rounds,
+            self.churn.spec_str(),
+            self.bootstrap_dir.as_deref().unwrap_or("-"),
+        )
+    }
+
+    /// Parse the `[coordinator]` TOML table. Absent table ⇒ `None`
+    /// (the static path); orphan sub-keys are configuration errors,
+    /// matching the `[fabric]` / `[compress]` table style.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Option<CoordinatorSpec>, String> {
+        const KNOWN: [&str; 9] = [
+            "min_clients",
+            "init_min_clients",
+            "warmup_rounds",
+            "cooldown_rounds",
+            "rounds_per_epoch",
+            "initial_members",
+            "churn",
+            "bootstrap_dir",
+            "stall_rounds",
+        ];
+        let keys = doc.keys_under("coordinator");
+        if keys.is_empty() {
+            return Ok(None);
+        }
+        for key in &keys {
+            let sub = &key["coordinator.".len()..];
+            if !KNOWN.contains(&sub) {
+                return Err(format!(
+                    "unknown [coordinator] key \"{sub}\" (expected one of: {})",
+                    KNOWN.join(", ")
+                ));
+            }
+        }
+        let churn = match doc.get("coordinator.churn") {
+            Some(v) => {
+                ChurnModel::parse(v.as_str().ok_or("coordinator.churn must be a string")?)?
+            }
+            None => ChurnModel::Off,
+        };
+        let bootstrap_dir = match doc.get("coordinator.bootstrap_dir") {
+            Some(v) => Some(
+                v.as_str().ok_or("coordinator.bootstrap_dir must be a string")?.to_string(),
+            ),
+            None => None,
+        };
+        let d = CoordinatorSpec::default();
+        Ok(Some(CoordinatorSpec {
+            min_clients: doc.usize_or("coordinator.min_clients", d.min_clients),
+            init_min_clients: doc.usize_or("coordinator.init_min_clients", d.init_min_clients),
+            warmup_rounds: doc.usize_or("coordinator.warmup_rounds", d.warmup_rounds),
+            cooldown_rounds: doc.usize_or("coordinator.cooldown_rounds", d.cooldown_rounds),
+            rounds_per_epoch: doc.usize_or("coordinator.rounds_per_epoch", d.rounds_per_epoch),
+            initial_members: doc.usize_or("coordinator.initial_members", d.initial_members),
+            churn,
+            bootstrap_dir,
+            stall_rounds: doc.usize_or("coordinator.stall_rounds", d.stall_rounds),
+        }))
+    }
+}
+
+/// One tick's worth of round-commit context, bundled so
+/// [`Driver::commit_round`] has a single argument whichever path built
+/// it.
+struct Tick {
+    /// This round's communication period k.
+    p: usize,
+    /// This round's learning rate γ.
+    lr: f32,
+    /// Present workers (0 on idle / starved / skipped ticks).
+    m: usize,
+    /// Whether the sync collective ran.
+    synced: bool,
+    /// The round's simulated cost (compute critical path + barrier
+    /// wait).
+    timing: RoundTiming,
+    /// Phase label the tick *acted* in (captured before the end-of-tick
+    /// transition).
+    phase: &'static str,
+    /// Epoch the tick acted in.
+    epoch: usize,
+    /// Membership ledger popcount when the tick acted.
+    active_members: usize,
+}
+
+/// The run driver: the session's resolved components plus all mutable
+/// run state, stepped by the phase machine. Constructed by
+/// [`Session::run`], consumed by [`Driver::run`].
+pub(super) struct Driver {
+    session: Session,
+    algo: Box<dyn Algorithm>,
+    workers: Vec<WorkerState>,
+    cluster: Cluster,
+    compressor: Option<Box<dyn Compressor>>,
+    fleet: Fleet,
+    roster: Roster,
+    churn: Churn,
+    time_model: TimeModel,
+    sim_time: SimTime,
+    executor: Executor,
+    history: History,
+    last_loss: f64,
+    step: usize,
+    round: usize,
+    coord: CoordState,
+    resumed: bool,
+    dim: usize,
+    n: usize,
+    // scratch buffers, allocated once
+    mean_buf: Vec<f32>,
+    befores: Vec<Vec<f32>>,
+    step_losses: Vec<Vec<f64>>,
+    mask: Vec<bool>,
+    present_idx: Vec<usize>,
+    /// All-false mask handed to `Fleet::round_timing` on idle ticks, so
+    /// the skipped-round charge flows through the one timing code path
+    /// (empty mask ⇒ nominal round length as pure wait, zero straggler
+    /// draws).
+    idle_mask: Vec<bool>,
+}
+
+impl Driver {
+    /// Shared initialization — the exact operation (and RNG stream)
+    /// order of the pre-split monolith, plus the churn lane, which is
+    /// carved with a non-mutating `split` and so perturbs nothing.
+    pub(super) fn new(mut session: Session) -> Result<Driver, String> {
+        let n = session.spec.workers;
+        let dim = session.engines[0].dim();
+
+        // Shared initialization: all workers start at the same x^0
+        // (Algorithm 1 line 1), drawn from a dedicated stream.
+        let root = Pcg32::new(session.spec.seed, 0x5EED);
+        let mut init_rng = root.split(u64::MAX);
+        let params0 = session.engines[0].init_params(&mut init_rng);
+        debug_assert_eq!(params0.len(), dim);
+
+        let mut algo = make_algorithm(&session.spec, &params0);
+        let mut workers: Vec<WorkerState> =
+            (0..n).map(|i| WorkerState::new(i, &params0, &root)).collect();
+        // per-worker corrector state (e.g. momentum buffers) rides with
+        // the worker, so the step loop stays data-parallel
+        let mut wants_post = false;
+        for w in workers.iter_mut() {
+            w.corrector = algo.corrector();
+            wants_post |= w.corrector.is_some();
+        }
+        // the fabric shapes only the cost accounting and the simulated
+        // clock: the collective topology prices each sync, the fleet
+        // prices each round's compute as the slowest worker's critical
+        // path — parameters never see any of it
+        let mut cluster =
+            Cluster::new(n, &session.spec.network, session.spec.fabric.allreduce_algo())
+                .with_uplink(session.spec.fabric.uplink_or(&session.spec.network))
+                .with_compression(session.spec.compress);
+        // transport compression: lossy kinds carry a per-worker
+        // error-feedback residual (restored from the snapshot on
+        // resume); `Identity`/`Off` allocate nothing and transform
+        // nothing, keeping those runs bitwise identical to the seed
+        let compressor = session.spec.compress.build();
+        if session.spec.compress.is_lossy() {
+            for w in workers.iter_mut() {
+                w.residual = vec![0.0f32; dim];
+            }
+        }
+        let mut fleet = Fleet::new(&session.spec.fabric, n, root.split(FABRIC_STREAM_LANE));
+        // participation draws come from their own lane, sampled once per
+        // round on the driver thread — presence is a pure function of
+        // (seed, spec, round), independent of the executor
+        let mut roster =
+            Roster::new(&session.spec.fabric, n, root.split(PARTICIPATION_STREAM_LANE));
+        let churn_model = session
+            .spec
+            .coordinator
+            .as_ref()
+            .map(|c| c.churn.clone())
+            .unwrap_or(ChurnModel::Off);
+        let mut churn = Churn::new(churn_model, n, root.split(CHURN_STREAM_LANE));
+        let time_model = TimeModel::from_dims(dim, session.spec.batch);
+        let mut sim_time = SimTime::default();
+
+        // Dense metrics observe cross-worker quantities after every
+        // iteration, which needs lockstep stepping on the driver thread.
+        let executor =
+            if session.spec.dense_metrics { Executor::Sequential } else { session.executor };
+
+        let mut coord = CoordState::initial(n);
+        coord.churn = churn.state();
+        let resumed = session.resume.is_some();
+
+        // Resume path: engines, schedules and the algorithm were rebuilt
+        // deterministically from the same spec (validated in `build`);
+        // the snapshot restores everything mutable, so the remaining
+        // rounds replay exactly what the uninterrupted run would do.
+        let (history, last_loss, step, round);
+        if let Some(snap) = session.resume.take() {
+            snap.apply_workers(&mut workers)?;
+            algo.restore_state(&snap.algo_state)
+                .map_err(|e| format!("restore algorithm state: {e}"))?;
+            cluster.restore_stats(snap.comm);
+            fleet.restore_state(&snap.fabric);
+            roster.restore_state(&snap.roster);
+            coord = snap.coord.clone();
+            churn.restore_state(&coord.churn);
+            roster.set_membership(&coord.membership);
+            sim_time = snap.sim_time;
+            history = snap.history;
+            last_loss = snap.last_loss;
+            step = snap.step;
+            round = snap.round;
+            // replay the restored rows into the (fresh) sinks in their
+            // original interleaving, so a streaming CSV written by the
+            // resumed process matches the uninterrupted run's byte for
+            // byte instead of silently missing the pre-crash rounds
+            for s in session.sinks.iter_mut() {
+                s.on_start(history.initial_loss);
+                let mut di = 0;
+                for row in &history.sync_rows {
+                    while di < history.dense_rows.len()
+                        && history.dense_rows[di].step <= row.step
+                    {
+                        s.on_dense_row(&history.dense_rows[di]);
+                        di += 1;
+                    }
+                    s.on_sync_row(row);
+                }
+                for d in &history.dense_rows[di..] {
+                    s.on_dense_row(d);
+                }
+            }
+        } else {
+            // elastic runs may open with a partial fleet; everyone else
+            // sits inactive until the churn process admits them
+            if let Some(c) = &session.spec.coordinator {
+                if c.initial_members > 0 {
+                    for i in c.initial_members..n {
+                        roster.set_active(i, false);
+                    }
+                }
+            }
+            coord.membership.copy_from_slice(roster.active());
+            let initial_loss = global_loss(&mut session.engines, &params0);
+            history = History::new(initial_loss);
+            for s in session.sinks.iter_mut() {
+                s.on_start(initial_loss);
+            }
+            last_loss = initial_loss;
+            step = 0;
+            round = 0;
+        }
+        let mean_buf = vec![0.0f32; dim];
+        // per-worker scratch: pre-step snapshots (sized only for
+        // corrector algorithms) and dense-mode step losses
+        let befores: Vec<Vec<f32>> = vec![vec![0.0f32; if wants_post { dim } else { 0 }]; n];
+        let step_losses: Vec<Vec<f64>> = vec![Vec::new(); n];
+        // per-round presence (all-true without a participation model)
+        let mask = vec![true; n];
+        let present_idx: Vec<usize> = (0..n).collect();
+        let idle_mask = vec![false; n];
+        Ok(Driver {
+            session,
+            algo,
+            workers,
+            cluster,
+            compressor,
+            fleet,
+            roster,
+            churn,
+            time_model,
+            sim_time,
+            executor,
+            history,
+            last_loss,
+            step,
+            round,
+            coord,
+            resumed,
+            dim,
+            n,
+            mean_buf,
+            befores,
+            step_losses,
+            mask,
+            present_idx,
+            idle_mask,
+        })
+    }
+
+    /// Drive the run to completion (or early stop), then assemble the
+    /// output.
+    pub(super) fn run(mut self) -> Result<TrainOutput, String> {
+        if self.session.spec.coordinator.is_none() {
+            self.run_static();
+        } else {
+            self.run_elastic()?;
+        }
+        self.finish()
+    }
+
+    /// The static-membership gait: the pre-split monolith's loop body,
+    /// operation for operation. The one sanctioned change is the
+    /// skipped-round charge, which now flows through
+    /// `Fleet::round_timing` with the (all-false) mask — same seconds
+    /// on the compute axis, but the nominal round length is booked as
+    /// barrier *wait* instead of silently dropped, and zero straggler
+    /// draws either way.
+    fn run_static(&mut self) {
+        while self.step < self.session.spec.steps {
+            let lr = self.session.lr_schedule.lr(self.round, self.step);
+            let base = self.session.period_schedule.period(self.round).max(1);
+            // clamp is safe: the loop guard keeps steps − step ≥ 1
+            let p = self
+                .algo
+                .period(self.round, base)
+                .clamp(1, self.session.spec.steps - self.step);
+
+            // who reaches this round: sampled before any step, so an
+            // absent worker takes no local iterations at all
+            let m = self.roster.sample_round(self.round, &mut self.mask);
+            if !self.roster.is_full() {
+                self.present_idx.clear();
+                let mask = &self.mask;
+                self.present_idx.extend((0..self.n).filter(|&i| mask[i]));
+            }
+            // empty-round policy: when sampling leaves zero participants
+            // the round is skipped deterministically — nobody steps, no
+            // collective runs (comm counters hold still), but the
+            // coordinator's barrier still times the round out at the
+            // nominal homogeneous round length, and the skip is counted
+            let skipped = m == 0;
+            if skipped {
+                self.roster.note_skipped();
+                self.step += p;
+            } else {
+                self.local_steps(p, lr, m);
+            }
+            // round compute cost: the sync barrier waits for the slowest
+            // *present* worker this round (homogeneous fleets reduce to
+            // the exact seed behaviour, steps × step_s with zero wait);
+            // a skipped round's all-false mask charges the nominal round
+            // length as pure wait, with no straggler draws
+            let timing = self.fleet.round_timing(p, &self.time_model, &self.mask);
+            let stop = self.commit_round(Tick {
+                p,
+                lr,
+                m,
+                synced: !skipped,
+                timing,
+                phase: self.coord.phase.name(),
+                epoch: self.coord.epoch,
+                active_members: self.roster.active_count(),
+            });
+            if stop {
+                break;
+            }
+        }
+    }
+
+    /// The elastic gait: churn → settle zero-length phases → act one
+    /// tick in the current phase. Idle ticks (waiting / warmup /
+    /// cooldown / starved) consume no optimizer steps but do consume a
+    /// round index, a nominal round length of simulated wait, and a CSV
+    /// row — the phase trace is part of the record.
+    fn run_elastic(&mut self) -> Result<(), String> {
+        let cspec = self
+            .session
+            .spec
+            .coordinator
+            .clone()
+            .expect("elastic path requires a coordinator spec");
+        if !self.resumed {
+            // elastic runs open by gathering the fleet; resumed runs
+            // re-enter whatever phase the snapshot recorded
+            self.coord.phase = Phase::WaitingForMembers;
+        }
+        let mut idle_streak = 0usize;
+        while self.step < self.session.spec.steps {
+            // membership first: the churn process edits the ledger at
+            // the round boundary, before the phase acts
+            let delta = self.churn.sample_round(self.round, self.roster.active());
+            self.apply_churn(&cspec, &delta);
+            self.coord.membership.copy_from_slice(self.roster.active());
+            self.coord.churn = self.churn.state();
+
+            // resolve zero-length phases without consuming a tick, so a
+            // default spec with a full fleet trains from round 0
+            self.settle_phase(&cspec);
+
+            // the tick acts under these labels; the end-of-tick
+            // transition lands in `self.coord` for the *next* round
+            // (which is what a round-boundary snapshot must carry)
+            let phase = self.coord.phase;
+            let epoch = self.coord.epoch;
+            let active_members = self.roster.active_count();
+
+            let lr = self.session.lr_schedule.lr(self.round, self.step);
+            let base = self.session.period_schedule.period(self.round).max(1);
+            let p = self
+                .algo
+                .period(self.round, base)
+                .clamp(1, self.session.spec.steps - self.step);
+
+            let stop = match phase {
+                Phase::RoundTrain => {
+                    let m = self.roster.sample_round(self.round, &mut self.mask);
+                    // membership can shrink and later return to full, so
+                    // the cached present set is always rebuilt here
+                    self.present_idx.clear();
+                    let mask = &self.mask;
+                    self.present_idx.extend((0..self.n).filter(|&i| mask[i]));
+                    if m >= cspec.min_clients {
+                        idle_streak = 0;
+                        self.local_steps(p, lr, m);
+                        let timing = self.fleet.round_timing(p, &self.time_model, &self.mask);
+                        self.coord.rounds_this_epoch += 1;
+                        let event = if cspec.rounds_per_epoch > 0
+                            && self.coord.rounds_this_epoch >= cspec.rounds_per_epoch
+                        {
+                            Event::EpochComplete
+                        } else {
+                            Event::RoundCommitted
+                        };
+                        self.transition(&cspec, event);
+                        self.commit_round(Tick {
+                            p,
+                            lr,
+                            m,
+                            synced: true,
+                            timing,
+                            phase: phase.name(),
+                            epoch,
+                            active_members,
+                        })
+                    } else {
+                        // starved: below quorum, the round rolls back to
+                        // an idle tick — nobody steps, no collective —
+                        // and the machine cools down to gather members
+                        idle_streak += 1;
+                        self.roster.note_skipped();
+                        let timing = self.idle_timing(p);
+                        self.transition(&cspec, Event::Starved);
+                        self.commit_round(Tick {
+                            p,
+                            lr,
+                            m: 0,
+                            synced: false,
+                            timing,
+                            phase: phase.name(),
+                            epoch,
+                            active_members,
+                        })
+                    }
+                }
+                Phase::WaitingForMembers => {
+                    idle_streak += 1;
+                    let timing = self.idle_timing(p);
+                    self.transition(&cspec, Event::StillWaiting);
+                    self.commit_round(Tick {
+                        p,
+                        lr,
+                        m: 0,
+                        synced: false,
+                        timing,
+                        phase: phase.name(),
+                        epoch,
+                        active_members,
+                    })
+                }
+                Phase::Warmup => {
+                    idle_streak += 1;
+                    let timing = self.idle_timing(p);
+                    self.coord.warmup_left = self.coord.warmup_left.saturating_sub(1);
+                    self.transition(&cspec, Event::WarmupTick);
+                    self.commit_round(Tick {
+                        p,
+                        lr,
+                        m: 0,
+                        synced: false,
+                        timing,
+                        phase: phase.name(),
+                        epoch,
+                        active_members,
+                    })
+                }
+                Phase::Cooldown => {
+                    idle_streak += 1;
+                    let timing = self.idle_timing(p);
+                    self.coord.cooldown_left = self.coord.cooldown_left.saturating_sub(1);
+                    self.transition(&cspec, Event::CooldownTick);
+                    self.commit_round(Tick {
+                        p,
+                        lr,
+                        m: 0,
+                        synced: false,
+                        timing,
+                        phase: phase.name(),
+                        epoch,
+                        active_members,
+                    })
+                }
+                Phase::Finished => unreachable!("Finished is terminal; the loop has exited"),
+            };
+            if stop {
+                break;
+            }
+            if idle_streak > cspec.stall_rounds {
+                return Err(format!(
+                    "coordinator stalled: {idle_streak} consecutive idle rounds in phase \
+                     {} with {active_members}/{} members active (quorum {}) — check the \
+                     churn model against min_clients/stall_rounds",
+                    self.coord.phase.name(),
+                    self.n,
+                    self.quorum(&cspec),
+                ));
+            }
+        }
+        if let Some(next) = next_phase(self.coord.phase, Event::OutOfSteps) {
+            self.coord.phase = next;
+        }
+        Ok(())
+    }
+
+    /// Resolve every zero-length phase reachable from the current state
+    /// without consuming a tick: quorum admission, zero-round warmups
+    /// and zero-round cooldowns chain in one settle. Terminates — each
+    /// transition moves strictly forward along the diagram and
+    /// RoundTrain/blocked phases return immediately.
+    fn settle_phase(&mut self, cspec: &CoordinatorSpec) {
+        loop {
+            match self.coord.phase {
+                Phase::WaitingForMembers
+                    if self.roster.active_count() >= self.quorum(cspec) =>
+                {
+                    self.transition(cspec, Event::QuorumReached);
+                }
+                Phase::Warmup if self.coord.warmup_left == 0 => {
+                    self.transition(cspec, Event::WarmupComplete);
+                }
+                Phase::Cooldown if self.coord.cooldown_left == 0 => {
+                    self.transition(cspec, Event::CooldownComplete);
+                }
+                _ => return,
+            }
+        }
+    }
+
+    /// Apply one event through the transition table, running the entry
+    /// action when the phase actually changes (self-loops re-run
+    /// nothing).
+    fn transition(&mut self, cspec: &CoordinatorSpec, event: Event) {
+        let from = self.coord.phase;
+        let next = next_phase(from, event).unwrap_or_else(|| {
+            unreachable!("illegal coordinator transition: {from:?} × {event:?}")
+        });
+        if next != from {
+            match next {
+                Phase::Warmup => self.coord.warmup_left = cspec.warmup_rounds,
+                Phase::RoundTrain => self.coord.rounds_this_epoch = 0,
+                Phase::Cooldown => self.coord.cooldown_left = cspec.cooldown_rounds,
+                Phase::WaitingForMembers => self.coord.epoch += 1,
+                Phase::Finished => {}
+            }
+        }
+        self.coord.phase = next;
+    }
+
+    /// The quorum the current epoch must meet to leave
+    /// WaitingForMembers.
+    fn quorum(&self, cspec: &CoordinatorSpec) -> usize {
+        if self.coord.epoch == 0 && cspec.init_min_clients > 0 {
+            cspec.init_min_clients
+        } else {
+            cspec.min_clients
+        }
+    }
+
+    /// Edit the membership ledger: departures first (their state
+    /// freezes in place, like a deferred absent worker's), then
+    /// admissions, which bootstrap parameters from the newest snapshot
+    /// (or the live consensus) so a joiner doesn't drag the fleet back
+    /// toward x⁰.
+    fn apply_churn(&mut self, cspec: &CoordinatorSpec, delta: &ChurnDelta) {
+        if delta.is_empty() {
+            return;
+        }
+        for &i in &delta.leaves {
+            self.algo.on_leave(self.round, &mut self.workers[i]);
+            self.roster.set_active(i, false);
+        }
+        if delta.joins.is_empty() {
+            return;
+        }
+        let boot = self.bootstrap_params(cspec);
+        for &i in &delta.joins {
+            let w = &mut self.workers[i];
+            if let Some(params) = &boot {
+                w.params.copy_from_slice(params);
+            }
+            // Δ deliberately untouched: a fresh joiner's Δ is zero and a
+            // rejoiner's was frozen at departure, so Σᵢ Δᵢ = 0 survives
+            // membership churn unconditionally
+            for v in w.residual.iter_mut() {
+                *v = 0.0;
+            }
+            self.algo.on_join(self.round, w);
+            self.roster.set_active(i, true);
+        }
+    }
+
+    /// Parameters a joiner starts from: the newest `bootstrap_dir`
+    /// snapshot's active-member consensus when available (snapshot
+    /// problems are reported and skipped, never fatal), else the live
+    /// fleet's consensus, else `None` (the joiner keeps its frozen /
+    /// initial parameters).
+    fn bootstrap_params(&self, cspec: &CoordinatorSpec) -> Option<Vec<f32>> {
+        if let Some(dir) = &cspec.bootstrap_dir {
+            match latest_snapshot(dir) {
+                Ok(Some(path)) => match Snapshot::load(&path) {
+                    Ok(snap) if snap.dim == self.dim => {
+                        if let Some(params) = snapshot_consensus(&snap) {
+                            return Some(params);
+                        }
+                    }
+                    Ok(snap) => eprintln!(
+                        "coordinator: ignoring bootstrap snapshot {} (dim {} != {})",
+                        path.display(),
+                        snap.dim,
+                        self.dim
+                    ),
+                    Err(e) => eprintln!(
+                        "coordinator: ignoring bootstrap snapshot {}: {e}",
+                        path.display()
+                    ),
+                },
+                Ok(None) => {}
+                Err(e) => eprintln!("coordinator: scan bootstrap dir {dir}: {e}"),
+            }
+        }
+        let rows: Vec<&[f32]> = self
+            .workers
+            .iter()
+            .zip(self.roster.active().iter())
+            .filter(|(_, &a)| a)
+            .map(|(w, _)| w.params.as_slice())
+            .collect();
+        if rows.is_empty() {
+            return None;
+        }
+        let mut mean = vec![0.0f32; self.dim];
+        tensor::mean_rows(&mut mean, &rows);
+        Some(mean)
+    }
+
+    /// An idle tick's cost: the nominal round length booked as pure
+    /// barrier wait, through the same `Fleet::round_timing` path a
+    /// skipped round takes (all-false mask ⇒ zero straggler draws).
+    fn idle_timing(&mut self, p: usize) -> RoundTiming {
+        self.fleet.round_timing(p, &self.time_model, &self.idle_mask)
+    }
+
+    /// `p` local iterations on every present worker — the dense-mode
+    /// stepwise loop or the one-shot worker-parallel round, verbatim
+    /// from the monolith.
+    fn local_steps(&mut self, p: usize, lr: f32, m: usize) {
+        let executor = self.executor;
+        let weight_decay = self.session.spec.weight_decay;
+        if self.session.spec.dense_metrics {
+            // local iterations, stepwise: dense metrics watch every
+            // iteration
+            let ctx = StepCtx { steps: 1, lr, weight_decay, record_losses: true };
+            for _ in 0..p {
+                for l in self.step_losses.iter_mut() {
+                    l.clear();
+                }
+                {
+                    let mut cells = make_cells(
+                        &mut self.workers,
+                        self.session.engines.as_mut_slice(),
+                        &mut self.befores,
+                        &mut self.step_losses,
+                        &self.mask,
+                    );
+                    executor.run_round(&mut cells, &ctx);
+                }
+                self.step += 1;
+                // reduce the participating workers' losses in worker
+                // order: bitwise-stable sum
+                let loss_acc: f64 = self
+                    .step_losses
+                    .iter()
+                    .zip(self.mask.iter())
+                    .filter(|(_, &present)| present)
+                    .map(|(l, _)| l.first().copied().unwrap_or(0.0))
+                    .sum();
+                let rows: Vec<&[f32]> =
+                    self.workers.iter().map(|w| w.params.as_slice()).collect();
+                let var = tensor::worker_variance(&rows);
+                tensor::mean_rows(&mut self.mean_buf, &rows);
+                let dist =
+                    self.session.target.as_ref().map(|t| tensor::dist2_sq(&self.mean_buf, t));
+                let row = DenseRow {
+                    step: self.step,
+                    mean_loss: loss_acc / m as f64,
+                    worker_variance: var,
+                    dist_sq_to_target: dist,
+                };
+                for s in self.session.sinks.iter_mut() {
+                    s.on_dense_row(&row);
+                }
+                if self.session.keep_history {
+                    self.history.dense_rows.push(row);
+                }
+            }
+        } else {
+            // local iterations: one worker-parallel shot per round
+            let ctx = StepCtx { steps: p, lr, weight_decay, record_losses: false };
+            let mut cells = make_cells(
+                &mut self.workers,
+                self.session.engines.as_mut_slice(),
+                &mut self.befores,
+                &mut self.step_losses,
+                &self.mask,
+            );
+            executor.run_round(&mut cells, &ctx);
+            self.step += p;
+        }
+    }
+
+    /// Everything after a round's local steps: timing charge, sync (if
+    /// the round committed), metrics, observer hooks, the round-counter
+    /// bump and the early-stop check. Returns `true` when an early-stop
+    /// policy ends the run.
+    fn commit_round(&mut self, t: Tick) -> bool {
+        self.sim_time.charge_round(t.timing.critical_s, t.timing.wait_s);
+
+        // consensus gap just before averaging (over the whole fleet —
+        // absent workers' drift is part of the consensus state)
+        let variance = {
+            let rows: Vec<&[f32]> = self.workers.iter().map(|w| w.params.as_slice()).collect();
+            tensor::worker_variance(&rows)
+        };
+
+        if t.synced {
+            // algorithm cooperation: absent workers are announced,
+            // then the sync runs over the present set only
+            if t.m < self.n {
+                for (i, w) in self.workers.iter_mut().enumerate() {
+                    if !self.mask[i] {
+                        self.algo.on_absent(self.round, w);
+                    }
+                }
+            }
+            // error-feedback transport: each present worker's
+            // transmission is compensated by its residual, then
+            // compressed/decompressed in place, so what the sync
+            // averages is exactly what the wire carried; the lost
+            // mass lands back in the residual for the next round.
+            // Absent workers transmit nothing — their residuals
+            // stay frozen, like the rest of their state.
+            if let Some(c) = self.compressor.as_deref() {
+                for &i in &self.present_idx {
+                    let w = &mut self.workers[i];
+                    c.transmit(&mut w.params, &mut w.residual);
+                }
+            }
+            self.algo.sync(
+                self.round,
+                t.p,
+                t.lr,
+                &mut self.workers,
+                &self.present_idx,
+                &mut self.cluster,
+            );
+        }
+        let comm = self.cluster.stats();
+        self.sim_time.comm_s = comm.sim_time_s;
+
+        let sync_info = SyncInfo {
+            round: self.round,
+            step: self.step,
+            period: t.p,
+            lr: t.lr,
+            worker_variance: variance,
+            present_workers: t.m,
+            comm,
+        };
+        for o in self.session.observers.iter_mut() {
+            o.on_sync(&sync_info);
+        }
+
+        // global train loss at the averaged model; rounds where an
+        // early-stop policy will be consulted are always evaluated,
+        // so the policy never acts on a stale carried loss
+        let evaluated = self.round % self.session.eval_every == 0
+            || self.step >= self.session.spec.steps
+            || self.session.early_stop.is_some();
+        let train_loss = if evaluated {
+            let rows: Vec<&[f32]> = self.workers.iter().map(|w| w.params.as_slice()).collect();
+            tensor::mean_rows(&mut self.mean_buf, &rows);
+            global_loss(&mut self.session.engines, &self.mean_buf)
+        } else {
+            self.last_loss
+        };
+        self.last_loss = train_loss;
+
+        let row = SyncRow {
+            round: self.round,
+            step: self.step,
+            train_loss,
+            worker_variance: variance,
+            comm_rounds: comm.rounds,
+            comm_bytes: comm.bytes,
+            sim_time_s: self.sim_time.total(),
+            straggler_wait_s: t.timing.wait_s,
+            present_workers: t.m,
+            skipped_rounds: self.roster.skipped_rounds(),
+            compressed_bytes: comm.wire_bytes,
+            compression_ratio: comm.compression_ratio(),
+            phase: t.phase,
+            epoch: t.epoch,
+            active_members: t.active_members,
+        };
+        for s in self.session.sinks.iter_mut() {
+            s.on_sync_row(&row);
+        }
+        if !self.session.keep_history {
+            // O(1) memory: only the latest row survives, so
+            // `TrainOutput::final_loss` stays meaningful.
+            self.history.sync_rows.clear();
+        }
+        self.history.sync_rows.push(row);
+
+        let round_info = RoundInfo {
+            round: self.round,
+            step: self.step,
+            period: t.p,
+            lr: t.lr,
+            train_loss,
+            evaluated,
+            worker_variance: variance,
+            present_workers: t.m,
+            comm,
+            sim_time: self.sim_time,
+        };
+        for o in self.session.observers.iter_mut() {
+            o.on_round_end(&round_info);
+        }
+        // full-state hook (checkpointing): everything a resumed run
+        // needs is reachable from here, and the state is exactly what
+        // the next round will start from
+        {
+            let mut run_state = RunState {
+                spec: &self.session.spec,
+                workers: &mut self.workers,
+                algorithm: self.algo.as_ref(),
+                dim: self.dim,
+                comm,
+                sim_time: self.sim_time,
+                fabric: self.fleet.state(),
+                participation: self.roster.state(),
+                coord: self.coord.clone(),
+                history: &self.history,
+                round: self.round,
+                step: self.step,
+                last_loss: self.last_loss,
+            };
+            for o in self.session.observers.iter_mut() {
+                o.on_state(&mut run_state);
+            }
+        }
+        self.round += 1;
+        if let Some(stop) = self.session.early_stop.as_mut() {
+            if stop.should_stop(&round_info) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Flush in-flight algorithm state (e.g. CoCoD-SGD's overlapped
+    /// allreduce result), close the sinks and assemble the
+    /// [`TrainOutput`].
+    fn finish(mut self) -> Result<TrainOutput, String> {
+        self.algo.finalize(&mut self.workers, &mut self.cluster);
+
+        for s in self.session.sinks.iter_mut() {
+            s.finish()?;
+        }
+
+        let rows: Vec<&[f32]> = self.workers.iter().map(|w| w.params.as_slice()).collect();
+        tensor::mean_rows(&mut self.mean_buf, &rows);
+        // Σ_i Δ_i = 0 invariant residual (max abs coordinate of the sum)
+        let mut delta_sum = vec![0.0f32; self.dim];
+        for w in &self.workers {
+            tensor::add_assign(&mut delta_sum, &w.delta);
+        }
+        let delta_residual = delta_sum.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        Ok(TrainOutput {
+            history: self.history,
+            comm: self.cluster.stats(),
+            sim_time: self.sim_time,
+            final_params: self.mean_buf,
+            algorithm: self.algo.name(),
+            delta_residual,
+            skipped_rounds: self.roster.skipped_rounds(),
+        })
+    }
+}
+
+/// Mean of a snapshot's *active-member* parameter rows (per its
+/// membership ledger) — what a late joiner bootstraps from. `None` when
+/// the ledger admits nobody.
+fn snapshot_consensus(snap: &Snapshot) -> Option<Vec<f32>> {
+    let rows: Vec<&[f32]> = snap
+        .worker_states
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| snap.coord.membership.get(*i).copied().unwrap_or(true))
+        .map(|(_, w)| w.params.as_slice())
+        .collect();
+    if rows.is_empty() {
+        return None;
+    }
+    let mut mean = vec![0.0f32; snap.dim];
+    tensor::mean_rows(&mut mean, &rows);
+    Some(mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_names_round_trip() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::parse(p.name()).unwrap(), p);
+        }
+        assert!(Phase::parse("bogus").unwrap_err().contains("unknown phase"));
+    }
+
+    #[test]
+    fn transition_table_smoke() {
+        // legal spine of a full epoch
+        assert_eq!(
+            next_phase(Phase::WaitingForMembers, Event::QuorumReached),
+            Some(Phase::Warmup)
+        );
+        assert_eq!(next_phase(Phase::Warmup, Event::WarmupComplete), Some(Phase::RoundTrain));
+        assert_eq!(
+            next_phase(Phase::RoundTrain, Event::RoundCommitted),
+            Some(Phase::RoundTrain)
+        );
+        assert_eq!(next_phase(Phase::RoundTrain, Event::EpochComplete), Some(Phase::Cooldown));
+        assert_eq!(next_phase(Phase::RoundTrain, Event::Starved), Some(Phase::Cooldown));
+        assert_eq!(
+            next_phase(Phase::Cooldown, Event::CooldownComplete),
+            Some(Phase::WaitingForMembers)
+        );
+        // every phase ends on OutOfSteps; Finished is terminal
+        for p in Phase::ALL {
+            if p == Phase::Finished {
+                assert_eq!(next_phase(p, Event::OutOfSteps), None);
+            } else {
+                assert_eq!(next_phase(p, Event::OutOfSteps), Some(Phase::Finished));
+            }
+        }
+        // a few illegal pairs
+        assert_eq!(next_phase(Phase::Warmup, Event::QuorumReached), None);
+        assert_eq!(next_phase(Phase::Cooldown, Event::RoundCommitted), None);
+        assert_eq!(next_phase(Phase::WaitingForMembers, Event::Starved), None);
+    }
+
+    #[test]
+    fn coord_state_initial_is_full_train() {
+        let c = CoordState::initial(4);
+        assert_eq!(c.phase, Phase::RoundTrain);
+        assert_eq!(c.epoch, 0);
+        assert_eq!(c.active_members(), 4);
+        assert_eq!(c.churn, ChurnState::default());
+    }
+
+    #[test]
+    fn default_spec_validates_and_fingerprints() {
+        let d = CoordinatorSpec::default();
+        d.validate(4).unwrap();
+        assert_eq!(
+            d.spec_str(),
+            "min=1;init=0;warmup=0;cooldown=0;epoch=0;members=0;stall=1000;churn=off;bootstrap=-"
+        );
+    }
+
+    #[test]
+    fn validate_rejects_bad_quorums() {
+        let mut s = CoordinatorSpec { min_clients: 0, ..CoordinatorSpec::default() };
+        assert!(s.validate(4).unwrap_err().contains("min_clients"));
+        s.min_clients = 5;
+        assert!(s.validate(4).unwrap_err().contains("min_clients"));
+        let s = CoordinatorSpec { init_min_clients: 9, ..CoordinatorSpec::default() };
+        assert!(s.validate(4).unwrap_err().contains("init_min_clients"));
+        let s = CoordinatorSpec { stall_rounds: 0, ..CoordinatorSpec::default() };
+        assert!(s.validate(4).unwrap_err().contains("stall_rounds"));
+    }
+
+    #[test]
+    fn validate_rejects_unreachable_quorum() {
+        // 2 members at launch, quorum 3, no churn: would wait forever
+        let s = CoordinatorSpec {
+            min_clients: 3,
+            initial_members: 2,
+            ..CoordinatorSpec::default()
+        };
+        assert!(s.validate(4).unwrap_err().contains("wait forever"));
+        // the same fleet with churn on can grow, so it passes
+        let s = CoordinatorSpec {
+            churn: ChurnModel::Random { join: 0.5, leave: 0.0 },
+            ..s
+        };
+        s.validate(4).unwrap();
+    }
+
+    #[test]
+    fn from_doc_absent_table_is_none() {
+        let doc = TomlDoc::parse("[train]\nworkers = 4\n").unwrap();
+        assert_eq!(CoordinatorSpec::from_doc(&doc).unwrap(), None);
+    }
+
+    #[test]
+    fn from_doc_parses_full_table() {
+        let doc = TomlDoc::parse(
+            "[coordinator]\nmin_clients = 3\ninit_min_clients = 4\nwarmup_rounds = 2\n\
+             cooldown_rounds = 1\nrounds_per_epoch = 10\ninitial_members = 4\n\
+             churn = \"random:0.05:0.02\"\nbootstrap_dir = \"ckpt\"\nstall_rounds = 50\n",
+        )
+        .unwrap();
+        let s = CoordinatorSpec::from_doc(&doc).unwrap().unwrap();
+        assert_eq!(s.min_clients, 3);
+        assert_eq!(s.init_min_clients, 4);
+        assert_eq!(s.warmup_rounds, 2);
+        assert_eq!(s.cooldown_rounds, 1);
+        assert_eq!(s.rounds_per_epoch, 10);
+        assert_eq!(s.initial_members, 4);
+        assert_eq!(s.churn, ChurnModel::Random { join: 0.05, leave: 0.02 });
+        assert_eq!(s.bootstrap_dir.as_deref(), Some("ckpt"));
+        assert_eq!(s.stall_rounds, 50);
+    }
+
+    #[test]
+    fn from_doc_rejects_orphan_keys() {
+        let doc = TomlDoc::parse("[coordinator]\nmin_cleints = 3\n").unwrap();
+        let err = CoordinatorSpec::from_doc(&doc).unwrap_err();
+        assert!(err.contains("min_cleints"), "{err}");
+        let doc = TomlDoc::parse("[coordinator]\nchurn = 7\n").unwrap();
+        let err = CoordinatorSpec::from_doc(&doc).unwrap_err();
+        assert!(err.contains("must be a string"), "{err}");
+    }
+}

@@ -1,9 +1,9 @@
 //! The composable training entry point: [`Trainer`] (builder) →
 //! [`Session`] → [`crate::coordinator::TrainOutput`].
 //!
-//! One generic driver replaces the seed's two rigid free functions
-//! (`run_training` / `run_with_engines`, both now thin deprecated shims
-//! over this module). Every run-time policy is a pluggable component:
+//! One generic driver (the [`coordinator`] phase machine) replaces the
+//! seed's rigid free functions. Every run-time policy is a pluggable
+//! component:
 //!
 //! * [`LrSchedule`] — γ per round (const / step decay / cosine);
 //! * [`PeriodSchedule`] — communication period k per round (const /
@@ -14,7 +14,11 @@
 //! * [`RoundObserver`] — callbacks at sync and round end with loss,
 //!   consensus variance and communication counters;
 //! * [`EarlyStop`] — stop the run at a round boundary;
-//! * [`MetricSink`] — stream metrics instead of buffering the history.
+//! * [`MetricSink`] — stream metrics instead of buffering the history;
+//! * [`CoordinatorSpec`] — elastic membership: quorum rules, epoch
+//!   phases and mid-run worker churn (see [`coordinator`]). Absent,
+//!   the run is static — bitwise identical to the pre-coordinator
+//!   driver.
 //!
 //! ```no_run
 //! use vrl_sgd::prelude::*;
@@ -33,10 +37,12 @@
 //! assert!(out.final_loss() < out.initial_loss());
 //! ```
 
+pub mod coordinator;
 mod exec;
 pub mod observe;
 pub mod schedule;
 
+pub use coordinator::{next_phase, CoordState, CoordinatorSpec, Event, Phase};
 pub use exec::Executor;
 pub use observe::{
     ConsensusTracker, CsvSink, EarlyStop, FnObserver, MetricSink, Patience, RoundInfo,
@@ -47,20 +53,10 @@ pub use schedule::{
 };
 
 use crate::checkpoint::Snapshot;
-use crate::comm::Cluster;
 use crate::config::{AlgorithmKind, NetworkSpec, Partition, TaskKind, TrainSpec};
-use crate::fabric::{
-    FabricSpec, Fleet, ParticipationModel, Roster, FABRIC_STREAM_LANE,
-    PARTICIPATION_STREAM_LANE,
-};
-use crate::coordinator::{make_algorithm, TrainOutput};
-use crate::coordinator::WorkerState;
+use crate::coordinator::TrainOutput;
 use crate::engine::{build_pure_engines, StepEngine};
-use crate::metrics::{DenseRow, History, SyncRow};
-use crate::rng::Pcg32;
-use crate::sim::{SimTime, TimeModel};
-use crate::tensor;
-use exec::{make_cells, StepCtx};
+use crate::fabric::{FabricSpec, ParticipationModel};
 
 /// Where the per-worker engines come from.
 enum EngineSource {
@@ -222,6 +218,15 @@ impl Trainer {
     /// bytes honestly per topology.
     pub fn compression(mut self, kind: crate::compress::CompressorKind) -> Self {
         self.spec.compress = kind;
+        self
+    }
+
+    /// Elastic coordination: quorum rules, epoch phases and mid-run
+    /// membership churn (see [`coordinator`]). Without this setter (or
+    /// a `[coordinator]` TOML table) the run takes the static path,
+    /// which is bitwise identical to the pre-coordinator driver.
+    pub fn coordinator(mut self, spec: CoordinatorSpec) -> Self {
+        self.spec.coordinator = Some(spec);
         self
     }
 
@@ -442,387 +447,20 @@ impl Session {
         self.executor
     }
 
-    /// Drive the run to completion (or early stop). The loop is the
-    /// paper's synchronous model: for each round, `k` lockstep local
-    /// iterations on every *participating* worker (driven by the
-    /// configured [`Executor`]), then `Algorithm::sync` over the present
-    /// set, then metrics. Without a participation model every round is a
-    /// full round — the exact pre-participation behaviour, bit for bit.
-    /// A round whose sampled present set is empty is skipped
-    /// deterministically: nobody steps, no collective runs, the
-    /// simulated clock still pays the nominal round length, and the
-    /// `skipped_rounds` counter (and metric column) records it.
-    pub fn run(mut self) -> Result<TrainOutput, String> {
-        let spec = &self.spec;
-        let n = spec.workers;
-        let engines = &mut self.engines;
-        let dim = engines[0].dim();
-
-        // Shared initialization: all workers start at the same x^0
-        // (Algorithm 1 line 1), drawn from a dedicated stream.
-        let root = Pcg32::new(spec.seed, 0x5EED);
-        let mut init_rng = root.split(u64::MAX);
-        let params0 = engines[0].init_params(&mut init_rng);
-        debug_assert_eq!(params0.len(), dim);
-
-        let mut algo = make_algorithm(spec, &params0);
-        let mut workers: Vec<WorkerState> =
-            (0..n).map(|i| WorkerState::new(i, &params0, &root)).collect();
-        // per-worker corrector state (e.g. momentum buffers) rides with
-        // the worker, so the step loop stays data-parallel
-        let mut wants_post = false;
-        for w in workers.iter_mut() {
-            w.corrector = algo.corrector();
-            wants_post |= w.corrector.is_some();
-        }
-        // the fabric shapes only the cost accounting and the simulated
-        // clock: the collective topology prices each sync, the fleet
-        // prices each round's compute as the slowest worker's critical
-        // path — parameters never see any of it
-        let mut cluster = Cluster::new(n, &spec.network, spec.fabric.allreduce_algo())
-            .with_uplink(spec.fabric.uplink_or(&spec.network))
-            .with_compression(spec.compress);
-        // transport compression: lossy kinds carry a per-worker
-        // error-feedback residual (restored from the snapshot on
-        // resume); `Identity`/`Off` allocate nothing and transform
-        // nothing, keeping those runs bitwise identical to the seed
-        let compressor = spec.compress.build();
-        if spec.compress.is_lossy() {
-            for w in workers.iter_mut() {
-                w.residual = vec![0.0f32; dim];
-            }
-        }
-        let mut fleet = Fleet::new(&spec.fabric, n, root.split(FABRIC_STREAM_LANE));
-        // participation draws come from their own lane, sampled once per
-        // round on the driver thread — presence is a pure function of
-        // (seed, spec, round), independent of the executor
-        let mut roster = Roster::new(&spec.fabric, n, root.split(PARTICIPATION_STREAM_LANE));
-        let time_model = TimeModel::from_dims(dim, spec.batch);
-        let mut sim_time = SimTime::default();
-
-        // Dense metrics observe cross-worker quantities after every
-        // iteration, which needs lockstep stepping on the driver thread.
-        let executor = if spec.dense_metrics { Executor::Sequential } else { self.executor };
-
-        // Resume path: engines, schedules and the algorithm were rebuilt
-        // deterministically from the same spec (validated in `build`);
-        // the snapshot restores everything mutable, so the remaining
-        // rounds replay exactly what the uninterrupted run would do.
-        let (mut history, mut last_loss, mut step, mut round);
-        if let Some(snap) = self.resume.take() {
-            snap.apply_workers(&mut workers)?;
-            algo.restore_state(&snap.algo_state)
-                .map_err(|e| format!("restore algorithm state: {e}"))?;
-            cluster.restore_stats(snap.comm);
-            fleet.restore_state(&snap.fabric);
-            roster.restore_state(&snap.roster);
-            sim_time = snap.sim_time;
-            history = snap.history;
-            last_loss = snap.last_loss;
-            step = snap.step;
-            round = snap.round;
-            // replay the restored rows into the (fresh) sinks in their
-            // original interleaving, so a streaming CSV written by the
-            // resumed process matches the uninterrupted run's byte for
-            // byte instead of silently missing the pre-crash rounds
-            for s in self.sinks.iter_mut() {
-                s.on_start(history.initial_loss);
-                let mut di = 0;
-                for row in &history.sync_rows {
-                    while di < history.dense_rows.len()
-                        && history.dense_rows[di].step <= row.step
-                    {
-                        s.on_dense_row(&history.dense_rows[di]);
-                        di += 1;
-                    }
-                    s.on_sync_row(row);
-                }
-                for d in &history.dense_rows[di..] {
-                    s.on_dense_row(d);
-                }
-            }
-        } else {
-            let initial_loss = global_loss(engines, &params0);
-            history = History::new(initial_loss);
-            for s in self.sinks.iter_mut() {
-                s.on_start(initial_loss);
-            }
-            last_loss = initial_loss;
-            step = 0;
-            round = 0;
-        }
-        let mut mean_buf = vec![0.0f32; dim];
-        // per-worker scratch: pre-step snapshots (sized only for
-        // corrector algorithms) and dense-mode step losses
-        let mut befores: Vec<Vec<f32>> =
-            vec![vec![0.0f32; if wants_post { dim } else { 0 }]; n];
-        let mut step_losses: Vec<Vec<f64>> = vec![Vec::new(); n];
-        // per-round presence (all-true without a participation model)
-        let mut mask = vec![true; n];
-        let mut present_idx: Vec<usize> = (0..n).collect();
-
-        while step < spec.steps {
-            let lr = self.lr_schedule.lr(round, step);
-            let base = self.period_schedule.period(round).max(1);
-            // clamp is safe: the loop guard keeps steps − step ≥ 1
-            let p = algo.period(round, base).clamp(1, spec.steps - step);
-
-            // who reaches this round: sampled before any step, so an
-            // absent worker takes no local iterations at all
-            let m = roster.sample_round(round, &mut mask);
-            if !roster.is_full() {
-                present_idx.clear();
-                present_idx.extend((0..n).filter(|&i| mask[i]));
-            }
-            // empty-round policy: when sampling leaves zero participants
-            // the round is skipped deterministically — nobody steps, no
-            // collective runs (comm counters hold still), but the
-            // coordinator's barrier still times the round out at the
-            // nominal homogeneous round length, and the skip is counted
-            let skipped = m == 0;
-            if skipped {
-                roster.note_skipped();
-                step += p;
-            } else if spec.dense_metrics {
-                // local iterations, stepwise: dense metrics watch every
-                // iteration
-                let ctx = StepCtx {
-                    steps: 1,
-                    lr,
-                    weight_decay: spec.weight_decay,
-                    record_losses: true,
-                };
-                for _ in 0..p {
-                    for l in step_losses.iter_mut() {
-                        l.clear();
-                    }
-                    {
-                        let mut cells = make_cells(
-                            &mut workers,
-                            engines.as_mut_slice(),
-                            &mut befores,
-                            &mut step_losses,
-                            &mask,
-                        );
-                        executor.run_round(&mut cells, &ctx);
-                    }
-                    step += 1;
-                    // reduce the participating workers' losses in worker
-                    // order: bitwise-stable sum
-                    let loss_acc: f64 = step_losses
-                        .iter()
-                        .zip(mask.iter())
-                        .filter(|(_, &present)| present)
-                        .map(|(l, _)| l.first().copied().unwrap_or(0.0))
-                        .sum();
-                    let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
-                    let var = tensor::worker_variance(&rows);
-                    tensor::mean_rows(&mut mean_buf, &rows);
-                    let dist =
-                        self.target.as_ref().map(|t| tensor::dist2_sq(&mean_buf, t));
-                    let row = DenseRow {
-                        step,
-                        mean_loss: loss_acc / m as f64,
-                        worker_variance: var,
-                        dist_sq_to_target: dist,
-                    };
-                    for s in self.sinks.iter_mut() {
-                        s.on_dense_row(&row);
-                    }
-                    if self.keep_history {
-                        history.dense_rows.push(row);
-                    }
-                }
-            } else {
-                // local iterations: one worker-parallel shot per round
-                let ctx = StepCtx {
-                    steps: p,
-                    lr,
-                    weight_decay: spec.weight_decay,
-                    record_losses: false,
-                };
-                let mut cells = make_cells(
-                    &mut workers,
-                    engines.as_mut_slice(),
-                    &mut befores,
-                    &mut step_losses,
-                    &mask,
-                );
-                executor.run_round(&mut cells, &ctx);
-                step += p;
-            }
-            // round compute cost: the sync barrier waits for the slowest
-            // *present* worker this round (homogeneous fleets reduce to
-            // the exact seed behaviour, steps × step_s with zero wait);
-            // a skipped round costs the nominal round length with no
-            // straggler draws
-            let timing = if skipped {
-                crate::fabric::RoundTiming {
-                    critical_s: p as f64 * time_model.step_s,
-                    wait_s: 0.0,
-                }
-            } else {
-                fleet.round_timing(p, &time_model, &mask)
-            };
-            sim_time.charge_round(timing.critical_s, timing.wait_s);
-
-            // consensus gap just before averaging (over the whole fleet —
-            // absent workers' drift is part of the consensus state)
-            let variance = {
-                let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
-                tensor::worker_variance(&rows)
-            };
-
-            if !skipped {
-                // algorithm cooperation: absent workers are announced,
-                // then the sync runs over the present set only
-                if m < n {
-                    for (i, w) in workers.iter_mut().enumerate() {
-                        if !mask[i] {
-                            algo.on_absent(round, w);
-                        }
-                    }
-                }
-                // error-feedback transport: each present worker's
-                // transmission is compensated by its residual, then
-                // compressed/decompressed in place, so what the sync
-                // averages is exactly what the wire carried; the lost
-                // mass lands back in the residual for the next round.
-                // Absent workers transmit nothing — their residuals
-                // stay frozen, like the rest of their state.
-                if let Some(c) = compressor.as_deref() {
-                    for &i in &present_idx {
-                        let w = &mut workers[i];
-                        c.transmit(&mut w.params, &mut w.residual);
-                    }
-                }
-                algo.sync(round, p, lr, &mut workers, &present_idx, &mut cluster);
-            }
-            let comm = cluster.stats();
-            sim_time.comm_s = comm.sim_time_s;
-
-            let sync_info = SyncInfo {
-                round,
-                step,
-                period: p,
-                lr,
-                worker_variance: variance,
-                present_workers: m,
-                comm,
-            };
-            for o in self.observers.iter_mut() {
-                o.on_sync(&sync_info);
-            }
-
-            // global train loss at the averaged model; rounds where an
-            // early-stop policy will be consulted are always evaluated,
-            // so the policy never acts on a stale carried loss
-            let evaluated = round % self.eval_every == 0
-                || step >= spec.steps
-                || self.early_stop.is_some();
-            let train_loss = if evaluated {
-                let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
-                tensor::mean_rows(&mut mean_buf, &rows);
-                global_loss(engines, &mean_buf)
-            } else {
-                last_loss
-            };
-            last_loss = train_loss;
-
-            let row = SyncRow {
-                round,
-                step,
-                train_loss,
-                worker_variance: variance,
-                comm_rounds: comm.rounds,
-                comm_bytes: comm.bytes,
-                sim_time_s: sim_time.total(),
-                straggler_wait_s: timing.wait_s,
-                present_workers: m,
-                skipped_rounds: roster.skipped_rounds(),
-                compressed_bytes: comm.wire_bytes,
-                compression_ratio: comm.compression_ratio(),
-            };
-            for s in self.sinks.iter_mut() {
-                s.on_sync_row(&row);
-            }
-            if !self.keep_history {
-                // O(1) memory: only the latest row survives, so
-                // `TrainOutput::final_loss` stays meaningful.
-                history.sync_rows.clear();
-            }
-            history.sync_rows.push(row);
-
-            let round_info = RoundInfo {
-                round,
-                step,
-                period: p,
-                lr,
-                train_loss,
-                evaluated,
-                worker_variance: variance,
-                present_workers: m,
-                comm,
-                sim_time,
-            };
-            for o in self.observers.iter_mut() {
-                o.on_round_end(&round_info);
-            }
-            // full-state hook (checkpointing): everything a resumed run
-            // needs is reachable from here, and the state is exactly what
-            // the next round will start from
-            {
-                let mut run_state = RunState {
-                    spec,
-                    workers: &mut workers,
-                    algorithm: algo.as_ref(),
-                    dim,
-                    comm,
-                    sim_time,
-                    fabric: fleet.state(),
-                    participation: roster.state(),
-                    history: &history,
-                    round,
-                    step,
-                    last_loss,
-                };
-                for o in self.observers.iter_mut() {
-                    o.on_state(&mut run_state);
-                }
-            }
-            round += 1;
-            if let Some(stop) = self.early_stop.as_mut() {
-                if stop.should_stop(&round_info) {
-                    break;
-                }
-            }
-        }
-
-        // flush in-flight algorithm state (e.g. CoCoD-SGD's overlapped
-        // allreduce result) so the final averaged model is complete
-        algo.finalize(&mut workers, &mut cluster);
-
-        for s in self.sinks.iter_mut() {
-            s.finish()?;
-        }
-
-        let rows: Vec<&[f32]> = workers.iter().map(|w| w.params.as_slice()).collect();
-        tensor::mean_rows(&mut mean_buf, &rows);
-        // Σ_i Δ_i = 0 invariant residual (max abs coordinate of the sum)
-        let mut delta_sum = vec![0.0f32; dim];
-        for w in &workers {
-            tensor::add_assign(&mut delta_sum, &w.delta);
-        }
-        let delta_residual = delta_sum.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-        Ok(TrainOutput {
-            history,
-            comm: cluster.stats(),
-            sim_time,
-            final_params: mean_buf,
-            algorithm: algo.name(),
-            delta_residual,
-            skipped_rounds: roster.skipped_rounds(),
-        })
+    /// Drive the run to completion (or early stop) through the
+    /// [`coordinator`] driver. Without a [`CoordinatorSpec`] the phase
+    /// machine stays in `RoundTrain` and the loop is the paper's
+    /// synchronous model, bit for bit: for each round, `k` lockstep
+    /// local iterations on every *participating* worker (driven by the
+    /// configured [`Executor`]), then `Algorithm::sync` over the
+    /// present set, then metrics. A round whose sampled present set is
+    /// empty is skipped deterministically: nobody steps, no collective
+    /// runs, the simulated clock charges the nominal round length as
+    /// barrier wait, and the `skipped_rounds` counter (and metric
+    /// column) records it. With a coordinator spec, membership becomes
+    /// elastic — see the [`coordinator`] module docs.
+    pub fn run(self) -> Result<TrainOutput, String> {
+        coordinator::Driver::new(self)?.run()
     }
 }
 

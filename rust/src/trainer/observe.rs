@@ -103,6 +103,11 @@ pub struct RunState<'a> {
     /// ([`crate::fabric::Roster::state`]) — snapshotted so resumed runs
     /// replay the identical presence pattern.
     pub participation: crate::fabric::RosterState,
+    /// The coordinator's phase-machine state (phase, epoch counters,
+    /// membership ledger, churn stream position) — snapshotted so
+    /// elastic runs resume bitwise from any phase. On the static path
+    /// this stays at [`crate::trainer::CoordState::initial`].
+    pub coord: crate::trainer::CoordState,
     /// History recorded so far (trimmed to the last row under
     /// `Trainer::stream_only`).
     pub history: &'a History,
@@ -410,6 +415,9 @@ mod tests {
             skipped_rounds: 0,
             compressed_bytes: 100,
             compression_ratio: 1.0,
+            phase: "train",
+            epoch: 0,
+            active_members: 2,
         };
         let mut buf = Vec::new();
         {

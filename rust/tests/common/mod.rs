@@ -119,6 +119,34 @@ pub fn assert_trajectory_identical(tag: &str, a: &TrainOutput, b: &TrainOutput) 
     assert_eq!(a.history.dense_rows, b.history.dense_rows, "{tag}: dense rows");
 }
 
+/// The standard elastic coordinator the churn drills attach to
+/// [`trainer`]: quorum 3 of the standard 4 workers, one warm-up and one
+/// cool-down round, 5 training rounds per epoch, and seeded random
+/// churn brisk enough that joins *and* leaves both occur in a short
+/// run.
+pub fn elastic_coord() -> CoordinatorSpec {
+    CoordinatorSpec {
+        min_clients: 3,
+        init_min_clients: 3,
+        warmup_rounds: 1,
+        cooldown_rounds: 1,
+        rounds_per_epoch: 5,
+        initial_members: 4,
+        churn: ChurnModel::parse("random:0.25:0.15").unwrap(),
+        ..CoordinatorSpec::default()
+    }
+}
+
+/// The standard trainer with the standard elastic coordinator attached.
+pub fn elastic_trainer(
+    algorithm: AlgorithmKind,
+    threads: usize,
+    seed: u64,
+    steps: usize,
+) -> Trainer {
+    trainer(algorithm, threads, seed, steps).coordinator(elastic_coord())
+}
+
 /// The full heterogeneous fabric the fabric/checkpoint drills enable:
 /// 2x static spread, heavy-tailed stragglers, two-level topology over a
 /// 100x-slower uplink.

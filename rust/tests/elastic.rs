@@ -1,0 +1,325 @@
+//! The elastic-coordinator drills: the phase-machine transition table,
+//! seeded-churn reproducibility across executors, the phase trace in the
+//! metrics record, the paper's Σ Δ = 0 invariant under mid-run joins and
+//! leaves, bitwise resume from *inside* every phase, provable
+//! late-joiner bootstrap from the newest snapshot, and the headline
+//! refactor guarantee — a default `CoordinatorSpec` (and no spec at all)
+//! is bitwise indistinguishable from the pre-split monolith.
+//!
+//! Built on the shared `tests/common` harness.
+
+mod common;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use vrl_sgd::prelude::*;
+use vrl_sgd::trainer::{next_phase, Event};
+
+/// The module-level ASCII diagram, spelled out independently of the
+/// implementation: `Some(successor)` iff the edge is drawn.
+fn diagram(phase: Phase, event: Event) -> Option<Phase> {
+    use Event::*;
+    match (phase, event) {
+        (Phase::Finished, _) => None,
+        (_, OutOfSteps) => Some(Phase::Finished),
+        (Phase::WaitingForMembers, QuorumReached) => Some(Phase::Warmup),
+        (Phase::WaitingForMembers, StillWaiting) => Some(Phase::WaitingForMembers),
+        (Phase::Warmup, WarmupTick) => Some(Phase::Warmup),
+        (Phase::Warmup, WarmupComplete) => Some(Phase::RoundTrain),
+        (Phase::RoundTrain, RoundCommitted) => Some(Phase::RoundTrain),
+        (Phase::RoundTrain, EpochComplete) => Some(Phase::Cooldown),
+        (Phase::RoundTrain, Starved) => Some(Phase::Cooldown),
+        (Phase::Cooldown, CooldownTick) => Some(Phase::Cooldown),
+        (Phase::Cooldown, CooldownComplete) => Some(Phase::WaitingForMembers),
+        _ => None,
+    }
+}
+
+/// Property test over the full `Phase × Event` square: the machine
+/// admits exactly the diagrammed edges, `Finished` is absorbing, and
+/// `OutOfSteps` is the only way into it.
+#[test]
+fn transition_table_admits_exactly_the_diagrammed_edges() {
+    for phase in Phase::ALL {
+        for event in Event::ALL {
+            assert_eq!(
+                next_phase(phase, event),
+                diagram(phase, event),
+                "{phase:?} x {event:?}"
+            );
+        }
+    }
+    for event in Event::ALL {
+        assert_eq!(next_phase(Phase::Finished, event), None, "Finished must absorb {event:?}");
+    }
+    for phase in Phase::ALL {
+        for event in Event::ALL {
+            if next_phase(phase, event) == Some(Phase::Finished) {
+                assert_eq!(
+                    event,
+                    Event::OutOfSteps,
+                    "{phase:?}: only OutOfSteps may finish the run"
+                );
+            }
+        }
+    }
+    for phase in Phase::ALL {
+        assert_eq!(Phase::parse(phase.name()).unwrap(), phase);
+    }
+}
+
+/// Acceptance criterion: a seeded churn timeline is bitwise
+/// reproducible run-over-run and executor-independent — for all seven
+/// algorithms.
+#[test]
+fn seeded_churn_is_reproducible_and_executor_independent() {
+    for kind in AlgorithmKind::ALL {
+        common::assert_runs_identical(
+            &format!("{kind:?} elastic repeat"),
+            || common::elastic_trainer(kind, 1, 11, 60),
+            || common::elastic_trainer(kind, 1, 11, 60),
+        );
+        common::assert_runs_identical(
+            &format!("{kind:?} elastic sequential vs threaded"),
+            || common::elastic_trainer(kind, 1, 11, 60),
+            || common::elastic_trainer(kind, 4, 11, 60),
+        );
+    }
+}
+
+/// The phase trace is part of the record: idle ticks consume a round
+/// index and a CSV row but no optimizer steps and no collective, epochs
+/// never rewind, and the cumulative skip counter counts exactly the
+/// starved training ticks.
+#[test]
+fn phase_trace_lands_in_the_record_with_idle_ticks_inert() {
+    let steps = 100;
+    let out = common::elastic_trainer(AlgorithmKind::VrlSgd, 1, 11, steps).run().unwrap();
+    let rows = &out.history.sync_rows;
+    assert!(rows.iter().any(|r| r.phase == "warmup"), "no warmup tick in the record");
+    assert!(rows.iter().any(|r| r.phase == "cooldown"), "no cooldown tick in the record");
+    assert!(rows.iter().any(|r| r.phase == "train"), "no training round in the record");
+    assert!(rows.iter().any(|r| r.epoch > 0), "the epoch counter never advanced");
+    assert!(rows.iter().any(|r| r.active_members < 4), "churn never retired a member");
+    for (i, r) in rows.iter().enumerate() {
+        let (prev_step, prev_comm) =
+            if i == 0 { (0, 0) } else { (rows[i - 1].step, rows[i - 1].comm_rounds) };
+        assert_eq!(r.round, i, "round indices must stay contiguous");
+        if i > 0 {
+            assert!(r.epoch >= rows[i - 1].epoch, "round {i}: the epoch counter rewound");
+        }
+        if r.phase == "train" && r.present_workers > 0 {
+            assert!(r.step > prev_step, "round {i}: a committed round must consume steps");
+            assert_eq!(
+                r.present_workers, r.active_members,
+                "round {i}: without a participation model every active member trains"
+            );
+        } else {
+            assert_eq!(r.present_workers, 0, "round {i}: an idle tick trains nobody");
+            assert_eq!(r.step, prev_step, "round {i}: an idle tick consumes no steps");
+            assert_eq!(r.comm_rounds, prev_comm, "round {i}: an idle tick runs no collective");
+        }
+    }
+    let starved =
+        rows.iter().filter(|r| r.phase == "train" && r.present_workers == 0).count() as u64;
+    assert_eq!(rows.last().unwrap().skipped_rounds, starved);
+    assert_eq!(rows.last().unwrap().step, steps, "the step budget must be spent exactly");
+}
+
+/// Observer that records, after every committed tick, the max-abs
+/// coordinate of Σᵢ Δᵢ over the *whole* fleet (leavers included — their
+/// Δ is frozen, not dropped) and the membership ledger.
+struct ElasticDeltaProbe {
+    residuals: Rc<RefCell<Vec<f32>>>,
+    memberships: Rc<RefCell<Vec<Vec<bool>>>>,
+}
+
+impl RoundObserver for ElasticDeltaProbe {
+    fn on_state(&mut self, state: &mut RunState<'_>) {
+        let mut sum = vec![0.0f32; state.dim];
+        for w in state.workers.iter() {
+            for (s, d) in sum.iter_mut().zip(w.delta.iter()) {
+                *s += *d;
+            }
+        }
+        let residual = sum.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        self.residuals.borrow_mut().push(residual);
+        self.memberships.borrow_mut().push(state.coord.membership.clone());
+    }
+}
+
+/// Acceptance criterion: the paper's Σᵢ Δᵢ = 0 invariant (§4.1)
+/// survives arbitrary membership churn, because a leaver's Δ is frozen
+/// in place and a joiner's Δ starts (or stays) untouched.
+#[test]
+fn delta_zero_sum_survives_joins_and_leaves() {
+    for kind in [AlgorithmKind::VrlSgd, AlgorithmKind::VrlSgdWarmup] {
+        let residuals = Rc::new(RefCell::new(Vec::new()));
+        let memberships = Rc::new(RefCell::new(Vec::new()));
+        let probe = ElasticDeltaProbe {
+            residuals: residuals.clone(),
+            memberships: memberships.clone(),
+        };
+        let out = common::elastic_trainer(kind, 1, 11, 100).observer(probe).run().unwrap();
+        // the drill is live only if members left AND (re)joined mid-run
+        let memberships = memberships.borrow();
+        let mut joins = 0;
+        let mut leaves = 0;
+        for pair in memberships.windows(2) {
+            for (before, after) in pair[0].iter().zip(pair[1].iter()) {
+                match (before, after) {
+                    (false, true) => joins += 1,
+                    (true, false) => leaves += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert!(
+            joins > 0 && leaves > 0,
+            "{kind:?}: churn must exercise both directions (joins {joins}, leaves {leaves})"
+        );
+        for (round, r) in residuals.borrow().iter().enumerate() {
+            assert!(*r < 2e-3, "{kind:?}: Σ Δ residual {r} after round {round}");
+        }
+        assert!(out.delta_residual < 2e-3, "{kind:?}: final Σ Δ residual");
+    }
+}
+
+/// Acceptance criterion: snap v5 resumes bitwise from a snapshot taken
+/// *inside* every phase the machine passes through — warmup, training
+/// and cooldown at minimum (waiting too when the seed produces one).
+#[test]
+fn resume_is_bitwise_from_inside_every_phase() {
+    // 1-tick phases never appear in a round-boundary snapshot (the
+    // boundary state has already left them), so stretch them to 2
+    let coord = CoordinatorSpec {
+        warmup_rounds: 2,
+        cooldown_rounds: 2,
+        ..common::elastic_coord()
+    };
+    let mk = || {
+        common::trainer(AlgorithmKind::VrlSgd, 1, 11, 60).coordinator(coord.clone())
+    };
+    let full = mk().run().unwrap();
+    let dir = common::temp_dir("elastic_resume");
+    let checkpointed =
+        mk().observer(Checkpointer::new(&dir).every(1).keep_last(0)).run().unwrap();
+    common::assert_identical(&checkpointed, &full, "checkpointing must not perturb the run");
+    // bucket the boundary snapshots by the phase they froze
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+    entries.sort();
+    let mut by_phase: BTreeMap<&'static str, PathBuf> = BTreeMap::new();
+    for path in entries {
+        let snap = Snapshot::load(&path).unwrap();
+        by_phase.entry(snap.coord.phase.name()).or_insert(path);
+    }
+    for required in ["warmup", "train", "cooldown"] {
+        assert!(
+            by_phase.contains_key(required),
+            "no snapshot landed inside {required}; phases seen: {:?}",
+            by_phase.keys().collect::<Vec<_>>()
+        );
+    }
+    for (phase, path) in &by_phase {
+        let resumed = mk().resume_from(path).unwrap().run().unwrap();
+        common::assert_identical(&resumed, &full, &format!("resume from inside {phase}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Observer that captures worker 3's (params, Δ) at the end of one
+/// chosen tick.
+struct JoinProbe {
+    round: usize,
+    captured: Rc<RefCell<Option<(Vec<f32>, Vec<f32>)>>>,
+}
+
+impl RoundObserver for JoinProbe {
+    fn on_state(&mut self, state: &mut RunState<'_>) {
+        if state.round == self.round {
+            let w = &state.workers[3];
+            *self.captured.borrow_mut() = Some((w.params.clone(), w.delta.clone()));
+        }
+    }
+}
+
+/// Acceptance criterion: a late joiner provably bootstraps from the
+/// *newest* snapshot in `bootstrap_dir` — its parameters equal that
+/// snapshot's active-member consensus (not its own stale x⁰ copy) and
+/// its Δ stays untouched at zero.
+#[test]
+fn late_joiner_bootstraps_from_the_newest_snapshot() {
+    let dir = common::temp_dir("elastic_bootstrap");
+    // deterministic timeline: 3 of 4 workers launch; warmup at tick 0,
+    // training ticks 1–5 close the epoch, cooldown at tick 6; the plan
+    // admits worker 3 at tick 7, when the newest snapshot on disk is
+    // round-00000006.snap (written at the end of tick 5)
+    let coord = CoordinatorSpec {
+        min_clients: 3,
+        init_min_clients: 3,
+        warmup_rounds: 1,
+        cooldown_rounds: 1,
+        rounds_per_epoch: 5,
+        initial_members: 3,
+        churn: ChurnModel::parse("plan:7:+3").unwrap(),
+        bootstrap_dir: Some(dir.to_str().unwrap().to_string()),
+        ..CoordinatorSpec::default()
+    };
+    let captured = Rc::new(RefCell::new(None));
+    let probe = JoinProbe { round: 7, captured: captured.clone() };
+    let out = common::trainer(AlgorithmKind::VrlSgd, 1, 11, 60)
+        .coordinator(coord)
+        .observer(Checkpointer::new(&dir).every(2).keep_last(0))
+        .observer(probe)
+        .run()
+        .unwrap();
+    let snap = Snapshot::load(dir.join("round-00000006.snap")).unwrap();
+    assert_eq!(snap.coord.phase, Phase::Cooldown);
+    assert_eq!(snap.coord.membership, vec![true, true, true, false]);
+    // replicate the driver's consensus: mean over the snapshot's
+    // active-member rows
+    let rows: Vec<&[f32]> = snap
+        .worker_states
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| snap.coord.membership[*i])
+        .map(|(_, w)| w.params.as_slice())
+        .collect();
+    let mut expected = vec![0.0f32; snap.dim];
+    vrl_sgd::tensor::mean_rows(&mut expected, &rows);
+    let (params, delta) =
+        captured.borrow().clone().expect("the probe must fire at tick 7");
+    assert_eq!(params, expected, "joiner params != the snapshot's active-member consensus");
+    assert_ne!(
+        params, snap.worker_states[3].params,
+        "the joiner kept its stale pre-admission copy instead of bootstrapping"
+    );
+    assert!(delta.iter().all(|d| *d == 0.0), "a fresh joiner's Δ must stay untouched");
+    // from the next epoch on, the fleet trains with all four members
+    assert!(out.history.sync_rows.iter().skip(8).any(|r| r.present_workers == 4));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The headline refactor guarantee: attaching a *default*
+/// `CoordinatorSpec` — full fleet, quorum 1, zero-length warmup and
+/// cooldown, unbounded epoch, churn off — is bitwise indistinguishable
+/// from not attaching a coordinator at all, for all seven algorithms on
+/// both executors.
+#[test]
+fn default_coordinator_is_bitwise_identical_to_the_static_path() {
+    for kind in AlgorithmKind::ALL {
+        for threads in [1, 2] {
+            common::assert_runs_identical(
+                &format!("{kind:?} x{threads} default coordinator vs static"),
+                || common::trainer(kind, threads, 23, 60),
+                || {
+                    common::trainer(kind, threads, 23, 60)
+                        .coordinator(CoordinatorSpec::default())
+                },
+            );
+        }
+    }
+}

@@ -348,9 +348,9 @@ fn participation_mismatch_is_rejected_on_resume() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
-/// The new metric columns are part of the CSV surface (streaming sink
-/// and buffered history agree — the resume drill above already proves
-/// byte-equality of resumed streams).
+/// The presence/phase metric columns are part of the CSV surface
+/// (streaming sink and buffered history agree — the resume drill above
+/// already proves byte-equality of resumed streams).
 #[test]
 fn presence_columns_land_in_the_csv() {
     let out = base(AlgorithmKind::LocalSgd, 1)
@@ -361,13 +361,57 @@ fn presence_columns_land_in_the_csv() {
     let mut lines = csv.lines();
     let header = lines.next().unwrap();
     assert!(
-        header.ends_with("straggler_wait_s,present_workers,skipped_rounds"),
+        header.ends_with("compressed_bytes,compression_ratio,phase,epoch,active_members"),
         "{header}"
     );
     for (line, row) in lines.zip(out.history.sync_rows.iter()) {
         let fields: Vec<&str> = line.split(',').collect();
-        assert_eq!(fields.len(), 10, "{line}");
+        assert_eq!(fields.len(), 15, "{line}");
         assert_eq!(fields[8], row.present_workers.to_string());
         assert_eq!(fields[9], row.skipped_rounds.to_string());
+        // the static path reports the always-on training phase
+        assert_eq!(fields[12], "train", "{line}");
+        assert_eq!(fields[13], "0", "{line}");
+        assert_eq!(fields[14], WORKERS.to_string(), "{line}");
     }
+}
+
+/// Satellite fix: a round sampled empty charges the *barrier wait* of
+/// the nominal round length through the same `Fleet::round_timing` code
+/// path every other round uses — the `straggler_wait_s` column records
+/// it, non-empty homogeneous rounds stay at exactly zero, and the
+/// simulated clock (compute + comm) is what it always was.
+#[test]
+fn skipped_rounds_charge_the_nominal_barrier_wait() {
+    let out = base(AlgorithmKind::LocalSgd, 1)
+        .participation(ParticipationModel::Bernoulli { drop: 0.9 })
+        .run()
+        .unwrap();
+    assert!(out.skipped_rounds > 0, "the drill needs skipped rounds");
+    // the homogeneous round length: k steps at the softmax task's
+    // per-step cost (dim = final params length, batch 8)
+    let step_s = vrl_sgd::sim::TimeModel::from_dims(out.final_params.len(), 8).step_s;
+    let base_s = 5.0 * step_s;
+    let mut wait = 0.0f64;
+    for r in &out.history.sync_rows {
+        if r.present_workers == 0 {
+            assert_eq!(
+                r.straggler_wait_s.to_bits(),
+                base_s.to_bits(),
+                "round {}: a skipped round waits out the whole barrier",
+                r.round
+            );
+            wait += base_s;
+        } else {
+            assert_eq!(r.straggler_wait_s, 0.0, "round {}: homogeneous, no wait", r.round);
+        }
+    }
+    assert_eq!(out.sim_time.wait_s.to_bits(), wait.to_bits(), "charged seconds");
+    // the wait is idle time *alongside* the clock, not extra clock
+    let busy = base(AlgorithmKind::LocalSgd, 1).run().unwrap();
+    assert_eq!(
+        out.sim_time.compute_s.to_bits(),
+        busy.sim_time.compute_s.to_bits(),
+        "skips keep the same compute clock as the full run"
+    );
 }

@@ -1,18 +1,15 @@
-//! Integration tests for the `Trainer` builder + `Session` redesign:
-//! shim equivalence (the deprecated free functions must be bitwise
-//! indistinguishable from the builder path), schedules end to end, and
-//! the paper's Σ Δ = 0 invariant with observers/schedules attached.
+//! Integration tests for the `Trainer` builder + `Session` API:
+//! engine-level vs task-level entry-point equivalence, schedules end to
+//! end, and the paper's Σ Δ = 0 invariant with observers/schedules
+//! attached.
 //!
 //! Built on the shared `tests/common` harness (run builders + bitwise
 //! comparators).
-
-#![allow(deprecated)] // exercising the shims is the point
 
 mod common;
 
 use common::{assert_identical, softmax_task};
 use vrl_sgd::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
-use vrl_sgd::coordinator::{run_training, run_with_engines, RunOptions};
 use vrl_sgd::engine::build_pure_engines;
 use vrl_sgd::prelude::Trainer;
 use vrl_sgd::trainer::{
@@ -24,28 +21,12 @@ fn spec_for(algorithm: AlgorithmKind) -> TrainSpec {
     common::spec(algorithm, 23, 80)
 }
 
-/// Acceptance criterion: for a fixed seed, the deprecated `run_training`
-/// shim and the builder produce identical `TrainOutput` for all seven
-/// algorithms.
+/// For a fixed seed, handing the builder pre-built engines must be
+/// bitwise indistinguishable from letting it build them from the task —
+/// for all seven algorithms, including dense metrics with a target and
+/// sparse evaluation.
 #[test]
-fn run_training_shim_is_bitwise_identical_to_builder() {
-    for kind in AlgorithmKind::ALL {
-        let spec = spec_for(kind);
-        let task = softmax_task();
-        let old = run_training(&spec, &task, Partition::LabelSharded).unwrap();
-        let new = Trainer::new(task.clone())
-            .spec(spec.clone())
-            .partition(Partition::LabelSharded)
-            .run()
-            .unwrap();
-        assert_identical(&old, &new, &format!("{kind:?}"));
-    }
-}
-
-/// Same for the engine-level entry point, including dense metrics with a
-/// target and sparse evaluation.
-#[test]
-fn run_with_engines_shim_is_bitwise_identical_to_builder() {
+fn from_engines_is_bitwise_identical_to_task_path() {
     let task = TaskKind::Quadratic { b: 3.0, noise: 0.5 };
     for kind in AlgorithmKind::ALL {
         let spec = TrainSpec {
@@ -53,12 +34,16 @@ fn run_with_engines_shim_is_bitwise_identical_to_builder() {
             dense_metrics: true,
             ..spec_for(kind)
         };
-        let opts = RunOptions { target: Some(vec![0.0]), eval_every: 3 };
         let (engines, _) = build_pure_engines(&task, Partition::LabelSharded, &spec).unwrap();
-        let old = run_with_engines(&spec, engines, &opts).unwrap();
-        let (engines, _) = build_pure_engines(&task, Partition::LabelSharded, &spec).unwrap();
-        let new = Trainer::from_engines(engines)
+        let old = Trainer::from_engines(engines)
             .spec(spec.clone())
+            .target(vec![0.0])
+            .eval_every(3)
+            .run()
+            .unwrap();
+        let new = Trainer::new(task.clone())
+            .spec(spec.clone())
+            .partition(Partition::LabelSharded)
             .target(vec![0.0])
             .eval_every(3)
             .run()
