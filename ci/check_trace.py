@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON emitted by the telemetry module.
+
+Checks, per (pid, tid) lane:
+  * every span end ("E") pops a matching begin ("B") — same cat/name,
+    proper nesting, never an E without an open B;
+  * every opened span is closed by the end of the stream;
+  * timestamps are monotonic within each lane;
+and globally:
+  * instants carry the thread scope marker ("s": "t");
+  * thread-name metadata names the driver lane and every worker lane;
+  * the stream is non-trivial (at least one span and one instant).
+
+Usage: check_trace.py <trace.json> [expected_workers]
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    if len(sys.argv) < 2:
+        fail("usage: check_trace.py <trace.json> [expected_workers]")
+    with open(sys.argv[1], encoding="utf-8") as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("no traceEvents array")
+
+    stacks = {}      # (pid, tid) -> [(cat, name), ...]
+    last_ts = {}     # (pid, tid) -> ts
+    spans = instants = 0
+    thread_names = set()
+
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        if ph == "M":
+            if e.get("name") == "thread_name":
+                thread_names.add((e["pid"], e["tid"], e["args"]["name"]))
+            continue
+        lane = (e.get("pid"), e.get("tid"))
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)):
+            fail(f"event {i} has no numeric ts: {e}")
+        if ts < last_ts.get(lane, float("-inf")):
+            fail(f"event {i} goes back in time on lane {lane}: {e}")
+        last_ts[lane] = ts
+        key = (e.get("cat"), e.get("name"))
+        if ph == "B":
+            stacks.setdefault(lane, []).append(key)
+            spans += 1
+        elif ph == "E":
+            stack = stacks.get(lane) or fail(f"event {i}: E without B on {lane}: {e}")
+            if stack[-1] != key:
+                fail(f"event {i}: mis-nested span on {lane}: open {stack[-1]}, got {key}")
+            stack.pop()
+        elif ph == "i":
+            if e.get("s") != "t":
+                fail(f"event {i}: instant without thread scope: {e}")
+            instants += 1
+        else:
+            fail(f"event {i}: unexpected phase {ph!r}: {e}")
+
+    open_spans = {lane: s for lane, s in stacks.items() if s}
+    if open_spans:
+        fail(f"unclosed spans: {open_spans}")
+    if spans == 0 or instants == 0:
+        fail(f"trivial trace: {spans} spans, {instants} instants")
+
+    if len(sys.argv) > 2:
+        workers = int(sys.argv[2])
+        named = {(p, t) for (p, t, _) in thread_names}
+        missing = [t for t in range(workers + 1) if (1, t) not in named]
+        if missing:
+            fail(f"pid-1 lanes without thread_name metadata: {missing}")
+
+    print(
+        f"check_trace: OK — {spans} spans (all balanced), {instants} instants, "
+        f"{len(thread_names)} named lanes"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -212,6 +212,66 @@ fn main() {
     }
     println!();
 
+    // --- telemetry off vs on: the observability tax ------------------------
+    // The telemetry contract: spans + metrics on every round must cost
+    // nothing when off (the driver holds no telemetry object) and stay
+    // within noise when on — and either way the trajectory is required
+    // to be bitwise identical (asserted below, not just claimed).
+    {
+        use vrl_sgd::telemetry::{TelemetrySpec, TraceFormat};
+        let task = TaskKind::SoftmaxSynthetic {
+            classes: 10,
+            features: 256,
+            samples_per_worker: 1024,
+        };
+        let trace_path = std::env::temp_dir()
+            .join(format!("vrl_bench_tel_{}.trace", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let train = |telemetry: Option<TelemetrySpec>| {
+            let mut t = Trainer::new(task.clone())
+                .algorithm(AlgorithmKind::VrlSgd)
+                .partition(Partition::LabelSharded)
+                .workers(8)
+                .period(25)
+                .lr(0.05)
+                .batch(32)
+                .steps(300)
+                .seed(7)
+                .eval_every(usize::MAX)
+                .parallelism(1);
+            if let Some(tel) = telemetry {
+                t = t.telemetry(tel);
+            }
+            t.run().expect("bench run")
+        };
+        let traced_spec = || TelemetrySpec {
+            trace: Some(trace_path.clone()),
+            format: TraceFormat::Jsonl,
+            ..TelemetrySpec::default()
+        };
+        let off = bench("train 8-worker softmax telemetry=off", 1, 5, || {
+            std::hint::black_box(train(None));
+        });
+        report(&off);
+        json.push(&off);
+        let on = bench("train 8-worker softmax telemetry=on", 1, 5, || {
+            std::hint::black_box(train(Some(traced_spec())));
+        });
+        report(&on);
+        json.push(&on);
+        let out_off = train(None);
+        let out_on = train(Some(traced_spec()));
+        assert_eq!(out_off.final_params, out_on.final_params, "telemetry not bitwise!");
+        assert_eq!(out_off.history, out_on.history, "telemetry not bitwise!");
+        let _ = std::fs::remove_file(&trace_path);
+        println!(
+            "  telemetry overhead: {:+.1}% (bitwise-identical output)",
+            (on.median_s / off.median_s - 1.0) * 100.0
+        );
+    }
+    println!();
+
     // --- XLA artifact step latency (needs `make artifacts`) ---------------
     let art_dir = std::path::Path::new("artifacts");
     if vrl_sgd::runtime::Runtime::artifacts_available(art_dir, &["mlp", "transformer"]) {

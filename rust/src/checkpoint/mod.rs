@@ -67,8 +67,11 @@ use std::path::{Path, PathBuf};
 /// coordinator fingerprint in `meta`, the `coord` section — phase,
 /// epoch counters, membership ledger and churn-stream position, so
 /// elastic runs resume bitwise from any phase — and the per-round
-/// `phase` / `epoch` / `active_members` columns in `history`.)
-pub const SNAP_VERSION: u32 = 5;
+/// `phase` / `epoch` / `active_members` columns in `history`. v6: the
+/// cumulative `skipped_s` sub-counter appended to the `time` section,
+/// so the end-of-run compute/comm/wait/skipped breakdown survives a
+/// resume.)
+pub const SNAP_VERSION: u32 = 6;
 
 /// One worker's serialized state.
 #[derive(Debug, Clone, PartialEq)]
@@ -94,8 +97,9 @@ pub struct WorkerSnap {
 ///
 /// The saved [`TrainSpec`] is a *fingerprint*: on resume every
 /// trajectory-shaping hyperparameter must match the rebuilt
-/// configuration (`spec.threads` is exempt — executors are
-/// interchangeable and bitwise identical). What the spec cannot see —
+/// configuration (`spec.threads` and `spec.telemetry` are exempt —
+/// executors are interchangeable and bitwise identical, and telemetry
+/// only observes the run without shaping it). What the spec cannot see —
 /// the task, partition, custom schedules, `eval_every`, and any
 /// stateful [`crate::trainer::EarlyStop`] policy — must be recreated by
 /// the caller exactly as in the original run; in particular a policy
@@ -418,6 +422,7 @@ impl Snapshot {
         time.put_f64(self.sim_time.compute_s);
         time.put_f64(self.sim_time.comm_s);
         time.put_f64(self.sim_time.wait_s);
+        time.put_f64(self.sim_time.skipped_s);
         w.section("time", time.into_bytes());
 
         let mut fab = Enc::new();
@@ -563,7 +568,12 @@ impl Snapshot {
         d.finish()?;
 
         let mut d = Dec::new(r.require("time")?);
-        let sim_time = SimTime { compute_s: d.f64()?, comm_s: d.f64()?, wait_s: d.f64()? };
+        let sim_time = SimTime {
+            compute_s: d.f64()?,
+            comm_s: d.f64()?,
+            wait_s: d.f64()?,
+            skipped_s: d.f64()?,
+        };
         d.finish()?;
 
         let mut d = Dec::new(r.require("fabric")?);
@@ -1002,7 +1012,7 @@ mod tests {
             algorithm: algo.as_ref(),
             dim: 3,
             comm: cluster.stats(),
-            sim_time: SimTime { compute_s: 1.25, comm_s: 0.5, wait_s: 0.25 },
+            sim_time: SimTime { compute_s: 1.25, comm_s: 0.5, wait_s: 0.25, skipped_s: 0.125 },
             fabric: crate::fabric::FleetState {
                 rng_state: 0xDEAD_BEEF,
                 rng_inc: 0x1234_5679,

@@ -268,6 +268,14 @@ impl CompressorKind {
     }
 }
 
+/// L2 norm of an error-feedback residual (or any update vector),
+/// accumulated in f64. The `residual_norm` telemetry gauge: a residual
+/// norm that grows round over round means the compressor is shedding
+/// more mass than error feedback re-injects.
+pub fn l2_norm(v: &[f32]) -> f64 {
+    v.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt()
+}
+
 /// Number of coordinates top-k keeps for a `dim`-element buffer.
 pub fn top_k_count(fraction: f64, dim: usize) -> usize {
     if dim == 0 {

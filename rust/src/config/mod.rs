@@ -293,6 +293,11 @@ pub struct TrainSpec {
     /// [`crate::trainer::coordinator`]. `None` (the default) takes the
     /// static path, bitwise identical to the pre-coordinator driver.
     pub coordinator: Option<crate::trainer::CoordinatorSpec>,
+    /// Structured tracing + metrics exports (`[telemetry]` TOML table /
+    /// `--trace` flag). Off by default; never trajectory-shaping (like
+    /// `threads`, it is exempt from the checkpoint fingerprint). See
+    /// [`crate::telemetry`].
+    pub telemetry: crate::telemetry::TelemetrySpec,
 }
 
 impl Default for TrainSpec {
@@ -314,6 +319,7 @@ impl Default for TrainSpec {
             dense_metrics: false,
             threads: 0,
             coordinator: None,
+            telemetry: crate::telemetry::TelemetrySpec::default(),
         }
     }
 }
@@ -395,6 +401,7 @@ impl TrainSpec {
             dense_metrics: doc.bool_or("spec.dense_metrics", d.dense_metrics),
             threads: doc.usize_or("spec.threads", d.threads),
             coordinator: crate::trainer::CoordinatorSpec::from_doc(doc)?,
+            telemetry: crate::telemetry::TelemetrySpec::from_doc(doc)?,
         })
     }
 }

@@ -79,6 +79,16 @@ pub struct RoundTiming {
     pub wait_s: f64,
 }
 
+impl RoundTiming {
+    /// The mean-compute slice of the round: critical path minus barrier
+    /// wait — where the simulated `local_steps` telemetry span ends and
+    /// the `barrier_wait` span begins. Clamped at zero (an idle round
+    /// books its whole length as wait).
+    pub fn compute_s(&self) -> f64 {
+        (self.critical_s - self.wait_s).max(0.0)
+    }
+}
+
 /// A simulated heterogeneous fleet: resolved speed multipliers plus the
 /// dynamic straggler process and its dedicated RNG stream.
 ///

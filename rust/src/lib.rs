@@ -293,6 +293,56 @@
 //! (CLI: `--min-clients 3 --churn random:0.05:0.02`; TOML: a
 //! `[coordinator]` table with `min_clients` / `warmup_rounds` /
 //! `churn` / `bootstrap_dir` / ... keys.)
+//!
+//! Once runs are long, elastic and compressed, the sync-row CSV alone
+//! no longer explains *where the simulated time went*. The
+//! [`telemetry`] module answers that without perturbing anything: a
+//! [`telemetry::Tracer`] records span timers around every hot-path
+//! stage (local steps, barrier wait, compressor transmit, the
+//! collective, loss eval, checkpoint writes) plus lifecycle instants
+//! (phase transitions, joins/leaves, quorum misses, skipped rounds,
+//! early stop), and a [`telemetry::MetricsRegistry`] snapshots named
+//! counters / gauges / histograms each round. Events are stamped on the
+//! deterministic simulated clock, so traces are bitwise-reproducible
+//! across executors and resumes; with telemetry off (the default) the
+//! driver carries no telemetry state at all and the trajectory is
+//! provably bitwise-identical (`rust/tests/telemetry.rs`):
+//!
+//! ```no_run
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
+//! let out = Trainer::new(task)
+//!     .algorithm(AlgorithmKind::VrlSgd)
+//!     .partition(Partition::LabelSharded)
+//!     .workers(8)
+//!     .period(20)
+//!     .steps(2000)
+//!     .telemetry(TelemetrySpec {
+//!         // Chrome trace-event JSON: open in chrome://tracing or
+//!         // ui.perfetto.dev — one lane per worker, spans to scrub
+//!         trace: Some("reports/run.trace.json".into()),
+//!         format: TraceFormat::Chrome,
+//!         // per-round counters/gauges/histograms as JSONL
+//!         metrics: Some("reports/run.metrics.jsonl".into()),
+//!         ..TelemetrySpec::default()
+//!     })
+//!     .run()
+//!     .unwrap();
+//! // where did the simulated time go?
+//! println!(
+//!     "{:.3}s simulated = {:.3}s compute + {:.3}s comm (of compute: {:.3}s barrier wait)",
+//!     out.sim_time.total(),
+//!     out.sim_time.compute_s,
+//!     out.sim_time.comm_s,
+//!     out.sim_time.wait_s,
+//! );
+//! ```
+//!
+//! (CLI: `--trace run.trace.json --trace-format chrome`; TOML: a
+//! `[telemetry]` table with `trace` / `format` / `metrics` /
+//! `wall_clock` keys. See the [`telemetry`] module docs for the full
+//! event taxonomy.)
 
 pub mod analysis;
 pub mod benchutil;
@@ -310,6 +360,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod tensor;
 pub mod trainer;
 
@@ -326,6 +377,7 @@ pub mod prelude {
         SpeedProfile, StragglerModel, TopologyKind,
     };
     pub use crate::metrics::History;
+    pub use crate::telemetry::{MetricsRegistry, TelemetrySpec, TraceFormat, Tracer};
     pub use crate::trainer::{
         ConsensusTracker, ConstLr, ConstPeriod, CoordState, CoordinatorSpec, CosineLr, CsvSink,
         EarlyStop, Executor, FnObserver, LrSchedule, MetricSink, Patience, PeriodSchedule, Phase,

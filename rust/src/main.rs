@@ -36,6 +36,7 @@ COMMANDS:
         [--sampler <all|round-robin:<m>>]
         [--compress <none|identity|top-k:<fraction>|sign|int8[:<range>]>]
         [--min-clients <n>] [--churn <off|random:<j>:<l>|plan:...>]
+        [--trace <path>] [--trace-format <jsonl|chrome>]
                                       run one training job (the optional
                                       [schedule] table maps to lr decay /
                                       stagewise periods; --threads > 1
@@ -70,7 +71,15 @@ COMMANDS:
                                       quorum of active members, and the
                                       churn model admits/retires workers
                                       between rounds — seeded and
-                                      bitwise-resumable)
+                                      bitwise-resumable; --trace /
+                                      --trace-format override the
+                                      [telemetry] table: spans and
+                                      lifecycle instants land at <path>
+                                      as JSONL or a Chrome trace-event
+                                      file for chrome://tracing —
+                                      telemetry only observes, the
+                                      trajectory stays bitwise
+                                      identical)
   fig1|fig2|fig5|fig6 [--paper] [--out <csv>]
                                       epoch-loss figures (1/2: paper k;
                                       5: k/2; 6: 2k)
@@ -206,6 +215,15 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
                     coord.churn = vrl_sgd::fabric::ChurnModel::parse(c)?;
                 }
             }
+            if let Some(path) = args.get("trace") {
+                cfg.spec.telemetry.trace = Some(path.to_string());
+            }
+            if let Some(f) = args.get("trace-format") {
+                if cfg.spec.telemetry.trace.is_none() {
+                    return Err("--trace-format needs --trace (or [telemetry] trace)".into());
+                }
+                cfg.spec.telemetry.format = vrl_sgd::telemetry::TraceFormat::parse(f)?;
+            }
             // CLI fabric overrides re-enter validation (worker-count
             // bounds, uplink sanity, participation ranges) before
             // anything runs
@@ -271,8 +289,7 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
             let out = trainer.run()?;
             println!(
                 "{}: loss {:.6} -> {:.6} in {} rounds ({} bytes, {} on the wire \
-                 [{:.2}x], {:.3}s simulated, {:.3}s barrier wait, {} empty round(s) \
-                 skipped)",
+                 [{:.2}x], {} empty round(s) skipped)",
                 out.algorithm,
                 out.initial_loss(),
                 out.final_loss(),
@@ -280,9 +297,19 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
                 out.comm.bytes,
                 out.comm.wire_bytes,
                 out.comm.compression_ratio(),
-                out.sim_time.total(),
-                out.sim_time.wait_s,
                 out.skipped_rounds
+            );
+            // barrier-wait and skipped time are sub-slices of the compute
+            // critical path (and overlap on skipped rounds), so they are
+            // reported inside it rather than as disjoint addends
+            println!(
+                "simulated time {:.3}s = {:.3}s compute + {:.3}s comm \
+                 (of compute: {:.3}s barrier wait, {:.3}s skipped rounds)",
+                out.sim_time.total(),
+                out.sim_time.compute_s,
+                out.sim_time.comm_s,
+                out.sim_time.wait_s,
+                out.sim_time.skipped_s
             );
             if let Some(path) = cfg.output {
                 write_report(&path, &out.history.sync_csv()).map_err(|e| e.to_string())?;

@@ -48,6 +48,13 @@ pub struct SimTime {
     /// **not** contribute to [`SimTime::total`]. Zero on a homogeneous
     /// fleet.
     pub wait_s: f64,
+    /// Cumulative time spent in rounds that did not commit a sync —
+    /// quorum misses, coordinator warmup/cooldown/waiting ticks. Like
+    /// [`SimTime::wait_s`] it is a slice of `compute_s`'s critical path
+    /// (the fleet still burned the round), not extra wall-clock, so it
+    /// does **not** contribute to [`SimTime::total`]. Zero for a static
+    /// fully-participating run.
+    pub skipped_s: f64,
 }
 
 impl SimTime {
@@ -69,6 +76,17 @@ impl SimTime {
     pub fn charge_round(&mut self, critical_s: f64, wait_s: f64) {
         self.compute_s += critical_s;
         self.wait_s += wait_s;
+    }
+
+    /// Charge one round that burned fleet time without committing a sync
+    /// (quorum miss, warmup/cooldown/waiting tick). Same accounting as
+    /// [`SimTime::charge_round`], plus the whole critical path is also
+    /// tallied into [`SimTime::skipped_s`]. (On such rounds the fleet
+    /// timing is drawn with an empty present-set, where `wait == critical`
+    /// — so skipped time shows up in both sub-counters.)
+    pub fn charge_skipped_round(&mut self, critical_s: f64, wait_s: f64) {
+        self.charge_round(critical_s, wait_s);
+        self.skipped_s += critical_s;
     }
 }
 
@@ -108,5 +126,18 @@ mod tests {
         assert!((t.wait_s - 0.1).abs() < 1e-12);
         // wait is a slice of the critical path, not extra wall-clock
         assert!((t.total() - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skipped_rounds_stay_inside_total() {
+        let mut t = SimTime::default();
+        t.charge_round(0.4, 0.1);
+        t.charge_skipped_round(0.2, 0.05);
+        t.comm_s += 0.05;
+        assert!((t.compute_s - 0.6).abs() < 1e-12);
+        assert!((t.wait_s - 0.15).abs() < 1e-12);
+        assert!((t.skipped_s - 0.2).abs() < 1e-12);
+        // skipped time is a slice of the critical path, like wait
+        assert!((t.total() - 0.65).abs() < 1e-12);
     }
 }

@@ -1,0 +1,718 @@
+//! Structured tracing and metrics across the run lifecycle.
+//!
+//! The sync-row CSV says *what* happened each round; this module says
+//! *where the time went* and *why*. A [`Tracer`] records span timers
+//! around every hot-path stage of the driver plus structured lifecycle
+//! instants, and a [`MetricsRegistry`] accumulates named counters /
+//! gauges / histograms snapshotted per round. Both export through
+//! zero-dependency writers: a JSONL event log, a Chrome trace-event
+//! JSON loadable in `chrome://tracing` / [Perfetto](https://ui.perfetto.dev),
+//! and a metrics JSONL.
+//!
+//! Every event is stamped on the **deterministic simulated clock**
+//! ([`crate::sim::SimTime`], exported in microseconds), so traces are
+//! bitwise-reproducible across executors, thread counts, and resumes.
+//! An optional wall-clock lane (`wall_clock = true`) adds real elapsed
+//! time for profiling; it is off by default precisely because wall
+//! stamps are not reproducible.
+//!
+//! Telemetry **never** touches the training trajectory: it only reads
+//! driver state, draws from no RNG stream, and when disabled (the
+//! default) the driver holds no telemetry object at all — proven
+//! bitwise-identical in `rust/tests/telemetry.rs` and perf-neutral in
+//! the `perf_hotpath` off-vs-on case.
+//!
+//! # Event taxonomy
+//!
+//! | kind | cat | name | lane (tid) | spans / args |
+//! |------|-----|------|-----------|--------------|
+//! | span | `round` | `local_steps` | driver | the round's compute block; `steps`, `workers` |
+//! | span | `round` | `barrier_wait` | driver | straggler idle slice of the critical path |
+//! | span | `sync` | `transmit` | worker *i* | compressor transmit; `residual_norm` when lossy |
+//! | span | `sync` | `collective` | driver | the allreduce/server exchange; `wire_bytes` |
+//! | span | `round` | `eval` | driver | global loss evaluation; `loss` |
+//! | span | `round` | `checkpoint` | driver | observer/snapshot write block |
+//! | instant | `lifecycle` | `run_start` | driver | `algorithm`, `workers`, `steps` |
+//! | instant | `lifecycle` | `resume` | driver | `round`, `step` |
+//! | instant | `lifecycle` | `phase` | driver | `from`, `to`, `epoch` |
+//! | instant | `lifecycle` | `join` / `leave` | worker *i* | membership churn |
+//! | instant | `lifecycle` | `quorum_miss` | driver | `present`, `min_clients` |
+//! | instant | `lifecycle` | `round_skipped` | driver | `round`, `phase` |
+//! | instant | `lifecycle` | `early_stop` | driver | `round`, `loss` |
+//! | instant | `lifecycle` | `run_end` | driver | `rounds`, `sim_s` |
+//!
+//! Lane 0 is the driver; lane `i + 1` is simulated worker `i`. Span
+//! begin/end events (`ph: "B"` / `"E"`) are always emitted in balanced
+//! pairs per lane.
+//!
+//! # Quickstart
+//!
+//! ```no_run
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::SoftmaxSynthetic { classes: 10, features: 32, samples_per_worker: 256 };
+//! let out = Trainer::new(task)
+//!     .algorithm(AlgorithmKind::VrlSgd)
+//!     .workers(4)
+//!     .steps(200)
+//!     .telemetry(TelemetrySpec {
+//!         trace: Some("reports/run.trace.json".into()),
+//!         format: TraceFormat::Chrome,
+//!         ..TelemetrySpec::default()
+//!     })
+//!     .run()
+//!     .unwrap();
+//! // open reports/run.trace.json in chrome://tracing or ui.perfetto.dev
+//! # let _ = out;
+//! ```
+//!
+//! Or from the CLI / TOML: `vrl-sgd train --config cfg.toml --trace
+//! run.trace.json --trace-format chrome`, or a `[telemetry]` table with
+//! `trace`, `format`, `metrics`, `wall_clock` keys.
+
+use crate::format::json::Json;
+use crate::format::toml_lite::TomlDoc;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Trace export format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceFormat {
+    /// One JSON object per line — easy to grep / tail / diff.
+    #[default]
+    Jsonl,
+    /// Chrome trace-event JSON (`{"traceEvents": [...]}`), loadable in
+    /// `chrome://tracing` and Perfetto.
+    Chrome,
+}
+
+impl TraceFormat {
+    /// Parse a CLI / TOML spelling.
+    pub fn parse(s: &str) -> Result<TraceFormat, String> {
+        match s {
+            "jsonl" => Ok(TraceFormat::Jsonl),
+            "chrome" => Ok(TraceFormat::Chrome),
+            other => Err(format!("unknown trace format \"{other}\" (expected jsonl or chrome)")),
+        }
+    }
+
+    /// Canonical spelling (inverse of [`TraceFormat::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceFormat::Jsonl => "jsonl",
+            TraceFormat::Chrome => "chrome",
+        }
+    }
+}
+
+/// Telemetry configuration: where (and whether) to write the trace and
+/// metrics exports. Default is fully off; the driver then carries no
+/// telemetry state at all.
+///
+/// Not part of the checkpoint fingerprint: like `TrainSpec::threads`,
+/// telemetry does not shape the trajectory, so a traced run may resume
+/// an untraced snapshot and vice versa.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TelemetrySpec {
+    /// Trace output path; `None` disables tracing.
+    pub trace: Option<String>,
+    /// Trace export format (only meaningful with `trace`).
+    pub format: TraceFormat,
+    /// Per-round metrics-registry JSONL path; `None` disables it.
+    pub metrics: Option<String>,
+    /// Also stamp events with real elapsed time (non-reproducible; off
+    /// by default so traces stay bitwise-comparable).
+    pub wall_clock: bool,
+}
+
+impl TelemetrySpec {
+    /// Whether any telemetry output is requested.
+    pub fn enabled(&self) -> bool {
+        self.trace.is_some() || self.metrics.is_some()
+    }
+
+    /// Parse the `[telemetry]` table. Unknown keys are errors (typo
+    /// guard), and `format` / `wall_clock` without `trace` is an error —
+    /// they configure an export that would never happen.
+    pub fn from_doc(doc: &TomlDoc) -> Result<TelemetrySpec, String> {
+        const KNOWN: [&str; 4] = ["trace", "format", "metrics", "wall_clock"];
+        let keys = doc.keys_under("telemetry");
+        if keys.is_empty() {
+            return Ok(TelemetrySpec::default());
+        }
+        for key in &keys {
+            let sub = &key["telemetry.".len()..];
+            if !KNOWN.contains(&sub) {
+                return Err(format!(
+                    "unknown [telemetry] key \"{sub}\" (expected one of: {})",
+                    KNOWN.join(", ")
+                ));
+            }
+        }
+        let trace = match doc.get("telemetry.trace") {
+            Some(v) => Some(v.as_str().ok_or("telemetry.trace must be a string")?.to_string()),
+            None => None,
+        };
+        let metrics = match doc.get("telemetry.metrics") {
+            Some(v) => Some(v.as_str().ok_or("telemetry.metrics must be a string")?.to_string()),
+            None => None,
+        };
+        let format = match doc.get("telemetry.format") {
+            Some(v) => TraceFormat::parse(v.as_str().ok_or("telemetry.format must be a string")?)?,
+            None => TraceFormat::default(),
+        };
+        if trace.is_none()
+            && (doc.get("telemetry.format").is_some() || doc.get("telemetry.wall_clock").is_some())
+        {
+            return Err(
+                "telemetry.format / telemetry.wall_clock need telemetry.trace".to_string()
+            );
+        }
+        Ok(TelemetrySpec {
+            trace,
+            format,
+            metrics,
+            wall_clock: doc.bool_or("telemetry.wall_clock", false),
+        })
+    }
+}
+
+/// A structured argument value attached to an event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgV {
+    /// Unsigned integer.
+    U(u64),
+    /// Float.
+    F(f64),
+    /// String (phase names, algorithm names).
+    S(String),
+}
+
+impl ArgV {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgV::U(v) => Json::Num(*v as f64),
+            ArgV::F(v) => Json::Num(*v),
+            ArgV::S(v) => Json::Str(v.clone()),
+        }
+    }
+}
+
+/// One trace event: a span begin (`B`) / end (`E`) or an instant (`i`),
+/// stamped on the simulated clock (µs) and optionally on the wall clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Chrome trace-event phase: `'B'`, `'E'`, or `'i'`.
+    pub ph: char,
+    /// Category (`round`, `sync`, `lifecycle`).
+    pub cat: &'static str,
+    /// Event name (see the module-level taxonomy table).
+    pub name: &'static str,
+    /// Lane: 0 = driver, `i + 1` = simulated worker `i`.
+    pub tid: usize,
+    /// Simulated timestamp in microseconds ([`crate::sim::SimTime::total`] × 1e6).
+    pub ts_us: f64,
+    /// Wall-clock microseconds since the tracer was created (only when
+    /// `wall_clock` is on).
+    pub wall_us: Option<f64>,
+    /// Structured arguments.
+    pub args: Vec<(&'static str, ArgV)>,
+}
+
+/// Span-scoped event recorder. Emission order is the driver's program
+/// order; within a lane, spans never overlap, so `B`/`E` pairs nest
+/// trivially and are always balanced.
+#[derive(Debug)]
+pub struct Tracer {
+    events: Vec<TraceEvent>,
+    workers: usize,
+    wall_base: Option<Instant>,
+}
+
+impl Tracer {
+    /// New tracer for a fleet of `workers` simulated workers. When
+    /// `wall_clock` is set, every event additionally records real
+    /// elapsed microseconds since this call.
+    pub fn new(workers: usize, wall_clock: bool) -> Tracer {
+        Tracer {
+            events: Vec::new(),
+            workers,
+            wall_base: if wall_clock { Some(Instant::now()) } else { None },
+        }
+    }
+
+    fn wall_now(&self) -> Option<f64> {
+        self.wall_base.map(|b| b.elapsed().as_secs_f64() * 1e6)
+    }
+
+    fn push(&mut self, ph: char, cat: &'static str, name: &'static str, tid: usize, sim_s: f64,
+            args: Vec<(&'static str, ArgV)>) {
+        let wall_us = self.wall_now();
+        self.events.push(TraceEvent { ph, cat, name, tid, ts_us: sim_s * 1e6, wall_us, args });
+    }
+
+    /// Open a span now (wall-wise); the simulated begin stamp is
+    /// `sim_s`. Must be closed by [`Tracer::end`] with the same
+    /// `cat`/`name`/`tid` — use this two-phase form when real work runs
+    /// between begin and end so the wall lane sees its true duration.
+    pub fn begin(&mut self, cat: &'static str, name: &'static str, tid: usize, sim_s: f64) {
+        self.push('B', cat, name, tid, sim_s, Vec::new());
+    }
+
+    /// Close the span opened by the matching [`Tracer::begin`].
+    pub fn end(&mut self, cat: &'static str, name: &'static str, tid: usize, sim_s: f64,
+               args: Vec<(&'static str, ArgV)>) {
+        self.push('E', cat, name, tid, sim_s, args);
+    }
+
+    /// Record a complete span after the fact (both stamps known; the
+    /// wall lane sees a zero-width event pair).
+    pub fn span(&mut self, cat: &'static str, name: &'static str, tid: usize, sim_start_s: f64,
+                sim_end_s: f64, args: Vec<(&'static str, ArgV)>) {
+        self.push('B', cat, name, tid, sim_start_s, Vec::new());
+        self.push('E', cat, name, tid, sim_end_s, args);
+    }
+
+    /// Record an instant event.
+    pub fn instant(&mut self, cat: &'static str, name: &'static str, tid: usize, sim_s: f64,
+                   args: Vec<(&'static str, ArgV)>) {
+        self.push('i', cat, name, tid, sim_s, args);
+    }
+
+    /// All recorded events, in emission order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Serialize per `format`. JSONL is one event object per line;
+    /// Chrome is a `traceEvents` document with process/thread metadata
+    /// (pid 1 = simulated clock; pid 2 = wall clock when enabled).
+    pub fn export(&self, format: TraceFormat) -> String {
+        match format {
+            TraceFormat::Jsonl => self.export_jsonl(),
+            TraceFormat::Chrome => self.export_chrome(),
+        }
+    }
+
+    fn event_obj(e: &TraceEvent) -> BTreeMap<String, Json> {
+        let mut m = BTreeMap::new();
+        m.insert("ph".to_string(), Json::Str(e.ph.to_string()));
+        m.insert("cat".to_string(), Json::Str(e.cat.to_string()));
+        m.insert("name".to_string(), Json::Str(e.name.to_string()));
+        m.insert("tid".to_string(), Json::Num(e.tid as f64));
+        m.insert("ts".to_string(), Json::Num(e.ts_us));
+        if !e.args.is_empty() {
+            let args: BTreeMap<String, Json> =
+                e.args.iter().map(|(k, v)| (k.to_string(), v.to_json())).collect();
+            m.insert("args".to_string(), Json::Obj(args));
+        }
+        m
+    }
+
+    fn export_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            let mut m = Self::event_obj(e);
+            if let Some(w) = e.wall_us {
+                m.insert("wall".to_string(), Json::Num(w));
+            }
+            out.push_str(&Json::Obj(m).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    fn meta_event(pid: usize, tid: usize, name: &str, value: &str) -> Json {
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str(value.to_string()));
+        let mut m = BTreeMap::new();
+        m.insert("ph".to_string(), Json::Str("M".to_string()));
+        m.insert("cat".to_string(), Json::Str("__metadata".to_string()));
+        m.insert("name".to_string(), Json::Str(name.to_string()));
+        m.insert("pid".to_string(), Json::Num(pid as f64));
+        m.insert("tid".to_string(), Json::Num(tid as f64));
+        m.insert("ts".to_string(), Json::Num(0.0));
+        m.insert("args".to_string(), Json::Obj(args));
+        Json::Obj(m)
+    }
+
+    fn export_chrome(&self) -> String {
+        let mut events = Vec::new();
+        let lanes: Vec<(usize, &str)> = [(1usize, "simulated clock")]
+            .into_iter()
+            .chain(self.wall_base.map(|_| (2usize, "wall clock")))
+            .collect();
+        for &(pid, label) in &lanes {
+            events.push(Self::meta_event(pid, 0, "process_name", &format!("vrl-sgd ({label})")));
+            events.push(Self::meta_event(pid, 0, "thread_name", "driver"));
+            for w in 0..self.workers {
+                events.push(Self::meta_event(pid, w + 1, "thread_name", &format!("worker {w}")));
+            }
+        }
+        for e in &self.events {
+            let mut m = Self::event_obj(e);
+            m.insert("pid".to_string(), Json::Num(1.0));
+            if e.ph == 'i' {
+                // instant scope: thread
+                m.insert("s".to_string(), Json::Str("t".to_string()));
+            }
+            events.push(Json::Obj(m));
+            if let Some(w) = e.wall_us {
+                let mut m = Self::event_obj(e);
+                m.insert("pid".to_string(), Json::Num(2.0));
+                m.insert("ts".to_string(), Json::Num(w));
+                if e.ph == 'i' {
+                    m.insert("s".to_string(), Json::Str("t".to_string()));
+                }
+                events.push(Json::Obj(m));
+            }
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        doc.insert("traceEvents".to_string(), Json::Arr(events));
+        Json::Obj(doc).to_string()
+    }
+}
+
+/// Running min/max/sum/count of an observed series.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistStat {
+    /// Number of observations.
+    pub count: u64,
+    /// Sum of observations.
+    pub sum: f64,
+    /// Smallest observation.
+    pub min: f64,
+    /// Largest observation.
+    pub max: f64,
+}
+
+impl HistStat {
+    fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+}
+
+/// Named counters (monotonic u64), gauges (last f64), and histograms
+/// (running min/max/sum/count), snapshotted per round into JSONL rows.
+/// BTreeMap storage keeps export key order deterministic.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, HistStat>,
+    rows: Vec<String>,
+}
+
+impl MetricsRegistry {
+    /// New, empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `v` to the named monotonic counter.
+    pub fn counter_add(&mut self, name: &'static str, v: u64) {
+        *self.counters.entry(name).or_insert(0) += v;
+    }
+
+    /// Set the named gauge to its latest value.
+    pub fn gauge_set(&mut self, name: &'static str, v: f64) {
+        self.gauges.insert(name, v);
+    }
+
+    /// Fold `v` into the named histogram.
+    pub fn observe(&mut self, name: &'static str, v: f64) {
+        self.hists
+            .entry(name)
+            .or_insert(HistStat { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY })
+            .observe(v);
+    }
+
+    /// Current counter value (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current gauge value.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Current histogram stats.
+    pub fn hist(&self, name: &str) -> Option<HistStat> {
+        self.hists.get(name).copied()
+    }
+
+    /// Append one JSONL row capturing every metric's current value at
+    /// (`round`, simulated seconds `sim_s`).
+    pub fn snapshot_round(&mut self, round: usize, sim_s: f64) {
+        let mut m = BTreeMap::new();
+        m.insert("round".to_string(), Json::Num(round as f64));
+        m.insert("sim_s".to_string(), Json::Num(sim_s));
+        if !self.counters.is_empty() {
+            let c: BTreeMap<String, Json> =
+                self.counters.iter().map(|(k, v)| (k.to_string(), Json::Num(*v as f64))).collect();
+            m.insert("counters".to_string(), Json::Obj(c));
+        }
+        if !self.gauges.is_empty() {
+            let g: BTreeMap<String, Json> =
+                self.gauges.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect();
+            m.insert("gauges".to_string(), Json::Obj(g));
+        }
+        if !self.hists.is_empty() {
+            let h: BTreeMap<String, Json> = self
+                .hists
+                .iter()
+                .map(|(k, v)| {
+                    let mut s = BTreeMap::new();
+                    s.insert("count".to_string(), Json::Num(v.count as f64));
+                    s.insert("sum".to_string(), Json::Num(v.sum));
+                    s.insert("min".to_string(), Json::Num(v.min));
+                    s.insert("max".to_string(), Json::Num(v.max));
+                    (k.to_string(), Json::Obj(s))
+                })
+                .collect();
+            m.insert("hists".to_string(), Json::Obj(h));
+        }
+        self.rows.push(Json::Obj(m).to_string());
+    }
+
+    /// Number of snapshotted rows.
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// The accumulated JSONL export (one row per snapshot).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.rows {
+            out.push_str(r);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Live telemetry state carried by the driver when any output is
+/// enabled: the spec (for flush targets), the tracer, and the registry.
+#[derive(Debug)]
+pub struct Telemetry {
+    /// The configuration this state was built from.
+    pub spec: TelemetrySpec,
+    /// Event recorder.
+    pub tracer: Tracer,
+    /// Counter/gauge/histogram registry.
+    pub registry: MetricsRegistry,
+}
+
+impl Telemetry {
+    /// Build live state from a spec, or `None` when telemetry is off —
+    /// the disabled path carries no object and costs one `Option` test
+    /// per site.
+    pub fn from_spec(spec: &TelemetrySpec, workers: usize) -> Option<Telemetry> {
+        if !spec.enabled() {
+            return None;
+        }
+        Some(Telemetry {
+            spec: spec.clone(),
+            tracer: Tracer::new(workers, spec.wall_clock),
+            registry: MetricsRegistry::new(),
+        })
+    }
+
+    /// Write the configured exports (parent directories are created).
+    pub fn flush(&self) -> Result<(), String> {
+        if let Some(path) = &self.spec.trace {
+            crate::metrics::write_report(path, &self.tracer.export(self.spec.format))
+                .map_err(|e| format!("write trace {path}: {e}"))?;
+        }
+        if let Some(path) = &self.spec.metrics {
+            crate::metrics::write_report(path, &self.registry.to_jsonl())
+                .map_err(|e| format!("write metrics {path}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_format_round_trips() {
+        for f in [TraceFormat::Jsonl, TraceFormat::Chrome] {
+            assert_eq!(TraceFormat::parse(f.name()).unwrap(), f);
+        }
+        assert!(TraceFormat::parse("protobuf").is_err());
+    }
+
+    #[test]
+    fn spec_default_is_off() {
+        let s = TelemetrySpec::default();
+        assert!(!s.enabled());
+        assert!(Telemetry::from_spec(&s, 4).is_none());
+    }
+
+    #[test]
+    fn from_doc_absent_table_is_default() {
+        let doc = TomlDoc::parse("[train]\nworkers = 4\n").unwrap();
+        assert_eq!(TelemetrySpec::from_doc(&doc).unwrap(), TelemetrySpec::default());
+    }
+
+    #[test]
+    fn from_doc_parses_full_table() {
+        let doc = TomlDoc::parse(
+            "[telemetry]\ntrace = \"t.json\"\nformat = \"chrome\"\n\
+             metrics = \"m.jsonl\"\nwall_clock = true\n",
+        )
+        .unwrap();
+        let s = TelemetrySpec::from_doc(&doc).unwrap();
+        assert_eq!(s.trace.as_deref(), Some("t.json"));
+        assert_eq!(s.format, TraceFormat::Chrome);
+        assert_eq!(s.metrics.as_deref(), Some("m.jsonl"));
+        assert!(s.wall_clock);
+        assert!(s.enabled());
+    }
+
+    #[test]
+    fn from_doc_rejects_orphan_keys() {
+        let doc = TomlDoc::parse("[telemetry]\ntrcae = \"t.json\"\n").unwrap();
+        let err = TelemetrySpec::from_doc(&doc).unwrap_err();
+        assert!(err.contains("trcae"), "{err}");
+    }
+
+    #[test]
+    fn from_doc_rejects_format_without_trace() {
+        let doc = TomlDoc::parse("[telemetry]\nformat = \"chrome\"\n").unwrap();
+        let err = TelemetrySpec::from_doc(&doc).unwrap_err();
+        assert!(err.contains("need telemetry.trace"), "{err}");
+        let doc = TomlDoc::parse("[telemetry]\nwall_clock = true\n").unwrap();
+        assert!(TelemetrySpec::from_doc(&doc).is_err());
+        // metrics-only is fine: it is an output in its own right
+        let doc = TomlDoc::parse("[telemetry]\nmetrics = \"m.jsonl\"\n").unwrap();
+        assert!(TelemetrySpec::from_doc(&doc).unwrap().enabled());
+    }
+
+    #[test]
+    fn spans_emit_balanced_pairs() {
+        let mut t = Tracer::new(2, false);
+        t.instant("lifecycle", "run_start", 0, 0.0, vec![("workers", ArgV::U(2))]);
+        t.span("round", "local_steps", 0, 0.0, 1.0, vec![("steps", ArgV::U(5))]);
+        t.begin("sync", "collective", 0, 1.0);
+        t.end("sync", "collective", 0, 1.5, vec![("wire_bytes", ArgV::U(64))]);
+        let (b, e): (Vec<_>, Vec<_>) = (
+            t.events().iter().filter(|e| e.ph == 'B').collect(),
+            t.events().iter().filter(|e| e.ph == 'E').collect(),
+        );
+        assert_eq!(b.len(), 2);
+        assert_eq!(e.len(), 2);
+        for (bb, ee) in b.iter().zip(&e) {
+            assert_eq!((bb.cat, bb.name, bb.tid), (ee.cat, ee.name, ee.tid));
+            assert!(ee.ts_us >= bb.ts_us);
+        }
+    }
+
+    #[test]
+    fn jsonl_export_is_line_per_event_and_parses() {
+        let mut t = Tracer::new(1, false);
+        t.span("round", "eval", 0, 2.0, 2.0, vec![("loss", ArgV::F(0.25))]);
+        let out = t.export(TraceFormat::Jsonl);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.get("cat").unwrap().as_str(), Some("round"));
+            assert_eq!(v.get("ts").unwrap().as_f64(), Some(2.0e6));
+        }
+        // wall lane off: no wall stamps anywhere
+        assert!(!out.contains("\"wall\""));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_metadata() {
+        let mut t = Tracer::new(2, false);
+        t.instant("lifecycle", "run_start", 0, 0.0, Vec::new());
+        t.span("round", "local_steps", 1, 0.0, 1.0, Vec::new());
+        let doc = Json::parse(&t.export(TraceFormat::Chrome)).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 metadata (process + driver + 2 workers = 4) + 1 instant + B + E
+        let metas = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .count();
+        assert_eq!(metas, 4);
+        let instants: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i"))
+            .collect();
+        assert_eq!(instants.len(), 1);
+        assert_eq!(instants[0].get("s").unwrap().as_str(), Some("t"));
+        // no wall lane: every non-meta event sits on pid 1
+        assert!(events.iter().all(|e| e.get("pid").unwrap().as_usize() == Some(1)
+            || e.get("ph").and_then(|p| p.as_str()) == Some("M")));
+    }
+
+    #[test]
+    fn wall_clock_adds_second_chrome_lane() {
+        let mut t = Tracer::new(1, true);
+        t.span("round", "checkpoint", 0, 1.0, 1.0, Vec::new());
+        let doc = Json::parse(&t.export(TraceFormat::Chrome)).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let pid2 = events
+            .iter()
+            .filter(|e| {
+                e.get("pid").unwrap().as_usize() == Some(2)
+                    && e.get("ph").and_then(|p| p.as_str()) != Some("M")
+            })
+            .count();
+        assert_eq!(pid2, 2, "B and E duplicated onto the wall lane");
+        assert!(t.export(TraceFormat::Jsonl).contains("\"wall\""));
+    }
+
+    #[test]
+    fn registry_accumulates_and_snapshots() {
+        let mut r = MetricsRegistry::new();
+        r.counter_add("wire_bytes", 100);
+        r.counter_add("wire_bytes", 28);
+        r.gauge_set("active_members", 7.0);
+        r.observe("straggler_wait_s", 0.5);
+        r.observe("straggler_wait_s", 1.5);
+        assert_eq!(r.counter("wire_bytes"), 128);
+        assert_eq!(r.gauge("active_members"), Some(7.0));
+        let h = r.hist("straggler_wait_s").unwrap();
+        assert_eq!(h.count, 2);
+        assert_eq!(h.sum, 2.0);
+        assert_eq!(h.min, 0.5);
+        assert_eq!(h.max, 1.5);
+        r.snapshot_round(3, 0.125);
+        let out = r.to_jsonl();
+        let row = Json::parse(out.lines().next().unwrap()).unwrap();
+        assert_eq!(row.get("round").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            row.get("counters").unwrap().get("wire_bytes").unwrap().as_usize(),
+            Some(128)
+        );
+        assert_eq!(
+            row.get("hists").unwrap().get("straggler_wait_s").unwrap().get("count").unwrap()
+                .as_usize(),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn deterministic_export_for_identical_event_streams() {
+        let mk = || {
+            let mut t = Tracer::new(3, false);
+            t.instant("lifecycle", "run_start", 0, 0.0, vec![("workers", ArgV::U(3))]);
+            t.span("round", "local_steps", 0, 0.0, 0.37, vec![("steps", ArgV::U(20))]);
+            t.span("sync", "transmit", 2, 0.37, 0.37, vec![("residual_norm", ArgV::F(1e-3))]);
+            t
+        };
+        for f in [TraceFormat::Jsonl, TraceFormat::Chrome] {
+            assert_eq!(mk().export(f), mk().export(f));
+        }
+    }
+}

@@ -81,6 +81,7 @@ use crate::format::toml_lite::TomlDoc;
 use crate::metrics::{DenseRow, History, SyncRow};
 use crate::rng::Pcg32;
 use crate::sim::{SimTime, TimeModel};
+use crate::telemetry::{ArgV, Telemetry};
 use crate::tensor;
 
 /// Coordinator phase (see the module-level diagram). The static path
@@ -473,6 +474,11 @@ pub(super) struct Driver {
     /// (empty mask ⇒ nominal round length as pure wait, zero straggler
     /// draws).
     idle_mask: Vec<bool>,
+    /// Tracing + metrics state; `None` (the default) emits nothing and
+    /// costs one `Option` test per site. Telemetry only *reads* driver
+    /// state — it draws from no RNG stream and never shapes the
+    /// trajectory (`rust/tests/telemetry.rs` proves both directions).
+    tel: Option<Telemetry>,
 }
 
 impl Driver {
@@ -603,6 +609,32 @@ impl Driver {
             step = 0;
             round = 0;
         }
+        // telemetry rides along after all RNG lanes are carved: it
+        // draws nothing and reads nothing yet, so construction order
+        // cannot perturb the trajectory
+        let mut tel = Telemetry::from_spec(&session.spec.telemetry, n);
+        if let Some(t) = tel.as_mut() {
+            t.tracer.instant(
+                "lifecycle",
+                "run_start",
+                0,
+                sim_time.total(),
+                vec![
+                    ("algorithm", ArgV::S(algo.name().to_string())),
+                    ("workers", ArgV::U(n as u64)),
+                    ("steps", ArgV::U(session.spec.steps as u64)),
+                ],
+            );
+            if resumed {
+                t.tracer.instant(
+                    "lifecycle",
+                    "resume",
+                    0,
+                    sim_time.total(),
+                    vec![("round", ArgV::U(round as u64)), ("step", ArgV::U(step as u64))],
+                );
+            }
+        }
         let mean_buf = vec![0.0f32; dim];
         // per-worker scratch: pre-step snapshots (sized only for
         // corrector algorithms) and dense-mode step losses
@@ -638,6 +670,7 @@ impl Driver {
             mask,
             present_idx,
             idle_mask,
+            tel,
         })
     }
 
@@ -791,6 +824,18 @@ impl Driver {
                         // an idle tick — nobody steps, no collective —
                         // and the machine cools down to gather members
                         idle_streak += 1;
+                        if let Some(tel) = self.tel.as_mut() {
+                            tel.tracer.instant(
+                                "lifecycle",
+                                "quorum_miss",
+                                0,
+                                self.sim_time.total(),
+                                vec![
+                                    ("present", ArgV::U(m as u64)),
+                                    ("min_clients", ArgV::U(cspec.min_clients as u64)),
+                                ],
+                            );
+                        }
                         self.roster.note_skipped();
                         let timing = self.idle_timing(p);
                         self.transition(&cspec, Event::Starved);
@@ -915,6 +960,20 @@ impl Driver {
                 Phase::WaitingForMembers => self.coord.epoch += 1,
                 Phase::Finished => {}
             }
+            // after the entry action, so `epoch` is the one being entered
+            if let Some(tel) = self.tel.as_mut() {
+                tel.tracer.instant(
+                    "lifecycle",
+                    "phase",
+                    0,
+                    self.sim_time.total(),
+                    vec![
+                        ("from", ArgV::S(from.name().to_string())),
+                        ("to", ArgV::S(next.name().to_string())),
+                        ("epoch", ArgV::U(self.coord.epoch as u64)),
+                    ],
+                );
+            }
         }
         self.coord.phase = next;
     }
@@ -937,6 +996,16 @@ impl Driver {
     fn apply_churn(&mut self, cspec: &CoordinatorSpec, delta: &ChurnDelta) {
         if delta.is_empty() {
             return;
+        }
+        if let Some(tel) = self.tel.as_mut() {
+            let ts = self.sim_time.total();
+            let args = vec![("round", ArgV::U(self.round as u64))];
+            for &i in &delta.leaves {
+                tel.tracer.instant("lifecycle", "leave", i + 1, ts, args.clone());
+            }
+            for &i in &delta.joins {
+                tel.tracer.instant("lifecycle", "join", i + 1, ts, args.clone());
+            }
         }
         for &i in &delta.leaves {
             self.algo.on_leave(self.round, &mut self.workers[i]);
@@ -1017,6 +1086,12 @@ impl Driver {
     /// stepwise loop or the one-shot worker-parallel round, verbatim
     /// from the monolith.
     fn local_steps(&mut self, p: usize, lr: f32, m: usize) {
+        // two-phase span: begun here so the wall lane brackets the real
+        // executor work; `commit_round` closes it at the simulated
+        // compute end once the fleet timing is known
+        if let Some(tel) = self.tel.as_mut() {
+            tel.tracer.begin("round", "local_steps", 0, self.sim_time.total());
+        }
         let executor = self.executor;
         let weight_decay = self.session.spec.weight_decay;
         if self.session.spec.dense_metrics {
@@ -1086,7 +1161,42 @@ impl Driver {
     /// bump and the early-stop check. Returns `true` when an early-stop
     /// policy ends the run.
     fn commit_round(&mut self, t: Tick) -> bool {
-        self.sim_time.charge_round(t.timing.critical_s, t.timing.wait_s);
+        let t0 = self.sim_time.total();
+        if t.synced {
+            self.sim_time.charge_round(t.timing.critical_s, t.timing.wait_s);
+        } else {
+            // non-committing rounds additionally tally the skipped-time
+            // sub-counter — same seconds on every pre-existing axis
+            self.sim_time.charge_skipped_round(t.timing.critical_s, t.timing.wait_s);
+        }
+        // the round's simulated layout: compute until the mean worker
+        // finishes, then barrier wait until the critical path ends
+        let compute_end = t0 + t.timing.compute_s();
+        let round_end = t0 + t.timing.critical_s;
+        if let Some(tel) = self.tel.as_mut() {
+            if t.synced {
+                tel.tracer.end(
+                    "round",
+                    "local_steps",
+                    0,
+                    compute_end,
+                    vec![("steps", ArgV::U(t.p as u64)), ("workers", ArgV::U(t.m as u64))],
+                );
+            }
+            tel.tracer.span("round", "barrier_wait", 0, compute_end, round_end, Vec::new());
+            if !t.synced {
+                tel.tracer.instant(
+                    "lifecycle",
+                    "round_skipped",
+                    0,
+                    round_end,
+                    vec![
+                        ("round", ArgV::U(self.round as u64)),
+                        ("phase", ArgV::S(t.phase.to_string())),
+                    ],
+                );
+            }
+        }
 
         // consensus gap just before averaging (over the whole fleet —
         // absent workers' drift is part of the consensus state)
@@ -1095,6 +1205,7 @@ impl Driver {
             tensor::worker_variance(&rows)
         };
 
+        let comm_before = self.cluster.stats();
         if t.synced {
             // algorithm cooperation: absent workers are announced,
             // then the sync runs over the present set only
@@ -1117,6 +1228,26 @@ impl Driver {
                     let w = &mut self.workers[i];
                     c.transmit(&mut w.params, &mut w.residual);
                 }
+                // transmit is free on the simulated clock (its cost is
+                // priced into the collective's wire bytes), so the span
+                // pair sits at the barrier with zero simulated width;
+                // the residual norm is the error-feedback health signal
+                if let Some(tel) = self.tel.as_mut() {
+                    let lossy = self.session.spec.compress.is_lossy();
+                    for &i in &self.present_idx {
+                        let args = if lossy {
+                            let rn = crate::compress::l2_norm(&self.workers[i].residual);
+                            tel.registry.observe("residual_norm", rn);
+                            vec![("residual_norm", ArgV::F(rn))]
+                        } else {
+                            Vec::new()
+                        };
+                        tel.tracer.span("sync", "transmit", i + 1, round_end, round_end, args);
+                    }
+                }
+            }
+            if let Some(tel) = self.tel.as_mut() {
+                tel.tracer.begin("sync", "collective", 0, round_end);
             }
             self.algo.sync(
                 self.round,
@@ -1129,6 +1260,17 @@ impl Driver {
         }
         let comm = self.cluster.stats();
         self.sim_time.comm_s = comm.sim_time_s;
+        if t.synced {
+            if let Some(tel) = self.tel.as_mut() {
+                tel.tracer.end(
+                    "sync",
+                    "collective",
+                    0,
+                    round_end + (comm.sim_time_s - comm_before.sim_time_s),
+                    vec![("wire_bytes", ArgV::U(comm.wire_bytes - comm_before.wire_bytes))],
+                );
+            }
+        }
 
         let sync_info = SyncInfo {
             round: self.round,
@@ -1149,10 +1291,21 @@ impl Driver {
         let evaluated = self.round % self.session.eval_every == 0
             || self.step >= self.session.spec.steps
             || self.session.early_stop.is_some();
+        let t_end = self.sim_time.total();
         let train_loss = if evaluated {
+            // loss evaluation is free on the simulated clock (it is
+            // bookkeeping, not part of the algorithm), so the span has
+            // zero simulated width — the wall lane shows its real cost
+            if let Some(tel) = self.tel.as_mut() {
+                tel.tracer.begin("round", "eval", 0, t_end);
+            }
             let rows: Vec<&[f32]> = self.workers.iter().map(|w| w.params.as_slice()).collect();
             tensor::mean_rows(&mut self.mean_buf, &rows);
-            global_loss(&mut self.session.engines, &self.mean_buf)
+            let loss = global_loss(&mut self.session.engines, &self.mean_buf);
+            if let Some(tel) = self.tel.as_mut() {
+                tel.tracer.end("round", "eval", 0, t_end, vec![("loss", ArgV::F(loss))]);
+            }
+            loss
         } else {
             self.last_loss
         };
@@ -1185,6 +1338,27 @@ impl Driver {
         }
         self.history.sync_rows.push(row);
 
+        // per-round metrics snapshot: cumulative comm gauges, consensus
+        // health, and the fleet-shape histograms
+        if let Some(tel) = self.tel.as_mut() {
+            let delta_drift: f64 =
+                self.workers.iter().map(|w| crate::compress::l2_norm(&w.delta)).sum();
+            let reg = &mut tel.registry;
+            reg.counter_add("rounds", 1);
+            if t.synced {
+                reg.counter_add("synced_rounds", 1);
+            }
+            reg.gauge_set("bytes", comm.bytes as f64);
+            reg.gauge_set("wire_bytes", comm.wire_bytes as f64);
+            reg.gauge_set("worker_variance", variance);
+            reg.gauge_set("delta_norm_sum", delta_drift);
+            reg.gauge_set("active_members", t.active_members as f64);
+            reg.gauge_set("present_workers", t.m as f64);
+            reg.observe("straggler_wait_s", t.timing.wait_s);
+            reg.observe("round_critical_s", t.timing.critical_s);
+            reg.snapshot_round(self.round, t_end);
+        }
+
         let round_info = RoundInfo {
             round: self.round,
             step: self.step,
@@ -1203,6 +1377,9 @@ impl Driver {
         // full-state hook (checkpointing): everything a resumed run
         // needs is reachable from here, and the state is exactly what
         // the next round will start from
+        if let Some(tel) = self.tel.as_mut() {
+            tel.tracer.begin("round", "checkpoint", 0, t_end);
+        }
         {
             let mut run_state = RunState {
                 spec: &self.session.spec,
@@ -1223,9 +1400,24 @@ impl Driver {
                 o.on_state(&mut run_state);
             }
         }
+        if let Some(tel) = self.tel.as_mut() {
+            tel.tracer.end("round", "checkpoint", 0, t_end, Vec::new());
+        }
         self.round += 1;
         if let Some(stop) = self.session.early_stop.as_mut() {
             if stop.should_stop(&round_info) {
+                if let Some(tel) = self.tel.as_mut() {
+                    tel.tracer.instant(
+                        "lifecycle",
+                        "early_stop",
+                        0,
+                        t_end,
+                        vec![
+                            ("round", ArgV::U(round_info.round as u64)),
+                            ("loss", ArgV::F(train_loss)),
+                        ],
+                    );
+                }
                 return true;
             }
         }
@@ -1237,6 +1429,20 @@ impl Driver {
     /// [`TrainOutput`].
     fn finish(mut self) -> Result<TrainOutput, String> {
         self.algo.finalize(&mut self.workers, &mut self.cluster);
+
+        if let Some(tel) = self.tel.as_mut() {
+            tel.tracer.instant(
+                "lifecycle",
+                "run_end",
+                0,
+                self.sim_time.total(),
+                vec![
+                    ("rounds", ArgV::U(self.round as u64)),
+                    ("sim_s", ArgV::F(self.sim_time.total())),
+                ],
+            );
+            tel.flush()?;
+        }
 
         for s in self.session.sinks.iter_mut() {
             s.finish()?;

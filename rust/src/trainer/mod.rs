@@ -221,6 +221,16 @@ impl Trainer {
         self
     }
 
+    /// Structured tracing + metrics exports (see [`crate::telemetry`]).
+    /// Off by default. Telemetry only *reads* driver state: the
+    /// trajectory with any telemetry setting is bitwise identical to a
+    /// run without it, and the trace's simulated-clock lane is itself
+    /// bitwise-reproducible across executors and resumes.
+    pub fn telemetry(mut self, spec: crate::telemetry::TelemetrySpec) -> Self {
+        self.spec.telemetry = spec;
+        self
+    }
+
     /// Elastic coordination: quorum rules, epoch phases and mid-run
     /// membership churn (see [`coordinator`]). Without this setter (or
     /// a `[coordinator]` TOML table) the run takes the static path,

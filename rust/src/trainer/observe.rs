@@ -161,8 +161,10 @@ impl<F: FnMut(&RoundInfo)> RoundObserver for FnObserver<F> {
     }
 }
 
-/// Ready-made observer: tracks peak consensus variance, round count and
-/// the last seen loss. Register via `Rc<RefCell<_>>` to read afterwards.
+/// Ready-made observer: tracks peak consensus variance, round count, the
+/// last seen loss, and a streaming (Welford) mean/variance of the
+/// per-sync `worker_variance` signal. Register via `Rc<RefCell<_>>` to
+/// read afterwards.
 #[derive(Debug, Clone, Default)]
 pub struct ConsensusTracker {
     /// Number of syncs observed.
@@ -173,12 +175,47 @@ pub struct ConsensusTracker {
     pub peak_worker_variance: f64,
     /// Last train loss reported.
     pub last_loss: f64,
+    // Welford accumulators over the worker_variance stream: single-pass
+    // and numerically stable, so million-round runs never buffer the
+    // series or cancel catastrophically the way a naive Σx²−(Σx)² would.
+    welford_mean: f64,
+    welford_m2: f64,
+    last_worker_variance: f64,
 }
 
 impl ConsensusTracker {
     /// Fresh tracker wrapped for registration + later inspection.
     pub fn shared() -> Rc<RefCell<ConsensusTracker>> {
         Rc::new(RefCell::new(ConsensusTracker::default()))
+    }
+
+    /// Streaming mean of `worker_variance` over all observed syncs
+    /// (`0.0` before the first sync).
+    pub fn mean_worker_variance(&self) -> f64 {
+        self.welford_mean
+    }
+
+    /// Streaming population variance of the `worker_variance` series
+    /// (`0.0` with fewer than two syncs).
+    pub fn worker_variance_variance(&self) -> f64 {
+        if self.syncs < 2 {
+            0.0
+        } else {
+            self.welford_m2 / self.syncs as f64
+        }
+    }
+
+    /// Where the consensus gap is heading: the last observed
+    /// `worker_variance` minus the running mean. Negative means workers
+    /// are agreeing more than they have on average (drift shrinking —
+    /// a period/lr auto-tuner can afford longer local phases), positive
+    /// means the gap is widening. `0.0` before the first sync.
+    pub fn trend(&self) -> f64 {
+        if self.syncs == 0 {
+            0.0
+        } else {
+            self.last_worker_variance - self.welford_mean
+        }
     }
 }
 
@@ -188,6 +225,11 @@ impl RoundObserver for ConsensusTracker {
         if info.worker_variance > self.peak_worker_variance {
             self.peak_worker_variance = info.worker_variance;
         }
+        let x = info.worker_variance;
+        let d = x - self.welford_mean;
+        self.welford_mean += d / self.syncs as f64;
+        self.welford_m2 += d * (x - self.welford_mean);
+        self.last_worker_variance = x;
     }
 
     fn on_round_end(&mut self, info: &RoundInfo) {
@@ -398,6 +440,43 @@ mod tests {
         assert_eq!(t.rounds, 1);
         assert_eq!(t.peak_worker_variance, 2.0);
         assert_eq!(t.last_loss, 0.25);
+    }
+
+    #[test]
+    fn consensus_tracker_welford_matches_closed_form() {
+        let sync = |round: usize, var: f64| SyncInfo {
+            round,
+            step: (round + 1) * 10,
+            period: 10,
+            lr: 0.1,
+            worker_variance: var,
+            present_workers: 4,
+            comm: CommStats::default(),
+        };
+        let mut t = ConsensusTracker::default();
+        assert_eq!(t.trend(), 0.0, "no syncs yet");
+        assert_eq!(t.mean_worker_variance(), 0.0);
+        assert_eq!(t.worker_variance_variance(), 0.0);
+
+        let xs = [2.0, 1.0, 4.0, 1.0];
+        for (i, &x) in xs.iter().enumerate() {
+            t.on_sync(&sync(i, x));
+        }
+        let n = xs.len() as f64;
+        let mean: f64 = xs.iter().sum::<f64>() / n;
+        let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        assert!((t.mean_worker_variance() - mean).abs() < 1e-12);
+        assert!((t.worker_variance_variance() - var).abs() < 1e-12);
+        // last observation (1.0) sits below the running mean (2.0):
+        // the gap is shrinking, trend is negative
+        assert!((t.trend() - (1.0 - mean)).abs() < 1e-12);
+        assert!(t.trend() < 0.0);
+
+        let mut one = ConsensusTracker::default();
+        one.on_sync(&sync(0, 3.0));
+        assert_eq!(one.mean_worker_variance(), 3.0);
+        assert_eq!(one.worker_variance_variance(), 0.0, "n=1 has no spread");
+        assert_eq!(one.trend(), 0.0, "one sample sits on its own mean");
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Telemetry-subsystem contract (`telemetry`), proven on the shared
+//! `tests/common` harness:
+//!
+//! * **Observes, never perturbs** — a fully-enabled telemetry spec
+//!   (trace + metrics) produces a `TrainOutput` **bitwise identical** to
+//!   a run with no telemetry at all, for all seven algorithms under both
+//!   executors, and likewise under churn + compression.
+//! * **Deterministic traces** — events are stamped on the simulated
+//!   clock, so a fixed-seed traced run re-emits a byte-identical trace
+//!   file on repeat and across the sequential/threaded executors.
+//! * **Resume splices cleanly** — a crashed-and-resumed traced run's
+//!   event stream (after its `run_start`/`resume` header) is exactly the
+//!   tail of the uninterrupted run's stream from the resume point on.
+//! * **Chrome export is well-formed** — a churning, compressing traced
+//!   run yields valid JSON whose span begin/end events are balanced and
+//!   properly nested per lane, with `"s":"t"` instants and thread
+//!   metadata for every worker lane.
+//! * **Metrics registry** — one JSONL row per round, with the counters
+//!   agreeing with the run's own history.
+
+mod common;
+
+use common::{assert_identical, crash_and_snapshot, temp_dir};
+use std::path::Path;
+use vrl_sgd::compress::CompressorKind;
+use vrl_sgd::format::json::Json;
+use vrl_sgd::prelude::*;
+
+const SEED: u64 = 17;
+const STEPS: usize = 60;
+
+fn full_telemetry(dir: &Path, tag: &str, format: TraceFormat) -> TelemetrySpec {
+    TelemetrySpec {
+        trace: Some(dir.join(format!("{tag}.trace")).to_string_lossy().into_owned()),
+        format,
+        metrics: Some(dir.join(format!("{tag}.metrics.jsonl")).to_string_lossy().into_owned()),
+        wall_clock: false,
+    }
+}
+
+fn read(path: &str) -> String {
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+#[test]
+fn telemetry_on_is_bitwise_identical_to_off() {
+    let dir = temp_dir("tel_identity");
+    for algorithm in AlgorithmKind::ALL {
+        for threads in [1, 4] {
+            let tag = format!("{}_t{threads}", algorithm.name());
+            let tel = full_telemetry(&dir, &tag, TraceFormat::Jsonl);
+            let plain = common::trainer(algorithm, threads, SEED, STEPS).run().unwrap();
+            let traced = common::trainer(algorithm, threads, SEED, STEPS)
+                .telemetry(tel.clone())
+                .run()
+                .unwrap();
+            assert_identical(&plain, &traced, &format!("telemetry on vs off: {tag}"));
+            // and the exports actually landed
+            assert!(!read(tel.trace.as_deref().unwrap()).is_empty(), "{tag}: empty trace");
+            assert!(!read(tel.metrics.as_deref().unwrap()).is_empty(), "{tag}: empty metrics");
+        }
+    }
+}
+
+#[test]
+fn telemetry_on_is_bitwise_identical_under_churn_and_compression() {
+    let dir = temp_dir("tel_identity_elastic");
+    let mk = |tel: Option<TelemetrySpec>| {
+        let mut t = common::elastic_trainer(AlgorithmKind::VrlSgd, 1, SEED, 200)
+            .compression(CompressorKind::TopK { fraction: 0.25 });
+        if let Some(tel) = tel {
+            t = t.telemetry(tel);
+        }
+        t.run().unwrap()
+    };
+    let plain = mk(None);
+    let traced = mk(Some(full_telemetry(&dir, "elastic", TraceFormat::Chrome)));
+    assert_identical(&plain, &traced, "telemetry on vs off: churn + compression");
+}
+
+#[test]
+fn traces_are_reproducible_and_executor_independent() {
+    let dir = temp_dir("tel_repro");
+    let trace_of = |tag: &str, threads: usize| {
+        let tel = full_telemetry(&dir, tag, TraceFormat::Jsonl);
+        common::trainer(AlgorithmKind::VrlSgd, threads, SEED, STEPS)
+            .telemetry(tel.clone())
+            .run()
+            .unwrap();
+        (read(tel.trace.as_deref().unwrap()), read(tel.metrics.as_deref().unwrap()))
+    };
+    let (t1, m1) = trace_of("a", 1);
+    let (t2, m2) = trace_of("b", 1);
+    assert_eq!(t1, t2, "repeat run must re-emit a byte-identical trace");
+    assert_eq!(m1, m2, "repeat run must re-emit byte-identical metrics");
+    let (t4, m4) = trace_of("c", 4);
+    assert_eq!(t1, t4, "threaded executor must emit the sequential trace");
+    assert_eq!(m1, m4, "threaded executor must emit the sequential metrics");
+}
+
+#[test]
+fn resumed_trace_is_the_tail_of_the_uninterrupted_one() {
+    let dir = temp_dir("tel_resume");
+    let algorithm = AlgorithmKind::VrlSgd;
+
+    // uninterrupted traced reference
+    let ref_tel = full_telemetry(&dir, "reference", TraceFormat::Jsonl);
+    common::trainer(algorithm, 1, SEED, STEPS).telemetry(ref_tel.clone()).run().unwrap();
+    let ref_lines: Vec<String> =
+        read(ref_tel.trace.as_deref().unwrap()).lines().map(String::from).collect();
+
+    // crash a traced run (its trace never flushes — the run aborts
+    // before `finish`), then resume with a fresh trace target
+    let ckpt = dir.join("ckpt");
+    let crashed_tel = full_telemetry(&dir, "crashed", TraceFormat::Jsonl);
+    let snap = crash_and_snapshot(
+        || common::trainer(algorithm, 1, SEED, STEPS).telemetry(crashed_tel),
+        &ckpt,
+    );
+    let res_tel = full_telemetry(&dir, "resumed", TraceFormat::Jsonl);
+    common::trainer(algorithm, 1, SEED, STEPS)
+        .telemetry(res_tel.clone())
+        .resume_from(&snap)
+        .unwrap()
+        .run()
+        .unwrap();
+    let res_lines: Vec<String> =
+        read(res_tel.trace.as_deref().unwrap()).lines().map(String::from).collect();
+
+    // resumed header: run_start then a resume instant; reference header:
+    // run_start only
+    assert!(ref_lines[0].contains("\"name\":\"run_start\""), "{}", ref_lines[0]);
+    assert!(res_lines[0].contains("\"name\":\"run_start\""), "{}", res_lines[0]);
+    assert!(res_lines[1].contains("\"name\":\"resume\""), "{}", res_lines[1]);
+
+    // past the headers, the resumed stream is exactly the reference
+    // stream's tail: same events, same simulated stamps, same args
+    let tail = &res_lines[2..];
+    assert!(
+        tail.len() < ref_lines.len(),
+        "resumed run must re-trace strictly fewer events than the whole run"
+    );
+    assert!(!tail.is_empty(), "the resumed run must trace its remaining rounds");
+    assert_eq!(
+        tail,
+        &ref_lines[ref_lines.len() - tail.len()..],
+        "resumed trace must splice onto the uninterrupted one"
+    );
+}
+
+/// Walk a Chrome trace's events: per (pid, tid) lane, `B` pushes and `E`
+/// must pop the matching (cat, name) — proper nesting, never negative,
+/// all spans closed at the end.
+fn check_span_balance(events: &[Json]) {
+    use std::collections::BTreeMap;
+    let mut stacks: BTreeMap<(usize, usize), Vec<(String, String)>> = BTreeMap::new();
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap();
+        if ph != "B" && ph != "E" {
+            continue;
+        }
+        let lane = (
+            e.get("pid").unwrap().as_usize().unwrap(),
+            e.get("tid").unwrap().as_usize().unwrap(),
+        );
+        let key = (
+            e.get("cat").unwrap().as_str().unwrap().to_string(),
+            e.get("name").unwrap().as_str().unwrap().to_string(),
+        );
+        let stack = stacks.entry(lane).or_default();
+        if ph == "B" {
+            stack.push(key);
+        } else {
+            let open = stack.pop().unwrap_or_else(|| {
+                panic!("E without matching B on lane {lane:?}: {key:?}")
+            });
+            assert_eq!(open, key, "mis-nested span on lane {lane:?}");
+        }
+    }
+    for (lane, stack) in &stacks {
+        assert!(stack.is_empty(), "unclosed spans on lane {lane:?}: {stack:?}");
+    }
+}
+
+#[test]
+fn chrome_trace_is_valid_json_with_balanced_spans() {
+    let dir = temp_dir("tel_chrome");
+    let tel = full_telemetry(&dir, "chrome", TraceFormat::Chrome);
+    let out = common::elastic_trainer(AlgorithmKind::VrlSgd, 1, SEED, 200)
+        .compression(CompressorKind::TopK { fraction: 0.25 })
+        .telemetry(tel.clone())
+        .run()
+        .unwrap();
+    let doc = Json::parse(&read(tel.trace.as_deref().unwrap()))
+        .unwrap_or_else(|e| panic!("chrome trace is not valid JSON: {e}"));
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    check_span_balance(events);
+
+    // thread metadata names every worker lane (plus the driver)
+    let metas = events
+        .iter()
+        .filter(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("M")
+                && e.get("name").and_then(|n| n.as_str()) == Some("thread_name")
+        })
+        .count();
+    assert_eq!(metas, 1 + 4, "driver + one lane per worker");
+
+    // instants carry the thread scope marker, and the lifecycle story
+    // is present: the elastic run announces phase transitions
+    let instants: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i"))
+        .collect();
+    assert!(!instants.is_empty());
+    for i in &instants {
+        assert_eq!(i.get("s").and_then(|s| s.as_str()), Some("t"), "instant without scope");
+    }
+    assert!(
+        instants.iter().any(|i| i.get("name").and_then(|n| n.as_str()) == Some("phase")),
+        "elastic run must trace phase transitions"
+    );
+
+    // every sync span reports its wire bytes; their sum is the run's
+    let wire_sum: u64 = events
+        .iter()
+        .filter(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("E")
+                && e.get("name").and_then(|n| n.as_str()) == Some("collective")
+        })
+        .map(|e| e.get("args").unwrap().get("wire_bytes").unwrap().as_f64().unwrap() as u64)
+        .sum();
+    assert_eq!(wire_sum, out.comm.wire_bytes, "collective spans must account every wire byte");
+}
+
+#[test]
+fn metrics_registry_rows_agree_with_history() {
+    let dir = temp_dir("tel_metrics");
+    let tel = full_telemetry(&dir, "metrics", TraceFormat::Jsonl);
+    let out =
+        common::trainer(AlgorithmKind::VrlSgd, 1, SEED, STEPS).telemetry(tel.clone()).run().unwrap();
+    let rows: Vec<Json> = read(tel.metrics.as_deref().unwrap())
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad metrics row: {e}\n{l}")))
+        .collect();
+    assert_eq!(rows.len(), out.history.sync_rows.len(), "one metrics row per round");
+    let last = rows.last().unwrap();
+    let counters = last.get("counters").unwrap();
+    assert_eq!(counters.get("rounds").unwrap().as_usize(), Some(rows.len()));
+    assert_eq!(
+        counters.get("synced_rounds").unwrap().as_usize(),
+        Some(out.comm.rounds as usize),
+        "static full-participation run syncs every round"
+    );
+    let gauges = last.get("gauges").unwrap();
+    assert_eq!(gauges.get("wire_bytes").unwrap().as_f64(), Some(out.comm.wire_bytes as f64));
+    let waits = last.get("hists").unwrap().get("straggler_wait_s").unwrap();
+    assert_eq!(waits.get("count").unwrap().as_usize(), Some(rows.len()));
+}
