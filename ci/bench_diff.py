@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_hotpath.json reports and flag regressions.
+
+Usage:
+    bench_diff.py BASELINE.json FRESH.json [--threshold 1.25] [--warn-only]
+
+Both files are arrays of entries as emitted by `benchutil::JsonReport`:
+
+    {"name": "...", "ns_per_op": 123.4, "min_ns": ..., "max_ns": ...,
+     "iters": N[, "throughput_per_s": ..., "throughput_unit": "..."]}
+
+For every case name present in both files with a measured `ns_per_op`,
+the ratio fresh/baseline is computed; ratios above --threshold are
+regressions, ratios below 1/threshold are reported as improvements
+(informational). Exit status:
+
+    0  no regressions (or --warn-only / un-measured baseline)
+    1  at least one regression beyond the threshold
+    2  usage / malformed input
+
+A baseline whose entries carry *no* `ns_per_op` at all (the repo-root
+BENCH_hotpath.json starts as a name-only case manifest) downgrades the
+run to warn-only automatically: there is nothing to regress against,
+but the case-name comparison still runs so renamed/dropped benches are
+surfaced.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if not isinstance(doc, list):
+        print(f"bench_diff: {path}: expected a JSON array of entries", file=sys.stderr)
+        sys.exit(2)
+    out = {}
+    for entry in doc:
+        if not isinstance(entry, dict) or "name" not in entry:
+            print(f"bench_diff: {path}: malformed entry {entry!r}", file=sys.stderr)
+            sys.exit(2)
+        out[entry["name"]] = entry
+    return out
+
+
+def main(argv):
+    threshold = 1.25
+    warn_only = False
+    paths = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--threshold":
+            i += 1
+            try:
+                threshold = float(argv[i])
+            except (IndexError, ValueError):
+                print("bench_diff: --threshold needs a number", file=sys.stderr)
+                return 2
+        elif a == "--warn-only":
+            warn_only = True
+        elif a.startswith("--"):
+            print(f"bench_diff: unknown flag {a}", file=sys.stderr)
+            return 2
+        else:
+            paths.append(a)
+        i += 1
+    if len(paths) != 2 or threshold <= 1.0:
+        print(
+            "usage: bench_diff.py BASELINE.json FRESH.json "
+            "[--threshold 1.25] [--warn-only]",
+            file=sys.stderr,
+        )
+        return 2
+
+    base, fresh = load(paths[0]), load(paths[1])
+
+    measured_base = {n for n, e in base.items() if "ns_per_op" in e}
+    if not measured_base:
+        print(
+            f"bench_diff: baseline {paths[0]} carries no measured numbers "
+            "(name-only manifest) -- comparison downgraded to warn-only"
+        )
+        warn_only = True
+
+    missing = sorted(set(base) - set(fresh))
+    added = sorted(set(fresh) - set(base))
+    for name in missing:
+        print(f"  MISSING   {name}  (in baseline, not in fresh report)")
+    for name in added:
+        print(f"  NEW       {name}  (no baseline)")
+
+    regressions = []
+    for name in sorted(set(base) & set(fresh)):
+        b, f = base[name], fresh[name]
+        if "ns_per_op" not in b or "ns_per_op" not in f:
+            continue
+        b_ns, f_ns = float(b["ns_per_op"]), float(f["ns_per_op"])
+        if b_ns <= 0.0:
+            continue
+        ratio = f_ns / b_ns
+        if ratio > threshold:
+            regressions.append((name, b_ns, f_ns, ratio))
+            print(f"  REGRESSED {name}: {b_ns:.1f} ns -> {f_ns:.1f} ns ({ratio:.2f}x)")
+        elif ratio < 1.0 / threshold:
+            print(f"  improved  {name}: {b_ns:.1f} ns -> {f_ns:.1f} ns ({ratio:.2f}x)")
+        else:
+            print(f"  ok        {name}: {b_ns:.1f} ns -> {f_ns:.1f} ns ({ratio:.2f}x)")
+
+    if regressions:
+        print(
+            f"bench_diff: {len(regressions)} case(s) regressed beyond "
+            f"{threshold:.2f}x"
+        )
+        return 0 if warn_only else 1
+    print("bench_diff: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -272,6 +272,55 @@ fn main() {
     }
     println!();
 
+    // --- offline analyzer: trace replay + critical-path attribution --------
+    // `vrl-sgd analyze` is meant to chew through multi-thousand-round
+    // traces interactively; this times the full read path (JSONL parse
+    // into typed records + bit-exact per-round attribution) over a real
+    // exported trace, priced per traced round.
+    {
+        use vrl_sgd::diagnose::{attribute, parse_trace};
+        use vrl_sgd::telemetry::{TelemetrySpec, TraceFormat};
+        let trace_path = std::env::temp_dir()
+            .join(format!("vrl_bench_diag_{}.trace", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let out = Trainer::new(TaskKind::SoftmaxSynthetic {
+            classes: 10,
+            features: 64,
+            samples_per_worker: 256,
+        })
+        .algorithm(AlgorithmKind::VrlSgd)
+        .partition(Partition::LabelSharded)
+        .workers(8)
+        .period(5)
+        .lr(0.05)
+        .batch(16)
+        .steps(5_000)
+        .seed(11)
+        .eval_every(usize::MAX)
+        .parallelism(1)
+        .telemetry(TelemetrySpec {
+            trace: Some(trace_path.clone()),
+            format: TraceFormat::Jsonl,
+            ..TelemetrySpec::default()
+        })
+        .run()
+        .expect("bench run");
+        let text = std::fs::read_to_string(&trace_path).expect("read trace");
+        let rounds = out.history.sync_rows.len().max(1);
+        let r = bench(&format!("analyze parse+attribute rounds={rounds}"), 1, 10, || {
+            let attr = attribute(&parse_trace(&text).expect("parse")).expect("attribute");
+            std::hint::black_box(&attr);
+        });
+        report_throughput(&r, rounds as f64, "rounds");
+        json.push_throughput(&r, rounds as f64, "rounds");
+        // the bench is only honest if the replay actually cross-checks
+        let attr = attribute(&parse_trace(&text).unwrap()).unwrap();
+        attr.cross_check(&out.sim_time, &out.comm).expect("attribution not bit-exact!");
+        let _ = std::fs::remove_file(&trace_path);
+    }
+    println!();
+
     // --- XLA artifact step latency (needs `make artifacts`) ---------------
     let art_dir = std::path::Path::new("artifacts");
     if vrl_sgd::runtime::Runtime::artifacts_available(art_dir, &["mlp", "transformer"]) {

@@ -34,6 +34,14 @@ pub fn power_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
     (a.exp(), b, r2)
 }
 
+/// [`power_fit`] over `(x, y)` sample pairs — the shape the diagnose
+/// auditor accumulates in; returns `(c, p, r²)`.
+pub fn power_fit_points(points: &[(f64, f64)]) -> (f64, f64, f64) {
+    let xs: Vec<f64> = points.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.1).collect();
+    power_fit(&xs, &ys)
+}
+
 /// Smooth a series with a centered moving average of window `w` (odd
 /// windows recommended); endpoints use truncated windows.
 pub fn moving_average(ys: &[f64], w: usize) -> Vec<f64> {
@@ -97,6 +105,15 @@ mod tests {
         let (_, p, r2) = power_fit(&xs, &ys);
         assert!((p - 0.5).abs() < 0.05, "exponent {p}");
         assert!(r2 > 0.98);
+    }
+
+    #[test]
+    fn power_fit_points_matches_power_fit() {
+        let pts: Vec<(f64, f64)> = (1..10).map(|i| (i as f64, 5.0 * (i as f64).powf(0.5))).collect();
+        let (c, p, r2) = power_fit_points(&pts);
+        assert!((c - 5.0).abs() < 1e-9);
+        assert!((p - 0.5).abs() < 1e-9);
+        assert!(r2 > 0.999999);
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub mod algorithms;
 pub use algorithms::{make_algorithm, Algorithm, MomentumCorrector, StepCorrector, WorkerState};
 
 use crate::comm::CommStats;
+use crate::diagnose::HealthWarning;
 use crate::metrics::History;
 use crate::sim::SimTime;
 
@@ -51,6 +52,12 @@ pub struct TrainOutput {
     /// workers (always 0 without a
     /// [`crate::fabric::ParticipationModel`]).
     pub skipped_rounds: u64,
+    /// Structured warnings from the live convergence-health monitor —
+    /// one entry per [`crate::diagnose::HealthKind`], first occurrence
+    /// wins, repeats bump its count. Always empty unless the run opted
+    /// in with `telemetry.health = true` (the monitor never runs, and
+    /// never perturbs the trajectory, otherwise).
+    pub health_warnings: Vec<HealthWarning>,
 }
 
 impl TrainOutput {

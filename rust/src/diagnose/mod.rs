@@ -1,0 +1,1617 @@
+//! Run diagnostics: critical-path attribution, convergence health, and
+//! the communication-complexity auditor.
+//!
+//! The [`crate::telemetry`] module *records* — spans on the simulated
+//! clock, per-round metric snapshots, lifecycle instants. This module
+//! *explains*: it parses those streams (plus the sync-row CSV) back into
+//! typed records and answers the three questions a finished run raises:
+//!
+//! 1. **Where did the simulated time go?** [`attribute`] replays the
+//!    trace's `barrier_wait` / `collective` / `finalize` spans into a
+//!    per-round compute / barrier / comm / skipped breakdown plus a
+//!    straggler league table (which worker gated how many rounds, and
+//!    for how long). Because the driver stamps the *exact* `f64`s it
+//!    charged to [`SimTime`] as span arguments (µs-rounded timestamps
+//!    alone cannot round-trip), the totals reproduce
+//!    `SimTime`/[`CommStats`] **bit-exactly** —
+//!    [`Attribution::cross_check`] proves it with `to_bits` equality.
+//! 2. **Did the run stay healthy?** [`HealthMonitor`] watches loss,
+//!    consensus variance and the Σ‖Δ‖ drift for NaN/Inf sentinels and
+//!    for spikes against a Welford history (the same
+//!    [`ConsensusTracker`] core the observers use). It runs *live*
+//!    inside the driver (`telemetry.health = true` — warnings land in
+//!    `TrainOutput::health_warnings` and as `health` trace instants) and
+//!    *offline* over saved CSV/metrics streams ([`offline_warnings`]).
+//! 3. **Does the measured communication complexity match the paper?**
+//!    The auditor fits rounds-to-ε against T with
+//!    [`crate::analysis::power_fit`] — either over saved CSV runs
+//!    ([`audit_from_csv_runs`]) or by running a small sweep that mirrors
+//!    the Table-1 methodology ([`audit_sweep`]) — and reports measured
+//!    vs paper-order exponents per algorithm ([`paper_exponent`]).
+//!
+//! Everything is surfaced through [`RunReport`] (and the `vrl-sgd
+//! analyze` CLI subcommand), which renders both human-readable text
+//! ([`RunReport::to_text`]) and JSON ([`RunReport::to_json`]).
+//!
+//! # Report schema (`vrl-sgd.run-report.v1`)
+//!
+//! ```text
+//! {
+//!   "schema": "vrl-sgd.run-report.v1",
+//!   "attribution": {            // null unless a trace was given
+//!     "rounds": n,              // committed rounds in the trace
+//!     "synced_rounds": n,       // rounds that ran a collective
+//!     "skipped_rounds": n,      // empty rounds (zero participants)
+//!     "compute_s": f,           // == SimTime::compute_s, bit-exact
+//!     "wait_s": f,              //   barrier-idle slice of compute_s
+//!     "skipped_s": f,           //   skipped-round slice of compute_s
+//!     "comm_s": f,              // == SimTime::comm_s, bit-exact
+//!     "total_s": f,             // compute_s + comm_s
+//!     "bytes": n,               // == CommStats::bytes (logical)
+//!     "wire_bytes": n,          // == CommStats::wire_bytes
+//!     "finalize_bytes": n,      // post-loop flush share of "bytes"
+//!     "finalize_wire_bytes": n,
+//!     "resumed": b,             // trace starts mid-run; totals partial
+//!     "stragglers": [           // sorted by wait_s, descending
+//!       {"worker": n, "rounds_gated": n, "wait_s": f}, ...
+//!     ]
+//!   },
+//!   "health": [                 // one entry per HealthKind seen
+//!     {"kind": "non_finite_loss", "round": n, "value": "NaN",
+//!      "occurrences": n}, ...
+//!   ],
+//!   "run": {                    // from the sync CSV, when given
+//!     "final_loss": f,          // non-finite values encode as strings
+//!     "best_loss": f,
+//!     "csv_rounds": n,
+//!     "metrics_rounds": n
+//!   }
+//! }
+//! ```
+//!
+//! Non-finite floats cannot be spelled as JSON numbers; everywhere this
+//! module (and the telemetry exporters) would emit one, it emits the
+//! Rust debug string (`"NaN"`, `"inf"`, `"-inf"`) instead, and the
+//! readers here accept either form.
+
+use std::collections::BTreeMap;
+
+use crate::comm::CommStats;
+use crate::config::{AlgorithmKind, Partition, TaskKind, TrainSpec};
+use crate::format::Json;
+use crate::sim::SimTime;
+use crate::telemetry::HistStat;
+use crate::trainer::{ConsensusTracker, Trainer};
+
+// ---------------------------------------------------------------------------
+// Stream readers
+// ---------------------------------------------------------------------------
+
+/// One trace event parsed back from a JSONL or Chrome export — the typed
+/// mirror of what `telemetry::Tracer` wrote.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Phase: `'B'` (span begin), `'E'` (span end) or `'i'` (instant).
+    pub ph: char,
+    /// Event category (`"round"`, `"sync"`, `"lifecycle"`, ...).
+    pub cat: String,
+    /// Event name (`"barrier_wait"`, `"collective"`, ...).
+    pub name: String,
+    /// Lane: worker index + 1, or 0 for the coordinator.
+    pub tid: usize,
+    /// Simulated timestamp in microseconds.
+    pub ts_us: f64,
+    /// Event arguments (absent on most `B` events).
+    pub args: BTreeMap<String, Json>,
+}
+
+impl TraceRecord {
+    /// Float argument; accepts the string encoding used for non-finite
+    /// values (`"NaN"` / `"inf"` parse fine via `str::parse::<f64>`).
+    pub fn arg_f64(&self, key: &str) -> Option<f64> {
+        match self.args.get(key)? {
+            Json::Num(v) => Some(*v),
+            Json::Str(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// Exact unsigned-integer argument.
+    pub fn arg_u64(&self, key: &str) -> Option<u64> {
+        let v = match self.args.get(key)? {
+            Json::Num(v) => *v,
+            _ => return None,
+        };
+        // exact-integer window of f64
+        if v >= 0.0 && v.fract() == 0.0 && v <= 9_007_199_254_740_992.0 {
+            Some(v as u64)
+        } else {
+            None
+        }
+    }
+
+    /// String argument.
+    pub fn arg_str(&self, key: &str) -> Option<&str> {
+        self.args.get(key)?.as_str()
+    }
+}
+
+fn record_from_obj(ev: &Json) -> Result<Option<TraceRecord>, String> {
+    let ph = ev.get("ph").and_then(Json::as_str).ok_or("trace event missing \"ph\"")?;
+    if ph == "M" {
+        return Ok(None); // chrome metadata (lane names)
+    }
+    // chrome exports duplicate every event into a wall-clock lane
+    // (pid 2); attribution only reads the simulated lane (pid 1).
+    // JSONL events carry no "pid" at all.
+    if let Some(pid) = ev.get("pid").and_then(Json::as_f64) {
+        if pid != 1.0 {
+            return Ok(None);
+        }
+    }
+    let ph = ph.chars().next().unwrap();
+    let cat = ev.get("cat").and_then(Json::as_str).ok_or("trace event missing \"cat\"")?;
+    let name = ev.get("name").and_then(Json::as_str).ok_or("trace event missing \"name\"")?;
+    let tid = ev.get("tid").and_then(Json::as_usize).ok_or("trace event missing \"tid\"")?;
+    let ts_us = ev.get("ts").and_then(Json::as_f64).ok_or("trace event missing \"ts\"")?;
+    let args = match ev.get("args") {
+        Some(Json::Obj(m)) => m.clone(),
+        _ => BTreeMap::new(),
+    };
+    Ok(Some(TraceRecord { ph, cat: cat.into(), name: name.into(), tid, ts_us, args }))
+}
+
+/// Parse a trace export back into records, auto-detecting the format:
+/// a Chrome trace is one JSON document with a `"traceEvents"` array,
+/// JSONL is one event object per line. Metadata events and the Chrome
+/// wall-clock duplicate lane are dropped.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceRecord>, String> {
+    let mut out = Vec::new();
+    if text.trim_start().starts_with('{') && text.contains("\"traceEvents\"") {
+        let doc = Json::parse(text)?;
+        let evs = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .ok_or("chrome trace: \"traceEvents\" is not an array")?;
+        for ev in evs {
+            if let Some(r) = record_from_obj(ev)? {
+                out.push(r);
+            }
+        }
+    } else {
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let ev = Json::parse(line).map_err(|e| format!("trace line {}: {e}", i + 1))?;
+            if let Some(r) = record_from_obj(&ev)? {
+                out.push(r);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// One per-round snapshot parsed back from the metrics JSONL — the typed
+/// mirror of `telemetry::MetricsRegistry::snapshot_round`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsRow {
+    /// Round index.
+    pub round: usize,
+    /// Simulated seconds at snapshot time.
+    pub sim_s: f64,
+    /// Monotonic counters.
+    pub counters: BTreeMap<String, u64>,
+    /// Last-value gauges (non-finite values round-trip via strings).
+    pub gauges: BTreeMap<String, f64>,
+    /// Histogram summaries.
+    pub hists: BTreeMap<String, HistStat>,
+}
+
+fn json_to_f64(j: &Json) -> Option<f64> {
+    match j {
+        Json::Num(v) => Some(*v),
+        Json::Str(s) => s.parse().ok(),
+        _ => None,
+    }
+}
+
+/// Parse a metrics JSONL stream back into typed rows.
+pub fn parse_metrics(text: &str) -> Result<Vec<MetricsRow>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let bad = |what: &str| format!("metrics line {}: {what}", i + 1);
+        let doc = Json::parse(line).map_err(|e| format!("metrics line {}: {e}", i + 1))?;
+        let round = doc.get("round").and_then(Json::as_usize).ok_or_else(|| bad("no round"))?;
+        let sim_s = doc.get("sim_s").and_then(Json::as_f64).ok_or_else(|| bad("no sim_s"))?;
+        let mut row = MetricsRow {
+            round,
+            sim_s,
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+        };
+        if let Some(Json::Obj(m)) = doc.get("counters") {
+            for (k, v) in m {
+                let v = v.as_f64().ok_or_else(|| bad("bad counter"))?;
+                row.counters.insert(k.clone(), v as u64);
+            }
+        }
+        if let Some(Json::Obj(m)) = doc.get("gauges") {
+            for (k, v) in m {
+                let v = json_to_f64(v).ok_or_else(|| bad("bad gauge"))?;
+                row.gauges.insert(k.clone(), v);
+            }
+        }
+        if let Some(Json::Obj(m)) = doc.get("hists") {
+            for (k, v) in m {
+                let f = |key: &str| {
+                    v.get(key).and_then(json_to_f64).ok_or_else(|| bad("bad hist"))
+                };
+                row.hists.insert(
+                    k.clone(),
+                    HistStat {
+                        count: f("count")? as u64,
+                        sum: f("sum")?,
+                        min: f("min")?,
+                        max: f("max")?,
+                    },
+                );
+            }
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
+/// One sync-CSV row parsed back — the typed mirror of
+/// [`crate::metrics::SyncRow::csv_line`] (with `phase` owned).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsvRow {
+    /// Round index.
+    pub round: usize,
+    /// Total local iterations elapsed per worker.
+    pub step: usize,
+    /// Global train loss at the averaged model.
+    pub train_loss: f64,
+    /// Consensus gap before averaging.
+    pub worker_variance: f64,
+    /// Cumulative communication rounds.
+    pub comm_rounds: u64,
+    /// Cumulative logical bytes.
+    pub comm_bytes: u64,
+    /// Cumulative simulated seconds.
+    pub sim_time_s: f64,
+    /// This round's barrier idle time.
+    pub straggler_wait_s: f64,
+    /// Workers that participated this round.
+    pub present_workers: usize,
+    /// Cumulative skipped (empty) rounds.
+    pub skipped_rounds: u64,
+    /// Cumulative wire bytes after compression.
+    pub compressed_bytes: u64,
+    /// Cumulative logical-to-wire ratio.
+    pub compression_ratio: f64,
+    /// Coordinator phase name.
+    pub phase: String,
+    /// Coordinator epoch counter.
+    pub epoch: usize,
+    /// Workers currently admitted to the fleet.
+    pub active_members: usize,
+}
+
+/// Parse a sync-row CSV (as written by `History::sync_csv` or the
+/// streaming `CsvSink`) back into typed rows. The header is verified
+/// against [`crate::metrics::SYNC_CSV_HEADER`].
+pub fn parse_sync_csv(text: &str) -> Result<Vec<CsvRow>, String> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or("empty CSV")?;
+    if header.trim() != crate::metrics::SYNC_CSV_HEADER.trim() {
+        return Err(format!("unexpected CSV header {header:?}"));
+    }
+    let mut out = Vec::new();
+    for (i, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() != 15 {
+            return Err(format!("CSV line {}: expected 15 fields, got {}", i + 2, fields.len()));
+        }
+        let ctx = |e: &dyn std::fmt::Display| format!("CSV line {}: {e}", i + 2);
+        macro_rules! field {
+            ($idx:expr, $ty:ty) => {
+                fields[$idx].parse::<$ty>().map_err(|e| ctx(&e))?
+            };
+        }
+        out.push(CsvRow {
+            round: field!(0, usize),
+            step: field!(1, usize),
+            train_loss: field!(2, f64),
+            worker_variance: field!(3, f64),
+            comm_rounds: field!(4, u64),
+            comm_bytes: field!(5, u64),
+            sim_time_s: field!(6, f64),
+            straggler_wait_s: field!(7, f64),
+            present_workers: field!(8, usize),
+            skipped_rounds: field!(9, u64),
+            compressed_bytes: field!(10, u64),
+            compression_ratio: field!(11, f64),
+            phase: fields[12].to_string(),
+            epoch: field!(13, usize),
+            active_members: field!(14, usize),
+        });
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Critical-path attribution
+// ---------------------------------------------------------------------------
+
+/// One committed round's time/byte layout, rebuilt from the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundAttribution {
+    /// Position in the trace (0-based over committed rounds).
+    pub round: usize,
+    /// Critical-path compute seconds charged this round.
+    pub critical_s: f64,
+    /// Barrier-idle slice of `critical_s`.
+    pub wait_s: f64,
+    /// Whether the round ran a collective (false = skipped).
+    pub synced: bool,
+    /// Worker index on the critical path (0 on homogeneous rounds —
+    /// meaningful only when `wait_s > 0`).
+    pub slowest: usize,
+    /// Communication seconds this round added.
+    pub comm_delta_s: f64,
+    /// Logical bytes this round moved.
+    pub bytes: u64,
+    /// Wire bytes this round moved.
+    pub wire_bytes: u64,
+}
+
+/// One row of the straggler league table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StragglerEntry {
+    /// Worker index.
+    pub worker: usize,
+    /// Synced rounds this worker's compute time gated.
+    pub rounds_gated: u64,
+    /// Total barrier-idle seconds it caused across those rounds.
+    pub wait_s: f64,
+}
+
+/// Full critical-path attribution of one trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Attribution {
+    /// Per-round breakdown, in trace order.
+    pub rounds: Vec<RoundAttribution>,
+    /// Σ critical_s — reproduces `SimTime::compute_s` bit-exactly.
+    pub compute_s: f64,
+    /// Σ wait_s — reproduces `SimTime::wait_s` bit-exactly.
+    pub wait_s: f64,
+    /// Σ critical_s over skipped rounds — `SimTime::skipped_s`.
+    pub skipped_s: f64,
+    /// Cumulative comm seconds — `SimTime::comm_s` (the driver assigns
+    /// this cumulatively each sync, so the *last* collective's
+    /// `comm_s` argument is the exact total).
+    pub comm_s: f64,
+    /// Total logical bytes, round deltas + finalize — `CommStats::bytes`.
+    pub bytes: u64,
+    /// Total wire bytes — `CommStats::wire_bytes`.
+    pub wire_bytes: u64,
+    /// Logical bytes moved by the post-loop `Algorithm::finalize` flush.
+    /// 0 for every built-in algorithm today (CoCoD-SGD launches *and*
+    /// charges its overlapped allreduce inside the round), but the span
+    /// keeps the ledger complete for any future algorithm that defers a
+    /// collective past the last round.
+    pub finalize_bytes: u64,
+    /// Wire bytes moved by the post-loop flush.
+    pub finalize_wire_bytes: u64,
+    /// Rounds that ran a collective.
+    pub synced_rounds: usize,
+    /// Trace begins mid-run (a `resume` instant was seen): totals cover
+    /// only the traced suffix and cannot cross-check against a full
+    /// run's counters.
+    pub resumed: bool,
+    /// Straggler league table, sorted by `wait_s` descending (ties by
+    /// worker index).
+    pub stragglers: Vec<StragglerEntry>,
+}
+
+impl Attribution {
+    /// Simulated wall-clock total, matching `SimTime::total()`.
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.comm_s
+    }
+
+    /// Number of skipped (empty) rounds.
+    pub fn skipped_rounds(&self) -> usize {
+        self.rounds.len() - self.synced_rounds
+    }
+
+    /// Verify the rebuilt totals against the run's own counters,
+    /// **bit-exactly** (`f64::to_bits` equality, not an ε-compare).
+    /// Fails with a description of the first mismatch; refuses resumed
+    /// traces, whose totals are legitimately partial.
+    pub fn cross_check(&self, sim: &SimTime, comm: &CommStats) -> Result<(), String> {
+        if self.resumed {
+            return Err(
+                "resumed trace: spans before the resume point are missing, totals are \
+                 partial by construction"
+                    .into(),
+            );
+        }
+        let f = [
+            ("compute_s", self.compute_s, sim.compute_s),
+            ("wait_s", self.wait_s, sim.wait_s),
+            ("skipped_s", self.skipped_s, sim.skipped_s),
+            ("comm_s", self.comm_s, sim.comm_s),
+        ];
+        for (name, got, want) in f {
+            if got.to_bits() != want.to_bits() {
+                return Err(format!(
+                    "{name}: trace rebuilds {got:.17e}, run recorded {want:.17e}"
+                ));
+            }
+        }
+        let u = [("bytes", self.bytes, comm.bytes), ("wire_bytes", self.wire_bytes, comm.wire_bytes)];
+        for (name, got, want) in u {
+            if got != want {
+                return Err(format!("{name}: trace rebuilds {got}, run recorded {want}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Rebuild the per-round critical path from a parsed trace.
+///
+/// Rounds are delimited by the coordinator-lane `checkpoint` span the
+/// driver closes after every committed round; within a round the
+/// `barrier_wait` end carries the exact charged `critical_s` / `wait_s`
+/// / `slowest`, the `collective` end carries the byte deltas plus the
+/// *cumulative* `comm_s`, and a `round_skipped` instant marks empty
+/// rounds. The zero-width `finalize` span (if present) contributes the
+/// post-loop byte flush. Accumulation is sequential `f64 +=` in trace
+/// order — the same order `SimTime` charged in — so totals land on the
+/// identical bits.
+pub fn attribute(events: &[TraceRecord]) -> Result<Attribution, String> {
+    const STALE: &str = "missing span argument (trace predates the analyzer's arg \
+                         schema?) — re-trace with a current build";
+    let mut out = Attribution::default();
+    let mut blame: BTreeMap<usize, (u64, f64)> = BTreeMap::new();
+    // in-flight round state
+    let mut critical_s = 0.0f64;
+    let mut wait_s = 0.0f64;
+    let mut slowest = 0usize;
+    let mut seen_barrier = false;
+    let mut synced = false;
+    let mut skipped_instant = false;
+    let mut bytes = 0u64;
+    let mut wire_bytes = 0u64;
+    let mut comm_delta_s = 0.0f64;
+    let mut prev_comm_cum = 0.0f64;
+    for ev in events {
+        match (ev.ph, ev.name.as_str()) {
+            ('i', "resume") => out.resumed = true,
+            ('i', "round_skipped") => skipped_instant = true,
+            ('E', "barrier_wait") => {
+                critical_s = ev.arg_f64("critical_s").ok_or(STALE)?;
+                wait_s = ev.arg_f64("wait_s").ok_or(STALE)?;
+                slowest = ev.arg_u64("slowest").ok_or(STALE)? as usize;
+                seen_barrier = true;
+            }
+            ('E', "collective") => {
+                synced = true;
+                bytes = ev.arg_u64("bytes").ok_or(STALE)?;
+                wire_bytes = ev.arg_u64("wire_bytes").ok_or(STALE)?;
+                let cum = ev.arg_f64("comm_s").ok_or(STALE)?;
+                comm_delta_s = cum - prev_comm_cum;
+                prev_comm_cum = cum;
+                out.comm_s = cum;
+            }
+            ('E', "finalize") => {
+                out.finalize_bytes += ev.arg_u64("bytes").ok_or(STALE)?;
+                out.finalize_wire_bytes += ev.arg_u64("wire_bytes").ok_or(STALE)?;
+            }
+            ('E', "checkpoint") if ev.tid == 0 => {
+                let round = out.rounds.len();
+                if !seen_barrier {
+                    return Err(format!("round {round} closed without a barrier_wait span"));
+                }
+                if synced == skipped_instant {
+                    return Err(format!(
+                        "round {round}: collective/round_skipped markers disagree"
+                    ));
+                }
+                // same order SimTime charged in: bit-exact by replay
+                out.compute_s += critical_s;
+                out.wait_s += wait_s;
+                if synced {
+                    out.synced_rounds += 1;
+                } else {
+                    out.skipped_s += critical_s;
+                }
+                out.bytes += bytes;
+                out.wire_bytes += wire_bytes;
+                if synced && wait_s > 0.0 {
+                    let e = blame.entry(slowest).or_insert((0, 0.0));
+                    e.0 += 1;
+                    e.1 += wait_s;
+                }
+                out.rounds.push(RoundAttribution {
+                    round,
+                    critical_s,
+                    wait_s,
+                    synced,
+                    slowest,
+                    comm_delta_s,
+                    bytes,
+                    wire_bytes,
+                });
+                critical_s = 0.0;
+                wait_s = 0.0;
+                slowest = 0;
+                seen_barrier = false;
+                synced = false;
+                skipped_instant = false;
+                bytes = 0;
+                wire_bytes = 0;
+                comm_delta_s = 0.0;
+            }
+            _ => {}
+        }
+    }
+    if seen_barrier {
+        return Err(format!(
+            "trace ends mid-round ({} committed): was the run killed before its \
+             checkpoint span?",
+            out.rounds.len()
+        ));
+    }
+    out.bytes += out.finalize_bytes;
+    out.wire_bytes += out.finalize_wire_bytes;
+    out.stragglers = blame
+        .into_iter()
+        .map(|(worker, (rounds_gated, wait_s))| StragglerEntry { worker, rounds_gated, wait_s })
+        .collect();
+    out.stragglers.sort_by(|a, b| {
+        b.wait_s.partial_cmp(&a.wait_s).unwrap().then(a.worker.cmp(&b.worker))
+    });
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Convergence-health monitor
+// ---------------------------------------------------------------------------
+
+/// The failure classes the health monitor distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthKind {
+    /// Train loss went NaN/Inf.
+    NonFiniteLoss,
+    /// Train loss spiked beyond `spike_sigma` Welford deviations.
+    LossSpike,
+    /// Consensus variance went NaN/Inf.
+    NonFiniteVariance,
+    /// Consensus variance spiked.
+    VarianceSpike,
+    /// Σ‖Δ‖ correction drift went NaN/Inf.
+    NonFiniteDrift,
+    /// Σ‖Δ‖ correction drift spiked.
+    DriftSpike,
+}
+
+impl HealthKind {
+    /// Stable string form, used in trace instants and report JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthKind::NonFiniteLoss => "non_finite_loss",
+            HealthKind::LossSpike => "loss_spike",
+            HealthKind::NonFiniteVariance => "non_finite_variance",
+            HealthKind::VarianceSpike => "variance_spike",
+            HealthKind::NonFiniteDrift => "non_finite_drift",
+            HealthKind::DriftSpike => "drift_spike",
+        }
+    }
+
+    /// Inverse of [`HealthKind::name`].
+    pub fn parse(s: &str) -> Option<HealthKind> {
+        Some(match s {
+            "non_finite_loss" => HealthKind::NonFiniteLoss,
+            "loss_spike" => HealthKind::LossSpike,
+            "non_finite_variance" => HealthKind::NonFiniteVariance,
+            "variance_spike" => HealthKind::VarianceSpike,
+            "non_finite_drift" => HealthKind::NonFiniteDrift,
+            "drift_spike" => HealthKind::DriftSpike,
+            _ => return None,
+        })
+    }
+}
+
+/// One structured health warning: the first offending round and value,
+/// plus how often the condition repeated afterwards.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthWarning {
+    /// What tripped.
+    pub kind: HealthKind,
+    /// Round of the *first* occurrence.
+    pub round: usize,
+    /// The offending value, stringified (it may be NaN/Inf, which a
+    /// JSON number cannot spell); spikes append the z-score.
+    pub value: String,
+    /// Total times this kind tripped, first occurrence included.
+    pub occurrences: u64,
+}
+
+/// Health-monitor thresholds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthConfig {
+    /// A value `z > spike_sigma` Welford standard deviations above the
+    /// series mean counts as a spike. One-sided: improvements (drops)
+    /// never warn.
+    pub spike_sigma: f64,
+    /// Observations required before spike detection arms — an immature
+    /// mean/variance would misread ordinary early-training descent.
+    pub min_history: usize,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig { spike_sigma: 6.0, min_history: 8 }
+    }
+}
+
+/// One round's health signals. `None` fields are skipped (e.g. loss on
+/// rounds the driver didn't evaluate).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthSample {
+    /// Round index (stamped into warnings).
+    pub round: usize,
+    /// Train loss, when evaluated this round.
+    pub loss: Option<f64>,
+    /// Consensus variance.
+    pub worker_variance: Option<f64>,
+    /// Σ_i ‖Δ_i‖ over the fleet's correction terms.
+    pub delta_norm_sum: Option<f64>,
+}
+
+/// Streaming convergence-health monitor: NaN/Inf sentinels plus Welford
+/// spike detection per series, first-occurrence warnings with repeat
+/// counts. Pure `f64` bookkeeping over already-computed signals — it
+/// never touches the model, draws no RNG, and cannot perturb a run.
+#[derive(Debug, Clone, Default)]
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    loss: ConsensusTracker,
+    variance: ConsensusTracker,
+    drift: ConsensusTracker,
+    warnings: Vec<HealthWarning>,
+}
+
+fn note(
+    warnings: &mut Vec<HealthWarning>,
+    fresh: &mut Vec<HealthWarning>,
+    kind: HealthKind,
+    round: usize,
+    value: String,
+) {
+    if let Some(w) = warnings.iter_mut().find(|w| w.kind == kind) {
+        w.occurrences += 1;
+    } else {
+        let w = HealthWarning { kind, round, value, occurrences: 1 };
+        warnings.push(w.clone());
+        fresh.push(w);
+    }
+}
+
+fn check_series(
+    cfg: &HealthConfig,
+    tracker: &mut ConsensusTracker,
+    warnings: &mut Vec<HealthWarning>,
+    fresh: &mut Vec<HealthWarning>,
+    round: usize,
+    x: f64,
+    non_finite: HealthKind,
+    spike: HealthKind,
+) {
+    if !x.is_finite() {
+        // never fed to the tracker: one NaN would poison the Welford
+        // mean forever and mask everything after it
+        note(warnings, fresh, non_finite, round, format!("{x}"));
+        return;
+    }
+    if tracker.syncs >= cfg.min_history {
+        let z = tracker.zscore(x);
+        if z > cfg.spike_sigma {
+            note(warnings, fresh, spike, round, format!("{x:.6e} (z = {z:.1})"));
+        }
+    }
+    tracker.observe(x);
+}
+
+impl HealthMonitor {
+    /// Monitor with explicit thresholds.
+    pub fn new(cfg: HealthConfig) -> Self {
+        HealthMonitor { cfg, ..HealthMonitor::default() }
+    }
+
+    /// Score one round's signals. Returns only *fresh* warnings — kinds
+    /// tripping for the first time — so a diverged run stamps one trace
+    /// instant per kind, not one per round.
+    pub fn check(&mut self, s: &HealthSample) -> Vec<HealthWarning> {
+        let mut fresh = Vec::new();
+        let cfg = self.cfg;
+        if let Some(x) = s.loss {
+            check_series(
+                &cfg,
+                &mut self.loss,
+                &mut self.warnings,
+                &mut fresh,
+                s.round,
+                x,
+                HealthKind::NonFiniteLoss,
+                HealthKind::LossSpike,
+            );
+        }
+        if let Some(x) = s.worker_variance {
+            check_series(
+                &cfg,
+                &mut self.variance,
+                &mut self.warnings,
+                &mut fresh,
+                s.round,
+                x,
+                HealthKind::NonFiniteVariance,
+                HealthKind::VarianceSpike,
+            );
+        }
+        if let Some(x) = s.delta_norm_sum {
+            check_series(
+                &cfg,
+                &mut self.drift,
+                &mut self.warnings,
+                &mut fresh,
+                s.round,
+                x,
+                HealthKind::NonFiniteDrift,
+                HealthKind::DriftSpike,
+            );
+        }
+        fresh
+    }
+
+    /// All warnings so far (first-occurrence order).
+    pub fn warnings(&self) -> &[HealthWarning] {
+        &self.warnings
+    }
+
+    /// Consume the monitor, yielding its warnings.
+    pub fn into_warnings(self) -> Vec<HealthWarning> {
+        self.warnings
+    }
+
+    /// Welford trend of the variance series (last − mean).
+    pub fn variance_trend(&self) -> f64 {
+        self.variance.trend()
+    }
+}
+
+/// Replay the health monitor over saved streams. The metrics JSONL
+/// feeds the variance and drift series (its gauges are exactly what the
+/// live monitor saw); the CSV feeds the loss series — consecutive
+/// bit-identical losses are carried values from non-evaluated rounds
+/// and are fed once — plus variance when no metrics stream is given.
+pub fn offline_warnings(
+    csv: Option<&[CsvRow]>,
+    metrics: Option<&[MetricsRow]>,
+    cfg: &HealthConfig,
+) -> Vec<HealthWarning> {
+    let mut mon = HealthMonitor::new(*cfg);
+    if let Some(rows) = metrics {
+        for r in rows {
+            mon.check(&HealthSample {
+                round: r.round,
+                loss: None,
+                worker_variance: r.gauges.get("worker_variance").copied(),
+                delta_norm_sum: r.gauges.get("delta_norm_sum").copied(),
+            });
+        }
+    }
+    if let Some(rows) = csv {
+        let mut last_bits: Option<u64> = None;
+        for r in rows {
+            let evaluated = last_bits != Some(r.train_loss.to_bits());
+            mon.check(&HealthSample {
+                round: r.round,
+                loss: if evaluated { Some(r.train_loss) } else { None },
+                worker_variance: if metrics.is_none() {
+                    Some(r.worker_variance)
+                } else {
+                    None
+                },
+                delta_norm_sum: None,
+            });
+            last_bits = Some(r.train_loss.to_bits());
+        }
+    }
+    mon.into_warnings()
+}
+
+// ---------------------------------------------------------------------------
+// Run report
+// ---------------------------------------------------------------------------
+
+/// Schema identifier stamped into every report JSON.
+pub const RUN_REPORT_SCHEMA: &str = "vrl-sgd.run-report.v1";
+
+/// Everything `vrl-sgd analyze` learned about one run. See the module
+/// docs for the JSON schema.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    /// Critical-path attribution (needs a trace).
+    pub attribution: Option<Attribution>,
+    /// Health warnings replayed offline from the CSV/metrics streams.
+    pub health: Vec<HealthWarning>,
+    /// Last CSV train loss.
+    pub final_loss: Option<f64>,
+    /// Best (minimum) CSV train loss.
+    pub best_loss: Option<f64>,
+    /// CSV rows seen.
+    pub csv_rounds: usize,
+    /// Metrics rows seen.
+    pub metrics_rounds: usize,
+}
+
+/// Non-finite floats cannot be JSON numbers; encode them as strings
+/// (the readers in this module accept both forms).
+fn json_f64(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+impl RunReport {
+    /// Build a report from whichever stream texts are available.
+    pub fn build(
+        trace: Option<&str>,
+        metrics: Option<&str>,
+        csv: Option<&str>,
+        cfg: &HealthConfig,
+    ) -> Result<RunReport, String> {
+        let mut report = RunReport::default();
+        if let Some(text) = trace {
+            report.attribution = Some(attribute(&parse_trace(text)?)?);
+        }
+        let metrics_rows = match metrics {
+            Some(text) => Some(parse_metrics(text)?),
+            None => None,
+        };
+        let csv_rows = match csv {
+            Some(text) => Some(parse_sync_csv(text)?),
+            None => None,
+        };
+        report.metrics_rounds = metrics_rows.as_ref().map_or(0, Vec::len);
+        report.csv_rounds = csv_rows.as_ref().map_or(0, Vec::len);
+        if let Some(rows) = csv_rows.as_ref() {
+            report.final_loss = rows.last().map(|r| r.train_loss);
+            report.best_loss = rows
+                .iter()
+                .map(|r| r.train_loss)
+                .filter(|l| !l.is_nan())
+                .min_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        report.health =
+            offline_warnings(csv_rows.as_deref(), metrics_rows.as_deref(), cfg);
+        Ok(report)
+    }
+
+    /// Render the report as JSON (schema `vrl-sgd.run-report.v1`).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str(RUN_REPORT_SCHEMA.into()));
+        let attribution = match &self.attribution {
+            None => Json::Null,
+            Some(a) => {
+                let mut m = BTreeMap::new();
+                m.insert("rounds".into(), Json::Num(a.rounds.len() as f64));
+                m.insert("synced_rounds".into(), Json::Num(a.synced_rounds as f64));
+                m.insert("skipped_rounds".into(), Json::Num(a.skipped_rounds() as f64));
+                m.insert("compute_s".into(), json_f64(a.compute_s));
+                m.insert("wait_s".into(), json_f64(a.wait_s));
+                m.insert("skipped_s".into(), json_f64(a.skipped_s));
+                m.insert("comm_s".into(), json_f64(a.comm_s));
+                m.insert("total_s".into(), json_f64(a.total_s()));
+                m.insert("bytes".into(), Json::Num(a.bytes as f64));
+                m.insert("wire_bytes".into(), Json::Num(a.wire_bytes as f64));
+                m.insert("finalize_bytes".into(), Json::Num(a.finalize_bytes as f64));
+                m.insert(
+                    "finalize_wire_bytes".into(),
+                    Json::Num(a.finalize_wire_bytes as f64),
+                );
+                m.insert("resumed".into(), Json::Bool(a.resumed));
+                let stragglers = a
+                    .stragglers
+                    .iter()
+                    .map(|s| {
+                        let mut e = BTreeMap::new();
+                        e.insert("worker".into(), Json::Num(s.worker as f64));
+                        e.insert("rounds_gated".into(), Json::Num(s.rounds_gated as f64));
+                        e.insert("wait_s".into(), json_f64(s.wait_s));
+                        Json::Obj(e)
+                    })
+                    .collect();
+                m.insert("stragglers".into(), Json::Arr(stragglers));
+                Json::Obj(m)
+            }
+        };
+        root.insert("attribution".into(), attribution);
+        let health = self
+            .health
+            .iter()
+            .map(|w| {
+                let mut e = BTreeMap::new();
+                e.insert("kind".into(), Json::Str(w.kind.name().into()));
+                e.insert("round".into(), Json::Num(w.round as f64));
+                e.insert("value".into(), Json::Str(w.value.clone()));
+                e.insert("occurrences".into(), Json::Num(w.occurrences as f64));
+                Json::Obj(e)
+            })
+            .collect();
+        root.insert("health".into(), Json::Arr(health));
+        let mut run = BTreeMap::new();
+        if let Some(l) = self.final_loss {
+            run.insert("final_loss".into(), json_f64(l));
+        }
+        if let Some(l) = self.best_loss {
+            run.insert("best_loss".into(), json_f64(l));
+        }
+        run.insert("csv_rounds".into(), Json::Num(self.csv_rounds as f64));
+        run.insert("metrics_rounds".into(), Json::Num(self.metrics_rounds as f64));
+        root.insert("run".into(), Json::Obj(run));
+        Json::Obj(root)
+    }
+
+    /// Render the report as human-readable text.
+    pub fn to_text(&self) -> String {
+        let mut s = String::from("run report\n==========\n");
+        match &self.attribution {
+            None => s.push_str("\ncritical path: (no trace given)\n"),
+            Some(a) => {
+                let total = a.total_s();
+                let pct = |x: f64| if total > 0.0 { 100.0 * x / total } else { 0.0 };
+                s.push_str(&format!(
+                    "\ncritical path ({} rounds, {} synced, {} skipped{}):\n",
+                    a.rounds.len(),
+                    a.synced_rounds,
+                    a.skipped_rounds(),
+                    if a.resumed { ", resumed trace — totals partial" } else { "" },
+                ));
+                s.push_str(&format!(
+                    "  total     {total:>12.6}s\n  compute   {:>12.6}s ({:.1}%)\n",
+                    a.compute_s,
+                    pct(a.compute_s)
+                ));
+                s.push_str(&format!(
+                    "  comm      {:>12.6}s ({:.1}%)\n", a.comm_s, pct(a.comm_s)
+                ));
+                s.push_str(&format!(
+                    "  barrier   {:>12.6}s ({:.1}% — idle slice of compute)\n",
+                    a.wait_s,
+                    pct(a.wait_s)
+                ));
+                s.push_str(&format!(
+                    "  skipped   {:>12.6}s ({:.1}% — empty-round slice of compute)\n",
+                    a.skipped_s,
+                    pct(a.skipped_s)
+                ));
+                s.push_str(&format!(
+                    "  bytes     {} logical, {} wire ({} in the post-loop flush)\n",
+                    a.bytes, a.wire_bytes, a.finalize_bytes
+                ));
+                if a.stragglers.is_empty() {
+                    s.push_str("  stragglers: none (homogeneous fleet)\n");
+                } else {
+                    s.push_str("  stragglers (worker: rounds gated, idle caused):\n");
+                    for e in a.stragglers.iter().take(8) {
+                        s.push_str(&format!(
+                            "    w{:<3} {:>6} rounds  {:>12.6}s\n",
+                            e.worker, e.rounds_gated, e.wait_s
+                        ));
+                    }
+                }
+            }
+        }
+        s.push_str("\nhealth:\n");
+        if self.health.is_empty() {
+            s.push_str("  ok — no warnings\n");
+        } else {
+            for w in &self.health {
+                s.push_str(&format!(
+                    "  [{}] first at round {}, value {} ({} occurrence{})\n",
+                    w.kind.name(),
+                    w.round,
+                    w.value,
+                    w.occurrences,
+                    if w.occurrences == 1 { "" } else { "s" }
+                ));
+            }
+        }
+        if self.csv_rounds > 0 {
+            s.push_str(&format!(
+                "\nrun: {} CSV rounds, final loss {:?}, best loss {:?}\n",
+                self.csv_rounds, self.final_loss, self.best_loss
+            ));
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Communication-complexity auditor
+// ---------------------------------------------------------------------------
+
+/// The paper's predicted rounds-to-ε exponent in T (Table 1,
+/// non-identical case) per algorithm name, `None` where the paper
+/// states no order (EASGD).
+pub fn paper_exponent(algorithm: &str) -> Option<f64> {
+    match algorithm {
+        "vrl-sgd" | "vrl-sgd-w" => Some(0.5),
+        "local-sgd" | "mom-local-sgd" | "cocod-sgd" => Some(0.75),
+        "s-sgd" => Some(1.0),
+        _ => None,
+    }
+}
+
+/// One algorithm's fitted communication-complexity exponent.
+#[derive(Debug, Clone)]
+pub struct AuditResult {
+    /// Algorithm display name.
+    pub algorithm: String,
+    /// The fitted `(T, rounds)` samples.
+    pub points: Vec<(f64, f64)>,
+    /// Fitted coefficient c of `rounds ≈ c · T^p`.
+    pub coefficient: f64,
+    /// Fitted exponent p.
+    pub exponent: f64,
+    /// Fit quality.
+    pub r2: f64,
+    /// The paper's predicted order, when it states one.
+    pub paper_exponent: Option<f64>,
+}
+
+/// Fit `rounds ≈ c · T^p` for one algorithm's `(T, rounds)` samples.
+pub fn audit_fit(algorithm: &str, points: &[(f64, f64)]) -> Result<AuditResult, String> {
+    if points.len() < 2 {
+        return Err(format!(
+            "{algorithm}: need ≥ 2 (T, rounds) samples for a slope, got {}",
+            points.len()
+        ));
+    }
+    if points.iter().all(|p| p.0 == points[0].0) {
+        return Err(format!("{algorithm}: all samples share T = {} — no slope", points[0].0));
+    }
+    let (coefficient, exponent, r2) = crate::analysis::power_fit_points(points);
+    Ok(AuditResult {
+        algorithm: algorithm.into(),
+        points: points.to_vec(),
+        coefficient,
+        exponent,
+        r2,
+        paper_exponent: paper_exponent(algorithm),
+    })
+}
+
+/// Audit saved runs: each `(algorithm, rows)` entry is one run's sync
+/// CSV; T is its last recorded step and rounds-to-ε the first round
+/// whose loss reached `eps`. Runs are grouped per algorithm and fitted.
+pub fn audit_from_csv_runs(
+    runs: &[(String, Vec<CsvRow>)],
+    eps: f64,
+) -> Result<Vec<AuditResult>, String> {
+    let mut by_algo: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    for (name, rows) in runs {
+        let last = rows.last().ok_or_else(|| format!("{name}: empty CSV"))?;
+        let hit = rows
+            .iter()
+            .find(|r| r.train_loss <= eps)
+            .map(|r| r.round + 1)
+            .ok_or_else(|| {
+                format!("{name}: run of T = {} never reached loss ≤ {eps:e}", last.step)
+            })?;
+        by_algo.entry(name.clone()).or_default().push((last.step as f64, hit as f64));
+    }
+    by_algo.iter().map(|(name, pts)| audit_fit(name, pts)).collect()
+}
+
+/// Parameters for [`audit_sweep`].
+#[derive(Debug, Clone)]
+pub struct AuditSpec {
+    /// Algorithms to measure.
+    pub algorithms: Vec<AlgorithmKind>,
+    /// Total-iteration sweep (needs ≥ 2 distinct values).
+    pub t_values: Vec<usize>,
+    /// Seeds averaged per measurement.
+    pub trials: usize,
+}
+
+impl Default for AuditSpec {
+    fn default() -> Self {
+        AuditSpec {
+            algorithms: vec![AlgorithmKind::LocalSgd, AlgorithmKind::VrlSgd],
+            t_values: vec![512, 2048, 8192],
+            trials: 2,
+        }
+    }
+}
+
+/// Run a small T-sweep and fit rounds-to-target exponents, mirroring
+/// the `experiments::table1` methodology: noisy non-identical quadratic
+/// (b = 0.5, σ = 2, N = 2), Corollary-5.2 learning rate γ = √N/(σ√T),
+/// admissibility = trailing-quarter excess within 1.5× the S-SGD
+/// baseline, doubling + binary search for the largest admissible period
+/// k, rounds = ⌈T / k_max⌉.
+pub fn audit_sweep(spec: &AuditSpec) -> Result<Vec<AuditResult>, String> {
+    let b = 0.5;
+    let noise = 2.0;
+    let n_workers = 2usize;
+    let f_star = 3.0 * b * b;
+    let slack = 1.5;
+    let task = TaskKind::Quadratic { b, noise };
+    let mut by_algo: Vec<(AlgorithmKind, Vec<(f64, f64)>)> =
+        spec.algorithms.iter().map(|&a| (a, Vec::new())).collect();
+    for &t in &spec.t_values {
+        let lr = ((n_workers as f64).sqrt() / (noise * (t as f64).sqrt())) as f32;
+        let excess = |algo: AlgorithmKind, k: usize, seed: u64| -> Result<f64, String> {
+            let out = Trainer::new(task.clone())
+                .spec(TrainSpec {
+                    algorithm: algo,
+                    workers: n_workers,
+                    period: k,
+                    lr,
+                    batch: 1,
+                    steps: t,
+                    seed,
+                    ..TrainSpec::default()
+                })
+                .partition(Partition::LabelSharded)
+                .run()?;
+            let rows = &out.history.sync_rows;
+            let tail = rows.len().div_ceil(4).max(1);
+            let avg: f64 = rows[rows.len() - tail..].iter().map(|r| r.train_loss).sum::<f64>()
+                / tail as f64;
+            Ok((avg - f_star).max(1e-12))
+        };
+        let mean_excess = |algo: AlgorithmKind, k: usize| -> Result<f64, String> {
+            let mut sum = 0.0;
+            for s in 0..spec.trials {
+                sum += excess(algo, k, 40 + s as u64)?;
+            }
+            Ok(sum / spec.trials as f64)
+        };
+        let target = mean_excess(AlgorithmKind::SSgd, 1)? * slack;
+        for (algo, pts) in by_algo.iter_mut() {
+            let ok = |k: usize| -> Result<bool, String> { Ok(mean_excess(*algo, k)? <= target) };
+            let k_max = if !ok(1)? {
+                1
+            } else {
+                let mut lo = 1usize;
+                let mut hi = 2usize;
+                while hi <= t / 4 && ok(hi)? {
+                    lo = hi;
+                    hi *= 2;
+                }
+                let mut hi = hi.min(t / 2);
+                while lo + 1 < hi {
+                    let mid = (lo + hi) / 2;
+                    if ok(mid)? {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                lo
+            };
+            pts.push((t as f64, t.div_ceil(k_max) as f64));
+        }
+    }
+    by_algo.iter().map(|(algo, pts)| audit_fit(algo.name(), pts)).collect()
+}
+
+/// Render audit results as an aligned text table.
+pub fn render_audit(results: &[AuditResult]) -> String {
+    let mut s = String::from(
+        "communication-complexity audit: rounds-to-target ∝ T^p\n\
+         algorithm      fitted p   r^2      paper order\n",
+    );
+    for r in results {
+        let expect =
+            r.paper_exponent.map(|e| format!("{e:.2}")).unwrap_or_else(|| "-".into());
+        s.push_str(&format!(
+            "{:<14} {:>8.3} {:>8.3}   {expect}\n",
+            r.algorithm, r.exponent, r.r2
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SyncRow;
+    use crate::telemetry::{ArgV, TraceFormat, Tracer};
+
+    fn sample_row(round: usize, loss: f64) -> SyncRow {
+        SyncRow {
+            round,
+            step: (round + 1) * 5,
+            train_loss: loss,
+            worker_variance: 0.25 + round as f64 * 1e-3,
+            comm_rounds: round as u64 + 1,
+            comm_bytes: (round as u64 + 1) * 1024,
+            sim_time_s: 0.125 * (round as f64 + 1.0),
+            straggler_wait_s: 0.0625,
+            present_workers: 4,
+            skipped_rounds: 0,
+            compressed_bytes: (round as u64 + 1) * 256,
+            compression_ratio: 4.0,
+            phase: "train",
+            epoch: 0,
+            active_members: 4,
+        }
+    }
+
+    #[test]
+    fn csv_round_trips_through_csv_line() {
+        let rows: Vec<SyncRow> = (0..4).map(|r| sample_row(r, 1.0 / (r + 1) as f64)).collect();
+        let mut text = crate::metrics::SYNC_CSV_HEADER.to_string();
+        for r in &rows {
+            text.push_str(&r.csv_line());
+        }
+        let parsed = parse_sync_csv(&text).unwrap();
+        assert_eq!(parsed.len(), 4);
+        for (p, r) in parsed.iter().zip(&rows) {
+            assert_eq!(p.round, r.round);
+            assert_eq!(p.step, r.step);
+            // csv_line prints {:.8e}; the printed value parses back close
+            assert!((p.train_loss - r.train_loss).abs() < 1e-7);
+            assert_eq!(p.comm_bytes, r.comm_bytes);
+            assert_eq!(p.phase, "train");
+            assert_eq!(p.active_members, 4);
+        }
+    }
+
+    #[test]
+    fn csv_rejects_foreign_header() {
+        assert!(parse_sync_csv("a,b,c\n1,2,3\n").is_err());
+    }
+
+    #[test]
+    fn csv_nan_loss_parses() {
+        let mut text = crate::metrics::SYNC_CSV_HEADER.to_string();
+        text.push_str(&sample_row(0, f64::NAN).csv_line());
+        let parsed = parse_sync_csv(&text).unwrap();
+        assert!(parsed[0].train_loss.is_nan());
+    }
+
+    /// Drive a synthetic trace through a real `Tracer` while charging a
+    /// real `SimTime`/`CommStats` the same values, then check the
+    /// analyzer rebuilds the totals bit-exactly — in both export
+    /// formats.
+    fn traced_run() -> (Tracer, SimTime, CommStats) {
+        let mut tracer = Tracer::new(2, false);
+        let mut sim = SimTime::default();
+        let mut comm = CommStats::default();
+        // irrational-ish values so bit-exactness is a real claim
+        let rounds = [
+            (0.1f64.sqrt(), 0.01f64.sqrt(), 1usize, true),
+            (0.2f64.sqrt(), 0.0, 0, true),
+            (0.3f64.sqrt(), 0.03f64.sqrt(), 1, false), // skipped
+            (0.4f64.sqrt(), 0.04f64.sqrt(), 0, true),
+        ];
+        for (i, &(critical, wait, slowest, synced)) in rounds.iter().enumerate() {
+            let t0 = sim.total();
+            if synced {
+                sim.charge_round(critical, wait);
+            } else {
+                sim.charge_skipped_round(critical, wait);
+            }
+            let round_end = t0 + critical;
+            tracer.span(
+                "round",
+                "barrier_wait",
+                0,
+                round_end - wait,
+                round_end,
+                vec![
+                    ("critical_s", ArgV::F(critical)),
+                    ("wait_s", ArgV::F(wait)),
+                    ("slowest", ArgV::U(slowest as u64)),
+                ],
+            );
+            if synced {
+                let (db, dw, ds) = (4096u64, 1024u64, 0.005 * (i + 1) as f64);
+                comm.rounds += 1;
+                comm.bytes += db;
+                comm.wire_bytes += dw;
+                comm.sim_time_s += ds;
+                sim.comm_s = comm.sim_time_s; // assigned, like the driver
+                tracer.begin("sync", "collective", 0, round_end);
+                tracer.end(
+                    "sync",
+                    "collective",
+                    0,
+                    round_end + ds,
+                    vec![
+                        ("wire_bytes", ArgV::U(dw)),
+                        ("bytes", ArgV::U(db)),
+                        ("comm_s", ArgV::F(comm.sim_time_s)),
+                    ],
+                );
+            } else {
+                tracer.instant(
+                    "lifecycle",
+                    "round_skipped",
+                    0,
+                    round_end,
+                    vec![("round", ArgV::U(i as u64))],
+                );
+            }
+            let t_end = sim.total();
+            tracer.begin("round", "checkpoint", 0, t_end);
+            tracer.end("round", "checkpoint", 0, t_end, Vec::new());
+        }
+        // post-loop flush (CoCoD-style deferred correction)
+        comm.bytes += 512;
+        comm.wire_bytes += 128;
+        let ts = sim.total();
+        tracer.span(
+            "sync",
+            "finalize",
+            0,
+            ts,
+            ts,
+            vec![("bytes", ArgV::U(512)), ("wire_bytes", ArgV::U(128))],
+        );
+        (tracer, sim, comm)
+    }
+
+    #[test]
+    fn attribution_is_bit_exact_in_both_formats() {
+        let (tracer, sim, comm) = traced_run();
+        for format in [TraceFormat::Jsonl, TraceFormat::Chrome] {
+            let events = parse_trace(&tracer.export(format)).unwrap();
+            let a = attribute(&events).unwrap();
+            assert_eq!(a.rounds.len(), 4);
+            assert_eq!(a.synced_rounds, 3);
+            assert_eq!(a.skipped_rounds(), 1);
+            a.cross_check(&sim, &comm).unwrap_or_else(|e| panic!("{format:?}: {e}"));
+            assert_eq!(a.total_s().to_bits(), sim.total().to_bits());
+            // straggler table: worker 1 gated round 0 (round 2 was
+            // skipped and does not count), worker 0 gated round 3
+            assert_eq!(a.stragglers.len(), 2);
+            assert!(a.stragglers.iter().any(|s| s.worker == 1 && s.rounds_gated == 1));
+            assert_eq!(a.finalize_bytes, 512);
+            assert_eq!(a.finalize_wire_bytes, 128);
+        }
+    }
+
+    #[test]
+    fn attribution_flags_tampered_totals() {
+        let (tracer, sim, mut comm) = traced_run();
+        comm.bytes += 1;
+        let events = parse_trace(&tracer.export(TraceFormat::Jsonl)).unwrap();
+        let err = attribute(&events).unwrap().cross_check(&sim, &comm).unwrap_err();
+        assert!(err.contains("bytes"), "{err}");
+    }
+
+    #[test]
+    fn attribution_refuses_resumed_traces() {
+        let (mut tracer, sim, comm) = traced_run();
+        tracer.instant("lifecycle", "resume", 0, 0.0, Vec::new());
+        let events = parse_trace(&tracer.export(TraceFormat::Jsonl)).unwrap();
+        let a = attribute(&events).unwrap();
+        assert!(a.resumed);
+        assert!(a.cross_check(&sim, &comm).unwrap_err().contains("resumed"));
+    }
+
+    #[test]
+    fn attribution_rejects_truncated_trace() {
+        let (tracer, _, _) = traced_run();
+        let text = tracer.export(TraceFormat::Jsonl);
+        // drop everything from the last checkpoint span on
+        let cut = text.rfind("\"checkpoint\"").unwrap();
+        let head = &text[..text[..cut].rfind('\n').unwrap() + 1];
+        let err = attribute(&parse_trace(head).unwrap()).unwrap_err();
+        assert!(err.contains("mid-round"), "{err}");
+    }
+
+    #[test]
+    fn health_monitor_flags_nan_once_with_repeat_count() {
+        let mut mon = HealthMonitor::default();
+        let sample = |round, loss| HealthSample {
+            round,
+            loss: Some(loss),
+            worker_variance: Some(0.1),
+            delta_norm_sum: None,
+        };
+        assert!(mon.check(&sample(0, 0.5)).is_empty());
+        let fresh = mon.check(&sample(1, f64::NAN));
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].kind, HealthKind::NonFiniteLoss);
+        assert_eq!(fresh[0].round, 1);
+        assert_eq!(fresh[0].value, "NaN");
+        // repeats are counted but not re-reported
+        assert!(mon.check(&sample(2, f64::NAN)).is_empty());
+        assert!(mon.check(&sample(3, f64::INFINITY)).is_empty());
+        let w = mon.into_warnings();
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].occurrences, 3);
+    }
+
+    #[test]
+    fn health_monitor_flags_spikes_after_history() {
+        let cfg = HealthConfig { spike_sigma: 6.0, min_history: 8 };
+        let mut mon = HealthMonitor::new(cfg);
+        for round in 0..20 {
+            // steady series with a little spread so the z-score is defined
+            let x = 1.0 + 0.01 * (round % 3) as f64;
+            assert!(
+                mon.check(&HealthSample {
+                    round,
+                    loss: Some(x),
+                    worker_variance: None,
+                    delta_norm_sum: None,
+                })
+                .is_empty(),
+                "round {round} should be quiet"
+            );
+        }
+        let fresh = mon.check(&HealthSample {
+            round: 20,
+            loss: Some(50.0),
+            worker_variance: None,
+            delta_norm_sum: None,
+        });
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].kind, HealthKind::LossSpike);
+        assert!(fresh[0].value.contains("z = "), "{}", fresh[0].value);
+    }
+
+    #[test]
+    fn offline_warnings_catch_nan_in_csv() {
+        let mut rows: Vec<CsvRow> = Vec::new();
+        let mut text = crate::metrics::SYNC_CSV_HEADER.to_string();
+        for r in 0..6 {
+            let loss = if r >= 4 { f64::NAN } else { 1.0 / (r + 1) as f64 };
+            text.push_str(&sample_row(r, loss).csv_line());
+        }
+        rows.extend(parse_sync_csv(&text).unwrap());
+        let w = offline_warnings(Some(&rows), None, &HealthConfig::default());
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].kind, HealthKind::NonFiniteLoss);
+        assert_eq!(w[0].round, 4);
+        // the carried NaN rows dedup: round 5 repeats round 4's bits
+        assert_eq!(w[0].occurrences, 1);
+    }
+
+    #[test]
+    fn health_kind_names_round_trip() {
+        for kind in [
+            HealthKind::NonFiniteLoss,
+            HealthKind::LossSpike,
+            HealthKind::NonFiniteVariance,
+            HealthKind::VarianceSpike,
+            HealthKind::NonFiniteDrift,
+            HealthKind::DriftSpike,
+        ] {
+            assert_eq!(HealthKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(HealthKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn run_report_json_has_schema_and_survives_nan() {
+        let mut text = crate::metrics::SYNC_CSV_HEADER.to_string();
+        text.push_str(&sample_row(0, 0.5).csv_line());
+        text.push_str(&sample_row(1, f64::NAN).csv_line());
+        let report =
+            RunReport::build(None, None, Some(&text), &HealthConfig::default()).unwrap();
+        assert!(report.final_loss.unwrap().is_nan());
+        assert_eq!(report.best_loss, Some(0.5));
+        let rendered = report.to_json().to_string();
+        let parsed = Json::parse(&rendered).unwrap();
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some(RUN_REPORT_SCHEMA));
+        let run = parsed.get("run").unwrap();
+        // NaN encodes as a string, keeping the document valid JSON
+        assert_eq!(run.get("final_loss").and_then(Json::as_str), Some("NaN"));
+        assert_eq!(run.get("best_loss").and_then(Json::as_f64), Some(0.5));
+        let health = parsed.get("health").and_then(Json::as_arr).unwrap();
+        assert_eq!(health.len(), 1);
+        assert_eq!(health[0].get("kind").and_then(Json::as_str), Some("non_finite_loss"));
+        assert!(report.to_text().contains("non_finite_loss"));
+    }
+
+    #[test]
+    fn paper_exponent_table_matches_table1() {
+        assert_eq!(paper_exponent("vrl-sgd"), Some(0.5));
+        assert_eq!(paper_exponent("vrl-sgd-w"), Some(0.5));
+        assert_eq!(paper_exponent("local-sgd"), Some(0.75));
+        assert_eq!(paper_exponent("mom-local-sgd"), Some(0.75));
+        assert_eq!(paper_exponent("cocod-sgd"), Some(0.75));
+        assert_eq!(paper_exponent("s-sgd"), Some(1.0));
+        assert_eq!(paper_exponent("easgd"), None);
+    }
+
+    #[test]
+    fn audit_fit_recovers_synthetic_exponent() {
+        let pts: Vec<(f64, f64)> =
+            [512.0, 2048.0, 8192.0].iter().map(|&t: &f64| (t, 2.0 * t.powf(0.75))).collect();
+        let fit = audit_fit("local-sgd", &pts).unwrap();
+        assert!((fit.exponent - 0.75).abs() < 1e-9);
+        assert_eq!(fit.paper_exponent, Some(0.75));
+        assert!(render_audit(&[fit]).contains("local-sgd"));
+    }
+
+    #[test]
+    fn audit_fit_rejects_degenerate_samples() {
+        assert!(audit_fit("x", &[(512.0, 10.0)]).is_err());
+        assert!(audit_fit("x", &[(512.0, 10.0), (512.0, 12.0)]).is_err());
+    }
+
+    #[test]
+    fn audit_from_csv_runs_groups_and_fits() {
+        let mk_run = |t: usize, rounds_to_eps: usize| -> Vec<CsvRow> {
+            let mut text = crate::metrics::SYNC_CSV_HEADER.to_string();
+            let n = t / 5;
+            for r in 0..n {
+                // loss crosses ε exactly at round rounds_to_eps − 1
+                let loss = if r + 1 >= rounds_to_eps { 0.05 } else { 1.0 };
+                let mut row = sample_row(r, loss);
+                row.step = (r + 1) * 5;
+                text.push_str(&row.csv_line());
+            }
+            parse_sync_csv(&text).unwrap()
+        };
+        let runs = vec![
+            ("local-sgd".to_string(), mk_run(500, 10)),
+            ("local-sgd".to_string(), mk_run(4000, 47)),
+        ];
+        let fits = audit_from_csv_runs(&runs, 0.1).unwrap();
+        assert_eq!(fits.len(), 1);
+        // rounds 10 @ T=500, 47 @ T=4000: slope ≈ ln(4.7)/ln(8) ≈ 0.744
+        assert!((fits[0].exponent - 0.744).abs() < 0.01, "p = {}", fits[0].exponent);
+    }
+
+    #[test]
+    fn audit_from_csv_runs_reports_unreached_target() {
+        let mut text = crate::metrics::SYNC_CSV_HEADER.to_string();
+        text.push_str(&sample_row(0, 1.0).csv_line());
+        let runs = vec![("x".to_string(), parse_sync_csv(&text).unwrap())];
+        assert!(audit_from_csv_runs(&runs, 1e-6).unwrap_err().contains("never reached"));
+    }
+
+    /// Full live sweep — minutes of training; `cargo test -- --ignored`
+    /// or the `analyze --audit` CLI path exercise it.
+    #[test]
+    #[ignore]
+    fn audit_sweep_separates_local_and_vrl() {
+        let fits = audit_sweep(&AuditSpec::default()).unwrap();
+        let get = |name: &str| fits.iter().find(|f| f.algorithm == name).unwrap();
+        let local = get("local-sgd");
+        let vrl = get("vrl-sgd");
+        assert!(
+            vrl.exponent < local.exponent,
+            "VRL {} should beat Local {}",
+            vrl.exponent,
+            local.exponent
+        );
+    }
+}

@@ -77,6 +77,11 @@ pub struct RoundTiming {
     /// compute time — the per-round straggler wait recorded in the
     /// metrics history. Zero on a homogeneous fleet.
     pub wait_s: f64,
+    /// Index of the worker that set the critical path this round (the
+    /// one everybody else waited for). `0` on homogeneous and empty
+    /// rounds, where no single worker gated the barrier — disambiguate
+    /// with `wait_s > 0.0` before attributing blame.
+    pub slowest: usize,
 }
 
 impl RoundTiming {
@@ -160,31 +165,33 @@ impl Fleet {
         debug_assert_eq!(present.len(), self.multipliers.len());
         let base = steps as f64 * model.step_s;
         if !present.iter().any(|&p| p) {
-            return RoundTiming { critical_s: base, wait_s: base };
+            return RoundTiming { critical_s: base, wait_s: base, slowest: 0 };
         }
         if self.homogeneous {
             // exact seed behaviour: no draws, no float detours (any
             // non-empty present subset of a homogeneous fleet has
             // critical path = base and zero wait)
-            return RoundTiming { critical_s: base, wait_s: 0.0 };
+            return RoundTiming { critical_s: base, wait_s: 0.0, slowest: 0 };
         }
         self.rounds_sampled += 1;
         let mut max = 0.0f64;
+        let mut slowest = 0usize;
         let mut sum = 0.0f64;
         let mut count = 0usize;
-        for (&m, &here) in self.multipliers.iter().zip(present.iter()) {
+        for (i, (&m, &here)) in self.multipliers.iter().zip(present.iter()).enumerate() {
             if !here {
                 continue;
             }
             let t = base * m * self.stragglers.sample(&mut self.rng);
             if t > max {
                 max = t;
+                slowest = i;
             }
             sum += t;
             count += 1;
         }
         let mean = sum / count as f64;
-        RoundTiming { critical_s: max, wait_s: (max - mean).max(0.0) }
+        RoundTiming { critical_s: max, wait_s: (max - mean).max(0.0), slowest }
     }
 
     /// Rounds sampled so far (checkpoint bookkeeping).
@@ -367,6 +374,7 @@ mod tests {
         let mut fleet = Fleet::new(&spec, 4, stream(2));
         let slow_in = fleet.round_timing(5, &model, &all(4));
         assert_eq!(slow_in.critical_s.to_bits(), (5e-3 * 10.0).to_bits());
+        assert_eq!(slow_in.slowest, 3, "the 10x worker gated the barrier");
         // with the slow worker absent the barrier no longer waits for it
         let slow_out = fleet.round_timing(5, &model, &[true, true, true, false]);
         assert_eq!(slow_out.critical_s.to_bits(), 5e-3f64.to_bits());

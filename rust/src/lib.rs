@@ -343,6 +343,49 @@
 //! `[telemetry]` table with `trace` / `format` / `metrics` /
 //! `wall_clock` keys. See the [`telemetry`] module docs for the full
 //! event taxonomy.)
+//!
+//! Recording is half the story — **analyzing a run** is the other. The
+//! [`diagnose`] module parses the saved streams back and explains them:
+//! [`diagnose::attribute`] rebuilds a per-round compute / barrier /
+//! comm / skipped breakdown plus a straggler league table whose totals
+//! reproduce `SimTime`/`CommStats` *bit-exactly* from the spans alone;
+//! [`diagnose::HealthMonitor`] watches loss, consensus variance and the
+//! Σ‖Δ‖ drift for NaN/Inf and Welford spikes (live inside the driver
+//! via `telemetry.health = true`, or offline over saved files); and the
+//! communication-complexity auditor fits measured rounds-to-ε exponents
+//! against the paper's Table-1 orders:
+//!
+//! ```no_run
+//! use vrl_sgd::diagnose::{attribute, parse_trace, HealthConfig, RunReport};
+//!
+//! let trace = std::fs::read_to_string("reports/run.trace.jsonl").unwrap();
+//! let attr = attribute(&parse_trace(&trace).unwrap()).unwrap();
+//! println!(
+//!     "{:.3}s simulated: {:.3}s compute, {:.3}s comm, {:.3}s barriers",
+//!     attr.total_s(),
+//!     attr.compute_s,
+//!     attr.comm_s,
+//!     attr.wait_s,
+//! );
+//! for s in attr.stragglers.iter().take(3) {
+//!     println!("worker {} gated {} rounds ({:.3}s idle)", s.worker, s.rounds_gated, s.wait_s);
+//! }
+//! // or everything at once, as text + schema'd JSON:
+//! let report = RunReport::build(
+//!     Some(&trace),
+//!     None,
+//!     Some(&std::fs::read_to_string("reports/run.csv").unwrap()),
+//!     &HealthConfig::default(),
+//! )
+//! .unwrap();
+//! println!("{}", report.to_text());
+//! std::fs::write("reports/report.json", report.to_json().to_string()).unwrap();
+//! ```
+//!
+//! (CLI: `vrl-sgd analyze --trace reports/run.trace.jsonl --csv
+//! reports/run.csv --report-json reports/report.json`, plus
+//! `--check-summary` to cross-check a `train --summary-json` file
+//! bit-exactly and `--audit` for the live exponent sweep.)
 
 pub mod analysis;
 pub mod benchutil;
@@ -352,6 +395,7 @@ pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod diagnose;
 pub mod engine;
 pub mod experiments;
 pub mod fabric;
@@ -371,6 +415,9 @@ pub mod prelude {
     pub use crate::config::{AlgorithmKind, NetworkSpec, Partition, TaskKind, TrainSpec};
     pub use crate::coordinator::{Algorithm, TrainOutput};
     pub use crate::data::Dataset;
+    pub use crate::diagnose::{
+        Attribution, HealthConfig, HealthKind, HealthMonitor, HealthWarning, RunReport,
+    };
     pub use crate::engine::StepEngine;
     pub use crate::fabric::{
         ChurnModel, FabricSpec, Fleet, FleetState, ParticipationModel, Roster, RosterState,

@@ -4,6 +4,7 @@
 //!
 //! ```text
 //! vrl-sgd train --config run.toml          # one training run from TOML
+//! vrl-sgd analyze --trace run.trace.jsonl  # explain a finished run
 //! vrl-sgd fig1|fig2|fig5|fig6 [--paper]    # epoch-loss figures
 //! vrl-sgd fig3 [--steps N]                 # Appendix E (figs 3+4)
 //! vrl-sgd table1 [--paper]                 # comm-complexity exponents
@@ -15,9 +16,14 @@
 //! (Hand-rolled argument parsing: the build environment is offline and
 //! carries no clap.)
 
+use std::collections::BTreeMap;
+
 use vrl_sgd::checkpoint::{self, Checkpointer};
 use vrl_sgd::config::{Partition, RunConfig, TrainSpec};
+use vrl_sgd::coordinator::TrainOutput;
+use vrl_sgd::diagnose::{self, AuditSpec, HealthConfig, RunReport};
 use vrl_sgd::experiments::{self, Scale};
+use vrl_sgd::format::Json;
 use vrl_sgd::metrics::write_report;
 use vrl_sgd::trainer::Trainer;
 
@@ -37,6 +43,7 @@ COMMANDS:
         [--compress <none|identity|top-k:<fraction>|sign|int8[:<range>]>]
         [--min-clients <n>] [--churn <off|random:<j>:<l>|plan:...>]
         [--trace <path>] [--trace-format <jsonl|chrome>]
+        [--health] [--summary-json <path>]
                                       run one training job (the optional
                                       [schedule] table maps to lr decay /
                                       stagewise periods; --threads > 1
@@ -79,7 +86,37 @@ COMMANDS:
                                       file for chrome://tracing —
                                       telemetry only observes, the
                                       trajectory stays bitwise
-                                      identical)
+                                      identical; --health arms the live
+                                      convergence monitor — NaN/Inf
+                                      sentinels and Welford spike
+                                      detection on loss / consensus
+                                      variance / Σ‖Δ‖ drift, reported at
+                                      the end and stamped as `health`
+                                      trace instants, trajectory still
+                                      untouched; --summary-json writes
+                                      the final counters as a small JSON
+                                      file `analyze --check-summary` can
+                                      cross-check bit-exactly)
+  analyze [--trace <path>] [--metrics <path>] [--csv <path>]
+          [--report-json <path>] [--check-summary <summary.json>]
+          [--sigma <z>] [--min-history <n>]
+          [--audit] [--audit-runs <algo=csv,...>] [--audit-eps <loss>]
+                                      explain a finished run from its
+                                      saved streams: per-round critical-
+                                      path attribution (compute / comm /
+                                      barrier / skipped + straggler
+                                      league table) whose totals rebuild
+                                      SimTime/CommStats bit-exactly from
+                                      the trace spans alone, offline
+                                      convergence-health replay over the
+                                      CSV/metrics files, and the paper's
+                                      communication-complexity audit:
+                                      --audit runs a live T-sweep
+                                      (Table-1 methodology) and
+                                      --audit-runs fits saved sweep CSVs
+                                      instead; fitted rounds-to-ε
+                                      exponents are reported against the
+                                      paper orders
   fig1|fig2|fig5|fig6 [--paper] [--out <csv>]
                                       epoch-loss figures (1/2: paper k;
                                       5: k/2; 6: 2k)
@@ -186,7 +223,7 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
             Ok(())
         }
         "train" => {
-            let args = Args::parse(rest, &["resume"])?;
+            let args = Args::parse(rest, &["resume", "health"])?;
             let config = args.get("config").ok_or("train needs --config")?;
             let mut cfg = RunConfig::load(config)?;
             cfg.spec.threads = args.parse_num("threads", cfg.spec.threads)?;
@@ -224,6 +261,7 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
                 }
                 cfg.spec.telemetry.format = vrl_sgd::telemetry::TraceFormat::parse(f)?;
             }
+            cfg.spec.telemetry.health |= args.has("health");
             // CLI fabric overrides re-enter validation (worker-count
             // bounds, uplink sanity, participation ranges) before
             // anything runs
@@ -311,12 +349,27 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
                 out.sim_time.wait_s,
                 out.sim_time.skipped_s
             );
+            for w in &out.health_warnings {
+                println!(
+                    "health: [{}] first at round {}, value {} ({} occurrence(s))",
+                    w.kind.name(),
+                    w.round,
+                    w.value,
+                    w.occurrences
+                );
+            }
+            if let Some(path) = args.get("summary-json") {
+                write_report(path, &train_summary_json(&out).to_string())
+                    .map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
             if let Some(path) = cfg.output {
                 write_report(&path, &out.history.sync_csv()).map_err(|e| e.to_string())?;
                 println!("wrote {path}");
             }
             Ok(())
         }
+        "analyze" => analyze_command(rest),
         "fig1" | "fig2" | "fig5" | "fig6" => {
             let args = Args::parse(rest, &["paper"])?;
             let sc = scale(args.has("paper"));
@@ -418,4 +471,172 @@ fn run_command(cmd: &str, rest: &[String]) -> Result<(), String> {
         }
         other => Err(format!("unknown command '{other}'")),
     }
+}
+
+/// Non-finite floats cannot be JSON numbers; string-encode them the
+/// same way the telemetry exporters do.
+fn json_f64(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+/// Schema identifier of the `train --summary-json` document.
+const TRAIN_SUMMARY_SCHEMA: &str = "vrl-sgd.train-summary.v1";
+
+/// The run's final counters as a small JSON document — the exact values
+/// `analyze --check-summary` cross-checks a trace against, so every
+/// float is the bit-precise `f64` the run recorded (`Json` prints
+/// shortest-round-trip floats).
+fn train_summary_json(out: &TrainOutput) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("schema".to_string(), Json::Str(TRAIN_SUMMARY_SCHEMA.into()));
+    m.insert("algorithm".to_string(), Json::Str(out.algorithm.into()));
+    m.insert("initial_loss".to_string(), json_f64(out.initial_loss()));
+    m.insert("final_loss".to_string(), json_f64(out.final_loss()));
+    let best = out
+        .history
+        .sync_rows
+        .iter()
+        .map(|r| r.train_loss)
+        .filter(|l| !l.is_nan())
+        .min_by(|a, b| a.partial_cmp(b).unwrap());
+    if let Some(best) = best {
+        m.insert("best_loss".to_string(), json_f64(best));
+    }
+    m.insert("rounds".to_string(), Json::Num(out.comm.rounds as f64));
+    m.insert("bytes".to_string(), Json::Num(out.comm.bytes as f64));
+    m.insert("wire_bytes".to_string(), Json::Num(out.comm.wire_bytes as f64));
+    m.insert(
+        "compression_ratio".to_string(),
+        json_f64(out.comm.compression_ratio()),
+    );
+    m.insert("skipped_rounds".to_string(), Json::Num(out.skipped_rounds as f64));
+    let mut sim = BTreeMap::new();
+    sim.insert("total_s".to_string(), json_f64(out.sim_time.total()));
+    sim.insert("compute_s".to_string(), json_f64(out.sim_time.compute_s));
+    sim.insert("comm_s".to_string(), json_f64(out.sim_time.comm_s));
+    sim.insert("wait_s".to_string(), json_f64(out.sim_time.wait_s));
+    sim.insert("skipped_s".to_string(), json_f64(out.sim_time.skipped_s));
+    m.insert("sim_time".to_string(), Json::Obj(sim));
+    m.insert(
+        "health_warnings".to_string(),
+        Json::Num(out.health_warnings.len() as f64),
+    );
+    Json::Obj(m)
+}
+
+/// `vrl-sgd analyze` — offline diagnostics over a finished run's
+/// telemetry streams plus the communication-complexity audit.
+fn analyze_command(rest: &[String]) -> Result<(), String> {
+    let args = Args::parse(rest, &["audit"])?;
+    let cfg = HealthConfig {
+        spike_sigma: args.parse_num("sigma", HealthConfig::default().spike_sigma)?,
+        min_history: args.parse_num("min-history", HealthConfig::default().min_history)?,
+    };
+    let read = |key: &str| -> Result<Option<String>, String> {
+        match args.get(key) {
+            None => Ok(None),
+            Some(p) => std::fs::read_to_string(p)
+                .map(Some)
+                .map_err(|e| format!("--{key} {p}: {e}")),
+        }
+    };
+    let trace = read("trace")?;
+    let metrics = read("metrics")?;
+    let csv = read("csv")?;
+    let has_streams = trace.is_some() || metrics.is_some() || csv.is_some();
+    let wants_audit = args.has("audit") || args.has("audit-runs");
+    if !has_streams && !wants_audit {
+        return Err(
+            "analyze needs at least one of --trace / --metrics / --csv (or --audit / \
+             --audit-runs)"
+                .into(),
+        );
+    }
+    if has_streams {
+        let report =
+            RunReport::build(trace.as_deref(), metrics.as_deref(), csv.as_deref(), &cfg)?;
+        print!("{}", report.to_text());
+        if let Some(path) = args.get("report-json") {
+            write_report(path, &report.to_json().to_string()).map_err(|e| e.to_string())?;
+            println!("wrote {path}");
+        }
+        if let Some(path) = args.get("check-summary") {
+            check_summary(&report, path)?;
+        }
+    } else if args.has("report-json") || args.has("check-summary") {
+        return Err("--report-json / --check-summary need --trace / --metrics / --csv".into());
+    }
+    if let Some(spec) = args.get("audit-runs") {
+        let eps: f64 = args.parse_num("audit-eps", 0.1)?;
+        let mut runs = Vec::new();
+        for part in spec.split(',') {
+            let (name, path) = part
+                .split_once('=')
+                .ok_or_else(|| format!("--audit-runs entry '{part}' is not algo=path"))?;
+            let text =
+                std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            runs.push((name.to_string(), diagnose::parse_sync_csv(&text)?));
+        }
+        print!("{}", diagnose::render_audit(&diagnose::audit_from_csv_runs(&runs, eps)?));
+    } else if args.has("audit") {
+        println!("live T-sweep (Table-1 methodology; trains many small runs)...");
+        print!("{}", diagnose::render_audit(&diagnose::audit_sweep(&AuditSpec::default())?));
+    }
+    Ok(())
+}
+
+/// Cross-check the trace-rebuilt totals against a `train
+/// --summary-json` document — bit-exactly, the same `to_bits` equality
+/// `Attribution::cross_check` uses everywhere else.
+fn check_summary(report: &RunReport, path: &str) -> Result<(), String> {
+    let attr = report
+        .attribution
+        .as_ref()
+        .ok_or("--check-summary needs --trace (attribution rebuilds from spans)")?;
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("--check-summary {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    if doc.get("schema").and_then(Json::as_str) != Some(TRAIN_SUMMARY_SCHEMA) {
+        return Err(format!("{path}: not a {TRAIN_SUMMARY_SCHEMA} document"));
+    }
+    if attr.resumed {
+        println!("summary check skipped (resumed trace: totals are partial by construction)");
+        return Ok(());
+    }
+    let sim_doc = doc.get("sim_time").ok_or("summary missing sim_time")?;
+    let f = |key: &str| -> Result<f64, String> {
+        sim_doc
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("summary sim_time missing {key}"))
+    };
+    let u = |key: &str| -> Result<u64, String> {
+        doc.get(key)
+            .and_then(Json::as_usize)
+            .map(|v| v as u64)
+            .ok_or_else(|| format!("summary missing {key}"))
+    };
+    let sim = vrl_sgd::sim::SimTime {
+        compute_s: f("compute_s")?,
+        comm_s: f("comm_s")?,
+        wait_s: f("wait_s")?,
+        skipped_s: f("skipped_s")?,
+    };
+    let comm = vrl_sgd::comm::CommStats {
+        bytes: u("bytes")?,
+        wire_bytes: u("wire_bytes")?,
+        ..Default::default()
+    };
+    attr.cross_check(&sim, &comm)
+        .map_err(|e| format!("summary mismatch against {path}: {e}"))?;
+    println!(
+        "summary check: trace rebuilds compute/comm/barrier/skipped seconds and \
+         logical/wire bytes bit-exactly ({} rounds)",
+        attr.rounds.len()
+    );
+    Ok(())
 }

@@ -27,11 +27,12 @@
 //! | kind | cat | name | lane (tid) | spans / args |
 //! |------|-----|------|-----------|--------------|
 //! | span | `round` | `local_steps` | driver | the round's compute block; `steps`, `workers` |
-//! | span | `round` | `barrier_wait` | driver | straggler idle slice of the critical path |
+//! | span | `round` | `barrier_wait` | driver | straggler idle slice of the critical path; `critical_s`, `wait_s` (exact f64 bits of the charged round), `slowest` (gating worker) |
 //! | span | `sync` | `transmit` | worker *i* | compressor transmit; `residual_norm` when lossy |
-//! | span | `sync` | `collective` | driver | the allreduce/server exchange; `wire_bytes` |
+//! | span | `sync` | `collective` | driver | the allreduce/server exchange; `wire_bytes` + `bytes` (this round's deltas), `comm_s` (exact cumulative comm seconds) |
 //! | span | `round` | `eval` | driver | global loss evaluation; `loss` |
-//! | span | `round` | `checkpoint` | driver | observer/snapshot write block |
+//! | span | `round` | `checkpoint` | driver | observer/snapshot write block (closes every round — the analyzer's round delimiter) |
+//! | span | `sync` | `finalize` | driver | `Algorithm::finalize` flush after the last round; `bytes`, `wire_bytes` deltas (CoCoD's pending correction) |
 //! | instant | `lifecycle` | `run_start` | driver | `algorithm`, `workers`, `steps` |
 //! | instant | `lifecycle` | `resume` | driver | `round`, `step` |
 //! | instant | `lifecycle` | `phase` | driver | `from`, `to`, `epoch` |
@@ -39,6 +40,7 @@
 //! | instant | `lifecycle` | `quorum_miss` | driver | `present`, `min_clients` |
 //! | instant | `lifecycle` | `round_skipped` | driver | `round`, `phase` |
 //! | instant | `lifecycle` | `early_stop` | driver | `round`, `loss` |
+//! | instant | `health` | `health` | driver | convergence-health warning (live monitor, `health = true`); `kind`, `round`, `value` (string — may spell NaN/Inf) |
 //! | instant | `lifecycle` | `run_end` | driver | `rounds`, `sim_s` |
 //!
 //! Lane 0 is the driver; lane `i + 1` is simulated worker `i`. Span
@@ -68,7 +70,9 @@
 //!
 //! Or from the CLI / TOML: `vrl-sgd train --config cfg.toml --trace
 //! run.trace.json --trace-format chrome`, or a `[telemetry]` table with
-//! `trace`, `format`, `metrics`, `wall_clock` keys.
+//! `trace`, `format`, `metrics`, `wall_clock`, `health` keys. Traced or
+//! not, a finished run can be analyzed offline: `vrl-sgd analyze --trace
+//! ... --metrics ...` reads the exports back through [`crate::diagnose`].
 
 use crate::format::json::Json;
 use crate::format::toml_lite::TomlDoc;
@@ -123,10 +127,20 @@ pub struct TelemetrySpec {
     /// Also stamp events with real elapsed time (non-reproducible; off
     /// by default so traces stay bitwise-comparable).
     pub wall_clock: bool,
+    /// Run the live convergence-health monitor
+    /// ([`crate::diagnose::HealthMonitor`]): NaN/Inf sentinels on loss,
+    /// Σ‖Δ‖ drift and `worker_variance`, plus Welford spike detection.
+    /// Warnings always land in `TrainOutput::health_warnings`; with a
+    /// trace configured they are additionally stamped as `health`
+    /// instants. Works standalone (no trace/metrics required) and never
+    /// perturbs the trajectory.
+    pub health: bool,
 }
 
 impl TelemetrySpec {
-    /// Whether any telemetry output is requested.
+    /// Whether any telemetry *output* (trace / metrics file) is
+    /// requested. Deliberately ignores `health`: the monitor reads
+    /// driver state directly and needs no export machinery.
     pub fn enabled(&self) -> bool {
         self.trace.is_some() || self.metrics.is_some()
     }
@@ -135,7 +149,7 @@ impl TelemetrySpec {
     /// guard), and `format` / `wall_clock` without `trace` is an error —
     /// they configure an export that would never happen.
     pub fn from_doc(doc: &TomlDoc) -> Result<TelemetrySpec, String> {
-        const KNOWN: [&str; 4] = ["trace", "format", "metrics", "wall_clock"];
+        const KNOWN: [&str; 5] = ["trace", "format", "metrics", "wall_clock", "health"];
         let keys = doc.keys_under("telemetry");
         if keys.is_empty() {
             return Ok(TelemetrySpec::default());
@@ -173,6 +187,7 @@ impl TelemetrySpec {
             format,
             metrics,
             wall_clock: doc.bool_or("telemetry.wall_clock", false),
+            health: doc.bool_or("telemetry.health", false),
         })
     }
 }
@@ -188,11 +203,23 @@ pub enum ArgV {
     S(String),
 }
 
+/// Non-finite floats cannot be spelled as JSON numbers; encode them as
+/// their Rust display strings (`"NaN"`, `"inf"`, `"-inf"`) so a
+/// diverged run's exports stay valid JSON. `str::parse::<f64>` inverts
+/// the encoding, and the `crate::diagnose` readers accept both forms.
+fn num_or_str(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
 impl ArgV {
     fn to_json(&self) -> Json {
         match self {
             ArgV::U(v) => Json::Num(*v as f64),
-            ArgV::F(v) => Json::Num(*v),
+            ArgV::F(v) => num_or_str(*v),
             ArgV::S(v) => Json::Str(v.clone()),
         }
     }
@@ -458,8 +485,10 @@ impl MetricsRegistry {
             m.insert("counters".to_string(), Json::Obj(c));
         }
         if !self.gauges.is_empty() {
+            // num_or_str: a diverged run's NaN gauges (worker_variance,
+            // delta_norm_sum) must not poison the JSONL stream
             let g: BTreeMap<String, Json> =
-                self.gauges.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect();
+                self.gauges.iter().map(|(k, v)| (k.to_string(), num_or_str(*v))).collect();
             m.insert("gauges".to_string(), Json::Obj(g));
         }
         if !self.hists.is_empty() {
@@ -469,9 +498,9 @@ impl MetricsRegistry {
                 .map(|(k, v)| {
                     let mut s = BTreeMap::new();
                     s.insert("count".to_string(), Json::Num(v.count as f64));
-                    s.insert("sum".to_string(), Json::Num(v.sum));
-                    s.insert("min".to_string(), Json::Num(v.min));
-                    s.insert("max".to_string(), Json::Num(v.max));
+                    s.insert("sum".to_string(), num_or_str(v.sum));
+                    s.insert("min".to_string(), num_or_str(v.min));
+                    s.insert("max".to_string(), num_or_str(v.max));
                     (k.to_string(), Json::Obj(s))
                 })
                 .collect();
@@ -566,7 +595,7 @@ mod tests {
     fn from_doc_parses_full_table() {
         let doc = TomlDoc::parse(
             "[telemetry]\ntrace = \"t.json\"\nformat = \"chrome\"\n\
-             metrics = \"m.jsonl\"\nwall_clock = true\n",
+             metrics = \"m.jsonl\"\nwall_clock = true\nhealth = true\n",
         )
         .unwrap();
         let s = TelemetrySpec::from_doc(&doc).unwrap();
@@ -574,7 +603,19 @@ mod tests {
         assert_eq!(s.format, TraceFormat::Chrome);
         assert_eq!(s.metrics.as_deref(), Some("m.jsonl"));
         assert!(s.wall_clock);
+        assert!(s.health);
         assert!(s.enabled());
+    }
+
+    #[test]
+    fn from_doc_health_stands_alone() {
+        // the monitor needs no export target: health-only is valid but
+        // carries no Telemetry object (enabled() stays false)
+        let doc = TomlDoc::parse("[telemetry]\nhealth = true\n").unwrap();
+        let s = TelemetrySpec::from_doc(&doc).unwrap();
+        assert!(s.health);
+        assert!(!s.enabled());
+        assert!(Telemetry::from_spec(&s, 4).is_none());
     }
 
     #[test]
@@ -700,6 +741,30 @@ mod tests {
                 .as_usize(),
             Some(2)
         );
+    }
+
+    #[test]
+    fn non_finite_values_export_as_strings() {
+        // a diverged run writes NaN/Inf gauges and span args; the
+        // exports must stay parseable JSON, with the value recoverable
+        // via str::parse::<f64>
+        let mut t = Tracer::new(1, false);
+        t.span("metrics", "eval", 0, 0.5, 0.5, vec![("loss", ArgV::F(f64::NAN))]);
+        let line = t.export(TraceFormat::Jsonl);
+        let ev = Json::parse(line.lines().last().unwrap()).unwrap();
+        let loss = ev.get("args").unwrap().get("loss").unwrap().as_str().unwrap();
+        assert!(loss.parse::<f64>().unwrap().is_nan());
+        Json::parse(&t.export(TraceFormat::Chrome)).unwrap();
+
+        let mut r = MetricsRegistry::new();
+        r.gauge_set("worker_variance", f64::NAN);
+        r.observe("straggler_wait_s", f64::INFINITY);
+        r.snapshot_round(0, 0.0);
+        let row = Json::parse(r.to_jsonl().lines().next().unwrap()).unwrap();
+        let g = row.get("gauges").unwrap().get("worker_variance").unwrap();
+        assert!(g.as_str().unwrap().parse::<f64>().unwrap().is_nan());
+        let h = row.get("hists").unwrap().get("straggler_wait_s").unwrap();
+        assert_eq!(h.get("max").unwrap().as_str(), Some("inf"));
     }
 
     #[test]

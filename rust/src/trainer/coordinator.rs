@@ -73,6 +73,7 @@ use crate::checkpoint::{latest_snapshot, Snapshot};
 use crate::comm::Cluster;
 use crate::compress::Compressor;
 use crate::coordinator::{make_algorithm, Algorithm, TrainOutput, WorkerState};
+use crate::diagnose::{HealthMonitor, HealthSample};
 use crate::fabric::{
     Churn, ChurnDelta, ChurnModel, ChurnState, Fleet, Roster, RoundTiming, CHURN_STREAM_LANE,
     FABRIC_STREAM_LANE, PARTICIPATION_STREAM_LANE,
@@ -479,6 +480,19 @@ pub(super) struct Driver {
     /// state — it draws from no RNG stream and never shapes the
     /// trajectory (`rust/tests/telemetry.rs` proves both directions).
     tel: Option<Telemetry>,
+    /// Driver-owned Welford over the `worker_variance` stream — the
+    /// source of the `variance_trend` gauge and the baseline the
+    /// offline analyzer replays, fed on exactly the rounds the
+    /// observers' `on_sync` fires on (every committed round, skipped
+    /// included). Pure f64 bookkeeping over already-computed values.
+    var_tracker: super::ConsensusTracker,
+    /// Live convergence-health monitor (`telemetry.health = true`).
+    /// Deliberately a separate field: health stands alone without any
+    /// export machinery, so it must work when `tel` is `None`. Warnings
+    /// always land in [`TrainOutput::health_warnings`]; they are
+    /// additionally stamped as `health` trace instants when a tracer is
+    /// configured.
+    health: Option<HealthMonitor>,
 }
 
 impl Driver {
@@ -635,6 +649,14 @@ impl Driver {
                 );
             }
         }
+        // the health monitor is equally read-only: it scores signals the
+        // driver already computed, draws no RNG, and so cannot perturb
+        // the trajectory either (`rust/tests/diagnose.rs` proves it)
+        let health = if session.spec.telemetry.health {
+            Some(HealthMonitor::default())
+        } else {
+            None
+        };
         let mean_buf = vec![0.0f32; dim];
         // per-worker scratch: pre-step snapshots (sized only for
         // corrector algorithms) and dense-mode step losses
@@ -671,6 +693,8 @@ impl Driver {
             present_idx,
             idle_mask,
             tel,
+            var_tracker: super::ConsensusTracker::default(),
+            health,
         })
     }
 
@@ -1183,7 +1207,21 @@ impl Driver {
                     vec![("steps", ArgV::U(t.p as u64)), ("workers", ArgV::U(t.m as u64))],
                 );
             }
-            tel.tracer.span("round", "barrier_wait", 0, compute_end, round_end, Vec::new());
+            // the exact f64s just charged to `SimTime` ride as args, so
+            // the offline analyzer can rebuild the time breakdown
+            // bit-exactly (µs-rounded timestamps alone cannot)
+            tel.tracer.span(
+                "round",
+                "barrier_wait",
+                0,
+                compute_end,
+                round_end,
+                vec![
+                    ("critical_s", ArgV::F(t.timing.critical_s)),
+                    ("wait_s", ArgV::F(t.timing.wait_s)),
+                    ("slowest", ArgV::U(t.timing.slowest as u64)),
+                ],
+            );
             if !t.synced {
                 tel.tracer.instant(
                     "lifecycle",
@@ -1267,7 +1305,14 @@ impl Driver {
                     "collective",
                     0,
                     round_end + (comm.sim_time_s - comm_before.sim_time_s),
-                    vec![("wire_bytes", ArgV::U(comm.wire_bytes - comm_before.wire_bytes))],
+                    vec![
+                        ("wire_bytes", ArgV::U(comm.wire_bytes - comm_before.wire_bytes)),
+                        ("bytes", ArgV::U(comm.bytes - comm_before.bytes)),
+                        // cumulative, not a delta: `SimTime::comm_s` is
+                        // *assigned* this value each round, so the last
+                        // collective in a trace carries the exact total
+                        ("comm_s", ArgV::F(comm.sim_time_s)),
+                    ],
                 );
             }
         }
@@ -1283,6 +1328,22 @@ impl Driver {
         };
         for o in self.session.observers.iter_mut() {
             o.on_sync(&sync_info);
+        }
+
+        // consensus-health signals, shared by the metrics registry and
+        // the live monitor and skipped entirely when both are off: the
+        // Σ‖Δ‖ drift plus the driver-owned Welford, fed the same value
+        // on the same rounds as the observers' `on_sync` above so the
+        // `variance_trend` gauge and any registered `ConsensusTracker`
+        // agree bit for bit
+        let watching = self.tel.is_some() || self.health.is_some();
+        let delta_drift: f64 = if watching {
+            self.workers.iter().map(|w| crate::compress::l2_norm(&w.delta)).sum()
+        } else {
+            0.0
+        };
+        if watching {
+            self.var_tracker.observe(variance);
         }
 
         // global train loss at the averaged model; rounds where an
@@ -1310,6 +1371,36 @@ impl Driver {
             self.last_loss
         };
         self.last_loss = train_loss;
+
+        // live health gate: pure reads over signals computed above — a
+        // non-finite sentinel or a Welford spike files one warning per
+        // kind (repeats only bump its occurrence count) and, when a
+        // tracer rides along, stamps a `health` instant into the trace
+        if let Some(mon) = self.health.as_mut() {
+            let fresh = mon.check(&HealthSample {
+                round: self.round,
+                loss: if evaluated { Some(train_loss) } else { None },
+                worker_variance: Some(variance),
+                delta_norm_sum: Some(delta_drift),
+            });
+            if let Some(tel) = self.tel.as_mut() {
+                for w in &fresh {
+                    tel.tracer.instant(
+                        "health",
+                        "health",
+                        0,
+                        t_end,
+                        vec![
+                            ("kind", ArgV::S(w.kind.name().to_string())),
+                            ("round", ArgV::U(w.round as u64)),
+                            // stringified: the offending value may be
+                            // NaN/Inf, which a JSON number cannot spell
+                            ("value", ArgV::S(w.value.clone())),
+                        ],
+                    );
+                }
+            }
+        }
 
         let row = SyncRow {
             round: self.round,
@@ -1341,8 +1432,6 @@ impl Driver {
         // per-round metrics snapshot: cumulative comm gauges, consensus
         // health, and the fleet-shape histograms
         if let Some(tel) = self.tel.as_mut() {
-            let delta_drift: f64 =
-                self.workers.iter().map(|w| crate::compress::l2_norm(&w.delta)).sum();
             let reg = &mut tel.registry;
             reg.counter_add("rounds", 1);
             if t.synced {
@@ -1351,6 +1440,7 @@ impl Driver {
             reg.gauge_set("bytes", comm.bytes as f64);
             reg.gauge_set("wire_bytes", comm.wire_bytes as f64);
             reg.gauge_set("worker_variance", variance);
+            reg.gauge_set("variance_trend", self.var_tracker.trend());
             reg.gauge_set("delta_norm_sum", delta_drift);
             reg.gauge_set("active_members", t.active_members as f64);
             reg.gauge_set("present_workers", t.m as f64);
@@ -1428,9 +1518,31 @@ impl Driver {
     /// allreduce result), close the sinks and assemble the
     /// [`TrainOutput`].
     fn finish(mut self) -> Result<TrainOutput, String> {
+        let comm_before = self.cluster.stats();
         self.algo.finalize(&mut self.workers, &mut self.cluster);
+        let comm_after = self.cluster.stats();
 
         if let Some(tel) = self.tel.as_mut() {
+            // zero-width bookkeeping span that completes the trace's
+            // byte ledger: anything `Algorithm::finalize` charges lands
+            // *after* the last round's span closed, so without this
+            // record the per-round deltas could sum short of
+            // `CommStats`. (Every built-in finalize is currently free —
+            // CoCoD-SGD charges its overlapped allreduce inside the
+            // round — so the deltas here are 0 today; the span is the
+            // ledger's completeness guarantee, not an optimization.)
+            let ts = self.sim_time.total();
+            tel.tracer.span(
+                "sync",
+                "finalize",
+                0,
+                ts,
+                ts,
+                vec![
+                    ("bytes", ArgV::U(comm_after.bytes - comm_before.bytes)),
+                    ("wire_bytes", ArgV::U(comm_after.wire_bytes - comm_before.wire_bytes)),
+                ],
+            );
             tel.tracer.instant(
                 "lifecycle",
                 "run_end",
@@ -1464,6 +1576,11 @@ impl Driver {
             algorithm: self.algo.name(),
             delta_residual,
             skipped_rounds: self.roster.skipped_rounds(),
+            health_warnings: self
+                .health
+                .take()
+                .map(HealthMonitor::into_warnings)
+                .unwrap_or_default(),
         })
     }
 }

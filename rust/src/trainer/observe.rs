@@ -217,19 +217,41 @@ impl ConsensusTracker {
             self.last_worker_variance - self.welford_mean
         }
     }
-}
 
-impl RoundObserver for ConsensusTracker {
-    fn on_sync(&mut self, info: &SyncInfo) {
-        self.syncs += 1;
-        if info.worker_variance > self.peak_worker_variance {
-            self.peak_worker_variance = info.worker_variance;
+    /// Standard score of a fresh observation against the history
+    /// accumulated so far: `(x − mean) / stddev`. Returns `0.0` while
+    /// the spread is zero (fewer than two observations, or a constant
+    /// series), so "no history yet" can never be misread as a spike.
+    /// The live `diagnose::HealthMonitor` and the offline analyzer both
+    /// score through this one function, so their spike verdicts agree.
+    pub fn zscore(&self, x: f64) -> f64 {
+        let var = self.worker_variance_variance();
+        if var <= 0.0 {
+            0.0
+        } else {
+            (x - self.welford_mean) / var.sqrt()
         }
-        let x = info.worker_variance;
+    }
+
+    /// Fold one raw observation into the streaming accumulators — the
+    /// Welford core [`RoundObserver::on_sync`] runs, exposed so the
+    /// health monitor can track other series (loss, Σ‖Δ‖ drift) with
+    /// the identical estimator.
+    pub fn observe(&mut self, x: f64) {
+        self.syncs += 1;
+        if x > self.peak_worker_variance {
+            self.peak_worker_variance = x;
+        }
         let d = x - self.welford_mean;
         self.welford_mean += d / self.syncs as f64;
         self.welford_m2 += d * (x - self.welford_mean);
         self.last_worker_variance = x;
+    }
+}
+
+impl RoundObserver for ConsensusTracker {
+    fn on_sync(&mut self, info: &SyncInfo) {
+        self.observe(info.worker_variance);
     }
 
     fn on_round_end(&mut self, info: &RoundInfo) {
@@ -477,6 +499,40 @@ mod tests {
         assert_eq!(one.mean_worker_variance(), 3.0);
         assert_eq!(one.worker_variance_variance(), 0.0, "n=1 has no spread");
         assert_eq!(one.trend(), 0.0, "one sample sits on its own mean");
+    }
+
+    #[test]
+    fn zscore_scores_against_history() {
+        let sync = |round: usize, var: f64| SyncInfo {
+            round,
+            step: (round + 1) * 10,
+            period: 10,
+            lr: 0.1,
+            worker_variance: var,
+            present_workers: 4,
+            comm: CommStats::default(),
+        };
+        let mut t = ConsensusTracker::default();
+        assert_eq!(t.zscore(1e9), 0.0, "no history: never a spike");
+        t.observe(1.0);
+        assert_eq!(t.zscore(1e9), 0.0, "one sample: still no spread");
+        for x in [3.0, 1.0, 3.0, 1.0, 3.0, 1.0, 3.0] {
+            t.observe(x);
+        }
+        // mean 2, population stddev 1 → a fresh 8.0 scores 6 sigma
+        assert!((t.zscore(8.0) - 6.0).abs() < 1e-9, "z {}", t.zscore(8.0));
+        assert!(t.zscore(2.0).abs() < 1e-9);
+        // observe() and on_sync() drive the identical accumulators
+        let mut via_sync = ConsensusTracker::default();
+        for (i, x) in [1.0, 3.0, 1.0, 3.0].iter().enumerate() {
+            via_sync.on_sync(&sync(i, *x));
+        }
+        let mut via_observe = ConsensusTracker::default();
+        for x in [1.0, 3.0, 1.0, 3.0] {
+            via_observe.observe(x);
+        }
+        assert_eq!(via_sync.zscore(5.0).to_bits(), via_observe.zscore(5.0).to_bits());
+        assert_eq!(via_sync.trend().to_bits(), via_observe.trend().to_bits());
     }
 
     #[test]

@@ -81,6 +81,70 @@ pub fn assert_identical(a: &TrainOutput, b: &TrainOutput, ctx: &str) {
     assert_eq!(a.skipped_rounds, b.skipped_rounds, "{ctx}: skipped rounds differ");
 }
 
+/// NaN-tolerant full bitwise comparator: like [`assert_identical`] but
+/// comparing every float by its bit pattern, so runs whose trajectories
+/// legitimately contain NaN/Inf (the diagnose poison drills) can still
+/// be proven byte-for-byte equal — `PartialEq` would report `NaN ≠
+/// NaN` on identical outputs.
+pub fn assert_identical_bits(a: &TrainOutput, b: &TrainOutput, ctx: &str) {
+    assert_eq!(a.comm, b.comm, "{ctx}: comm counters differ");
+    assert_eq!(a.sim_time, b.sim_time, "{ctx}: simulated time differs");
+    assert_eq!(a.algorithm, b.algorithm, "{ctx}: algorithm name differs");
+    assert_eq!(a.skipped_rounds, b.skipped_rounds, "{ctx}: skipped rounds differ");
+    assert_eq!(
+        a.delta_residual.to_bits(),
+        b.delta_residual.to_bits(),
+        "{ctx}: delta residual differs"
+    );
+    assert_eq!(a.final_params.len(), b.final_params.len(), "{ctx}: param dim differs");
+    for (i, (x, y)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: final param {i} differs");
+    }
+    assert_eq!(
+        a.history.initial_loss.to_bits(),
+        b.history.initial_loss.to_bits(),
+        "{ctx}: initial loss differs"
+    );
+    assert_eq!(a.history.sync_rows.len(), b.history.sync_rows.len(), "{ctx}: round count");
+    for (ra, rb) in a.history.sync_rows.iter().zip(b.history.sync_rows.iter()) {
+        let t = format!("{ctx} round {}", ra.round);
+        assert_eq!(ra.round, rb.round, "{t}");
+        assert_eq!(ra.step, rb.step, "{t}: step");
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "{t}: loss");
+        assert_eq!(ra.worker_variance.to_bits(), rb.worker_variance.to_bits(), "{t}: var");
+        assert_eq!(ra.comm_rounds, rb.comm_rounds, "{t}: collective count");
+        assert_eq!(ra.comm_bytes, rb.comm_bytes, "{t}: bytes");
+        assert_eq!(ra.sim_time_s.to_bits(), rb.sim_time_s.to_bits(), "{t}: sim time");
+        assert_eq!(
+            ra.straggler_wait_s.to_bits(),
+            rb.straggler_wait_s.to_bits(),
+            "{t}: wait"
+        );
+        assert_eq!(ra.present_workers, rb.present_workers, "{t}: present workers");
+        assert_eq!(ra.skipped_rounds, rb.skipped_rounds, "{t}: skipped rounds");
+        assert_eq!(ra.compressed_bytes, rb.compressed_bytes, "{t}: wire bytes");
+        assert_eq!(ra.phase, rb.phase, "{t}: phase");
+        assert_eq!(ra.epoch, rb.epoch, "{t}: epoch");
+        assert_eq!(ra.active_members, rb.active_members, "{t}: active members");
+    }
+    assert_eq!(a.history.dense_rows.len(), b.history.dense_rows.len(), "{ctx}: dense rows");
+    for (da, db) in a.history.dense_rows.iter().zip(b.history.dense_rows.iter()) {
+        let t = format!("{ctx} dense step {}", da.step);
+        assert_eq!(da.step, db.step, "{t}");
+        assert_eq!(da.mean_loss.to_bits(), db.mean_loss.to_bits(), "{t}: mean loss");
+        assert_eq!(
+            da.worker_variance.to_bits(),
+            db.worker_variance.to_bits(),
+            "{t}: variance"
+        );
+        assert_eq!(
+            da.dist_sq_to_target.map(f64::to_bits),
+            db.dist_sq_to_target.map(f64::to_bits),
+            "{t}: dist to target"
+        );
+    }
+}
+
 /// Run-pair builder: construct both sides, run them, compare bitwise.
 pub fn assert_runs_identical(
     ctx: &str,

@@ -1,0 +1,256 @@
+//! Diagnose-subsystem drills (`diagnose`), proven on the shared
+//! `tests/common` harness:
+//!
+//! * **Poison is detected** — a worker whose engine injects `NaN` into
+//!   its parameters mid-run trips the live convergence-health monitor:
+//!   the run completes, files structured non-finite warnings in
+//!   `TrainOutput::health_warnings`, stamps a `health` instant into the
+//!   trace, and the offline `RunReport` over the exported streams
+//!   re-detects the same poisoning.
+//! * **Monitoring never perturbs** — for all seven algorithms under
+//!   both executors, the poisoned trajectory with `health = true` is
+//!   **bitwise identical** (NaN-safe, via `to_bits`) to the poisoned
+//!   trajectory with no monitoring at all.
+//! * **Attribution is bit-exact on real runs** — replaying the trace of
+//!   a churning, compressing, heterogeneous-fabric run reconstructs the
+//!   `SimTime` decomposition and `CommStats` byte ledger exactly
+//!   (`cross_check`), including CoCoD-SGD's overlapped communication
+//!   and the post-loop `finalize` ledger span.
+
+mod common;
+
+use common::{assert_identical_bits, temp_dir};
+use std::path::Path;
+use vrl_sgd::compress::CompressorKind;
+use vrl_sgd::diagnose::{attribute, parse_trace, HealthConfig, HealthKind, RunReport};
+use vrl_sgd::engine::{build_pure_engines, StepEngine};
+use vrl_sgd::prelude::*;
+use vrl_sgd::rng::Pcg32;
+
+const SEED: u64 = 23;
+const STEPS: usize = 60;
+const POISON_STEP: usize = 30;
+
+/// Delegating engine that corrupts its worker's parameters with a `NaN`
+/// after one chosen local step — the smallest realistic model of a
+/// diverging / faulting worker. Everything else passes through, so the
+/// poisoned run is deterministic and identical across executors.
+struct PoisonEngine {
+    inner: Box<dyn StepEngine>,
+    step: usize,
+    poison_at: Option<usize>,
+}
+
+impl StepEngine for PoisonEngine {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+        self.inner.init_params(rng)
+    }
+
+    fn sgd_step(
+        &mut self,
+        params: &mut [f32],
+        delta: &[f32],
+        gamma: f32,
+        weight_decay: f32,
+        rng: &mut Pcg32,
+    ) -> f32 {
+        let loss = self.inner.sgd_step(params, delta, gamma, weight_decay, rng);
+        if self.poison_at == Some(self.step) {
+            params[0] = f32::NAN;
+        }
+        self.step += 1;
+        loss
+    }
+
+    fn eval_loss(&mut self, params: &[f32]) -> f64 {
+        self.inner.eval_loss(params)
+    }
+
+    fn shard_len(&self) -> usize {
+        self.inner.shard_len()
+    }
+
+    fn full_grad(&mut self, params: &[f32], out: &mut [f32]) -> bool {
+        self.inner.full_grad(params, out)
+    }
+}
+
+/// The standard 4-worker softmax trainer with worker 0's engine
+/// poisoned at [`POISON_STEP`].
+fn poisoned_trainer(algorithm: AlgorithmKind, threads: usize) -> Trainer {
+    let spec = common::spec(algorithm, SEED, STEPS);
+    let (engines, _) =
+        build_pure_engines(&common::softmax_task(), Partition::LabelSharded, &spec).unwrap();
+    let engines: Vec<Box<dyn StepEngine>> = engines
+        .into_iter()
+        .enumerate()
+        .map(|(i, inner)| {
+            Box::new(PoisonEngine {
+                inner,
+                step: 0,
+                poison_at: (i == 0).then_some(POISON_STEP),
+            }) as Box<dyn StepEngine>
+        })
+        .collect();
+    Trainer::from_engines(engines)
+        .spec(spec)
+        .partition(Partition::LabelSharded)
+        .parallelism(threads)
+}
+
+fn read(path: &str) -> String {
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+fn full_telemetry(dir: &Path, tag: &str) -> TelemetrySpec {
+    TelemetrySpec {
+        trace: Some(dir.join(format!("{tag}.trace.jsonl")).to_string_lossy().into_owned()),
+        format: TraceFormat::Jsonl,
+        metrics: Some(dir.join(format!("{tag}.metrics.jsonl")).to_string_lossy().into_owned()),
+        wall_clock: false,
+        health: true,
+    }
+}
+
+#[test]
+fn poisoned_worker_is_detected_live_and_offline() {
+    let dir = temp_dir("diag_poison");
+    let tel = full_telemetry(&dir, "poison");
+    let out = poisoned_trainer(AlgorithmKind::VrlSgd, 1).telemetry(tel.clone()).run().unwrap();
+
+    // the run survives the NaN and the final loss is indeed poisoned
+    assert!(
+        out.history.final_loss().is_nan(),
+        "poison must reach the global loss (got {})",
+        out.history.final_loss()
+    );
+
+    // live monitor filed non-finite warnings, first occurrence at or
+    // after the poisoned round, with repeats collapsed into counts
+    assert!(!out.health_warnings.is_empty(), "live monitor must flag the poisoned run");
+    assert!(
+        out.health_warnings.iter().any(|w| matches!(
+            w.kind,
+            HealthKind::NonFiniteLoss | HealthKind::NonFiniteVariance
+        )),
+        "expected a non-finite sentinel, got {:?}",
+        out.health_warnings
+    );
+    for w in &out.health_warnings {
+        assert!(w.round * 5 >= POISON_STEP, "warning {w:?} predates the poison");
+        assert!(w.occurrences >= 1);
+    }
+
+    // the trace carries a `health` instant naming the same kind
+    let trace = read(tel.trace.as_deref().unwrap());
+    let health_lines: Vec<&str> = trace
+        .lines()
+        .filter(|l| l.contains("\"cat\":\"health\"") && l.contains("\"name\":\"health\""))
+        .collect();
+    assert!(!health_lines.is_empty(), "no health instant in the trace");
+    assert!(
+        health_lines.iter().any(|l| l.contains("non_finite")),
+        "health instants must name a non-finite kind: {health_lines:?}"
+    );
+
+    // and the offline report over the exported streams re-detects it
+    let metrics = read(tel.metrics.as_deref().unwrap());
+    let csv = out.history.sync_csv();
+    let report =
+        RunReport::build(Some(&trace), Some(&metrics), Some(&csv), &HealthConfig::default())
+            .unwrap();
+    assert!(
+        report.health.iter().any(|w| matches!(
+            w.kind,
+            HealthKind::NonFiniteLoss | HealthKind::NonFiniteVariance
+        )),
+        "offline replay must re-detect the poison, got {:?}",
+        report.health
+    );
+    assert!(report.final_loss.unwrap().is_nan());
+    // best_loss skips the NaN tail and stays finite
+    assert!(report.best_loss.unwrap().is_finite());
+    // the attribution side still cross-checks bit-exactly — health
+    // events must not disturb the byte/time ledger
+    report.attribution.as_ref().unwrap().cross_check(&out.sim_time, &out.comm).unwrap();
+    let json = report.to_json().to_string();
+    assert!(json.contains("vrl-sgd.run-report.v1"));
+    vrl_sgd::format::json::Json::parse(&json)
+        .unwrap_or_else(|e| panic!("report JSON must stay parseable despite NaN: {e}"));
+}
+
+#[test]
+fn health_monitoring_never_perturbs_poisoned_runs() {
+    for algorithm in AlgorithmKind::ALL {
+        for threads in [1, 4] {
+            let tag = format!("monitor on vs off: {} t{threads}", algorithm.name());
+            let plain = poisoned_trainer(algorithm, threads).run().unwrap();
+            let watched = poisoned_trainer(algorithm, threads)
+                .telemetry(TelemetrySpec { health: true, ..TelemetrySpec::default() })
+                .run()
+                .unwrap();
+            assert_identical_bits(&plain, &watched, &tag);
+            // sanity: the monitored side did observe the poison (except
+            // algorithms whose averaging may dodge worker 0's shard —
+            // the loss NaN always propagates through the mean)
+            assert!(!watched.health_warnings.is_empty(), "{tag}: poison unnoticed");
+            assert!(plain.health_warnings.is_empty(), "{tag}: unmonitored run warned");
+        }
+    }
+}
+
+#[test]
+fn attribution_cross_checks_a_churning_compressed_run() {
+    let dir = temp_dir("diag_xcheck");
+    let tel = full_telemetry(&dir, "elastic");
+    let out = common::elastic_trainer(AlgorithmKind::VrlSgd, 1, SEED, 200)
+        .fabric(common::hetero_fabric())
+        .compression(CompressorKind::TopK { fraction: 0.25 })
+        .telemetry(tel.clone())
+        .run()
+        .unwrap();
+    let attr = attribute(&parse_trace(&read(tel.trace.as_deref().unwrap())).unwrap()).unwrap();
+    attr.cross_check(&out.sim_time, &out.comm).unwrap();
+    assert_eq!(attr.rounds.len() as u64, out.history.sync_rows.len() as u64);
+    assert!(
+        !attr.stragglers.is_empty(),
+        "a heterogeneous fabric must gate at least one round on a straggler"
+    );
+    // straggler blame is conserved: per-worker waits sum to the wait
+    // charged by synced rounds (skipped rounds gate on nobody)
+    let synced_wait: f64 =
+        attr.rounds.iter().filter(|r| r.synced).map(|r| r.wait_s).sum();
+    let blamed: f64 = attr.stragglers.iter().map(|s| s.wait_s).sum();
+    assert!(
+        (blamed - synced_wait).abs() <= 1e-9 * synced_wait.abs().max(1.0),
+        "straggler ledger ({blamed}) must sum to synced-round wait ({synced_wait})"
+    );
+}
+
+#[test]
+fn attribution_accounts_cocod_overlapped_communication() {
+    let dir = temp_dir("diag_cocod");
+    let tel = full_telemetry(&dir, "cocod");
+    let out = common::trainer(AlgorithmKind::CocodSgd, 1, SEED, STEPS)
+        .telemetry(tel.clone())
+        .run()
+        .unwrap();
+    let trace = read(tel.trace.as_deref().unwrap());
+    // the post-loop ledger-completeness span is present...
+    assert!(
+        trace.lines().any(|l| l.contains("\"name\":\"finalize\"")),
+        "trace must close its byte ledger with a finalize span"
+    );
+    let attr = attribute(&parse_trace(&trace).unwrap()).unwrap();
+    // ...and carries zero bytes: CoCoD launches *and* charges its
+    // overlapped allreduce inside the round, so every byte lands in a
+    // per-round collective span and the cross-check still closes
+    assert_eq!(attr.finalize_bytes, 0);
+    assert_eq!(attr.finalize_wire_bytes, 0);
+    assert!(attr.bytes > 0, "CoCoD must still move bytes during the run");
+    attr.cross_check(&out.sim_time, &out.comm).unwrap();
+}

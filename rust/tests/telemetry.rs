@@ -35,6 +35,7 @@ fn full_telemetry(dir: &Path, tag: &str, format: TraceFormat) -> TelemetrySpec {
         format,
         metrics: Some(dir.join(format!("{tag}.metrics.jsonl")).to_string_lossy().into_owned()),
         wall_clock: false,
+        health: false,
     }
 }
 
