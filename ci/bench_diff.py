@@ -3,6 +3,7 @@
 
 Usage:
     bench_diff.py BASELINE.json FRESH.json [--threshold 1.25] [--warn-only]
+        [--required NAME]... [--required-threshold 1.3]
 
 Both files are arrays of entries as emitted by `benchutil::JsonReport`:
 
@@ -12,7 +13,9 @@ Both files are arrays of entries as emitted by `benchutil::JsonReport`:
 For every case name present in both files with a measured `ns_per_op`,
 the ratio fresh/baseline is computed; ratios above --threshold are
 regressions, ratios below 1/threshold are reported as improvements
-(informational). Exit status:
+(informational). Cases named via repeatable `--required` flags are the
+hot-kernel gate: they compare against the (tighter)
+`--required-threshold` instead. Exit status:
 
     0  no regressions (or --warn-only / un-measured baseline)
     1  at least one regression beyond the threshold
@@ -50,7 +53,9 @@ def load(path):
 
 def main(argv):
     threshold = 1.25
+    required_threshold = 1.3
     warn_only = False
+    required = set()
     paths = []
     i = 0
     while i < len(argv):
@@ -62,6 +67,19 @@ def main(argv):
             except (IndexError, ValueError):
                 print("bench_diff: --threshold needs a number", file=sys.stderr)
                 return 2
+        elif a == "--required-threshold":
+            i += 1
+            try:
+                required_threshold = float(argv[i])
+            except (IndexError, ValueError):
+                print("bench_diff: --required-threshold needs a number", file=sys.stderr)
+                return 2
+        elif a == "--required":
+            i += 1
+            if i >= len(argv):
+                print("bench_diff: --required needs a case name", file=sys.stderr)
+                return 2
+            required.add(argv[i])
         elif a == "--warn-only":
             warn_only = True
         elif a.startswith("--"):
@@ -70,10 +88,11 @@ def main(argv):
         else:
             paths.append(a)
         i += 1
-    if len(paths) != 2 or threshold <= 1.0:
+    if len(paths) != 2 or threshold <= 1.0 or required_threshold <= 1.0:
         print(
             "usage: bench_diff.py BASELINE.json FRESH.json "
-            "[--threshold 1.25] [--warn-only]",
+            "[--threshold 1.25] [--warn-only] "
+            "[--required NAME]... [--required-threshold 1.3]",
             file=sys.stderr,
         )
         return 2
@@ -95,6 +114,9 @@ def main(argv):
     for name in added:
         print(f"  NEW       {name}  (no baseline)")
 
+    for name in sorted(required - set(base)):
+        print(f"  note      required case '{name}' not in baseline")
+
     regressions = []
     for name in sorted(set(base) & set(fresh)):
         b, f = base[name], fresh[name]
@@ -104,19 +126,21 @@ def main(argv):
         if b_ns <= 0.0:
             continue
         ratio = f_ns / b_ns
-        if ratio > threshold:
+        gate = required_threshold if name in required else threshold
+        tag = " (required)" if name in required else ""
+        if ratio > gate:
             regressions.append((name, b_ns, f_ns, ratio))
-            print(f"  REGRESSED {name}: {b_ns:.1f} ns -> {f_ns:.1f} ns ({ratio:.2f}x)")
-        elif ratio < 1.0 / threshold:
+            print(
+                f"  REGRESSED {name}: {b_ns:.1f} ns -> {f_ns:.1f} ns "
+                f"({ratio:.2f}x > {gate:.2f}x{tag})"
+            )
+        elif ratio < 1.0 / gate:
             print(f"  improved  {name}: {b_ns:.1f} ns -> {f_ns:.1f} ns ({ratio:.2f}x)")
         else:
             print(f"  ok        {name}: {b_ns:.1f} ns -> {f_ns:.1f} ns ({ratio:.2f}x)")
 
     if regressions:
-        print(
-            f"bench_diff: {len(regressions)} case(s) regressed beyond "
-            f"{threshold:.2f}x"
-        )
+        print(f"bench_diff: {len(regressions)} case(s) regressed beyond their gate")
         return 0 if warn_only else 1
     print("bench_diff: no regressions")
     return 0

@@ -53,6 +53,10 @@ fn main() {
     println!();
 
     // --- N-way averaging (the sync collective) ---------------------------
+    // The `refs` view is built once, outside the timed closure: the
+    // driver holds its row views across the round too, so timing the
+    // Vec<&[f32]> rebuild would overstate the kernel cost at small P
+    // (and at N=1024 the 8 KiB of pointer pushes would dominate).
     for &(n, p) in &[(8usize, 100_000usize), (8, 1_000_000), (32, 1_000_000)] {
         let rows_data: Vec<Vec<f32>> = (0..n)
             .map(|i| {
@@ -61,10 +65,37 @@ fn main() {
                 v
             })
             .collect();
+        let refs: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
         let mut out = vec![0.0f32; p];
         let r = bench(&format!("mean_rows N={n} P={p}"), 3, 20, || {
-            let refs: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
             tensor::mean_rows(&mut out, &refs);
+            std::hint::black_box(&out);
+        });
+        report_throughput(&r, (n * p * 4) as f64 / 1e9, "GB read");
+        json.push_throughput(&r, (n * p * 4) as f64 / 1e9, "GB read");
+    }
+    println!();
+
+    // --- sharded hierarchical averaging (the huge-fleet sync path) --------
+    // Same reduction through the ⌈√N⌉-shard tree (`mean_rows_sharded`),
+    // at the fleet shapes where the flat loop's N concurrent row streams
+    // thrash L1: N=32 transformer-scale rows, and N=1024 small rows (the
+    // present set of a large federated round). Lanes follow the host like
+    // the driver does (`Cluster::set_parallelism(executor.lanes())`);
+    // with one core this times the sequential tiled tree itself.
+    let lanes = std::thread::available_parallelism().map_or(1, |n| n.get());
+    for &(n, p) in &[(32usize, 1_000_000usize), (1024, 20_000)] {
+        let rows_data: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let mut v = vec![0.0f32; p];
+                Pcg32::new(i as u64, 0).fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let refs: Vec<&[f32]> = rows_data.iter().map(|r| r.as_slice()).collect();
+        let mut out = vec![0.0f32; p];
+        let r = bench(&format!("mean_rows sharded N={n} P={p}"), 3, 20, || {
+            tensor::mean_rows_sharded(&mut out, &refs, lanes);
             std::hint::black_box(&out);
         });
         report_throughput(&r, (n * p * 4) as f64 / 1e9, "GB read");
@@ -83,6 +114,9 @@ fn main() {
             .collect();
         let mut rows = template.clone();
         let r = bench(&format!("ring_allreduce_sum N={n} P={p}"), 1, 10, || {
+            // reset is part of the timed loop by necessity (the reduce is
+            // in-place); clone_from reuses the allocations so the cost is
+            // a memcpy, not a malloc storm
             rows.clone_from(&template);
             vrl_sgd::comm::allreduce::ring_allreduce_sum(&mut rows);
             std::hint::black_box(&rows);
@@ -149,6 +183,91 @@ fn main() {
         });
         report_throughput(&r, (n * p * 4) as f64 / 1e9, "GB");
         json.push_throughput(&r, (n * p * 4) as f64 / 1e9, "GB");
+    }
+    println!();
+
+    // --- sparse huge fleet: lazy per-worker state ---------------------------
+    // The huge-fleet acceptance case: 100k workers, RoundRobin admitting
+    // 256 per round. Per-worker state (params + Δ) materializes on first
+    // participation only, so the run holds state ∝ the union of present
+    // sets — the assert below pins that down, making the bench fail loudly
+    // if eager allocation ever creeps back in.
+    {
+        use vrl_sgd::engine::StepEngine;
+        use vrl_sgd::fabric::ParticipationModel;
+
+        /// d-dim noisy quadratic ½‖x‖²: one normal draw per step, O(d)
+        /// work, O(1) state — cheap enough that the bench times the
+        /// driver's fleet bookkeeping, not the model.
+        struct TinyQuad {
+            dim: usize,
+        }
+        impl StepEngine for TinyQuad {
+            fn dim(&self) -> usize {
+                self.dim
+            }
+            fn init_params(&self, rng: &mut Pcg32) -> Vec<f32> {
+                let mut p = vec![0.0f32; self.dim];
+                rng.fill_normal(&mut p, 1.0);
+                p
+            }
+            fn sgd_step(
+                &mut self,
+                params: &mut [f32],
+                delta: &[f32],
+                gamma: f32,
+                weight_decay: f32,
+                rng: &mut Pcg32,
+            ) -> f32 {
+                let noise = rng.next_normal() * 0.01;
+                let mut loss = 0.0f64;
+                for (x, d) in params.iter_mut().zip(delta) {
+                    let g = *x + noise + weight_decay * *x;
+                    loss += 0.5 * (*x as f64) * (*x as f64);
+                    *x -= gamma * (g - *d);
+                }
+                loss as f32
+            }
+            fn eval_loss(&mut self, params: &[f32]) -> f64 {
+                params.iter().map(|&x| 0.5 * x as f64 * x as f64).sum()
+            }
+            fn shard_len(&self) -> usize {
+                1
+            }
+        }
+
+        let (n, present, dim) = (100_000usize, 256usize, 64usize);
+        let train = || {
+            let engines: Vec<Box<dyn StepEngine>> =
+                (0..n).map(|_| Box::new(TinyQuad { dim }) as Box<dyn StepEngine>).collect();
+            Trainer::from_engines(engines)
+                .algorithm(AlgorithmKind::VrlSgd)
+                .workers(n)
+                .period(4)
+                .lr(0.05)
+                .steps(40)
+                .seed(13)
+                .eval_every(usize::MAX)
+                .participation(ParticipationModel::RoundRobin { count: present })
+                .run()
+                .expect("bench run")
+        };
+        let r = bench(&format!("sparse fleet N={n} present={present}"), 1, 3, || {
+            std::hint::black_box(train());
+        });
+        report(&r);
+        json.push(&r);
+        let out = train();
+        let rounds = out.history.sync_rows.len();
+        assert_eq!(
+            out.materialized_workers,
+            (present * rounds).min(n),
+            "lazy fleet materialized more workers than it sampled!"
+        );
+        println!(
+            "  materialized {}/{n} workers over {rounds} rounds (state ∝ present set)",
+            out.materialized_workers
+        );
     }
     println!();
 

@@ -70,13 +70,21 @@ use std::path::{Path, PathBuf};
 /// `phase` / `epoch` / `active_members` columns in `history`. v6: the
 /// cumulative `skipped_s` sub-counter appended to the `time` section,
 /// so the end-of-run compute/comm/wait/skipped breakdown survives a
-/// resume.)
-pub const SNAP_VERSION: u32 = 6;
+/// resume. v7: the shared `params0` section plus the lazy worker
+/// encoding — a worker the run never materialized is stored as an
+/// empty-params/empty-delta entry and re-derived from `params0` on
+/// resume, so snapshot size scales with the materialized set, not the
+/// fleet.)
+pub const SNAP_VERSION: u32 = 7;
 
-/// One worker's serialized state.
+/// One worker's serialized state. A worker the run never materialized
+/// (lazy — see [`WorkerState::lazy`]) is encoded with empty `params`
+/// and `delta`: it is defined to sit at the snapshot's shared
+/// [`Snapshot::params0`] with Δ = 0, so only its RNG stream needs
+/// storing.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerSnap {
-    /// Local model `x_i`.
+    /// Local model `x_i` (empty for a lazy worker).
     pub params: Vec<f32>,
     /// Variance-reduction correction `Δ_i`.
     pub delta: Vec<f32>,
@@ -137,6 +145,10 @@ pub struct Snapshot {
     /// elastic run resumes bitwise from any phase. Static runs carry
     /// [`crate::trainer::CoordState::initial`].
     pub coord: crate::trainer::CoordState,
+    /// The shared initial model x⁰ — the point every lazy
+    /// (empty-encoded) worker entry is defined to sit at with Δ = 0.
+    /// Always length `dim`, even when every worker materialized.
+    pub params0: Vec<f32>,
     /// Metric history recorded so far.
     pub history: History,
 }
@@ -170,6 +182,7 @@ impl Snapshot {
             fabric: state.fabric,
             roster: state.participation,
             coord: state.coord.clone(),
+            params0: state.params0.to_vec(),
             history: state.history.clone(),
         }
     }
@@ -300,6 +313,13 @@ impl Snapshot {
                 s.workers
             ));
         }
+        if self.params0.len() != dim {
+            errs.push(format!(
+                "snapshot params0 has dim {} for engine dim {dim} \
+                 (lazy workers could not be re-derived)",
+                self.params0.len()
+            ));
+        }
         if self.coord.membership.len() != s.workers {
             errs.push(format!(
                 "snapshot membership ledger has {} entries for {} workers",
@@ -315,7 +335,9 @@ impl Snapshot {
     }
 
     /// Restore per-worker state into freshly built workers (correctors
-    /// already attached by the session).
+    /// already attached by the session — for exactly the snapshot's
+    /// materialized entries). A lazy entry (empty params *and* delta)
+    /// restores only the RNG stream and leaves the live worker lazy.
     pub fn apply_workers(&self, workers: &mut [WorkerState]) -> Result<(), String> {
         if workers.len() != self.worker_states.len() {
             return Err(format!(
@@ -325,6 +347,18 @@ impl Snapshot {
             ));
         }
         for (i, (w, s)) in workers.iter_mut().zip(self.worker_states.iter()).enumerate() {
+            if s.params.is_empty() && s.delta.is_empty() {
+                // lazy encoding: this worker had never materialized —
+                // it sits at `params0` with Δ = 0 by definition and can
+                // carry no corrector or residual state
+                if s.corrector.is_some() || !s.residual.is_empty() {
+                    return Err(format!(
+                        "worker {i}: lazy snapshot entry carries corrector/residual state"
+                    ));
+                }
+                w.rng = crate::rng::Pcg32::restore(s.rng_state, s.rng_inc);
+                continue;
+            }
             if s.params.len() != self.dim || s.delta.len() != self.dim {
                 return Err(format!("worker {i}: snapshot vectors disagree with dim {}", self.dim));
             }
@@ -334,8 +368,10 @@ impl Snapshot {
                     self.dim
                 ));
             }
-            w.params.copy_from_slice(&s.params);
-            w.delta.copy_from_slice(&s.delta);
+            w.params.clear();
+            w.params.extend_from_slice(&s.params);
+            w.delta.clear();
+            w.delta.extend_from_slice(&s.delta);
             w.residual.clear();
             w.residual.extend_from_slice(&s.residual);
             w.rng = crate::rng::Pcg32::restore(s.rng_state, s.rng_inc);
@@ -407,6 +443,11 @@ impl Snapshot {
             ws.put_f32s(&s.residual);
         }
         w.section("workers", ws.into_bytes());
+
+        // the shared x⁰ every lazy worker entry is re-derived from
+        let mut p0 = Enc::new();
+        p0.put_f32s(&self.params0);
+        w.section("params0", p0.into_bytes());
 
         w.section("algo", self.algo_state.clone());
 
@@ -555,6 +596,10 @@ impl Snapshot {
         }
         d.finish()?;
 
+        let mut d = Dec::new(r.require("params0")?);
+        let params0 = d.f32s()?;
+        d.finish()?;
+
         let algo_state = r.require("algo")?.to_vec();
 
         let mut d = Dec::new(r.require("comm")?);
@@ -670,6 +715,7 @@ impl Snapshot {
             fabric,
             roster,
             coord,
+            params0,
             history,
         })
     }
@@ -1025,6 +1071,7 @@ mod tests {
                 skipped_rounds: 2,
             },
             coord: crate::trainer::CoordState::initial(2),
+            params0: &params0,
             history: &history,
             round,
             step: 3,
@@ -1299,6 +1346,7 @@ mod tests {
                 fabric: crate::fabric::FleetState::default(),
                 participation: crate::fabric::RosterState::default(),
                 coord: crate::trainer::CoordState::initial(2),
+                params0: &params0,
                 history: &history,
                 round,
                 step: (round + 1) * 3,
@@ -1338,6 +1386,7 @@ mod tests {
                 fabric: crate::fabric::FleetState::default(),
                 participation: crate::fabric::RosterState::default(),
                 coord: crate::trainer::CoordState::initial(1),
+                params0: &params0,
                 history: &history,
                 round,
                 step: round + 1,

@@ -129,6 +129,11 @@ pub struct Cluster {
     /// Wire-pricing scheme (see [`CommStats`]); the payload transform
     /// itself happens in the session driver before the collective.
     compression: crate::compress::CompressorKind,
+    /// Column lanes the in-process reduction kernels may fan out over
+    /// (wired from the resolved executor). Purely an execution detail:
+    /// [`crate::tensor::mean_rows_sharded`] is bitwise identical for
+    /// every lane count, so this never affects results or accounting.
+    parallelism: usize,
 }
 
 impl Cluster {
@@ -143,7 +148,20 @@ impl Cluster {
             stats: CommStats::default(),
             workers,
             compression: crate::compress::CompressorKind::Off,
+            parallelism: 1,
         }
+    }
+
+    /// Set how many column lanes the reduction kernels may use (>= 1).
+    /// Results are bitwise independent of this value; it only moves
+    /// wall-clock time on multi-core hosts.
+    pub fn set_parallelism(&mut self, lanes: usize) {
+        self.parallelism = lanes.max(1);
+    }
+
+    /// Column lanes available to the reduction kernels.
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
     }
 
     /// Charge the inter-group ring of [`AllReduceAlgo::TwoLevel`]
@@ -223,10 +241,26 @@ impl Cluster {
     /// [`Cluster::average_into`] (same mean, same accounting, bit for
     /// bit). A single participant is a free collective, mirroring the
     /// single-worker fleet.
+    ///
+    /// Executed hierarchically since the sharded-aggregation rework: the
+    /// reduction runs [`crate::tensor::mean_rows_sharded`]'s fixed-shape
+    /// `⌈√m⌉`-shard tree (the same two-level shape
+    /// [`AllReduceAlgo::TwoLevel`] prices), whose shape depends only on
+    /// the present-set size — never on thread count — so results stay
+    /// bitwise identical across executors.
     pub fn average_among(&mut self, rows: &[&[f32]], out: &mut [f32]) {
         debug_assert!(!rows.is_empty() && rows.len() <= self.workers);
-        crate::tensor::mean_rows(out, rows);
+        crate::tensor::mean_rows_sharded(out, rows, self.parallelism);
         self.charge_among(rows.len(), out.len());
+    }
+
+    /// Uncharged hierarchical mean over `rows` — for reductions whose
+    /// communication is priced elsewhere (e.g. momentum Local SGD's
+    /// fused `2P` collective covers both of its means) or not at all
+    /// (driver-side eval / consensus scans). Same fixed-shape sharded
+    /// tree as [`Cluster::average_among`], same bitwise guarantees.
+    pub fn reduce_mean(&self, rows: &[&[f32]], out: &mut [f32]) {
+        crate::tensor::mean_rows_sharded(out, rows, self.parallelism);
     }
 
     /// Charge one allreduce of `dim` f32 elements among `participants`

@@ -94,6 +94,42 @@ impl WorkerState {
             residual: Vec::new(),
         }
     }
+
+    /// Unmaterialized state for worker `i`: O(1) memory (the RNG stream
+    /// and empty vectors) until the worker is first sampled. An
+    /// unmaterialized worker is *semantically* pristine — params ==
+    /// `params0`, Δ == 0, residual empty, its private stream unconsumed
+    /// — so a fleet of mostly-absent clients costs memory proportional
+    /// to the set that has actually participated. The empty `params`
+    /// vector is the marker (a real model never has dimension 0);
+    /// [`WorkerState::materialize`] upgrades in place.
+    pub fn lazy(i: usize, root: &Pcg32) -> Self {
+        WorkerState {
+            params: Vec::new(),
+            delta: Vec::new(),
+            rng: root.split(i as u64),
+            corrector: None,
+            residual: Vec::new(),
+        }
+    }
+
+    /// Whether this worker's O(d) buffers exist yet. Driver-side
+    /// reductions substitute `params0` / zero rows for unmaterialized
+    /// workers, which is bitwise what the eager fleet computes.
+    pub fn is_materialized(&self) -> bool {
+        !self.params.is_empty()
+    }
+
+    /// Allocate the O(d) buffers at their pristine values (params ==
+    /// `params0`, Δ == 0). No-op if already materialized. The corrector
+    /// and residual stay with the session driver, which knows the
+    /// algorithm and compressor.
+    pub fn materialize(&mut self, params0: &[f32]) {
+        if self.params.is_empty() {
+            self.params = params0.to_vec();
+            self.delta = vec![0.0; params0.len()];
+        }
+    }
 }
 
 /// One distributed optimization algorithm (periodic-averaging family).
@@ -324,7 +360,9 @@ impl Algorithm for VrlSgd {
     ) {
         // x̂_S = (1/|S|) Σ_{i∈S} x_i — this is the only communicated
         // quantity; the Δ update below is local arithmetic on (x̂ − x_i).
-        let dim = workers[0].params.len();
+        // (Dim from a *present* worker: under a lazy fleet only sampled
+        // workers are guaranteed materialized.)
+        let dim = workers[present[0]].params.len();
         let rows: Vec<&[f32]> = present.iter().map(|&i| workers[i].params.as_slice()).collect();
         let mut mean = vec![0.0f32; dim];
         cluster.average_among(&rows, &mut mean);
@@ -510,15 +548,17 @@ impl Algorithm for MomentumLocalSgd {
         cluster: &mut Cluster,
     ) {
         let m_count = present.len();
-        let dim = workers[0].params.len();
+        let dim = workers[present[0]].params.len();
         // Model average over the present workers — first half of the
-        // round's collective. Absent workers keep their local model and
-        // momentum (deferred until they return).
+        // round's collective, executed on the cluster's sharded tree
+        // (uncharged here: the fused 2P collective below prices it).
+        // Absent workers keep their local model and momentum (deferred
+        // until they return).
         self.mean.resize(dim, 0.0);
         {
             let rows: Vec<&[f32]> =
                 present.iter().map(|&i| workers[i].params.as_slice()).collect();
-            crate::tensor::mean_rows(&mut self.mean, &rows);
+            cluster.reduce_mean(&rows, &mut self.mean);
         }
         for &i in present {
             workers[i].params.copy_from_slice(&self.mean);
@@ -546,7 +586,7 @@ impl Algorithm for MomentumLocalSgd {
             self.mom_mean.resize(dim, 0.0);
             {
                 let rows: Vec<&[f32]> = states.iter().map(|m| m.as_slice()).collect();
-                crate::tensor::mean_rows(&mut self.mom_mean, &rows);
+                cluster.reduce_mean(&rows, &mut self.mom_mean);
             }
             for m in states.iter_mut() {
                 m.copy_from_slice(&self.mom_mean);
@@ -635,7 +675,7 @@ impl Algorithm for CocodSgd {
         self.apply_pending(workers);
         // snapshot the present workers + launch the (simulated)
         // overlapped allreduce among them
-        let dim = workers[0].params.len();
+        let dim = workers[present[0]].params.len();
         let snaps: Vec<Vec<f32>> =
             present.iter().map(|&i| workers[i].params.clone()).collect();
         let refs: Vec<&[f32]> = snaps.iter().map(|s| s.as_slice()).collect();
@@ -728,7 +768,7 @@ fn average_params(
     cluster: &mut Cluster,
     mean: &mut Vec<f32>,
 ) {
-    let dim = workers[0].params.len();
+    let dim = workers[present[0]].params.len();
     mean.resize(dim, 0.0);
     {
         let rows: Vec<&[f32]> = present.iter().map(|&i| workers[i].params.as_slice()).collect();
@@ -1177,6 +1217,26 @@ mod tests {
         };
         let mut armed = make_algorithm(&spec, &[0.0; 1]);
         assert!(armed.restore_state(&bytes).unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn lazy_worker_state_materializes_pristine() {
+        let root = Pcg32::new(7, 11);
+        let p0 = vec![1.5f32, -2.0, 0.25];
+        let mut lazy = WorkerState::lazy(3, &root);
+        assert!(!lazy.is_materialized());
+        assert!(lazy.params.is_empty() && lazy.delta.is_empty() && lazy.residual.is_empty());
+        lazy.materialize(&p0);
+        assert!(lazy.is_materialized());
+        // materialized-on-demand == eagerly built, field for field
+        let eager = WorkerState::new(3, &p0, &root);
+        assert_eq!(lazy.params, eager.params);
+        assert_eq!(lazy.delta, eager.delta);
+        assert_eq!(lazy.rng, eager.rng);
+        // idempotent: a second materialize never clobbers live state
+        lazy.params[0] = 9.0;
+        lazy.materialize(&p0);
+        assert_eq!(lazy.params[0], 9.0);
     }
 
     #[test]

@@ -58,6 +58,12 @@ pub struct TrainOutput {
     /// in with `telemetry.health = true` (the monitor never runs, and
     /// never perturbs the trajectory, otherwise).
     pub health_warnings: Vec<HealthWarning>,
+    /// Workers whose per-worker state (params + Δ) was ever
+    /// materialized. Workers a sparse [`crate::fabric::ParticipationModel`]
+    /// never sampled stay lazy — O(1) memory each — so on huge fleets
+    /// this is ≈ the union of all present sets, not N. Equals the fleet
+    /// size whenever every worker participated at least once.
+    pub materialized_workers: usize,
 }
 
 impl TrainOutput {

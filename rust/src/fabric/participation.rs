@@ -32,6 +32,16 @@
 //! [`RosterState`]), and [`ParticipationModel::Full`] is bitwise
 //! identical to a run with no participation model at all
 //! (`rust/tests/participation.rs`).
+//!
+//! **Huge sparse fleets.** The driver materializes per-worker state
+//! lazily: a worker this sampler has never placed in a present set costs
+//! O(1) memory (no params/Δ copy) until its first round, at which point
+//! it is constructed exactly as an eager build would have — same x⁰,
+//! Δ = 0, same RNG lane. So `--workers 100000` with
+//! [`ParticipationModel::RoundRobin`] `count: 256` holds state ∝ the
+//! union of present sets, not N, and the trajectory is unchanged. See
+//! the huge-fleets note on [`crate::trainer`]'s driver and
+//! [`crate::coordinator::TrainOutput::materialized_workers`].
 
 use super::spec::FabricSpec;
 use crate::comm::allreduce::group_bounds;

@@ -201,6 +201,34 @@
 //! two-level topology, or the deterministic `--sampler round-robin:4`;
 //! TOML: `fabric.dropout` / `fabric.sampler` keys.)
 //!
+//! Huge fleets are cheap: per-worker state (params, Δ, momentum,
+//! residual) materializes **lazily** on first participation — a
+//! never-sampled worker costs one RNG state — fleet-wide reductions
+//! substitute the one shared x⁰ row for lazy workers, and snapshots
+//! encode them as O(1) entries (snap v7). Memory tracks the *union of
+//! present sets*, not the fleet size. All cross-worker averaging runs
+//! on the fixed-shape `⌈√m⌉`-shard tree of
+//! [`tensor::mean_rows_sharded`], whose shape depends only on the
+//! present-set size — never the thread count — so trajectories stay
+//! bitwise identical across executors even at fleet scale:
+//!
+//! ```no_run
+//! use vrl_sgd::prelude::*;
+//!
+//! let task = TaskKind::Quadratic { b: 10.0, noise: 0.1 };
+//! let out = Trainer::new(task)
+//!     .algorithm(AlgorithmKind::VrlSgd)
+//!     .workers(100_000)
+//!     .period(20)
+//!     .steps(2000)
+//!     // 256 workers per round, rotating deterministically
+//!     .participation(ParticipationModel::RoundRobin { count: 256 })
+//!     .parallelism(0) // auto-size the reduction lanes to the machine
+//!     .run()
+//!     .unwrap();
+//! println!("{}/100000 workers ever materialized", out.materialized_workers);
+//! ```
+//!
 //! When the wire itself is the bottleneck, a [`compress`] scheme rides
 //! the sync path: each present worker's transported parameters pass
 //! through a [`compress::Compressor`] (top-k sparsification, 1-bit

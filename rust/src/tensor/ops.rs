@@ -83,6 +83,10 @@ pub fn vrl_step(x: &mut [f32], g: &[f32], delta: &[f32], gamma: f32) {
     }
 }
 
+/// Column-chunk width shared by every row reduction below: a 4 KiB f64
+/// accumulator tile that stays resident in L1 while the rows stream by.
+const CHUNK: usize = 512;
+
 /// `out = mean of rows` where `rows` are equal-length slices. The model
 /// averaging step `x̂ = (1/N) Σ x_i` (Algorithm 1 line 4).
 ///
@@ -93,14 +97,16 @@ pub fn vrl_step(x: &mut [f32], g: &[f32], delta: &[f32], gamma: f32) {
 /// Perf note (§Perf log): the original per-element inner loop over rows
 /// ran at ~4.7 GB/s; this chunked form keeps a 4 KiB f64 accumulator tile
 /// in L1 and streams each row sequentially, which autovectorizes the
-/// convert+add and roughly triples throughput at N=8, P=1M.
+/// convert+add and roughly triples throughput at N=8, P=1M. For fleets of
+/// 32+ rows prefer [`mean_rows_sharded`], which reduces in two levels and
+/// is measurably faster (see its §Perf log); in the exact-accumulation
+/// regime (see its docs) the two agree bitwise.
 pub fn mean_rows(out: &mut [f32], rows: &[&[f32]]) {
     assert!(!rows.is_empty(), "mean of zero rows");
     let n = out.len();
     for r in rows {
         assert_eq!(r.len(), n, "row length mismatch");
     }
-    const CHUNK: usize = 512;
     let inv = 1.0f64 / rows.len() as f64;
     let mut acc = [0.0f64; CHUNK];
     let mut start = 0usize;
@@ -120,13 +126,172 @@ pub fn mean_rows(out: &mut [f32], rows: &[&[f32]]) {
     }
 }
 
-/// In-place sum reduction of `rows` into `out` (used by allreduce).
-pub fn sum_rows(out: &mut [f32], rows: &[&[f32]]) {
+/// Number of shards the hierarchical reduce splits an `n`-row fleet into:
+/// `⌈√n⌉`, the group count that balances the two levels of a `TwoLevel`
+/// collective (√n groups of ≈√n members each — the same shape
+/// `comm::AllReduceAlgo::TwoLevel` prices).
+///
+/// A pure function of the *present-set size only* — never of thread
+/// count — so the reduction tree (and therefore every rounding decision)
+/// is identical across `Sequential` and `Threaded` executors.
+pub fn shard_count(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let mut s = (n as f64).sqrt() as usize;
+    while s * s < n {
+        s += 1;
+    }
+    while s > 1 && (s - 1) * (s - 1) >= n {
+        s -= 1;
+    }
+    s
+}
+
+/// Contiguous balanced shard bounds `[(lo, hi); shard_count(n)]` covering
+/// `0..n` — the same balanced split rule as `group_bounds` in
+/// `comm::allreduce`, so the executed tree matches the priced one.
+pub fn shard_bounds(n: usize) -> Vec<(usize, usize)> {
+    let g = shard_count(n);
+    (0..g).map(|j| (j * n / g, (j + 1) * n / g)).collect()
+}
+
+/// Adds `rows[..][start..start+acc.len()]` into `acc`. Rows are consumed
+/// four at a time: the four converts+adds per element are independent, so
+/// the compiler keeps four vector accumulation chains in flight and the
+/// L1 tile is loaded/stored once per *quad* instead of once per row —
+/// that traffic reduction is where the sharded path's single-thread win
+/// comes from.
+#[inline]
+fn accum_rows_chunk(acc: &mut [f64], rows: &[&[f32]], start: usize) {
+    let len = acc.len();
+    let mut i = 0usize;
+    while i + 4 <= rows.len() {
+        let r0 = &rows[i][start..start + len];
+        let r1 = &rows[i + 1][start..start + len];
+        let r2 = &rows[i + 2][start..start + len];
+        let r3 = &rows[i + 3][start..start + len];
+        for ((((a, &v0), &v1), &v2), &v3) in
+            acc.iter_mut().zip(r0).zip(r1).zip(r2).zip(r3)
+        {
+            *a += (v0 as f64 + v1 as f64) + (v2 as f64 + v3 as f64);
+        }
+        i += 4;
+    }
+    while i < rows.len() {
+        for (a, &v) in acc.iter_mut().zip(&rows[i][start..start + len]) {
+            *a += v as f64;
+        }
+        i += 1;
+    }
+}
+
+/// Reduce one lane's column range `[col0, col0 + out.len())` through the
+/// fixed shard tree: per column chunk, each shard accumulates into its own
+/// f64 tile (`part`), then the shard partials combine in shard order into
+/// `total`. Shard shape comes from the caller, so every lane executes the
+/// identical tree.
+fn mean_sharded_cols(
+    out: &mut [f32],
+    rows: &[&[f32]],
+    shards: &[(usize, usize)],
+    col0: usize,
+    inv: f64,
+) {
     let n = out.len();
-    out.iter_mut().for_each(|o| *o = 0.0);
+    let mut total = [0.0f64; CHUNK];
+    let mut part = [0.0f64; CHUNK];
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + CHUNK).min(n);
+        let len = end - start;
+        total[..len].fill(0.0);
+        for &(lo, hi) in shards {
+            part[..len].fill(0.0);
+            accum_rows_chunk(&mut part[..len], &rows[lo..hi], col0 + start);
+            for (t, &p) in total[..len].iter_mut().zip(&part[..len]) {
+                *t += p;
+            }
+        }
+        for (o, &t) in out[start..end].iter_mut().zip(&total[..len]) {
+            *o = (t * inv) as f32;
+        }
+        start = end;
+    }
+}
+
+/// Hierarchical `out = mean of rows`: a fixed-shape two-level tree-reduce
+/// over [`shard_bounds`]`(rows.len())` worker shards, with per-shard f64
+/// accumulator tiles feeding the same chunked convert+add as
+/// [`mean_rows`]. `lanes > 1` splits the *columns* across that many
+/// scoped threads; because each output element's arithmetic is
+/// independent of where column boundaries fall, the result is bitwise
+/// identical for every `lanes` value — the tree shape depends only on
+/// `rows.len()`.
+///
+/// Bitwise equality with flat [`mean_rows`] holds whenever every partial
+/// sum is exact in f64, which is the ~29-bit headroom regime this crate
+/// already relies on for worker-order invariance (f32 inputs carry 24-bit
+/// mantissas; f64 carries 53). The `sharded_mean_matches_flat` tests
+/// drill the matrix of fleet sizes × lane counts.
+///
+/// Perf note (§Perf log): validated 2026-08-08 via a line-for-line C
+/// mirror of this kernel (gcc -O3, one core of the dev box; this
+/// container ships no Rust toolchain, so no `cargo bench` numbers yet —
+/// see `BENCH_hotpath.json`): N=32 P=1M ran ~2.2× faster than the flat
+/// loop (12.6 ms → 5.7 ms best-of), N=1024 P=20k ~2.0× (8.1 ms →
+/// 4.0 ms), N=256 P=100k ~2.5×, and N=8 at parity. The four-row quad
+/// loop quarters the L1 tile load/store traffic, and bounded shard width
+/// keeps the number of concurrently-striding row streams at ⌈√n⌉
+/// instead of n, which the hardware prefetcher can actually track at
+/// N=1024.
+pub fn mean_rows_sharded(out: &mut [f32], rows: &[&[f32]], lanes: usize) {
+    assert!(!rows.is_empty(), "mean of zero rows");
+    let n = out.len();
     for r in rows {
         assert_eq!(r.len(), n, "row length mismatch");
-        add_assign(out, r);
+    }
+    let shards = shard_bounds(rows.len());
+    let inv = 1.0f64 / rows.len() as f64;
+    if lanes <= 1 || n < 2 * CHUNK {
+        mean_sharded_cols(out, rows, &shards, 0, inv);
+        return;
+    }
+    let cols_per = n.div_ceil(lanes);
+    let shards = &shards;
+    std::thread::scope(|s| {
+        for (li, chunk) in out.chunks_mut(cols_per).enumerate() {
+            s.spawn(move || mean_sharded_cols(chunk, rows, shards, li * cols_per, inv));
+        }
+    });
+}
+
+/// In-place sum reduction of `rows` into `out` (used by allreduce).
+///
+/// Accumulates per column in a chunked f64 tile — the same scheme as
+/// [`mean_rows`] — so the result is invariant to worker order. (It
+/// previously accumulated in f32 via repeated `add_assign`, which made
+/// the sum order-sensitive: a landmine once reductions are tree-shaped.)
+pub fn sum_rows(out: &mut [f32], rows: &[&[f32]]) {
+    let n = out.len();
+    for r in rows {
+        assert_eq!(r.len(), n, "row length mismatch");
+    }
+    let mut acc = [0.0f64; CHUNK];
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + CHUNK).min(n);
+        let len = end - start;
+        acc[..len].fill(0.0);
+        for r in rows {
+            for (a, &v) in acc[..len].iter_mut().zip(&r[start..end]) {
+                *a += v as f64;
+            }
+        }
+        for (o, &a) in out[start..end].iter_mut().zip(&acc[..len]) {
+            *o = a as f32;
+        }
+        start = end;
     }
 }
 
@@ -258,6 +423,129 @@ mod tests {
         let mut s = vec![9.0; 2]; // pre-dirtied: sum_rows must reset
         sum_rows(&mut s, &[&a, &b]);
         assert_eq!(s, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn sum_rows_is_order_invariant() {
+        // Mirrors mean_rows_is_order_invariant: f64 accumulation makes
+        // the reduction insensitive to worker order even when magnitudes
+        // differ wildly (1e-3 vs 7.0 would lose bits in f32).
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![4.0f32, 5.0, 6.0];
+        let c = vec![-7.0f32, 0.25, 1e-3];
+        let mut s1 = vec![0.0; 3];
+        let mut s2 = vec![0.0; 3];
+        sum_rows(&mut s1, &[&a, &b, &c]);
+        sum_rows(&mut s2, &[&c, &a, &b]);
+        assert_eq!(s1, s2);
+        assert!((s1[0] - (-2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shard_count_is_ceil_sqrt() {
+        assert_eq!(shard_count(0), 0);
+        for (n, want) in [
+            (1, 1),
+            (2, 2),
+            (3, 2),
+            (4, 2),
+            (5, 3),
+            (8, 3),
+            (9, 3),
+            (10, 4),
+            (16, 4),
+            (17, 5),
+            (100, 10),
+            (101, 11),
+            (1024, 32),
+            (100_000, 317),
+        ] {
+            assert_eq!(shard_count(n), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn shard_bounds_partition_contiguously() {
+        for n in [1usize, 2, 3, 5, 7, 8, 31, 32, 33, 100, 257, 1000, 1024] {
+            let b = shard_bounds(n);
+            assert_eq!(b.len(), shard_count(n), "n={n}");
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b[b.len() - 1].1, n);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous at n={n}");
+            }
+            // Balance: the split rule j*n/g never leaves an empty shard
+            // off by more than one from its neighbours.
+            for &(lo, hi) in &b {
+                assert!(hi > lo, "non-empty shard at n={n}");
+                assert!(hi - lo <= n.div_ceil(b.len()), "balanced at n={n}");
+            }
+        }
+    }
+
+    /// Deterministic pseudo-random rows in the realistic magnitude regime
+    /// (what fill_normal produces) without pulling the rng module into
+    /// tensor's tests.
+    fn synth_rows(n_rows: usize, dim: usize) -> Vec<Vec<f32>> {
+        let mut state = 0x9E37_79B9_7F4A_7C15u64 ^ ((n_rows as u64) << 32) ^ (dim as u64);
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let bits = (state >> 33) as u32;
+            // 31 random bits scaled into [-4, 0) with a full mantissa.
+            (bits as f32 / (1u32 << 29) as f32) - 4.0
+        };
+        (0..n_rows).map(|_| (0..dim).map(|_| next()).collect()).collect()
+    }
+
+    #[test]
+    fn sharded_mean_matches_flat() {
+        // Ragged fleet sizes (incl. 1, 2, non-powers-of-two) × dims that
+        // exercise the sub-chunk, exact-chunk and multi-chunk paths ×
+        // lane counts. Bitwise equality, not tolerance.
+        for &n_rows in &[1usize, 2, 3, 5, 8, 31, 32, 33, 100, 257] {
+            for &dim in &[1usize, 7, 512, 513, 1300] {
+                let rows = synth_rows(n_rows, dim);
+                let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+                let mut flat = vec![0.0f32; dim];
+                mean_rows(&mut flat, &refs);
+                for &lanes in &[1usize, 2, 4, 8] {
+                    let mut sharded = vec![0.0f32; dim];
+                    mean_rows_sharded(&mut sharded, &refs, lanes);
+                    for (i, (a, b)) in flat.iter().zip(&sharded).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "n={n_rows} dim={dim} lanes={lanes} elem={i}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_mean_is_lane_invariant_on_large_dims() {
+        // Columns big enough that the threaded path actually engages
+        // (dim >= 2*CHUNK) must still match lanes=1 bit-for-bit.
+        let rows = synth_rows(48, 5000);
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut base = vec![0.0f32; 5000];
+        mean_rows_sharded(&mut base, &refs, 1);
+        for lanes in [2usize, 3, 4, 8, 16] {
+            let mut got = vec![0.0f32; 5000];
+            mean_rows_sharded(&mut got, &refs, lanes);
+            assert!(
+                base.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "lanes={lanes} diverged"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mean of zero rows")]
+    fn mean_rows_sharded_rejects_empty() {
+        let mut out = vec![0.0; 2];
+        mean_rows_sharded(&mut out, &[], 4);
     }
 
     #[test]

@@ -42,6 +42,17 @@
 //!   untouched — a fresh joiner's Δ is zero and a rejoiner's was frozen
 //!   at departure, so Σᵢ Δᵢ = 0 survives churn unconditionally.
 //!
+//! **Huge fleets.** Worker state is lazy: a worker that has never been
+//! sampled (or joined) owns only its RNG stream — O(1) memory — and is
+//! defined to sit at the shared x⁰ with Δ = 0. Its O(d) buffers
+//! materialize pristinely on first participation, fleet-wide reductions
+//! substitute the one shared x⁰ row for it, and snapshots encode it as
+//! an empty entry (snap v7), so a 10⁵-worker fleet with 256 present per
+//! round costs memory ∝ the union of present sets, not N·d. All
+//! cross-worker averaging runs on the fixed-shape `⌈√m⌉`-shard tree of
+//! [`crate::tensor::mean_rows_sharded`], whose shape depends only on
+//! the present-set size — never the executor's thread count.
+//!
 //! ```no_run
 //! use vrl_sgd::prelude::*;
 //!
@@ -464,6 +475,14 @@ pub(super) struct Driver {
     resumed: bool,
     dim: usize,
     n: usize,
+    /// The shared initial model x⁰. Lazy workers are defined to sit at
+    /// exactly this point with Δ = 0; fleet-wide reductions substitute
+    /// this one row for them (O(N) pointers, not O(N·d) memory) and the
+    /// snapshot re-derives them from it.
+    params0: Vec<f32>,
+    /// Whether the algorithm attaches a per-worker step corrector
+    /// (probed once at construction; applied at materialization).
+    wants_post: bool,
     // scratch buffers, allocated once
     mean_buf: Vec<f32>,
     befores: Vec<Vec<f32>>,
@@ -511,15 +530,20 @@ impl Driver {
         debug_assert_eq!(params0.len(), dim);
 
         let mut algo = make_algorithm(&session.spec, &params0);
+        // the fleet starts lazy: a worker's O(d) buffers (params, Δ,
+        // corrector, residual) are allocated the first time it is
+        // sampled, joins, or arrives materialized in a snapshot — a
+        // never-sampled worker on a 10^5-node fleet costs one RNG state.
+        // Materialization is pristine (params == x⁰, Δ == 0), which is
+        // bitwise what the old eager construction built, so fully-
+        // participating runs are unchanged.
         let mut workers: Vec<WorkerState> =
-            (0..n).map(|i| WorkerState::new(i, &params0, &root)).collect();
-        // per-worker corrector state (e.g. momentum buffers) rides with
-        // the worker, so the step loop stays data-parallel
-        let mut wants_post = false;
-        for w in workers.iter_mut() {
-            w.corrector = algo.corrector();
-            wants_post |= w.corrector.is_some();
-        }
+            (0..n).map(|i| WorkerState::lazy(i, &root)).collect();
+        // one probe decides whether this algorithm attaches per-worker
+        // corrector state (e.g. momentum buffers); the corrector itself
+        // is attached at materialization so the step loop stays
+        // data-parallel and lazy workers stay O(1)
+        let wants_post = algo.corrector().is_some();
         // the fabric shapes only the cost accounting and the simulated
         // clock: the collective topology prices each sync, the fleet
         // prices each round's compute as the slowest worker's critical
@@ -529,15 +553,11 @@ impl Driver {
                 .with_uplink(session.spec.fabric.uplink_or(&session.spec.network))
                 .with_compression(session.spec.compress);
         // transport compression: lossy kinds carry a per-worker
-        // error-feedback residual (restored from the snapshot on
-        // resume); `Identity`/`Off` allocate nothing and transform
-        // nothing, keeping those runs bitwise identical to the seed
+        // error-feedback residual, attached at materialization (and
+        // restored from the snapshot on resume); `Identity`/`Off`
+        // allocate nothing and transform nothing, keeping those runs
+        // bitwise identical to the seed
         let compressor = session.spec.compress.build();
-        if session.spec.compress.is_lossy() {
-            for w in workers.iter_mut() {
-                w.residual = vec![0.0f32; dim];
-            }
-        }
         let mut fleet = Fleet::new(&session.spec.fabric, n, root.split(FABRIC_STREAM_LANE));
         // participation draws come from their own lane, sampled once per
         // round on the driver thread — presence is a pure function of
@@ -558,6 +578,10 @@ impl Driver {
         // iteration, which needs lockstep stepping on the driver thread.
         let executor =
             if session.spec.dense_metrics { Executor::Sequential } else { session.executor };
+        // the reduction kernels may fan their columns over the same lane
+        // budget; the tree shape is a function of the present-set size
+        // only, so this moves wall-clock time and nothing else
+        cluster.set_parallelism(executor.lanes());
 
         let mut coord = CoordState::initial(n);
         coord.churn = churn.state();
@@ -569,6 +593,19 @@ impl Driver {
         // rounds replay exactly what the uninterrupted run would do.
         let (history, last_loss, step, round);
         if let Some(snap) = session.resume.take() {
+            // the snapshot's lazy encoding: an empty-params entry is a
+            // worker that had never materialized — leave it lazy here
+            // too. Everyone else gets heap state (and the corrector the
+            // restore copies into) attached first, so `apply_workers`
+            // sees the shapes it expects.
+            for (w, s) in workers.iter_mut().zip(snap.worker_states.iter()) {
+                if !s.params.is_empty() {
+                    w.materialize(&params0);
+                    if wants_post {
+                        w.corrector = algo.corrector();
+                    }
+                }
+            }
             snap.apply_workers(&mut workers)?;
             algo.restore_state(&snap.algo_state)
                 .map_err(|e| format!("restore algorithm state: {e}"))?;
@@ -659,8 +696,12 @@ impl Driver {
         };
         let mean_buf = vec![0.0f32; dim];
         // per-worker scratch: pre-step snapshots (sized only for
-        // corrector algorithms) and dense-mode step losses
-        let befores: Vec<Vec<f32>> = vec![vec![0.0f32; if wants_post { dim } else { 0 }]; n];
+        // materialized workers of corrector algorithms — lazy workers
+        // get theirs at materialization) and dense-mode step losses
+        let befores: Vec<Vec<f32>> = workers
+            .iter()
+            .map(|w| if w.corrector.is_some() { vec![0.0f32; dim] } else { Vec::new() })
+            .collect();
         let step_losses: Vec<Vec<f64>> = vec![Vec::new(); n];
         // per-round presence (all-true without a participation model)
         let mask = vec![true; n];
@@ -686,6 +727,8 @@ impl Driver {
             resumed,
             dim,
             n,
+            params0,
+            wants_post,
             mean_buf,
             befores,
             step_losses,
@@ -744,6 +787,7 @@ impl Driver {
                 self.roster.note_skipped();
                 self.step += p;
             } else {
+                self.materialize_present();
                 self.local_steps(p, lr, m);
             }
             // round compute cost: the sync barrier waits for the slowest
@@ -822,6 +866,7 @@ impl Driver {
                     self.present_idx.extend((0..self.n).filter(|&i| mask[i]));
                     if m >= cspec.min_clients {
                         idle_streak = 0;
+                        self.materialize_present();
                         self.local_steps(p, lr, m);
                         let timing = self.fleet.round_timing(p, &self.time_model, &self.mask);
                         self.coord.rounds_this_epoch += 1;
@@ -1032,7 +1077,12 @@ impl Driver {
             }
         }
         for &i in &delta.leaves {
-            self.algo.on_leave(self.round, &mut self.workers[i]);
+            // a lazy worker has no state to freeze; the hook only ever
+            // sees materialized workers (it is a no-op for every
+            // built-in algorithm either way)
+            if self.workers[i].is_materialized() {
+                self.algo.on_leave(self.round, &mut self.workers[i]);
+            }
             self.roster.set_active(i, false);
         }
         if delta.joins.is_empty() {
@@ -1040,6 +1090,9 @@ impl Driver {
         }
         let boot = self.bootstrap_params(cspec);
         for &i in &delta.joins {
+            // joiners materialize here: they are about to diverge from
+            // x⁰ (bootstrap copy below), so the O(d) buffers are due
+            self.materialize_worker(i);
             let w = &mut self.workers[i];
             if let Some(params) = &boot {
                 w.params.copy_from_slice(params);
@@ -1089,13 +1142,19 @@ impl Driver {
             .iter()
             .zip(self.roster.active().iter())
             .filter(|(_, &a)| a)
-            .map(|(w, _)| w.params.as_slice())
+            .map(|(w, _)| {
+                if w.is_materialized() {
+                    w.params.as_slice()
+                } else {
+                    self.params0.as_slice()
+                }
+            })
             .collect();
         if rows.is_empty() {
             return None;
         }
         let mut mean = vec![0.0f32; self.dim];
-        tensor::mean_rows(&mut mean, &rows);
+        self.cluster.reduce_mean(&rows, &mut mean);
         Some(mean)
     }
 
@@ -1104,6 +1163,35 @@ impl Driver {
     /// skipped round takes (all-false mask ⇒ zero straggler draws).
     fn idle_timing(&mut self, p: usize) -> RoundTiming {
         self.fleet.round_timing(p, &self.time_model, &self.idle_mask)
+    }
+
+    /// Allocate worker `i`'s O(d) state on first participation: params
+    /// at x⁰, Δ = 0, plus the corrector and error-feedback residual the
+    /// eager path used to attach at construction. Idempotent, and
+    /// pristine by construction — a worker materialized in round r and
+    /// one materialized at launch are bitwise indistinguishable.
+    fn materialize_worker(&mut self, i: usize) {
+        if self.workers[i].is_materialized() {
+            return;
+        }
+        self.workers[i].materialize(&self.params0);
+        if self.wants_post {
+            self.workers[i].corrector = self.algo.corrector();
+            self.befores[i].resize(self.dim, 0.0);
+        }
+        if self.session.spec.compress.is_lossy() {
+            self.workers[i].residual = vec![0.0f32; self.dim];
+        }
+    }
+
+    /// Materialize every worker the round's mask marks present — called
+    /// before `local_steps`, so the cells only ever see real buffers.
+    fn materialize_present(&mut self) {
+        for i in 0..self.n {
+            if self.mask[i] {
+                self.materialize_worker(i);
+            }
+        }
     }
 
     /// `p` local iterations on every present worker — the dense-mode
@@ -1146,10 +1234,9 @@ impl Driver {
                     .filter(|(_, &present)| present)
                     .map(|(l, _)| l.first().copied().unwrap_or(0.0))
                     .sum();
-                let rows: Vec<&[f32]> =
-                    self.workers.iter().map(|w| w.params.as_slice()).collect();
+                let rows = param_rows(&self.workers, &self.params0);
                 let var = tensor::worker_variance(&rows);
-                tensor::mean_rows(&mut self.mean_buf, &rows);
+                self.cluster.reduce_mean(&rows, &mut self.mean_buf);
                 let dist =
                     self.session.target.as_ref().map(|t| tensor::dist2_sq(&self.mean_buf, t));
                 let row = DenseRow {
@@ -1237,9 +1324,10 @@ impl Driver {
         }
 
         // consensus gap just before averaging (over the whole fleet —
-        // absent workers' drift is part of the consensus state)
+        // absent workers' drift is part of the consensus state; lazy
+        // workers sit at x⁰ by definition, represented by one shared row)
         let variance = {
-            let rows: Vec<&[f32]> = self.workers.iter().map(|w| w.params.as_slice()).collect();
+            let rows = param_rows(&self.workers, &self.params0);
             tensor::worker_variance(&rows)
         };
 
@@ -1249,7 +1337,10 @@ impl Driver {
             // then the sync runs over the present set only
             if t.m < self.n {
                 for (i, w) in self.workers.iter_mut().enumerate() {
-                    if !self.mask[i] {
+                    // lazy workers have no state for the hook to defer;
+                    // they are announced on their first materialized
+                    // absence (the hook is a no-op for every built-in)
+                    if !self.mask[i] && w.is_materialized() {
                         self.algo.on_absent(self.round, w);
                     }
                 }
@@ -1360,8 +1451,8 @@ impl Driver {
             if let Some(tel) = self.tel.as_mut() {
                 tel.tracer.begin("round", "eval", 0, t_end);
             }
-            let rows: Vec<&[f32]> = self.workers.iter().map(|w| w.params.as_slice()).collect();
-            tensor::mean_rows(&mut self.mean_buf, &rows);
+            let rows = param_rows(&self.workers, &self.params0);
+            self.cluster.reduce_mean(&rows, &mut self.mean_buf);
             let loss = global_loss(&mut self.session.engines, &self.mean_buf);
             if let Some(tel) = self.tel.as_mut() {
                 tel.tracer.end("round", "eval", 0, t_end, vec![("loss", ArgV::F(loss))]);
@@ -1481,6 +1572,7 @@ impl Driver {
                 fabric: self.fleet.state(),
                 participation: self.roster.state(),
                 coord: self.coord.clone(),
+                params0: &self.params0,
                 history: &self.history,
                 round: self.round,
                 step: self.step,
@@ -1560,14 +1652,22 @@ impl Driver {
             s.finish()?;
         }
 
-        let rows: Vec<&[f32]> = self.workers.iter().map(|w| w.params.as_slice()).collect();
-        tensor::mean_rows(&mut self.mean_buf, &rows);
-        // Σ_i Δ_i = 0 invariant residual (max abs coordinate of the sum)
+        {
+            let rows = param_rows(&self.workers, &self.params0);
+            self.cluster.reduce_mean(&rows, &mut self.mean_buf);
+        }
+        // Σ_i Δ_i = 0 invariant residual (max abs coordinate of the
+        // sum); a lazy worker's Δ is zero by definition, so only
+        // materialized workers contribute
         let mut delta_sum = vec![0.0f32; self.dim];
         for w in &self.workers {
-            tensor::add_assign(&mut delta_sum, &w.delta);
+            if w.is_materialized() {
+                tensor::add_assign(&mut delta_sum, &w.delta);
+            }
         }
         let delta_residual = delta_sum.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let materialized_workers =
+            self.workers.iter().filter(|w| w.is_materialized()).count();
         Ok(TrainOutput {
             history: self.history,
             comm: self.cluster.stats(),
@@ -1581,20 +1681,40 @@ impl Driver {
                 .take()
                 .map(HealthMonitor::into_warnings)
                 .unwrap_or_default(),
+            materialized_workers,
         })
     }
 }
 
+/// Parameter rows of the whole fleet, in worker order, substituting the
+/// shared x⁰ row for lazy (never-materialized) workers — O(N) pointers
+/// either way, no per-worker allocation. A lazy worker *is* the point
+/// (x⁰, Δ = 0), so every reduction over these rows is bitwise what the
+/// eager fleet would compute.
+fn param_rows<'a>(workers: &'a [WorkerState], params0: &'a [f32]) -> Vec<&'a [f32]> {
+    workers
+        .iter()
+        .map(|w| if w.is_materialized() { w.params.as_slice() } else { params0 })
+        .collect()
+}
+
 /// Mean of a snapshot's *active-member* parameter rows (per its
-/// membership ledger) — what a late joiner bootstraps from. `None` when
-/// the ledger admits nobody.
+/// membership ledger) — what a late joiner bootstraps from. Lazy
+/// entries (empty params) stand at the snapshot's shared x⁰. `None`
+/// when the ledger admits nobody.
 fn snapshot_consensus(snap: &Snapshot) -> Option<Vec<f32>> {
     let rows: Vec<&[f32]> = snap
         .worker_states
         .iter()
         .enumerate()
         .filter(|(i, _)| snap.coord.membership.get(*i).copied().unwrap_or(true))
-        .map(|(_, w)| w.params.as_slice())
+        .map(|(_, w)| {
+            if w.params.is_empty() {
+                snap.params0.as_slice()
+            } else {
+                w.params.as_slice()
+            }
+        })
         .collect();
     if rows.is_empty() {
         return None;

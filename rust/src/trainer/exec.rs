@@ -61,6 +61,20 @@ impl Executor {
         }
     }
 
+    /// Concurrency lanes this executor may use (`1` for sequential).
+    ///
+    /// This is what the driver hands to [`crate::comm::Cluster`] as the
+    /// reduction-kernel parallelism: the sharded aggregation splits its
+    /// *columns* over this many scoped threads, while its reduction-tree
+    /// shape stays a pure function of the present-set size — so lanes
+    /// never influence results, only wall-clock time.
+    pub fn lanes(&self) -> usize {
+        match *self {
+            Executor::Sequential => 1,
+            Executor::Threaded { threads } => threads.max(1),
+        }
+    }
+
     /// Drive `ctx.steps` local iterations on every cell.
     pub(crate) fn run_round(&self, cells: &mut [WorkerCell<'_>], ctx: &StepCtx) {
         match *self {

@@ -108,6 +108,12 @@ pub struct RunState<'a> {
     /// elastic runs resume bitwise from any phase. On the static path
     /// this stays at [`crate::trainer::CoordState::initial`].
     pub coord: crate::trainer::CoordState,
+    /// The shared initial model x⁰ every worker starts from. Lazy
+    /// (never-yet-sampled) workers carry empty `params`/`delta` vectors
+    /// and are defined to sit at exactly this point with Δ = 0 — the
+    /// snapshot encodes them as empty and re-derives them from this one
+    /// shared row, keeping checkpoint size ∝ the materialized set.
+    pub params0: &'a [f32],
     /// History recorded so far (trimmed to the last row under
     /// `Trainer::stream_only`).
     pub history: &'a History,

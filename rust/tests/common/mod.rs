@@ -69,6 +69,30 @@ pub fn trainer(algorithm: AlgorithmKind, threads: usize, seed: u64, steps: usize
         .parallelism(threads)
 }
 
+/// A sparse fleet over [`softmax_task`]: `workers` total with a
+/// deterministic [`ParticipationModel::RoundRobin`] sampler admitting
+/// `count` per round, iid partition (label sharding wants workers ≈
+/// classes). Most of the fleet is never sampled in a short run, so the
+/// driver's lazy per-worker state is actually exercised — the
+/// lazy-fleet drills in `parallel_exec.rs` build on this.
+pub fn sparse_trainer(
+    algorithm: AlgorithmKind,
+    threads: usize,
+    workers: usize,
+    count: usize,
+    steps: usize,
+) -> Trainer {
+    Trainer::new(softmax_task())
+        .spec(TrainSpec {
+            workers,
+            easgd_rho: 0.9 / workers as f32,
+            ..spec(algorithm, 23, steps)
+        })
+        .partition(Partition::Identical)
+        .parallelism(threads)
+        .participation(ParticipationModel::RoundRobin { count })
+}
+
 /// Full bitwise comparator: every observable surface of the two outputs
 /// must agree exactly.
 pub fn assert_identical(a: &TrainOutput, b: &TrainOutput, ctx: &str) {

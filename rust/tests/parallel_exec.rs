@@ -20,7 +20,8 @@ mod common;
 use common::{assert_identical, softmax_task, spec};
 use vrl_sgd::config::{AlgorithmKind, Partition, TrainSpec};
 use vrl_sgd::coordinator::TrainOutput;
-use vrl_sgd::prelude::Trainer;
+use vrl_sgd::fabric::ParticipationModel;
+use vrl_sgd::prelude::{Snapshot, Trainer};
 use vrl_sgd::trainer::StopAtLoss;
 
 fn run_with(algorithm: AlgorithmKind, threads: usize) -> TrainOutput {
@@ -38,6 +39,90 @@ fn threaded_executor_is_bitwise_identical_for_all_algorithms() {
             let thr = run_with(kind, threads);
             assert_identical(&seq, &thr, &format!("{kind:?} @ {threads} threads"));
         }
+    }
+}
+
+/// Tentpole invariant, ragged edition: the shard-parallel sync tree is a
+/// pure function of the *present count*, never the thread count, so the
+/// sequential-vs-threaded bitwise guarantee must survive partial
+/// participation where the present set changes size and membership
+/// every round — Bernoulli dropout (random raggedness, including the
+/// empty-round skip path) and a rotating round-robin sampler (present
+/// sets that wrap around the fleet edge), for all seven algorithms.
+#[test]
+fn ragged_present_sets_stay_bitwise_across_executors() {
+    let models = [
+        ParticipationModel::Bernoulli { drop: 0.3 },
+        ParticipationModel::RoundRobin { count: 3 },
+    ];
+    for kind in AlgorithmKind::ALL {
+        for model in models {
+            let run = |threads: usize| {
+                common::trainer(kind, threads, 23, 60).participation(model).run().unwrap()
+            };
+            let seq = run(1);
+            for threads in [2usize, 4, 8] {
+                let thr = run(threads);
+                assert_identical(&seq, &thr, &format!("{kind:?} {model:?} @ {threads} threads"));
+            }
+        }
+    }
+}
+
+/// Lazy fleet: per-worker state (params + Δ) materializes on first
+/// participation only. Two round-robin rounds of 3 over a 40-worker
+/// fleet touch exactly 6 workers; a full-participation run touches all.
+#[test]
+fn lazy_fleet_materializes_only_sampled_workers() {
+    // steps 10 / k 5 → 2 rounds → present sets {0,1,2} and {3,4,5}
+    let sparse = common::sparse_trainer(AlgorithmKind::VrlSgd, 1, 40, 3, 10).run().unwrap();
+    assert_eq!(sparse.materialized_workers, 6, "2 rounds × 3 present");
+    let full = common::trainer(AlgorithmKind::VrlSgd, 1, 23, 60).run().unwrap();
+    assert_eq!(full.materialized_workers, 4, "full participation touches everyone");
+}
+
+/// The sparse lazy fleet keeps the sequential-vs-threaded bitwise
+/// guarantee (materialization order is driven by the presence stream,
+/// not by executor scheduling), for every algorithm — including the
+/// corrector-carrying momentum variant, whose per-worker momentum buffer
+/// also attaches lazily.
+#[test]
+fn lazy_fleet_is_bitwise_identical_across_executors() {
+    for kind in AlgorithmKind::ALL {
+        let seq = common::sparse_trainer(kind, 1, 40, 3, 60).run().unwrap();
+        for threads in [2usize, 4, 8] {
+            let thr = common::sparse_trainer(kind, threads, 40, 3, 60).run().unwrap();
+            assert_identical(&seq, &thr, &format!("{kind:?} sparse fleet @ {threads} threads"));
+            assert_eq!(seq.materialized_workers, thr.materialized_workers, "{kind:?}");
+        }
+    }
+}
+
+/// A sparse-fleet run crash-resumes bitwise from a mid-run snapshot
+/// whose worker table still holds lazy (never-sampled) entries — the
+/// snap-v7 lazy encoding round-trips bitwise and re-derives unsampled
+/// workers from the shared x⁰ row instead of storing N copies.
+#[test]
+fn lazy_fleet_resumes_bitwise_from_mid_run_snapshot() {
+    for kind in
+        [AlgorithmKind::VrlSgd, AlgorithmKind::MomentumLocalSgd, AlgorithmKind::CocodSgd]
+    {
+        let dir = common::temp_dir(&format!("lazy_resume_{kind:?}"));
+        let mk = || common::sparse_trainer(kind, 1, 40, 3, 60);
+        let full = mk().run().unwrap();
+        let snap_path = common::crash_and_snapshot(mk, &dir);
+        // the snapshot is genuinely lazy: by the latest pre-crash
+        // snapshot only 3·rounds of the 40 workers were ever sampled,
+        // the rest ride as empty O(1) entries
+        let snap = Snapshot::load(&snap_path).unwrap();
+        let lazy = snap.worker_states.iter().filter(|w| w.params.is_empty()).count();
+        assert!(lazy > 0, "{kind:?}: expected lazy entries in the mid-run snapshot");
+        let back = Snapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back, snap, "{kind:?}: lazy snapshot must round-trip bitwise");
+        let resumed = mk().resume_from(&snap_path).unwrap().run().unwrap();
+        assert_identical(&full, &resumed, &format!("{kind:?} lazy-fleet resume"));
+        assert_eq!(full.materialized_workers, resumed.materialized_workers, "{kind:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }
 
